@@ -1,0 +1,126 @@
+//! End-to-end driver: **really fine-tune** a LoRA transformer under the
+//! deadline-aware scheduler, through all three layers —
+//!
+//!   AHAP (rust, L3) decides per-slot instance counts on a volatile spot
+//!   market → the leader resizes the instance pool (checkpoint/restore
+//!   on preemption) → each slot executes data-parallel PJRT train steps
+//!   of the AOT-compiled JAX+Pallas model (L2+L1) with rust-side
+//!   gradient averaging.
+//!
+//! Run (after `make artifacts`):
+//!
+//!     cargo run --release --example finetune_spot
+//!
+//! Prints the per-slot schedule and the loss curve, and writes
+//! results/e2e_{slots,loss}.csv. Recorded in EXPERIMENTS.md §End-to-end.
+
+use std::path::PathBuf;
+
+use spotfine::coordinator::leader::{Leader, LeaderConfig};
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::generator::TraceGenerator;
+use spotfine::runtime::artifact::ArtifactBundle;
+use spotfine::runtime::client::RuntimeClient;
+use spotfine::runtime::executable::TrainStepExec;
+use spotfine::sched::job::Job;
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use spotfine::train::trainer::{Trainer, TrainerConfig};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = PathBuf::from(
+        std::env::var("SPOTFINE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !ArtifactBundle::present(&artifacts) {
+        eprintln!(
+            "artifacts missing in {} — run `make artifacts` first",
+            artifacts.display()
+        );
+        std::process::exit(2);
+    }
+
+    let client = RuntimeClient::cpu()?;
+    let bundle = ArtifactBundle::load(&artifacts)?;
+    println!(
+        "model: preset `{}`, {} parameters, batch/shard {}, seq {}",
+        bundle.meta.preset,
+        bundle.meta.param_count,
+        bundle.meta.batch_per_shard,
+        bundle.meta.seq_len
+    );
+    let exec = TrainStepExec::compile(&client, bundle)?;
+    let mut trainer = Trainer::new(exec, TrainerConfig::default())?;
+
+    // A smaller job than the paper's L=80 keeps the CPU run short while
+    // still spanning enough slots for preemptions and reconfigs.
+    let job = Job {
+        workload: 30.0,
+        deadline: 8,
+        n_min: 1,
+        n_max: 8,
+        value: 45.0,
+        gamma: 1.5,
+    };
+    let models = Models::paper_default();
+    let trace = TraceGenerator::calibrated().generate(21).slice_from(60);
+
+    let env = PolicyEnv {
+        predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+        trace: trace.clone(),
+        seed: 21,
+    };
+    let spec = PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 };
+    let mut policy = spec.build(&env);
+
+    let leader = Leader::new(
+        LeaderConfig {
+            steps_per_slot: 6,
+            bandwidth_mbps: 800.0,
+            checkpoint_dir: std::env::temp_dir().join("spotfine_e2e_ckpt"),
+            verbose: false,
+        },
+        models,
+    );
+    println!("scheduling policy: {}\n", policy.name());
+    let out = leader.run(&job, &trace, policy.as_mut(), &mut trainer)?;
+
+    println!("slot  price  avail  od  spot  mu    steps  loss     progress");
+    for r in &out.metrics.slots {
+        println!(
+            "{:>4}  {:>5.2}  {:>5}  {:>2}  {:>4}  {:>4.2}  {:>5}  {:>7.4}  {:>6.1}/{:.0}",
+            r.slot, r.spot_price, r.avail, r.on_demand, r.spot, r.mu,
+            r.steps, r.mean_loss, r.progress, job.workload,
+        );
+    }
+    println!();
+    println!("utility      {:.2}", out.utility);
+    println!("cost         {:.2} (value {:.2})", out.cost, out.value);
+    println!("completed    slot {} (deadline {})", out.completion_slot, job.deadline);
+    println!("preemptions  {}", out.metrics.preemptions);
+    println!("reconfigs    {}", out.metrics.reconfigs);
+    println!(
+        "ckpt moved   {:.1} MiB",
+        out.metrics.checkpoint_bytes_moved as f64 / (1024.0 * 1024.0)
+    );
+    let (l0, l1) = (
+        out.metrics.initial_loss(3).unwrap_or(f32::NAN),
+        out.metrics.final_loss(3).unwrap_or(f32::NAN),
+    );
+    println!(
+        "loss curve   {:.4} → {:.4} over {} steps / {} samples",
+        l0,
+        l1,
+        out.metrics.losses.len(),
+        out.metrics.total_samples
+    );
+
+    std::fs::create_dir_all("results").ok();
+    out.metrics
+        .write_slots_csv(std::path::Path::new("results/e2e_slots.csv"))?;
+    out.metrics
+        .write_loss_csv(std::path::Path::new("results/e2e_loss.csv"))?;
+    println!("\nwrote results/e2e_slots.csv, results/e2e_loss.csv");
+
+    anyhow::ensure!(l1 < l0, "loss must decrease end-to-end");
+    Ok(())
+}

@@ -1,0 +1,176 @@
+"""AOT driver: lower the L2/L1 stack to HLO **text** artifacts the rust
+runtime loads via PJRT. Runs once at build time (`make artifacts`);
+python is never on the request path.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: the
+image's xla_extension 0.5.1 rejects jax≥0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifacts (per preset):
+  artifacts/grad_step.hlo.txt   (frozen…, trainable…, tokens) →
+                                (loss, grads…)
+  artifacts/apply_step.hlo.txt  (trainable…, m…, v…, grads…, step) →
+                                (trainable…, m…, v…)
+  artifacts/init.hlo.txt        ()     → (frozen…, trainable…)
+  artifacts/meta.toml           model config + parameter calling
+                                convention (mirrored by rust ParamStore)
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import (
+    OptConfig,
+    PRESETS,
+    apply_step,
+    grad_step,
+    init_params,
+    make_example_tokens,
+    param_specs,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the
+    rust side unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_struct(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_grad_step(cfg):
+    f_specs, t_specs = param_specs(cfg)
+    f_ex = tuple(shape_struct(s) for _, s in f_specs)
+    t_ex = tuple(shape_struct(s) for _, s in t_specs)
+    tok_ex = make_example_tokens(cfg)
+
+    def fn(frozen, trainable, tokens):
+        return grad_step(cfg, frozen, trainable, tokens, interpret=True)
+
+    return jax.jit(fn).lower(f_ex, t_ex, tok_ex)
+
+
+def lower_apply_step(cfg, opt):
+    _, t_specs = param_specs(cfg)
+    t_ex = tuple(shape_struct(s) for _, s in t_specs)
+    step_ex = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def fn(trainable, m, v, grads, step):
+        return apply_step(opt, trainable, m, v, grads, step)
+
+    return jax.jit(fn).lower(t_ex, t_ex, t_ex, t_ex, step_ex)
+
+
+def lower_init(cfg, seed):
+    def fn():
+        frozen, trainable = init_params(cfg, seed)
+        return tuple(frozen) + tuple(trainable)
+
+    return jax.jit(fn).lower()
+
+
+def toml_escape(s):
+    return s.replace("\\", "\\\\").replace('"', '\\"')
+
+
+def write_meta(path, preset, cfg, opt, seed):
+    """Emit meta.toml — parsed by rust's config::toml, so stick to the
+    supported subset (tables, scalars, homogeneous arrays)."""
+    f_specs, t_specs = param_specs(cfg)
+    lines = []
+    lines.append("[model]")
+    lines.append(f'preset = "{toml_escape(preset)}"')
+    lines.append(f"vocab = {cfg.vocab}")
+    lines.append(f"d_model = {cfg.d_model}")
+    lines.append(f"n_layers = {cfg.n_layers}")
+    lines.append(f"n_heads = {cfg.n_heads}")
+    lines.append(f"d_ff = {cfg.d_ff}")
+    lines.append(f"seq_len = {cfg.seq_len}")
+    lines.append(f"lora_rank = {cfg.lora_rank}")
+    lines.append(f"lora_alpha = {cfg.lora_alpha}")
+    lines.append(f"batch_per_shard = {cfg.batch_per_shard}")
+    lines.append(f"param_count = {cfg.param_count()}")
+    lines.append(f"init_seed = {seed}")
+    lines.append("")
+    lines.append("[optim]")
+    lines.append(f"lr = {opt.lr}")
+    lines.append(f"beta1 = {opt.beta1}")
+    lines.append(f"beta2 = {opt.beta2}")
+    lines.append(f"eps = {opt.eps}")
+    lines.append(f"weight_decay = {opt.weight_decay}")
+    lines.append("")
+    lines.append("[artifacts]")
+    lines.append('grad_step = "grad_step.hlo.txt"')
+    lines.append('apply_step = "apply_step.hlo.txt"')
+    lines.append('init = "init.hlo.txt"')
+    lines.append("")
+
+    def emit_params(table, specs):
+        lines.append(f"[{table}]")
+        names = ", ".join(f'"{toml_escape(n)}"' for n, _ in specs)
+        lines.append(f"names = [{names}]")
+        shapes = ", ".join(
+            "[" + ", ".join(str(d) for d in shape) + "]" for _, shape in specs
+        )
+        lines.append(f"shapes = [{shapes}]")
+        lines.append("")
+
+    emit_params("params.frozen", f_specs)
+    emit_params("params.trainable", t_specs)
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the primary artifact; its directory "
+                    "receives all artifacts")
+    ap.add_argument("--preset", default=os.environ.get("SPOTFINE_PRESET", "tiny"),
+                    choices=sorted(PRESETS))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.preset]
+    opt = OptConfig(lr=args.lr)
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    print(f"[aot] preset={args.preset} params={cfg.param_count():,}")
+
+    jobs = [
+        ("grad_step.hlo.txt", lambda: lower_grad_step(cfg)),
+        ("apply_step.hlo.txt", lambda: lower_apply_step(cfg, opt)),
+        ("init.hlo.txt", lambda: lower_init(cfg, args.seed)),
+    ]
+    for fname, make in jobs:
+        text = to_hlo_text(make())
+        path = os.path.join(outdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot] wrote {path} ({len(text):,} chars)")
+
+    write_meta(os.path.join(outdir, "meta.toml"), args.preset, cfg, opt,
+               args.seed)
+    print(f"[aot] wrote {os.path.join(outdir, 'meta.toml')}")
+
+    # The Makefile's stamp target: the primary --out file marks success.
+    with open(args.out, "w") as f:
+        f.write("# spotfine artifacts stamp — see grad_step/apply_step/"
+                "init .hlo.txt + meta.toml in this directory\n")
+
+
+if __name__ == "__main__":
+    main()

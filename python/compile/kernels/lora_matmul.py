@@ -1,0 +1,156 @@
+"""L1 Pallas kernel: the fused LoRA projection — the paper's fine-tuning
+compute hot-spot (§II-A) — re-thought for TPU execution.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA recipe for
+LoRA (threadblock tiles of ``x``/``W0`` in shared memory, WMMA tensor-core
+fragments, adapter cached in shared memory) maps onto TPU as:
+
+- ``BlockSpec`` tiles stage HBM→VMEM; the grid walks MXU-shaped
+  ``(block_m, block_n)`` output tiles;
+- the low-rank factors ``A (k×r)`` and ``B (r×n-block)`` are tiny
+  (r ≤ 32), so **A rides along every grid step** (index_map pinned to
+  (0,0)) and stays VMEM-resident — the TPU analogue of caching the
+  adapter in shared memory;
+- both matmuls accumulate in float32 via ``preferred_element_type`` —
+  the MXU's native accumulation — so bf16 inputs don't lose the LoRA
+  correction (which is orders of magnitude smaller than the base term).
+
+``interpret=True`` is mandatory on this CPU-PJRT image: real TPU lowering
+emits a Mosaic custom-call the CPU plugin cannot execute. The kernel
+structure (tiling, residency, accumulation) is what carries to real TPUs;
+DESIGN.md/EXPERIMENTS.md §Perf hold the VMEM/MXU estimates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim, preferred):
+    """Largest divisor of ``dim`` that is ≤ preferred (MXU-aligned when
+    the dimension allows it)."""
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _lora_kernel(x_ref, w0_ref, a_ref, b_ref, o_ref, *, scale):
+    x = x_ref[...].astype(jnp.float32)
+    # Base projection: the (block_m × k) · (k × block_n) MXU matmul.
+    acc = jnp.dot(x, w0_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    # Low-rank correction: two skinny matmuls against the VMEM-resident
+    # adapter; r ≤ 32 keeps these on the MXU's shortcut path.
+    low = jnp.dot(x, a_ref[...].astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    acc = acc + scale * jnp.dot(low, b_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _lora_matmul_call(x, w0, a, b, scale, block_m, block_n, interpret):
+    m, k = x.shape
+    k2, n = w0.shape
+    k3, r = a.shape
+    r2, n2 = b.shape
+    if k != k2 or k != k3 or r != r2 or n != n2:
+        raise ValueError(
+            f"shape mismatch: x{x.shape} w0{w0.shape} a{a.shape} b{b.shape}"
+        )
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    grid = (m // bm, n // bn)
+    kernel = functools.partial(_lora_kernel, scale=float(scale))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        grid=grid,
+        in_specs=[
+            # x: stream row-tiles; full k (k fits VMEM at our widths).
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            # w0: stream column-tiles.
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            # a: VMEM-resident across the whole grid.
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),
+            # b: column-tile of the up-projection.
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(x, w0, a, b)
+
+
+# pallas_call has no built-in reverse-mode rule, so the kernel carries a
+# custom VJP. The backward pass is plain jnp (two skinny matmuls + one
+# dense one) — it lowers into the same HLO module; the Pallas tiling is
+# the *forward* hot-spot. The frozen W0 still receives a (DCE-able) zero
+# cotangent because custom_vjp must produce one per primal.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def _lora_matmul_diff(x, w0, a, b, scale, block_m, block_n, interpret):
+    return _lora_matmul_call(x, w0, a, b, scale, block_m, block_n, interpret)
+
+
+def _lora_fwd(x, w0, a, b, scale, block_m, block_n, interpret):
+    y = _lora_matmul_call(x, w0, a, b, scale, block_m, block_n, interpret)
+    return y, (x, w0, a, b)
+
+
+def _lora_bwd(scale, block_m, block_n, interpret, res, dy):
+    x, w0, a, b = res
+    dyf = dy.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    # dx = dy·W0ᵀ + s·(dy·Bᵀ)·Aᵀ
+    dy_bt = jnp.dot(dyf, b.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32)
+    dx = jnp.dot(dyf, w0.astype(jnp.float32).T,
+                 preferred_element_type=jnp.float32)
+    dx = dx + scale * jnp.dot(dy_bt, a.astype(jnp.float32).T,
+                              preferred_element_type=jnp.float32)
+    # da = s·xᵀ·(dy·Bᵀ);  db = s·(x·A)ᵀ·dy
+    da = scale * jnp.dot(xf.T, dy_bt, preferred_element_type=jnp.float32)
+    u = jnp.dot(xf, a.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    db = scale * jnp.dot(u.T, dyf, preferred_element_type=jnp.float32)
+    return (
+        dx.astype(x.dtype),
+        jnp.zeros_like(w0),
+        da.astype(a.dtype),
+        db.astype(b.dtype),
+    )
+
+
+_lora_matmul_diff.defvjp(_lora_fwd, _lora_bwd)
+
+
+def lora_matmul(x, w0, a, b, scale, *, block_m=128, block_n=128,
+                interpret=True):
+    """Fused ``y = x @ W0 + scale * (x @ A) @ B`` as a Pallas kernel
+    (differentiable — see the custom VJP above).
+
+    Args:
+      x:  [m, k] activations.
+      w0: [k, n] frozen base weight.
+      a:  [k, r] LoRA down-projection.
+      b:  [r, n] LoRA up-projection.
+      scale: python float, LoRA alpha / rank.
+      block_m / block_n: preferred output tile (clipped to divisors).
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns:
+      [m, n] array in x.dtype.
+    """
+    return _lora_matmul_diff(x, w0, a, b, float(scale), block_m, block_n,
+                             interpret)
+
+
+def vmem_bytes_estimate(m, k, n, r, block_m=128, block_n=128,
+                        dtype_bytes=4):
+    """Per-grid-step VMEM footprint estimate (for §Perf bookkeeping):
+    x-tile + w0-tile + a + b-tile + out-tile, in bytes."""
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    tiles = bm * k + k * bn + k * r + r * bn + bm * bn
+    return tiles * dtype_bytes

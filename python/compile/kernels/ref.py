@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness signal: every kernel in this package has a
+reference implementation here, and ``python/tests/test_kernel.py`` sweeps
+shapes/dtypes (hypothesis) asserting allclose between kernel and oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def lora_matmul_ref(x, w0, a, b, scale):
+    """Fused LoRA projection: ``y = x @ W0 + scale * (x @ A) @ B``.
+
+    Args:
+      x:     [m, k]  activations.
+      w0:    [k, n]  frozen base weight.
+      a:     [k, r]  LoRA down-projection (trainable).
+      b:     [r, n]  LoRA up-projection (trainable).
+      scale: python float — LoRA scaling (alpha / rank).
+
+    Returns:
+      [m, n] output in ``x.dtype``, accumulated in float32.
+    """
+    xf = x.astype(jnp.float32)
+    acc = jnp.dot(xf, w0.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    low = jnp.dot(xf, a.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    acc = acc + scale * jnp.dot(low, b.astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+    return acc.astype(x.dtype)
+
+
+def softmax_xent_ref(logits, targets):
+    """Mean softmax cross-entropy over all rows.
+
+    Args:
+      logits:  [n, v] float logits.
+      targets: [n]    integer class ids.
+
+    Returns:
+      scalar float32 mean loss.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[:, 0]
+    picked = jnp.take_along_axis(
+        logits, targets[:, None].astype(jnp.int32), axis=-1
+    )[:, 0]
+    return jnp.mean(lse - picked)

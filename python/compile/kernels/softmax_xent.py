@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: row-blocked softmax cross-entropy.
+
+The LM loss over ``[batch·seq, vocab]`` logits is the second-largest
+memory mover in the train step (the logits tensor dwarfs activations).
+The kernel walks row blocks, keeping each ``(block_rows × vocab)`` tile
+in VMEM, computes the numerically-stable log-sum-exp in one pass, and
+emits per-block summed losses; the (tiny) final reduction happens in the
+surrounding jnp graph.
+
+TPU adaptation notes: a CUDA implementation would warp-reduce per row;
+on TPU the whole row block reduces on the VPU with lane-wide ``max`` /
+``sum`` — the BlockSpec is the schedule, no explicit shuffles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim, preferred):
+    b = min(preferred, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _xent_kernel(logits_ref, targets_ref, o_ref):
+    logits = logits_ref[...].astype(jnp.float32)  # [bm, v]
+    targets = targets_ref[...]  # [bm]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[:, 0]
+    picked = jnp.take_along_axis(
+        logits, targets[:, None].astype(jnp.int32), axis=-1
+    )[:, 0]
+    o_ref[...] = jnp.sum(lse - picked, keepdims=True)
+
+
+def _softmax_xent_call(logits, targets, block_rows, interpret):
+    n, v = logits.shape
+    if targets.shape != (n,):
+        raise ValueError(f"targets {targets.shape} != ({n},)")
+    bm = _pick_block(n, block_rows)
+    grid = (n // bm,)
+    partial_sums = pl.pallas_call(
+        _xent_kernel,
+        out_shape=jax.ShapeDtypeStruct((n // bm,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, v), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        interpret=interpret,
+    )(logits, targets.astype(jnp.int32))
+    return jnp.sum(partial_sums) / n
+
+
+# Custom VJP (pallas_call has no reverse-mode rule): the classical
+# d logits = (softmax − onehot) / n. Integer targets get a float0
+# cotangent per JAX convention.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _softmax_xent_diff(logits, targets, block_rows, interpret):
+    return _softmax_xent_call(logits, targets, block_rows, interpret)
+
+
+def _xent_fwd(logits, targets, block_rows, interpret):
+    loss = _softmax_xent_call(logits, targets, block_rows, interpret)
+    return loss, (logits, targets)
+
+
+def _xent_bwd(block_rows, interpret, res, dloss):
+    logits, targets = res
+    n, v = logits.shape
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(targets, v, dtype=jnp.float32)
+    dlogits = (p - onehot) * (dloss / n)
+    return (
+        dlogits.astype(logits.dtype),
+        np.zeros(targets.shape, dtype=jax.dtypes.float0),
+    )
+
+
+_softmax_xent_diff.defvjp(_xent_fwd, _xent_bwd)
+
+
+def softmax_xent(logits, targets, *, block_rows=256, interpret=True):
+    """Mean softmax cross-entropy via a row-blocked Pallas kernel
+    (differentiable in ``logits``).
+
+    Args:
+      logits:  [n, v] float logits.
+      targets: [n] int32 class ids.
+      block_rows: preferred rows per grid step (clipped to a divisor).
+      interpret: run in interpret mode (required on CPU).
+
+    Returns:
+      scalar float32 mean loss.
+    """
+    return _softmax_xent_diff(logits, targets, block_rows, interpret)

@@ -1,0 +1,263 @@
+"""L2 JAX model: a LoRA transformer language model whose hot projections
+run through the L1 Pallas kernels (``kernels.lora_matmul``,
+``kernels.softmax_xent``), so both layers lower into a single HLO module.
+
+Parameterization follows LoRA fine-tuning (§II-A of the paper): the base
+transformer weights are **frozen**; only the low-rank A/B adapters (on
+the attention q/v projections and the MLP up-projection) plus the token
+embedding, final norm, and LM head train (the common
+``modules_to_save=[embed, lm_head]`` recipe — with a randomly-initialized
+base, adapter-only training has nothing to adapt *to*, so the embedding
+and head must train for the end-to-end loss curve to be meaningful; see
+DESIGN.md substitutions).
+
+Parameters are carried as two ordered tuples — ``frozen`` and
+``trainable`` — because the AOT boundary (rust ⇄ PJRT) is positional.
+``param_specs`` is the single source of truth for that order; it is
+exported into ``artifacts/meta.toml`` and the rust ``ParamStore`` mirrors
+it.
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.lora_matmul import lora_matmul
+from compile.kernels.softmax_xent import softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer + LoRA hyperparameters."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 256
+    seq_len: int = 64
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    batch_per_shard: int = 8
+
+    @property
+    def lora_scale(self) -> float:
+        return self.lora_alpha / self.lora_rank
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        frozen, trainable = param_specs(self)
+        total = 0
+        for _, shape in frozen + trainable:
+            n = 1
+            for d in shape:
+                n *= d
+            total += n
+        return total
+
+
+# Named presets for the CLI / aot driver. "tiny" is the default test
+# preset; "small" the end-to-end example; "100m" approximates the paper's
+# reference scale (compile-only on this 1-core CPU box).
+PRESETS = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(
+        vocab=256, d_model=256, n_layers=4, n_heads=8, d_ff=512,
+        seq_len=128, lora_rank=16, batch_per_shard=8,
+    ),
+    "100m": ModelConfig(
+        vocab=32000, d_model=768, n_layers=12, n_heads=12, d_ff=3072,
+        seq_len=512, lora_rank=16, batch_per_shard=4,
+    ),
+}
+
+
+def param_specs(cfg: ModelConfig):
+    """Ordered (name, shape) lists for frozen and trainable parameters.
+
+    The order here IS the AOT calling convention.
+    """
+    frozen = []
+    trainable = [("tok_emb", (cfg.vocab, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        frozen += [
+            (p + "attn_norm", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.d_model)),
+            (p + "wk", (cfg.d_model, cfg.d_model)),
+            (p + "wv", (cfg.d_model, cfg.d_model)),
+            (p + "wo", (cfg.d_model, cfg.d_model)),
+            (p + "mlp_norm", (cfg.d_model,)),
+            (p + "w1", (cfg.d_model, cfg.d_ff)),
+            (p + "w2", (cfg.d_ff, cfg.d_model)),
+        ]
+        r = cfg.lora_rank
+        trainable += [
+            (p + "wq_a", (cfg.d_model, r)),
+            (p + "wq_b", (r, cfg.d_model)),
+            (p + "wv_a", (cfg.d_model, r)),
+            (p + "wv_b", (r, cfg.d_model)),
+            (p + "w1_a", (cfg.d_model, r)),
+            (p + "w1_b", (r, cfg.d_ff)),
+        ]
+    trainable += [
+        ("final_norm", (cfg.d_model,)),
+        ("lm_head", (cfg.d_model, cfg.vocab)),
+    ]
+    return frozen, trainable
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Initialize (frozen, trainable) parameter tuples.
+
+    Base weights: scaled-normal (a stand-in for pretrained weights).
+    LoRA: A ~ normal/sqrt(d), B = 0 — the standard LoRA init, so the
+    adapted model starts exactly at the base model.
+    """
+    f_specs, t_specs = param_specs(cfg)
+    key = jax.random.PRNGKey(seed)
+
+    def make(name, shape, key):
+        if name.endswith("_b"):
+            return jnp.zeros(shape, jnp.float32)
+        if name.endswith("norm"):
+            return jnp.ones(shape, jnp.float32)
+        fan_in = shape[0]
+        std = 1.0 / jnp.sqrt(jnp.maximum(1.0, fan_in))
+        return jax.random.normal(key, shape, jnp.float32) * std
+
+    frozen = []
+    for name, shape in f_specs:
+        key, sub = jax.random.split(key)
+        frozen.append(make(name, shape, sub))
+    trainable = []
+    for name, shape in t_specs:
+        key, sub = jax.random.split(key)
+        trainable.append(make(name, shape, sub))
+    return tuple(frozen), tuple(trainable)
+
+
+def _rmsnorm(x, g):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * g
+
+
+def _attention(cfg: ModelConfig, x, wq, wk, wv, wo, q_ab, v_ab, interpret):
+    """Multi-head causal self-attention with LoRA on q and v."""
+    bsz, seq, d = x.shape
+    x2 = x.reshape(bsz * seq, d)
+    scale = cfg.lora_scale
+    q = lora_matmul(x2, wq, q_ab[0], q_ab[1], scale, interpret=interpret)
+    v = lora_matmul(x2, wv, v_ab[0], v_ab[1], scale, interpret=interpret)
+    k = x2 @ wk
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = q.reshape(bsz, seq, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(bsz, seq, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(bsz, seq, h, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((seq, seq), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(bsz * seq, d)
+    return (out @ wo).reshape(bsz, seq, d)
+
+
+def forward(cfg: ModelConfig, frozen, trainable, tokens, interpret=True):
+    """Logits for ``tokens[:, :-1]``: [batch, seq, vocab]."""
+    f = list(frozen)
+    t = list(trainable)
+    tok_emb = t[0]
+    x = tok_emb[tokens[:, :-1]]  # [B, S, D]
+    fi = 0
+    ti = 1
+    scale = cfg.lora_scale
+    for _ in range(cfg.n_layers):
+        attn_norm, wq, wk, wv, wo, mlp_norm, w1, w2 = f[fi : fi + 8]
+        fi += 8
+        wq_a, wq_b, wv_a, wv_b, w1_a, w1_b = t[ti : ti + 6]
+        ti += 6
+        h = _rmsnorm(x, attn_norm)
+        x = x + _attention(
+            cfg, h, wq, wk, wv, wo, (wq_a, wq_b), (wv_a, wv_b), interpret
+        )
+        h = _rmsnorm(x, mlp_norm)
+        bsz, seq, d = h.shape
+        h2 = h.reshape(bsz * seq, d)
+        up = lora_matmul(h2, w1, w1_a, w1_b, scale, interpret=interpret)
+        x = x + (jax.nn.silu(up) @ w2).reshape(bsz, seq, d)
+    final_norm, lm_head = t[ti], t[ti + 1]
+    x = _rmsnorm(x, final_norm)
+    return x @ lm_head
+
+
+def loss_fn(cfg: ModelConfig, frozen, trainable, tokens, interpret=True):
+    """Next-token LM loss via the Pallas xent kernel.
+
+    The row-block size is chosen so one (rows × vocab) logits tile stays
+    within ~8 MiB of VMEM — at byte-level vocab that is the full 256-row
+    default; at the 100m preset (vocab 32k) it shrinks to 64 rows.
+    """
+    logits = forward(cfg, frozen, trainable, tokens, interpret=interpret)
+    bsz, seq, v = logits.shape
+    targets = tokens[:, 1:].reshape(-1)
+    block_rows = max(8, min(256, (8 << 20) // (v * 4)))
+    return softmax_xent(
+        logits.reshape(bsz * seq, v),
+        targets,
+        block_rows=block_rows,
+        interpret=interpret,
+    )
+
+
+def grad_step(cfg: ModelConfig, frozen, trainable, tokens, interpret=True):
+    """(loss, grads-on-trainable) — the per-shard artifact. The rust
+    coordinator averages grads across data-parallel shards."""
+    loss, grads = jax.value_and_grad(
+        lambda tr: loss_fn(cfg, frozen, tr, tokens, interpret=interpret)
+    )(tuple(trainable))
+    return (loss,) + tuple(grads)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+
+def apply_step(opt: OptConfig, trainable, m, v, grads, step):
+    """AdamW update over the trainable tuple — the second artifact.
+
+    ``step`` is the 1-based update counter (int32 scalar).
+    """
+    t = step.astype(jnp.float32)
+    b1, b2 = opt.beta1, opt.beta2
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+    new_t: List[jnp.ndarray] = []
+    new_m: List[jnp.ndarray] = []
+    new_v: List[jnp.ndarray] = []
+    for p, mi, vi, g in zip(trainable, m, v, grads):
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * jnp.square(g)
+        mhat = mi / bc1
+        vhat = vi / bc2
+        upd = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * p
+        new_t.append(p - opt.lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return tuple(new_t) + tuple(new_m) + tuple(new_v)
+
+
+def make_example_tokens(cfg: ModelConfig):
+    """Shape/dtype example for lowering."""
+    return jnp.zeros((cfg.batch_per_shard, cfg.seq_len + 1), jnp.int32)

@@ -1,0 +1,189 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in
+``kernels/ref.py`` — the CORE correctness signal of the compile path.
+
+Fixed cases pin down exact expectations; hypothesis sweeps shapes,
+dtypes, scales, and block sizes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.lora_matmul import (
+    _pick_block,
+    lora_matmul,
+    vmem_bytes_estimate,
+)
+from compile.kernels.ref import lora_matmul_ref, softmax_xent_ref
+from compile.kernels.softmax_xent import softmax_xent
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(
+        dtype
+    )
+
+
+class TestLoraMatmul:
+    def test_matches_ref_basic(self):
+        x = rand(0, (32, 64))
+        w0 = rand(1, (64, 96))
+        a = rand(2, (64, 8), scale=0.1)
+        b = rand(3, (8, 96), scale=0.1)
+        y = lora_matmul(x, w0, a, b, 2.0)
+        yr = lora_matmul_ref(x, w0, a, b, 2.0)
+        np.testing.assert_allclose(y, yr, rtol=1e-5, atol=1e-5)
+
+    def test_zero_adapter_is_base_matmul(self):
+        # LoRA init (B = 0): output must equal the frozen base projection.
+        x = rand(0, (16, 32))
+        w0 = rand(1, (32, 32))
+        a = rand(2, (32, 4))
+        b = jnp.zeros((4, 32))
+        y = lora_matmul(x, w0, a, b, 2.0)
+        np.testing.assert_allclose(y, x @ w0, rtol=1e-5, atol=1e-5)
+
+    def test_scale_zero_kills_adapter(self):
+        x = rand(0, (16, 32))
+        w0 = rand(1, (32, 32))
+        a = rand(2, (32, 4))
+        b = rand(3, (4, 32))
+        y = lora_matmul(x, w0, a, b, 0.0)
+        np.testing.assert_allclose(y, x @ w0, rtol=1e-5, atol=1e-5)
+
+    def test_grid_tiling_matches_single_block(self):
+        # Force a multi-step grid and compare against one big block.
+        x = rand(0, (64, 32))
+        w0 = rand(1, (32, 64))
+        a = rand(2, (32, 8), scale=0.2)
+        b = rand(3, (8, 64), scale=0.2)
+        y_tiled = lora_matmul(x, w0, a, b, 1.5, block_m=16, block_n=16)
+        y_one = lora_matmul(x, w0, a, b, 1.5, block_m=64, block_n=64)
+        np.testing.assert_allclose(y_tiled, y_one, rtol=1e-5, atol=1e-5)
+
+    def test_bfloat16_accumulates_in_f32(self):
+        x = rand(0, (32, 64), jnp.bfloat16)
+        w0 = rand(1, (64, 64), jnp.bfloat16)
+        a = rand(2, (64, 8), jnp.bfloat16, scale=0.1)
+        b = rand(3, (8, 64), jnp.bfloat16, scale=0.1)
+        y = lora_matmul(x, w0, a, b, 2.0)
+        yr = lora_matmul_ref(x, w0, a, b, 2.0)
+        assert y.dtype == jnp.bfloat16
+        np.testing.assert_allclose(
+            y.astype(np.float32), yr.astype(np.float32), rtol=5e-2, atol=5e-2
+        )
+
+    def test_shape_mismatch_raises(self):
+        x = rand(0, (8, 16))
+        w0 = rand(1, (17, 8))
+        a = rand(2, (16, 4))
+        b = rand(3, (4, 8))
+        with pytest.raises(ValueError):
+            lora_matmul(x, w0, a, b, 1.0)
+
+    def test_gradients_match_ref(self):
+        x = rand(0, (16, 32))
+        w0 = rand(1, (32, 24))
+        a = rand(2, (32, 4), scale=0.3)
+        b = rand(3, (4, 24), scale=0.3)
+
+        def f_kernel(x, a, b):
+            return jnp.sum(jnp.sin(lora_matmul(x, w0, a, b, 2.0)))
+
+        def f_ref(x, a, b):
+            return jnp.sum(jnp.sin(lora_matmul_ref(x, w0, a, b, 2.0)))
+
+        gk = jax.grad(f_kernel, argnums=(0, 1, 2))(x, a, b)
+        gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, a, b)
+        for k, r in zip(gk, gr):
+            np.testing.assert_allclose(k, r, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.sampled_from([8, 16, 24, 48, 64]),
+        k=st.sampled_from([16, 32, 64]),
+        n=st.sampled_from([16, 32, 96]),
+        r=st.sampled_from([1, 4, 8, 16]),
+        scale=st.floats(0.0, 4.0),
+        block=st.sampled_from([8, 16, 128]),
+    )
+    def test_property_matches_ref(self, m, k, n, r, scale, block):
+        x = rand(m * 7 + k, (m, k))
+        w0 = rand(k * 5 + n, (k, n))
+        a = rand(r + 11, (k, r), scale=0.2)
+        b = rand(r + 13, (r, n), scale=0.2)
+        y = lora_matmul(x, w0, a, b, scale, block_m=block, block_n=block)
+        yr = lora_matmul_ref(x, w0, a, b, scale)
+        np.testing.assert_allclose(y, yr, rtol=2e-5, atol=2e-5)
+
+    def test_pick_block_divides(self):
+        for dim in [1, 7, 16, 48, 100, 128, 129]:
+            for pref in [1, 8, 128]:
+                b = _pick_block(dim, pref)
+                assert dim % b == 0
+                assert 1 <= b <= max(pref, 1)
+
+    def test_vmem_estimate_sane(self):
+        # tiny preset attention projection: within a few MiB.
+        est = vmem_bytes_estimate(m=512, k=128, n=128, r=8)
+        assert 0 < est < 16 * 2**20
+
+
+class TestSoftmaxXent:
+    def test_matches_ref(self):
+        logits = rand(0, (128, 50), scale=3.0)
+        targets = jax.random.randint(jax.random.PRNGKey(1), (128,), 0, 50)
+        l1 = softmax_xent(logits, targets)
+        l2 = softmax_xent_ref(logits, targets)
+        np.testing.assert_allclose(l1, l2, rtol=1e-6, atol=1e-6)
+
+    def test_perfect_prediction_low_loss(self):
+        n, v = 64, 10
+        targets = jnp.arange(n) % v
+        logits = jax.nn.one_hot(targets, v) * 50.0
+        loss = softmax_xent(logits, targets)
+        assert float(loss) < 1e-3
+
+    def test_uniform_logits_log_v(self):
+        n, v = 32, 17
+        logits = jnp.zeros((n, v))
+        targets = jnp.zeros((n,), jnp.int32)
+        loss = softmax_xent(logits, targets)
+        np.testing.assert_allclose(float(loss), np.log(v), rtol=1e-6)
+
+    def test_large_logits_stable(self):
+        logits = rand(0, (32, 16), scale=1e4)
+        targets = jax.random.randint(jax.random.PRNGKey(2), (32,), 0, 16)
+        loss = softmax_xent(logits, targets)
+        assert np.isfinite(float(loss))
+
+    def test_gradient_matches_ref(self):
+        logits = rand(0, (64, 20), scale=2.0)
+        targets = jax.random.randint(jax.random.PRNGKey(3), (64,), 0, 20)
+        gk = jax.grad(lambda l: softmax_xent(l, targets))(logits)
+        gr = jax.grad(lambda l: softmax_xent_ref(l, targets))(logits)
+        np.testing.assert_allclose(gk, gr, rtol=1e-5, atol=1e-6)
+        # gradient rows sum to ~0 (softmax minus onehot property)
+        np.testing.assert_allclose(gk.sum(-1), np.zeros(64), atol=1e-7)
+
+    def test_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            softmax_xent(jnp.zeros((8, 4)), jnp.zeros((7,), jnp.int32))
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.sampled_from([8, 32, 96, 256]),
+        v=st.sampled_from([2, 11, 64]),
+        block=st.sampled_from([4, 8, 256]),
+        scale=st.floats(0.1, 10.0),
+    )
+    def test_property_matches_ref(self, n, v, block, scale):
+        logits = rand(n + v, (n, v), scale=scale)
+        targets = jax.random.randint(
+            jax.random.PRNGKey(n * 3 + v), (n,), 0, v
+        )
+        l1 = softmax_xent(logits, targets, block_rows=block)
+        l2 = softmax_xent_ref(logits, targets)
+        np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-6)

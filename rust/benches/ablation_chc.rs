@@ -1,0 +1,103 @@
+//! Ablation — CHC's commitment level v against its two degenerate ends,
+//! which the paper rejects in §IV-A when motivating CHC:
+//!
+//!   RHC  (v = 1):   most responsive, "sensitive to prediction errors";
+//!   AFHC (v = ω+1): most stable, "suffers from error accumulation";
+//!   CHC  (1 < v < ω+1): the tunable middle AHAP builds on.
+//!
+//! Sweeps v at fixed ω = 4 across noise levels. **Measured finding**
+//! (recorded in EXPERIMENTS.md): on our market, v = 1 dominates at every
+//! noise level and higher commitment degrades monotonically — stale
+//! plans embed outdated *progress* assumptions (a systematic error that
+//! averaging amplifies rather than cancels), unlike the i.i.d.
+//! prediction noise CHC's averaging is designed to smooth. This is
+//! consistent with the Fig. 9 selector always converging to v = 1
+//! configurations, and is itself an argument for the paper's design of
+//! learning v online from the pool instead of fixing it a priori.
+//!
+//! Run: cargo bench --bench ablation_chc
+
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::generator::TraceGenerator;
+use spotfine::sched::job::JobGenerator;
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use spotfine::sched::simulate::run_episode;
+use spotfine::util::csvio::CsvWriter;
+use spotfine::util::rng::Rng;
+use spotfine::util::stats;
+use spotfine::util::table::{f, Table};
+
+fn main() {
+    println!("=== Ablation: CHC commitment level (RHC / CHC / AFHC) ===");
+    let omega = 4usize;
+    let sigma = 0.7;
+    let n_jobs = 150;
+    let jobs = JobGenerator::default();
+    let models = Models::paper_default();
+    let gen = TraceGenerator::calibrated();
+    let noise_levels = [0.0f64, 0.3, 1.0, 2.0];
+    let vs: Vec<usize> = (1..=omega + 1).collect();
+
+    let mut table = Table::new(&[
+        "noise", "v=1 (RHC)", "v=2", "v=3", "v=4", "v=5 (AFHC)", "best v",
+    ]);
+    let mut csv = CsvWriter::create(
+        "results/ablation_chc.csv",
+        &["noise", "v", "mean_utility", "std"],
+    )
+    .expect("csv");
+
+    for &level in &noise_levels {
+        let mut means = Vec::new();
+        for &v in &vs {
+            let spec = PolicySpec::Ahap { omega, v, sigma };
+            let mut utils = Vec::new();
+            let mut rng = Rng::new(77);
+            for k in 0..n_jobs {
+                let job = jobs.sample(&mut rng);
+                let trace = gen
+                    .generate(500 + k as u64)
+                    .slice_from(rng.index(400));
+                let env = PolicyEnv {
+                    predictor: PredictorKind::Noisy(
+                        NoiseSpec::fixed_mag_uniform(level),
+                    ),
+                    trace: trace.clone(),
+                    seed: k as u64,
+                };
+                let mut p = spec.build(&env);
+                utils.push(run_episode(&job, &trace, &models, p.as_mut()).utility);
+            }
+            let m = stats::mean(&utils);
+            csv.row(&[
+                format!("{level:.1}"),
+                v.to_string(),
+                format!("{m:.4}"),
+                format!("{:.4}", stats::std_dev(&utils)),
+            ]);
+            means.push(m);
+        }
+        let best_v = means
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| vs[i])
+            .unwrap();
+        table.row(&[
+            format!("{:.0}%", level * 100.0),
+            f(means[0], 1),
+            f(means[1], 1),
+            f(means[2], 1),
+            f(means[3], 1),
+            f(means[4], 1),
+            best_v.to_string(),
+        ]);
+    }
+    table.print();
+    csv.finish().expect("csv");
+    println!("\nfinding: v = 1 (RHC-like responsiveness) dominates on this market —");
+    println!("stale plans carry outdated progress state, a systematic error that");
+    println!("averaging amplifies. Matches Fig. 9's selector converging to v = 1.");
+    println!("wrote results/ablation_chc.csv");
+}

@@ -1,0 +1,108 @@
+//! Fig. 10 — policy-weight dynamics under changing prediction quality:
+//! four phases (Fixed-Mag.+Uniform 10% → Fixed-Mag.+Heavy-Tail 30% →
+//! Fixed-Mag.+Uniform 50% → 200%), pool of 105 AHAP + 7 AHANP policies
+//! indexed 1..112. The paper's claim: the selector re-converges to a new
+//! optimal policy after every phase change.
+
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::generator::TraceGenerator;
+use spotfine::sched::job::JobGenerator;
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{paper_pool, PredictorKind};
+use spotfine::sched::selector::{run_selection, SelectionConfig};
+use spotfine::util::csvio::CsvWriter;
+use spotfine::util::table::{f, Table};
+
+fn main() {
+    println!("=== Fig. 10: policy-weight dynamics across noise phases ===");
+    // Paper: 3600 jobs over 4 phases; compressed 3× for the bench budget.
+    let phase_len = 300usize;
+    let phases = [
+        NoiseSpec::fixed_mag_uniform(0.1),
+        NoiseSpec::fixed_mag_heavy(0.3),
+        NoiseSpec::fixed_mag_uniform(0.5),
+        NoiseSpec::fixed_mag_uniform(2.0),
+    ];
+    let k_jobs = phase_len * phases.len();
+    let specs = paper_pool();
+    let out = run_selection(
+        &specs,
+        &JobGenerator::default(),
+        &Models::paper_default(),
+        &TraceGenerator::calibrated(),
+        |k| PredictorKind::Noisy(phases[(k / phase_len).min(phases.len() - 1)]),
+        &SelectionConfig { k_jobs, seed: 13, snapshot_every: 25 },
+    );
+
+    // Heatmap CSV: (job, policy index 1..112, weight).
+    let mut csv = CsvWriter::create(
+        "results/fig10_weights.csv",
+        &["job", "policy_index", "weight"],
+    )
+    .expect("csv");
+    for (k, w) in &out.snapshots {
+        for (i, wi) in w.iter().enumerate() {
+            if *wi > 1e-4 {
+                csv.row(&[k.to_string(), (i + 1).to_string(), format!("{wi:.6}")]);
+            }
+        }
+    }
+    csv.finish().expect("csv");
+
+    // Per-phase winner: average the weights over the phase's second half
+    // (after re-convergence).
+    let mut table = Table::new(&[
+        "phase", "noise", "top policy (late-phase weight mass)", "mass",
+    ]);
+    let mut winners = Vec::new();
+    for (pi, noise) in phases.iter().enumerate() {
+        let lo = pi * phase_len + phase_len / 2;
+        let hi = (pi + 1) * phase_len;
+        let snaps: Vec<&Vec<f64>> = out
+            .snapshots
+            .iter()
+            .filter(|(k, _)| *k > lo && *k <= hi)
+            .map(|(_, w)| w)
+            .collect();
+        assert!(!snaps.is_empty(), "no snapshots in phase {pi}");
+        let mut mean_w = vec![0.0; specs.len()];
+        for w in &snaps {
+            for (m, wi) in mean_w.iter_mut().zip(w.iter()) {
+                *m += wi;
+            }
+        }
+        for m in mean_w.iter_mut() {
+            *m /= snaps.len() as f64;
+        }
+        let (best, mass) = mean_w
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, m)| (i, *m))
+            .unwrap();
+        table.row(&[
+            (pi + 1).to_string(),
+            noise.label(),
+            format!("#{} {}", best + 1, specs[best].label()),
+            f(mass, 3),
+        ]);
+        winners.push(best);
+    }
+    table.print();
+
+    // Shape: the selector adapts — the winning policy is not constant
+    // across all four phases (good predictions favour different (ω,v,σ)
+    // than catastrophic ones; 200% noise should push toward AHANP or
+    // conservative AHAP configs).
+    let all_same = winners.iter().all(|&w| w == winners[0]);
+    assert!(
+        !all_same,
+        "shape violated: the optimal policy must shift across noise phases"
+    );
+    println!(
+        "\nregret {:.2} ≤ bound {:.2}; winners shift across phases — shape OK.",
+        out.regret.last().unwrap(),
+        out.regret_bound()
+    );
+    println!("wrote results/fig10_weights.csv");
+}

@@ -1,0 +1,69 @@
+//! Fig. 8 — impact of spot-price fluctuation. Paper shape: AHAP/AHANP
+//! remain among the top performers across all volatility settings;
+//! higher volatility widens the gap between price-aware policies (AHAP's
+//! σ-threshold, AHANP's p̂ indicator) and price-blind ones (UP/MSU buy
+//! spot at any price).
+
+#[path = "sweep_common.rs"]
+mod sweep_common;
+
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::generator::GeneratorConfig;
+use spotfine::sched::job::JobGenerator;
+use spotfine::sched::policy::Models;
+use spotfine::util::csvio::CsvWriter;
+use spotfine::util::table::{f, Table};
+use sweep_common::evaluate_point;
+
+fn main() {
+    println!("=== Fig. 8: utility vs price volatility ===");
+    let vols = [0.3f64, 0.6, 1.0, 1.5, 2.0];
+    let n_jobs = 120;
+    let noise = NoiseSpec::fixed_mag_uniform(0.1);
+    let jobs = JobGenerator::default();
+    let models = Models::paper_default();
+
+    let mut table = Table::new(&[
+        "volatility", "OD-Only", "MSU", "UP", "AHANP", "AHAP",
+    ]);
+    let mut csv = CsvWriter::create(
+        "results/fig8_volatility.csv",
+        &["volatility", "group", "utility", "misses"],
+    )
+    .expect("csv");
+    let mut gaps = Vec::new();
+    for &vol in &vols {
+        let gen_cfg = GeneratorConfig { volatility: vol, ..GeneratorConfig::default() };
+        let scores = evaluate_point(&gen_cfg, &jobs, &models, noise, n_jobs, 42);
+        let get = |n: &str| scores.iter().find(|s| s.name == n).unwrap();
+        table.row(&[
+            f(vol, 1),
+            f(get("OD-Only").utility, 1),
+            f(get("MSU").utility, 1),
+            f(get("UP").utility, 1),
+            f(get("AHANP").utility, 1),
+            f(get("AHAP").utility, 1),
+        ]);
+        for s in &scores {
+            csv.row(&[
+                format!("{vol:.1}"),
+                s.name.to_string(),
+                format!("{:.4}", s.utility),
+                s.misses.to_string(),
+            ]);
+        }
+        gaps.push(get("AHAP").utility - get("UP").utility);
+    }
+    table.print();
+    csv.finish().expect("csv");
+
+    // Shape: AHAP's edge over the price-blind UP does not shrink as
+    // volatility grows (more exploitable price structure).
+    println!("\nAHAP − UP gap by volatility: {:?}",
+        gaps.iter().map(|g| (g * 10.0).round() / 10.0).collect::<Vec<_>>());
+    assert!(
+        *gaps.last().unwrap() >= *gaps.first().unwrap() - 1.0,
+        "shape violated: volatility should not erase AHAP's price-aware edge"
+    );
+    println!("shape OK; wrote results/fig8_volatility.csv");
+}

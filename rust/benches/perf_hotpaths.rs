@@ -1,0 +1,160 @@
+//! Performance microbenchmarks of every hot path (§Perf deliverable):
+//!
+//!   L3 targets (DESIGN.md §Perf): AHAP decision ≤ 1 ms, full 112-policy
+//!   counterfactual job ≤ 150 ms, EG update ≤ 10 µs.
+//!
+//! Plus the PJRT step time when artifacts are present (L2/L1 path).
+
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::forecast::predictor::{OraclePredictor, Predictor};
+use spotfine::market::generator::TraceGenerator;
+use spotfine::market::market::MarketObs;
+use spotfine::sched::ahap::Ahap;
+use spotfine::sched::horizon::{solve_dp, solve_greedy, HorizonProblem, TerminalKind};
+use spotfine::sched::job::{Job, JobGenerator};
+use spotfine::sched::offline::solve_offline;
+use spotfine::sched::policy::{Models, Policy, SlotContext};
+use spotfine::sched::pool::{paper_pool, PolicyEnv, PredictorKind};
+use spotfine::sched::selector::EgSelector;
+use spotfine::sched::simulate::run_episode;
+use spotfine::util::bench::{bench, section};
+use spotfine::util::rng::Rng;
+
+fn main() {
+    let models = Models::paper_default();
+    let job = Job::paper_reference();
+    let trace = TraceGenerator::calibrated().generate(3).slice_from(40);
+
+    section("L3: Eq. 10 window solvers");
+    let prices: Vec<f64> = (0..6).map(|i| trace.price_at(i)).collect();
+    let avail: Vec<u32> = (0..6).map(|i| trace.avail_at(i)).collect();
+    let prob = HorizonProblem {
+        job: &job,
+        models: &models,
+        start_slot: 0,
+        z0: 10.0,
+        prices: &prices,
+        avail: &avail,
+        n_prev: 4,
+        terminal_kind: TerminalKind::Exact,
+    };
+    let r = bench("greedy solver (ω=5 window)", 100, 2000, || {
+        solve_greedy(&prob).utility
+    });
+    println!("{}", r.line());
+    let greedy_us = r.mean_us();
+    let r = bench("exact DP solver (ω=5, grid 0.25)", 10, 100, || {
+        solve_dp(&prob, 0.25).utility
+    });
+    println!("{}", r.line());
+    let r = bench("offline OPT (d=10, grid 0.1)", 5, 50, || {
+        solve_offline(&job, &trace, &models, 0.1).utility
+    });
+    println!("{}", r.line());
+
+    section("L3: AHAP decision (observe + forecast + solve + commit)");
+    let mut ahap = Ahap::new(5, 2, 0.7, Box::new(OraclePredictor::new(trace.clone())));
+    let obs = MarketObs {
+        t: 2,
+        spot_price: trace.price_at(2),
+        avail: trace.avail_at(2),
+        on_demand_price: 1.0,
+    };
+    let ctx = SlotContext {
+        t: 2,
+        obs,
+        progress: 8.0,
+        prev_total: 6,
+        prev_avail: 5,
+        job: &job,
+        models: &models,
+    };
+    let r = bench("ahap.decide (behind schedule)", 100, 2000, || {
+        ahap.reset();
+        ahap.decide(&ctx)
+    });
+    println!("{}", r.line());
+    assert!(
+        r.mean_us() < 1000.0,
+        "PERF TARGET MISSED: AHAP decision {} µs > 1 ms",
+        r.mean_us()
+    );
+
+    section("L3: full episode + counterfactual sweep");
+    let env = PolicyEnv {
+        predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+        trace: trace.clone(),
+        seed: 3,
+    };
+    let spec = spotfine::sched::pool::PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 };
+    let r = bench("one AHAP episode (d=10)", 50, 500, || {
+        let mut p = spec.build(&env);
+        run_episode(&job, &trace, &models, p.as_mut()).utility
+    });
+    println!("{}", r.line());
+
+    let pool = paper_pool();
+    let jobs = JobGenerator::default();
+    let mut rng = Rng::new(9);
+    let j = jobs.sample(&mut rng);
+    let r = bench("112-policy counterfactual job", 2, 20, || {
+        let mut total = 0.0;
+        for s in &pool {
+            let mut p = s.build(&env);
+            total += run_episode(&j, &trace, &models, p.as_mut()).utility;
+        }
+        total
+    });
+    println!("{}", r.line());
+    assert!(
+        r.mean_ms() < 150.0,
+        "PERF TARGET MISSED: counterfactual sweep {} ms > 150 ms",
+        r.mean_ms()
+    );
+
+    section("L3: EG selector update (M=112)");
+    let mut sel = EgSelector::new(112, 1000);
+    let us: Vec<f64> = (0..112).map(|i| (i as f64 / 112.0)).collect();
+    let r = bench("eg.update", 1000, 20000, || sel.update(&us));
+    println!("{}", r.line());
+    assert!(
+        r.mean_us() < 10.0,
+        "PERF TARGET MISSED: EG update {} µs > 10 µs",
+        r.mean_us()
+    );
+
+    section("forecasting");
+    let mut arima = spotfine::forecast::arima::ArimaPredictor::with_defaults();
+    arima.seed_history(&trace.price[..200.min(trace.len())], &trace.avail_f64()[..200.min(trace.len())]);
+    let r = bench("ARIMA refit + 5-step predict", 3, 30, || arima.predict(5));
+    println!("{}", r.line());
+
+    section("L2/L1: PJRT train step (needs artifacts)");
+    let dir = std::path::PathBuf::from("artifacts");
+    if spotfine::runtime::artifact::ArtifactBundle::present(&dir) {
+        let client = spotfine::runtime::client::RuntimeClient::cpu().unwrap();
+        let bundle = spotfine::runtime::artifact::ArtifactBundle::load(&dir).unwrap();
+        let exec = spotfine::runtime::executable::TrainStepExec::compile(&client, bundle).unwrap();
+        let mut trainer = spotfine::train::trainer::Trainer::new(
+            exec,
+            spotfine::train::trainer::TrainerConfig::default(),
+        )
+        .unwrap();
+        let r = bench("grad+apply step (1 shard)", 1, 5, || {
+            trainer.step_parallel(1).unwrap().loss
+        });
+        println!("{}", r.line());
+        let r = bench("grad+apply step (4 shards)", 1, 5, || {
+            trainer.step_parallel(4).unwrap().loss
+        });
+        println!("{}", r.line());
+    } else {
+        println!("SKIP: artifacts not built");
+    }
+
+    println!(
+        "\nsummary: greedy solve {:.1} µs/decision — the planner runs ~10⁶× \
+         faster than the 30-min slot it schedules.",
+        greedy_us
+    );
+}

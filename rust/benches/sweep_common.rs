@@ -1,0 +1,119 @@
+//! Shared sweep machinery for the Fig. 5–8 benches: evaluate the policy
+//! roster (baselines + best-in-pool AHAP/AHANP, mirroring the paper's
+//! "the selected optimal policy is always the better of the two") over
+//! sampled jobs and report mean normalized utility.
+
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::generator::{GeneratorConfig, TraceGenerator};
+use spotfine::sched::job::JobGenerator;
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use spotfine::sched::simulate::run_episode;
+use spotfine::util::rng::Rng;
+
+/// The comparison roster: named groups of candidate specs; each group's
+/// score is the best mean utility across its members (the paper's
+/// adaptive selection picks per-group winners).
+pub fn roster() -> Vec<(&'static str, Vec<PolicySpec>)> {
+    let ahap: Vec<PolicySpec> = [
+        (1usize, 1usize, 0.9f64),
+        (2, 1, 0.5),
+        (2, 1, 0.9),
+        (3, 1, 0.7),
+        (4, 2, 0.7),
+        (5, 1, 0.5),
+        (5, 2, 0.9),
+    ]
+    .iter()
+    .map(|&(omega, v, sigma)| PolicySpec::Ahap { omega, v, sigma })
+    .collect();
+    let ahanp: Vec<PolicySpec> = [0.4, 0.5, 0.7, 0.9]
+        .iter()
+        .map(|&sigma| PolicySpec::Ahanp { sigma })
+        .collect();
+    vec![
+        ("OD-Only", vec![PolicySpec::OdOnly]),
+        ("MSU", vec![PolicySpec::Msu]),
+        ("UP", vec![PolicySpec::UniformProgress]),
+        ("AHANP", ahanp),
+        ("AHAP", ahap),
+    ]
+}
+
+/// One sweep point's outcome for a group.
+#[derive(Debug, Clone)]
+pub struct GroupScore {
+    pub name: &'static str,
+    /// Mean raw utility of the best member.
+    pub utility: f64,
+    /// Mean normalized utility of the best member.
+    pub norm_utility: f64,
+    /// Deadline misses of the best member.
+    pub misses: usize,
+}
+
+/// Evaluate every group on `n_jobs` sampled jobs under the given market
+/// generator config and noise level; deterministic in `seed`.
+pub fn evaluate_point(
+    gen_cfg: &GeneratorConfig,
+    jobs_cfg: &JobGenerator,
+    models: &Models,
+    noise: NoiseSpec,
+    n_jobs: usize,
+    seed: u64,
+) -> Vec<GroupScore> {
+    let gen = TraceGenerator::new(gen_cfg.clone());
+    let groups = roster();
+    // per member: (sum utility, sum norm, misses)
+    let mut acc: Vec<Vec<(f64, f64, usize)>> = groups
+        .iter()
+        .map(|(_, m)| vec![(0.0, 0.0, 0usize); m.len()])
+        .collect();
+    let mut rng = Rng::new(seed);
+    for k in 0..n_jobs {
+        let job = jobs_cfg.sample(&mut rng);
+        let trace = gen
+            .generate(seed ^ (k as u64).wrapping_mul(0x9E37_79B9))
+            .slice_from(rng.index(400));
+        let env = PolicyEnv {
+            predictor: PredictorKind::Noisy(noise),
+            trace: trace.clone(),
+            seed: seed ^ k as u64,
+        };
+        for (gi, (_, members)) in groups.iter().enumerate() {
+            for (mi, spec) in members.iter().enumerate() {
+                let mut p = spec.build(&env);
+                let r = run_episode(&job, &trace, models, p.as_mut());
+                acc[gi][mi].0 += r.utility;
+                acc[gi][mi].1 +=
+                    job.normalize_utility(r.utility, models.on_demand_price);
+                if !r.on_time {
+                    acc[gi][mi].2 += 1;
+                }
+            }
+        }
+    }
+    groups
+        .iter()
+        .enumerate()
+        .map(|(gi, (name, _))| {
+            let best = acc[gi]
+                .iter()
+                .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+                .unwrap();
+            GroupScore {
+                name,
+                utility: best.0 / n_jobs as f64,
+                norm_utility: best.1 / n_jobs as f64,
+                misses: best.2,
+            }
+        })
+        .collect()
+}
+
+/// Percentage improvement of AHAP over another group.
+pub fn improvement(scores: &[GroupScore], over: &str) -> f64 {
+    let ahap = scores.iter().find(|s| s.name == "AHAP").unwrap().utility;
+    let other = scores.iter().find(|s| s.name == over).unwrap().utility;
+    100.0 * (ahap - other) / other.abs().max(1e-9)
+}

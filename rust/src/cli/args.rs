@@ -1,0 +1,188 @@
+//! Minimal CLI argument parser: subcommand + `--flag value` / `--flag` /
+//! `--flag=value` options, with typed accessors and an auto-generated
+//! usage error on unknown flags.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+/// Errors from argument parsing or typed access.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum ArgError {
+    #[error("unexpected argument `{0}`")]
+    Unexpected(String),
+    #[error("flag `--{0}` expects a {1} value, got `{2}`")]
+    BadType(String, &'static str, String),
+    #[error("missing required flag `--{0}`")]
+    Missing(String),
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args, ArgError> {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if stripped.is_empty() {
+                    return Err(ArgError::Unexpected(arg));
+                }
+                if let Some(eq) = stripped.find('=') {
+                    let (k, v) = stripped.split_at(eq);
+                    out.flags.insert(k.to_string(), v[1..].to_string());
+                } else {
+                    // value-taking if the next token isn't a flag
+                    match iter.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = iter.next().unwrap();
+                            out.flags.insert(stripped.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(stripped.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, ArgError> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_string(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ArgError::BadType(key.to_string(), "integer", v.to_string())
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ArgError::BadType(key.to_string(), "integer", v.to_string())
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ArgError::BadType(key.to_string(), "number", v.to_string())
+            }),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str, ArgError> {
+        self.get(key).ok_or_else(|| ArgError::Missing(key.to_string()))
+    }
+
+    /// Reject flags outside the allowed set (catches typos).
+    pub fn check_known(&self, allowed: &[&str]) -> Result<(), ArgError> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(ArgError::Unexpected(format!("--{k}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--steps", "200", "--fast"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 200);
+        assert!(a.get_bool("fast"));
+        assert!(!a.get_bool("slow"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["bench", "--seed=42", "--sigma=0.5"]);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 42);
+        assert!((a.get_f64("sigma", 0.0).unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["run", "file1", "file2"]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_usize("k", 7).unwrap(), 7);
+        assert_eq!(a.get_string("name", "d"), "d");
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = parse(&["x", "--k", "abc"]);
+        assert!(matches!(
+            a.get_usize("k", 0),
+            Err(ArgError::BadType(_, "integer", _))
+        ));
+    }
+
+    #[test]
+    fn required_flags() {
+        let a = parse(&["x"]);
+        assert!(matches!(a.require("out"), Err(ArgError::Missing(_))));
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse(&["x", "--good", "1", "--bad", "2"]);
+        assert!(a.check_known(&["good"]).is_err());
+        assert!(a.check_known(&["good", "bad"]).is_ok());
+    }
+
+    #[test]
+    fn boolean_flag_before_another_flag() {
+        let a = parse(&["x", "--verbose", "--k", "3"]);
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.get_usize("k", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,5 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline registry).
+
+pub mod args;
+
+pub use args::Args;

@@ -1,0 +1,8 @@
+//! Configuration system: a minimal TOML parser plus typed, validated
+//! experiment configuration (offline build — no serde available).
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::ExperimentConfig;
+pub use toml::{parse, TomlError, Value};

@@ -1,0 +1,323 @@
+//! Typed experiment configuration assembled from a parsed TOML document,
+//! with defaults matching the paper's evaluation (§VI-A) and validation
+//! of every cross-field invariant the simulator assumes.
+
+use std::path::Path;
+
+use crate::config::toml::parse;
+#[allow(unused_imports)]
+use crate::config::toml::Value;
+use crate::forecast::noise::{NoiseKind, NoiseMagnitude, NoiseSpec};
+use crate::market::generator::GeneratorConfig;
+use crate::sched::job::JobGenerator;
+use crate::sched::policy::Models;
+use crate::sched::throughput::{ReconfigModel, ThroughputModel};
+
+/// Config errors (parse or validation).
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("toml: {0}")]
+    Toml(#[from] crate::config::toml::TomlError),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("config: {0}")]
+    Invalid(String),
+}
+
+/// Top-level experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub market: GeneratorConfig,
+    pub jobs: JobGenerator,
+    pub models: Models,
+    pub noise: NoiseSpec,
+    pub selection_jobs: usize,
+    pub seed: u64,
+    /// Directory where benches/figures write CSVs.
+    pub results_dir: String,
+    /// Directory holding AOT artifacts for the training path.
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            market: GeneratorConfig::default(),
+            jobs: JobGenerator::default(),
+            models: Models::paper_default(),
+            noise: NoiseSpec::fixed_mag_uniform(0.1),
+            selection_jobs: 1000,
+            seed: 7,
+            results_dir: "results".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+macro_rules! read_opt {
+    ($doc:expr, $path:expr, $as:ident, $dst:expr) => {
+        if let Some(v) = $doc.get($path) {
+            $dst = v.$as().ok_or_else(|| {
+                ConfigError::Invalid(format!("`{}` has wrong type", $path))
+            })?;
+        }
+    };
+}
+
+impl ExperimentConfig {
+    /// Parse + validate from TOML text. Missing keys keep their paper
+    /// defaults; present keys must have the right type and pass
+    /// validation.
+    pub fn from_toml_str(src: &str) -> Result<Self, ConfigError> {
+        let doc = parse(src)?;
+        let mut cfg = ExperimentConfig::default();
+
+        // [market]
+        let mut slots = cfg.market.slots as i64;
+        read_opt!(doc, "market.slots", as_int, slots);
+        cfg.market.slots = slots as usize;
+        let mut spd = cfg.market.slots_per_day as i64;
+        read_opt!(doc, "market.slots_per_day", as_int, spd);
+        cfg.market.slots_per_day = spd as usize;
+        let mut cap = cfg.market.avail_cap as i64;
+        read_opt!(doc, "market.avail_cap", as_int, cap);
+        cfg.market.avail_cap = cap as u32;
+        read_opt!(doc, "market.avail_scale", as_float, cfg.market.avail_scale);
+        read_opt!(doc, "market.volatility", as_float, cfg.market.volatility);
+        read_opt!(doc, "market.base_price", as_float, cfg.market.base_price);
+
+        // [job]
+        read_opt!(doc, "job.workload_lo", as_float, cfg.jobs.workload_lo);
+        read_opt!(doc, "job.workload_hi", as_float, cfg.jobs.workload_hi);
+        let mut deadline = cfg.jobs.deadline as i64;
+        read_opt!(doc, "job.deadline", as_int, deadline);
+        cfg.jobs.deadline = deadline as usize;
+        let mut n_min_lo = cfg.jobs.n_min_range.0 as i64;
+        let mut n_min_hi = cfg.jobs.n_min_range.1 as i64;
+        read_opt!(doc, "job.n_min_lo", as_int, n_min_lo);
+        read_opt!(doc, "job.n_min_hi", as_int, n_min_hi);
+        cfg.jobs.n_min_range = (n_min_lo as u32, n_min_hi as u32);
+        let mut n_max_lo = cfg.jobs.n_max_range.0 as i64;
+        let mut n_max_hi = cfg.jobs.n_max_range.1 as i64;
+        read_opt!(doc, "job.n_max_lo", as_int, n_max_lo);
+        read_opt!(doc, "job.n_max_hi", as_int, n_max_hi);
+        cfg.jobs.n_max_range = (n_max_lo as u32, n_max_hi as u32);
+        read_opt!(doc, "job.value_multiple", as_float, cfg.jobs.value_multiple);
+        read_opt!(doc, "job.gamma", as_float, cfg.jobs.gamma);
+
+        // [models]
+        let mut alpha = cfg.models.throughput.alpha;
+        let mut beta = cfg.models.throughput.beta;
+        read_opt!(doc, "models.alpha", as_float, alpha);
+        read_opt!(doc, "models.beta", as_float, beta);
+        cfg.models.throughput = ThroughputModel::new(alpha, beta);
+        if let Some(v) = doc.get("models.bandwidth_mbps") {
+            let bw = v.as_float().ok_or_else(|| {
+                ConfigError::Invalid("`models.bandwidth_mbps` has wrong type".into())
+            })?;
+            cfg.models.reconfig = ReconfigModel::from_bandwidth_mbps(bw, 30.0);
+        } else {
+            let mut mu_up = cfg.models.reconfig.mu_up;
+            let mut mu_down = cfg.models.reconfig.mu_down;
+            read_opt!(doc, "models.mu_up", as_float, mu_up);
+            read_opt!(doc, "models.mu_down", as_float, mu_down);
+            if mu_up > mu_down || !(0.0..=1.0).contains(&mu_up) || !(0.0..=1.0).contains(&mu_down) {
+                return Err(ConfigError::Invalid(
+                    "need 0 ≤ mu_up ≤ mu_down ≤ 1".into(),
+                ));
+            }
+            cfg.models.reconfig = ReconfigModel::new(mu_up, mu_down);
+        }
+        read_opt!(doc, "models.on_demand_price", as_float, cfg.models.on_demand_price);
+
+        // [noise]
+        if let Some(v) = doc.get("noise.kind") {
+            let s = v.as_str().ok_or_else(|| {
+                ConfigError::Invalid("`noise.kind` must be a string".into())
+            })?;
+            cfg.noise.kind = match s {
+                "uniform" => NoiseKind::Uniform,
+                "heavy-tail" | "heavy_tail" => NoiseKind::HeavyTail,
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown noise.kind `{other}`"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = doc.get("noise.magnitude") {
+            let s = v.as_str().ok_or_else(|| {
+                ConfigError::Invalid("`noise.magnitude` must be a string".into())
+            })?;
+            cfg.noise.magnitude = match s {
+                "mag-dep" | "mag_dep" => NoiseMagnitude::MagnitudeDependent,
+                "fixed" | "fixed-mag" | "fixed_mag" => NoiseMagnitude::FixedMagnitude,
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown noise.magnitude `{other}`"
+                    )))
+                }
+            };
+        }
+        read_opt!(doc, "noise.level", as_float, cfg.noise.level);
+        read_opt!(doc, "noise.growth", as_float, cfg.noise.growth);
+
+        // [run]
+        let mut k = cfg.selection_jobs as i64;
+        read_opt!(doc, "run.selection_jobs", as_int, k);
+        cfg.selection_jobs = k as usize;
+        let mut seed = cfg.seed as i64;
+        read_opt!(doc, "run.seed", as_int, seed);
+        cfg.seed = seed as u64;
+        if let Some(v) = doc.get("run.results_dir") {
+            cfg.results_dir = v
+                .as_str()
+                .ok_or_else(|| {
+                    ConfigError::Invalid("`run.results_dir` must be a string".into())
+                })?
+                .to_string();
+        }
+        if let Some(v) = doc.get("run.artifacts_dir") {
+            cfg.artifacts_dir = v
+                .as_str()
+                .ok_or_else(|| {
+                    ConfigError::Invalid("`run.artifacts_dir` must be a string".into())
+                })?
+                .to_string();
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self, ConfigError> {
+        let s = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&s)
+    }
+
+    /// Cross-field invariants the simulator assumes.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let e = |m: &str| Err(ConfigError::Invalid(m.to_string()));
+        if self.market.slots == 0 || self.market.slots_per_day == 0 {
+            return e("market.slots and slots_per_day must be positive");
+        }
+        if self.market.avail_scale < 0.0 || self.market.volatility < 0.0 {
+            return e("market scales must be non-negative");
+        }
+        if !(0.0..1.0).contains(&self.market.base_price) {
+            return e("market.base_price must be in (0,1) (spot < on-demand)");
+        }
+        if self.jobs.workload_lo <= 0.0 || self.jobs.workload_hi < self.jobs.workload_lo {
+            return e("need 0 < job.workload_lo ≤ job.workload_hi");
+        }
+        if self.jobs.deadline == 0 {
+            return e("job.deadline must be ≥ 1 slot");
+        }
+        if self.jobs.n_min_range.0 == 0
+            || self.jobs.n_min_range.1 < self.jobs.n_min_range.0
+            || self.jobs.n_max_range.1 < self.jobs.n_max_range.0
+            || self.jobs.n_max_range.0 < self.jobs.n_min_range.1
+        {
+            return e("need 1 ≤ n_min_lo ≤ n_min_hi ≤ n_max_lo ≤ n_max_hi");
+        }
+        if self.jobs.gamma <= 1.0 {
+            return e("job.gamma must exceed 1 (hard deadline after soft)");
+        }
+        if self.jobs.value_multiple <= 0.0 {
+            return e("job.value_multiple must be positive");
+        }
+        if self.models.on_demand_price <= 0.0 {
+            return e("models.on_demand_price must be positive");
+        }
+        if self.noise.level < 0.0 || self.noise.growth < 0.0 {
+            return e("noise.level and noise.growth must be non-negative");
+        }
+        if self.selection_jobs == 0 {
+            return e("run.selection_jobs must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn empty_toml_gives_defaults() {
+        let cfg = ExperimentConfig::from_toml_str("").unwrap();
+        assert_eq!(cfg.jobs.deadline, 10);
+        assert_eq!(cfg.market.slots, 480);
+        assert_eq!(cfg.selection_jobs, 1000);
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let cfg = ExperimentConfig::from_toml_str(
+            r#"
+            [market]
+            slots = 96
+            volatility = 1.5
+            avail_scale = 0.8
+
+            [job]
+            deadline = 8
+            workload_lo = 50.0
+            workload_hi = 90.0
+            gamma = 2.0
+
+            [models]
+            bandwidth_mbps = 400
+            on_demand_price = 1.0
+
+            [noise]
+            kind = "heavy-tail"
+            magnitude = "fixed"
+            level = 0.3
+
+            [run]
+            selection_jobs = 250
+            seed = 42
+            results_dir = "out"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.market.slots, 96);
+        assert_eq!(cfg.jobs.deadline, 8);
+        assert!((cfg.jobs.gamma - 2.0).abs() < 1e-12);
+        assert_eq!(cfg.noise.kind, NoiseKind::HeavyTail);
+        assert_eq!(cfg.noise.magnitude, NoiseMagnitude::FixedMagnitude);
+        assert!((cfg.noise.level - 0.3).abs() < 1e-12);
+        assert_eq!(cfg.selection_jobs, 250);
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.results_dir, "out");
+        // bandwidth 400 → launch 6 min / 30 → μ₁ = 0.8
+        assert!((cfg.models.reconfig.mu_up - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validation_rejects_bad_ranges() {
+        assert!(ExperimentConfig::from_toml_str("[job]\ndeadline = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[job]\ngamma = 0.9\n").is_err());
+        assert!(ExperimentConfig::from_toml_str(
+            "[job]\nworkload_lo = 90.0\nworkload_hi = 50.0\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str(
+            "[models]\nmu_up = 0.99\nmu_down = 0.5\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str("[noise]\nkind = \"pink\"\n").is_err());
+    }
+
+    #[test]
+    fn wrong_types_rejected() {
+        assert!(ExperimentConfig::from_toml_str("[market]\nslots = \"many\"\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[noise]\nlevel = \"high\"\n").is_err());
+    }
+}

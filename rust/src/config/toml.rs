@@ -1,0 +1,367 @@
+//! A minimal TOML subset parser sufficient for experiment configs:
+//! `[table]` / `[table.sub]` headers, `key = value` pairs with string,
+//! integer, float, boolean, and homogeneous-array values, `#` comments.
+//! Dotted keys inside tables and inline tables are *not* supported —
+//! the config schema doesn't need them.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// Floats accept integer literals too (TOML `x = 1` for an f64 knob).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Path lookup: `get("market.volatility")`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse errors with 1-based line numbers.
+#[derive(Debug, Clone, PartialEq, thiserror::Error)]
+pub enum TomlError {
+    #[error("line {0}: malformed table header")]
+    BadHeader(usize),
+    #[error("line {0}: expected `key = value`")]
+    BadPair(usize),
+    #[error("line {0}: cannot parse value `{1}`")]
+    BadValue(usize, String),
+    #[error("line {0}: unterminated string")]
+    BadString(usize),
+    #[error("line {0}: key `{1}` redefined")]
+    Redefined(usize, String),
+}
+
+/// Parse a TOML document into a root table.
+pub fn parse(src: &str) -> Result<Value, TomlError> {
+    let mut root = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (i, raw) in src.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') || line.len() < 3 {
+                return Err(TomlError::BadHeader(lineno));
+            }
+            let inner = &line[1..line.len() - 1];
+            if inner.is_empty()
+                || inner.split('.').any(|p| p.trim().is_empty())
+            {
+                return Err(TomlError::BadHeader(lineno));
+            }
+            current_path =
+                inner.split('.').map(|p| p.trim().to_string()).collect();
+            // materialize the table path
+            ensure_table(&mut root, &current_path, lineno)?;
+            continue;
+        }
+        let eq = line.find('=').ok_or(TomlError::BadPair(lineno))?;
+        let key = line[..eq].trim().to_string();
+        let val_src = line[eq + 1..].trim();
+        if key.is_empty() || val_src.is_empty() {
+            return Err(TomlError::BadPair(lineno));
+        }
+        let value = parse_value(val_src, lineno)?;
+        let table = ensure_table(&mut root, &current_path, lineno)?;
+        if table.contains_key(&key) {
+            return Err(TomlError::Redefined(lineno, key));
+        }
+        table.insert(key, value);
+    }
+    Ok(Value::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, TomlError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        match entry {
+            Value::Table(t) => cur = t,
+            _ => return Err(TomlError::Redefined(lineno, part.clone())),
+        }
+    }
+    Ok(cur)
+}
+
+fn parse_value(src: &str, lineno: usize) -> Result<Value, TomlError> {
+    let s = src.trim();
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(TomlError::BadString(lineno));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut out = String::with_capacity(inner.len());
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    _ => return Err(TomlError::BadString(lineno)),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(Value::Str(out));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err(TomlError::BadValue(lineno, s.to_string()));
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            items.push(parse_value(p, lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+            return Ok(Value::Int(i));
+        }
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(TomlError::BadValue(lineno, s.to_string()))
+}
+
+/// Split an array body on commas not nested in brackets or strings.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(a) => {
+                write!(f, "[")?;
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Table(t) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in t.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k} = {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let v = parse(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = -3\nf = 1e-3\n",
+        )
+        .unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_float(), Some(2.5));
+        assert_eq!(v.get("c").unwrap().as_str(), Some("hi"));
+        assert_eq!(v.get("d").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("e").unwrap().as_int(), Some(-3));
+        assert_eq!(v.get("f").unwrap().as_float(), Some(1e-3));
+    }
+
+    #[test]
+    fn parses_tables_and_nesting() {
+        let v = parse(
+            "top = 1\n[market]\nvolatility = 1.5\n[market.gen]\nslots = 480\n",
+        )
+        .unwrap();
+        assert_eq!(v.get("top").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("market.volatility").unwrap().as_float(), Some(1.5));
+        assert_eq!(v.get("market.gen.slots").unwrap().as_int(), Some(480));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let v = parse("xs = [1, 2, 3]\nys = [0.3, 0.5]\nzs = [\"a\", \"b\"]\n")
+            .unwrap();
+        let xs = v.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[2].as_int(), Some(3));
+        let zs = v.get("zs").unwrap().as_array().unwrap();
+        assert_eq!(zs[1].as_str(), Some("b"));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let v = parse("# header\na = 1 # trailing\n\nb = \"x # not comment\"\n")
+            .unwrap();
+        assert_eq!(v.get("a").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x # not comment"));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = parse(r#"s = "a\nb\t\"q\"""#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a\nb\t\"q\""));
+    }
+
+    #[test]
+    fn int_is_float_compatible_but_not_reverse() {
+        let v = parse("a = 3\nb = 3.5\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_float(), Some(3.0));
+        assert_eq!(v.get("b").unwrap().as_int(), None);
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(matches!(parse("[unclosed\n"), Err(TomlError::BadHeader(1))));
+        assert!(matches!(parse("novalue\n"), Err(TomlError::BadPair(1))));
+        assert!(matches!(parse("a = @@\n"), Err(TomlError::BadValue(1, _))));
+        assert!(matches!(parse("a = 1\na = 2\n"), Err(TomlError::Redefined(2, _))));
+        assert!(matches!(parse("a = \"x\n"), Err(TomlError::BadString(1))));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse("m = [[1, 2], [3, 4]]\n").unwrap();
+        let m = v.get("m").unwrap().as_array().unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[1].as_array().unwrap()[0].as_int(), Some(3));
+    }
+
+    #[test]
+    fn missing_path_is_none() {
+        let v = parse("[a]\nb = 1\n").unwrap();
+        assert!(v.get("a.c").is_none());
+        assert!(v.get("x.y").is_none());
+    }
+}

@@ -1,0 +1,127 @@
+//! Coordinator event log: a lightweight append-only bus the leader emits
+//! into, consumed by tests, metrics, and the CLI's verbose mode.
+
+use std::fmt;
+
+/// Everything observable that happens during a coordinated run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    SlotStarted { slot: usize, spot_price: f64, avail: u32 },
+    Decision { slot: usize, on_demand: u32, spot: u32 },
+    InstanceLaunched { slot: usize, id: u64, spot: bool },
+    InstanceReleased { slot: usize, id: u64, spot: bool },
+    InstancePreempted { slot: usize, id: u64 },
+    Reconfigured { slot: usize, from: u32, to: u32, mu: f64 },
+    CheckpointSaved { slot: usize, bytes: usize },
+    CheckpointRestored { slot: usize, bytes: usize },
+    TrainStep { slot: usize, step: i32, loss: f32, shards: usize },
+    SlotFinished { slot: usize, progress: f64, cost: f64 },
+    JobCompleted { slot: usize, utility: f64 },
+    DeadlineMissed { slot: usize, remaining: f64 },
+}
+
+impl fmt::Display for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Event::SlotStarted { slot, spot_price, avail } => {
+                write!(f, "[slot {slot}] start: spot ${spot_price:.2} avail {avail}")
+            }
+            Event::Decision { slot, on_demand, spot } => {
+                write!(f, "[slot {slot}] decide: {on_demand} od + {spot} spot")
+            }
+            Event::InstanceLaunched { slot, id, spot } => {
+                write!(f, "[slot {slot}] launch #{id} ({})", kind(*spot))
+            }
+            Event::InstanceReleased { slot, id, spot } => {
+                write!(f, "[slot {slot}] release #{id} ({})", kind(*spot))
+            }
+            Event::InstancePreempted { slot, id } => {
+                write!(f, "[slot {slot}] PREEMPTED #{id}")
+            }
+            Event::Reconfigured { slot, from, to, mu } => {
+                write!(f, "[slot {slot}] reconfig {from}→{to} (μ={mu:.2})")
+            }
+            Event::CheckpointSaved { slot, bytes } => {
+                write!(f, "[slot {slot}] checkpoint saved ({bytes} B)")
+            }
+            Event::CheckpointRestored { slot, bytes } => {
+                write!(f, "[slot {slot}] checkpoint restored ({bytes} B)")
+            }
+            Event::TrainStep { slot, step, loss, shards } => {
+                write!(f, "[slot {slot}] step {step}: loss {loss:.4} ({shards} shards)")
+            }
+            Event::SlotFinished { slot, progress, cost } => {
+                write!(f, "[slot {slot}] done: progress {progress:.1}, cost {cost:.2}")
+            }
+            Event::JobCompleted { slot, utility } => {
+                write!(f, "[slot {slot}] JOB COMPLETE utility {utility:.2}")
+            }
+            Event::DeadlineMissed { slot, remaining } => {
+                write!(f, "[slot {slot}] DEADLINE MISSED ({remaining:.1} remaining)")
+            }
+        }
+    }
+}
+
+fn kind(spot: bool) -> &'static str {
+    if spot {
+        "spot"
+    } else {
+        "on-demand"
+    }
+}
+
+/// Append-only event log.
+#[derive(Debug, Default)]
+pub struct EventLog {
+    events: Vec<Event>,
+    /// Echo events to stderr as they arrive.
+    pub verbose: bool,
+}
+
+impl EventLog {
+    pub fn new(verbose: bool) -> Self {
+        EventLog { events: Vec::new(), verbose }
+    }
+
+    pub fn emit(&mut self, e: Event) {
+        if self.verbose {
+            eprintln!("{e}");
+        }
+        self.events.push(e);
+    }
+
+    pub fn all(&self) -> &[Event] {
+        &self.events
+    }
+
+    pub fn count_matching(&self, pred: impl Fn(&Event) -> bool) -> usize {
+        self.events.iter().filter(|e| pred(e)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_appends_and_counts() {
+        let mut log = EventLog::new(false);
+        log.emit(Event::SlotStarted { slot: 0, spot_price: 0.5, avail: 3 });
+        log.emit(Event::InstancePreempted { slot: 1, id: 7 });
+        log.emit(Event::InstancePreempted { slot: 2, id: 8 });
+        assert_eq!(log.all().len(), 3);
+        assert_eq!(
+            log.count_matching(|e| matches!(e, Event::InstancePreempted { .. })),
+            2
+        );
+    }
+
+    #[test]
+    fn events_display() {
+        let e = Event::Reconfigured { slot: 3, from: 4, to: 8, mu: 0.9 };
+        assert_eq!(e.to_string(), "[slot 3] reconfig 4→8 (μ=0.90)");
+        let e2 = Event::InstanceLaunched { slot: 0, id: 1, spot: true };
+        assert!(e2.to_string().contains("spot"));
+    }
+}

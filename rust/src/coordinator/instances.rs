@@ -1,0 +1,200 @@
+//! Simulated instance pool: tracks the spot / on-demand instances the
+//! leader currently holds, reconciles toward the policy's target each
+//! slot, and surfaces preemptions when the market withdraws spot
+//! capacity.
+
+use crate::coordinator::events::{Event, EventLog};
+
+/// Instance flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceKind {
+    Spot,
+    OnDemand,
+}
+
+/// One leased instance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instance {
+    pub id: u64,
+    pub kind: InstanceKind,
+    pub launched_slot: usize,
+}
+
+/// The pool of currently-held instances.
+#[derive(Debug, Default)]
+pub struct InstancePool {
+    instances: Vec<Instance>,
+    next_id: u64,
+    pub total_launches: u64,
+    pub total_preemptions: u64,
+}
+
+impl InstancePool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn count(&self, kind: InstanceKind) -> u32 {
+        self.instances.iter().filter(|i| i.kind == kind).count() as u32
+    }
+
+    pub fn total(&self) -> u32 {
+        self.instances.len() as u32
+    }
+
+    pub fn ids(&self) -> Vec<u64> {
+        self.instances.iter().map(|i| i.id).collect()
+    }
+
+    /// Apply market preemption at slot entry: spot instances above the
+    /// currently-available count are withdrawn (oldest first, matching
+    /// how providers reclaim the longest-running capacity).
+    pub fn preempt_to_availability(
+        &mut self,
+        slot: usize,
+        avail: u32,
+        log: &mut EventLog,
+    ) -> u32 {
+        let have = self.count(InstanceKind::Spot);
+        let drop = have.saturating_sub(avail);
+        if drop == 0 {
+            return 0;
+        }
+        let mut dropped = 0;
+        let mut kept = Vec::with_capacity(self.instances.len());
+        for inst in self.instances.drain(..) {
+            if inst.kind == InstanceKind::Spot && dropped < drop {
+                log.emit(Event::InstancePreempted { slot, id: inst.id });
+                dropped += 1;
+            } else {
+                kept.push(inst);
+            }
+        }
+        self.instances = kept;
+        self.total_preemptions += dropped as u64;
+        dropped
+    }
+
+    /// Reconcile toward `(target_od, target_spot)`: launch what's
+    /// missing, release the surplus. Returns (launched, released).
+    pub fn reconcile(
+        &mut self,
+        slot: usize,
+        target_od: u32,
+        target_spot: u32,
+        log: &mut EventLog,
+    ) -> (u32, u32) {
+        let mut launched = 0;
+        let mut released = 0;
+        for (kind, target) in [
+            (InstanceKind::OnDemand, target_od),
+            (InstanceKind::Spot, target_spot),
+        ] {
+            let have = self.count(kind);
+            if have < target {
+                for _ in 0..target - have {
+                    self.next_id += 1;
+                    let id = self.next_id;
+                    self.instances.push(Instance {
+                        id,
+                        kind,
+                        launched_slot: slot,
+                    });
+                    log.emit(Event::InstanceLaunched {
+                        slot,
+                        id,
+                        spot: kind == InstanceKind::Spot,
+                    });
+                    launched += 1;
+                }
+            } else if have > target {
+                // Release newest first (oldest instances have warm caches
+                // in a real deployment).
+                let mut to_drop = have - target;
+                let mut kept = Vec::with_capacity(self.instances.len());
+                for inst in self.instances.drain(..).rev() {
+                    if inst.kind == kind && to_drop > 0 {
+                        log.emit(Event::InstanceReleased {
+                            slot,
+                            id: inst.id,
+                            spot: kind == InstanceKind::Spot,
+                        });
+                        to_drop -= 1;
+                        released += 1;
+                    } else {
+                        kept.push(inst);
+                    }
+                }
+                kept.reverse();
+                self.instances = kept;
+            }
+        }
+        self.total_launches += launched as u64;
+        (launched, released)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reconcile_launches_and_releases() {
+        let mut pool = InstancePool::new();
+        let mut log = EventLog::new(false);
+        let (l, r) = pool.reconcile(0, 2, 3, &mut log);
+        assert_eq!((l, r), (5, 0));
+        assert_eq!(pool.count(InstanceKind::OnDemand), 2);
+        assert_eq!(pool.count(InstanceKind::Spot), 3);
+        let (l, r) = pool.reconcile(1, 1, 4, &mut log);
+        assert_eq!((l, r), (1, 1));
+        assert_eq!(pool.total(), 5);
+        assert_eq!(pool.total_launches, 6);
+    }
+
+    #[test]
+    fn preemption_drops_spot_only() {
+        let mut pool = InstancePool::new();
+        let mut log = EventLog::new(false);
+        pool.reconcile(0, 2, 4, &mut log);
+        let dropped = pool.preempt_to_availability(1, 1, &mut log);
+        assert_eq!(dropped, 3);
+        assert_eq!(pool.count(InstanceKind::Spot), 1);
+        assert_eq!(pool.count(InstanceKind::OnDemand), 2);
+        assert_eq!(pool.total_preemptions, 3);
+        assert_eq!(
+            log.count_matching(|e| matches!(e, Event::InstancePreempted { .. })),
+            3
+        );
+    }
+
+    #[test]
+    fn preemption_oldest_first() {
+        let mut pool = InstancePool::new();
+        let mut log = EventLog::new(false);
+        pool.reconcile(0, 0, 2, &mut log); // ids 1,2
+        pool.reconcile(1, 0, 3, &mut log); // id 3 added
+        pool.preempt_to_availability(2, 2, &mut log);
+        // id 1 (oldest) dropped
+        assert!(!pool.ids().contains(&1));
+        assert!(pool.ids().contains(&3));
+    }
+
+    #[test]
+    fn release_newest_first() {
+        let mut pool = InstancePool::new();
+        let mut log = EventLog::new(false);
+        pool.reconcile(0, 0, 3, &mut log); // ids 1,2,3
+        pool.reconcile(1, 0, 1, &mut log);
+        assert_eq!(pool.ids(), vec![1]);
+    }
+
+    #[test]
+    fn no_preemption_when_avail_sufficient() {
+        let mut pool = InstancePool::new();
+        let mut log = EventLog::new(false);
+        pool.reconcile(0, 0, 2, &mut log);
+        assert_eq!(pool.preempt_to_availability(1, 5, &mut log), 0);
+        assert_eq!(pool.total(), 2);
+    }
+}

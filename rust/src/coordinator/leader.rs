@@ -1,0 +1,274 @@
+//! The leader: the slot-driven loop that binds the paper's scheduling
+//! algorithms to the execution substrate. Each slot it
+//!
+//! 1. observes the spot market and surfaces preemptions,
+//! 2. asks the policy (AHAP / AHANP / baseline) for an allocation,
+//! 3. reconciles the instance pool (checkpoint/restore around resizes —
+//!    the switching cost of §II-A),
+//! 4. executes real PJRT train-steps with the pool as data-parallel
+//!    shards (μ-scaled step count models the reconfiguration stall), and
+//! 5. accounts progress, cost, and the loss curve.
+//!
+//! This is the end-to-end path `examples/finetune_spot.rs` and
+//! `spotfine train` exercise; the pure simulator in [`crate::sched`]
+//! runs the same decision logic without the training substrate.
+
+use anyhow::Result;
+
+use crate::coordinator::checkpoint::CheckpointManager;
+use crate::coordinator::events::{Event, EventLog};
+use crate::coordinator::instances::InstancePool;
+use crate::coordinator::metrics::{Metrics, SlotRecord};
+use crate::market::market::SpotMarket;
+use crate::market::trace::SpotTrace;
+use crate::sched::job::Job;
+use crate::sched::policy::{Models, Policy, SlotContext};
+use crate::train::trainer::Trainer;
+
+/// Leader configuration.
+#[derive(Debug, Clone)]
+pub struct LeaderConfig {
+    /// Optimizer steps per slot at μ = 1 (scaled down on reconfig).
+    pub steps_per_slot: usize,
+    /// Network bandwidth for checkpoint movement (Mbps).
+    pub bandwidth_mbps: f64,
+    /// Checkpoint directory.
+    pub checkpoint_dir: std::path::PathBuf,
+    /// Echo events to stderr.
+    pub verbose: bool,
+}
+
+impl Default for LeaderConfig {
+    fn default() -> Self {
+        LeaderConfig {
+            steps_per_slot: 4,
+            bandwidth_mbps: 800.0,
+            checkpoint_dir: std::env::temp_dir().join("spotfine_ckpt"),
+            verbose: false,
+        }
+    }
+}
+
+/// One slot's outward-facing summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotReport {
+    pub slot: usize,
+    pub on_demand: u32,
+    pub spot: u32,
+    pub mu: f64,
+    pub loss: Option<f32>,
+    pub progress: f64,
+    pub cost_so_far: f64,
+}
+
+/// Outcome of a coordinated run.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub utility: f64,
+    pub value: f64,
+    pub cost: f64,
+    pub completion_slot: usize,
+    pub on_time: bool,
+    pub metrics: Metrics,
+    pub events: EventLog,
+}
+
+/// The leader itself.
+pub struct Leader {
+    pub cfg: LeaderConfig,
+    pub models: Models,
+}
+
+impl Leader {
+    pub fn new(cfg: LeaderConfig, models: Models) -> Self {
+        Leader { cfg, models }
+    }
+
+    /// Run `job` under `policy` on `trace`, executing real training via
+    /// `trainer`. The scheduler's workload units drive progress exactly
+    /// as in [`crate::sched::simulate`]; training steps realize the
+    /// workload (loss curve) with the pool as shard count.
+    pub fn run(
+        &self,
+        job: &Job,
+        trace: &SpotTrace,
+        policy: &mut dyn Policy,
+        trainer: &mut Trainer,
+    ) -> Result<RunOutcome> {
+        policy.reset();
+        let mut market = SpotMarket::new(trace.clone())
+            .with_on_demand_price(self.models.on_demand_price);
+        let mut log = EventLog::new(self.cfg.verbose);
+        let mut metrics = Metrics::new();
+        let mut pool = InstancePool::new();
+        let mut ckpt =
+            CheckpointManager::new(&self.cfg.checkpoint_dir, self.cfg.bandwidth_mbps);
+
+        let mut progress = 0.0f64;
+        let mut prev_total = 0u32;
+        let mut prev_avail = 0u32;
+        let mut completion_slot = None;
+
+        for t in 0..job.deadline {
+            let obs = market.observe();
+            log.emit(Event::SlotStarted {
+                slot: t,
+                spot_price: obs.spot_price,
+                avail: obs.avail,
+            });
+
+            // Market-forced preemptions happen before we decide.
+            let preempted = pool.preempt_to_availability(t, obs.avail, &mut log);
+            if preempted > 0 && trainer.store.step > 0 {
+                // Recover the training state onto replacement capacity.
+                if ckpt.exists("latest") {
+                    let (restored, cost) =
+                        ckpt.restore("latest", &trainer.store)?;
+                    trainer.restore(restored)?;
+                    log.emit(Event::CheckpointRestored {
+                        slot: t,
+                        bytes: cost.bytes,
+                    });
+                    metrics.checkpoint_bytes_moved += cost.bytes as u64;
+                }
+            }
+
+            let ctx = SlotContext {
+                t,
+                obs,
+                progress,
+                prev_total,
+                prev_avail,
+                job: job,
+                models: &self.models,
+            };
+            let want = policy.decide(&ctx).clamp_to_job(job, obs.avail);
+            log.emit(Event::Decision {
+                slot: t,
+                on_demand: want.on_demand,
+                spot: want.spot,
+            });
+            let grant = market.request(want.on_demand, want.spot);
+            let total = grant.on_demand + grant.spot;
+
+            let mu = self.models.reconfig.mu(prev_total, total);
+            if total != prev_total {
+                metrics.reconfigs += 1;
+                log.emit(Event::Reconfigured {
+                    slot: t,
+                    from: prev_total,
+                    to: total,
+                    mu,
+                });
+                // Resizing moves a checkpoint to the new topology.
+                if trainer.store.step > 0 {
+                    let cost = ckpt.save("latest", &trainer.store)?;
+                    log.emit(Event::CheckpointSaved { slot: t, bytes: cost.bytes });
+                    metrics.checkpoint_bytes_moved += cost.bytes as u64;
+                }
+            }
+            pool.reconcile(t, grant.on_demand, grant.spot, &mut log);
+
+            // Execute: μ-scaled optimizer steps with `total` shards.
+            let mut losses = Vec::new();
+            if total > 0 {
+                let steps =
+                    ((self.cfg.steps_per_slot as f64) * mu).round() as usize;
+                for _ in 0..steps.max(1) {
+                    let stats = trainer.step_parallel(total as usize)?;
+                    metrics.total_samples += stats.samples;
+                    metrics.record_loss(stats.step, stats.loss);
+                    log.emit(Event::TrainStep {
+                        slot: t,
+                        step: stats.step,
+                        loss: stats.loss,
+                        shards: stats.shards,
+                    });
+                    losses.push(stats.loss);
+                }
+                // Periodic checkpoint so preemption recovery has a base.
+                let cost = ckpt.save("latest", &trainer.store)?;
+                log.emit(Event::CheckpointSaved { slot: t, bytes: cost.bytes });
+            }
+
+            progress += mu * self.models.throughput.h(total);
+            let mean_loss = if losses.is_empty() {
+                f32::NAN
+            } else {
+                losses.iter().sum::<f32>() / losses.len() as f32
+            };
+            metrics.record_slot(SlotRecord {
+                slot: t,
+                spot_price: obs.spot_price,
+                avail: obs.avail,
+                on_demand: grant.on_demand,
+                spot: grant.spot,
+                mu,
+                progress,
+                cost: grant.cost,
+                mean_loss,
+                steps: losses.len(),
+                preemptions: preempted,
+            });
+            log.emit(Event::SlotFinished {
+                slot: t,
+                progress,
+                cost: grant.cost,
+            });
+
+            prev_total = total;
+            prev_avail = obs.avail;
+            market.advance();
+            if progress >= job.workload - 1e-9 {
+                completion_slot = Some(t + 1);
+                break;
+            }
+        }
+
+        metrics.preemptions = pool.total_preemptions;
+        let pre_cost = market.total_cost;
+        let (value, cost, completion) = match completion_slot {
+            Some(t) => {
+                log.emit(Event::JobCompleted {
+                    slot: t - 1,
+                    utility: job.value_at(t as f64) - pre_cost,
+                });
+                (job.value_at(t as f64), pre_cost, t)
+            }
+            None => {
+                let remaining = job.workload - progress;
+                log.emit(Event::DeadlineMissed {
+                    slot: job.deadline,
+                    remaining,
+                });
+                // Termination config: on-demand at N^max until done
+                // (same accounting as sched::simulate).
+                let g = self.models.throughput.h(job.n_max);
+                let first = self.models.reconfig.mu_up * g;
+                let extra = if remaining <= first {
+                    1
+                } else {
+                    1 + ((remaining - first) / g).ceil() as usize
+                };
+                let slots_run = metrics.slots.len();
+                let t = slots_run + extra;
+                let term_cost =
+                    extra as f64 * job.n_max as f64 * self.models.on_demand_price;
+                (job.value_at(t as f64), pre_cost + term_cost, t)
+            }
+        };
+
+        Ok(RunOutcome {
+            utility: value - cost,
+            value,
+            cost,
+            completion_slot: completion,
+            on_time: completion <= job.deadline,
+            metrics,
+            events: log,
+        })
+    }
+}
+
+// Leader integration tests (which need compiled artifacts) live in
+// rust/tests/coordinator_end_to_end.rs.

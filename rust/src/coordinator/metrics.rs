@@ -1,0 +1,161 @@
+//! Run metrics: per-slot records plus aggregate counters, exportable to
+//! CSV for the figures and EXPERIMENTS.md.
+
+use std::path::Path;
+
+use crate::util::csvio::CsvWriter;
+
+/// One slot's record in the coordinated run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotRecord {
+    pub slot: usize,
+    pub spot_price: f64,
+    pub avail: u32,
+    pub on_demand: u32,
+    pub spot: u32,
+    pub mu: f64,
+    pub progress: f64,
+    pub cost: f64,
+    pub mean_loss: f32,
+    pub steps: usize,
+    pub preemptions: u32,
+}
+
+/// Aggregated metrics for a coordinated run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub slots: Vec<SlotRecord>,
+    pub losses: Vec<(i32, f32)>,
+    pub total_cost: f64,
+    pub total_samples: usize,
+    pub preemptions: u64,
+    pub reconfigs: u64,
+    pub checkpoint_bytes_moved: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_slot(&mut self, rec: SlotRecord) {
+        self.total_cost += rec.cost;
+        self.slots.push(rec);
+    }
+
+    pub fn record_loss(&mut self, step: i32, loss: f32) {
+        self.losses.push((step, loss));
+    }
+
+    /// Final training loss (mean of last k recorded losses).
+    pub fn final_loss(&self, k: usize) -> Option<f32> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let tail = &self.losses[self.losses.len().saturating_sub(k)..];
+        Some(tail.iter().map(|(_, l)| l).sum::<f32>() / tail.len() as f32)
+    }
+
+    /// First training loss (mean of first k).
+    pub fn initial_loss(&self, k: usize) -> Option<f32> {
+        if self.losses.is_empty() {
+            return None;
+        }
+        let head = &self.losses[..k.min(self.losses.len())];
+        Some(head.iter().map(|(_, l)| l).sum::<f32>() / head.len() as f32)
+    }
+
+    /// Write the per-slot table to CSV.
+    pub fn write_slots_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(
+            path,
+            &[
+                "slot", "spot_price", "avail", "on_demand", "spot", "mu",
+                "progress", "cost", "mean_loss", "steps", "preemptions",
+            ],
+        )?;
+        for r in &self.slots {
+            w.row(&[
+                r.slot.to_string(),
+                format!("{:.4}", r.spot_price),
+                r.avail.to_string(),
+                r.on_demand.to_string(),
+                r.spot.to_string(),
+                format!("{:.3}", r.mu),
+                format!("{:.2}", r.progress),
+                format!("{:.4}", r.cost),
+                format!("{:.4}", r.mean_loss),
+                r.steps.to_string(),
+                r.preemptions.to_string(),
+            ]);
+        }
+        w.finish()?;
+        Ok(())
+    }
+
+    /// Write the loss curve to CSV.
+    pub fn write_loss_csv(&self, path: &Path) -> std::io::Result<()> {
+        let mut w = CsvWriter::create(path, &["step", "loss"])?;
+        for (s, l) in &self.losses {
+            w.row(&[s.to_string(), format!("{l:.6}")]);
+        }
+        w.finish()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(slot: usize, cost: f64) -> SlotRecord {
+        SlotRecord {
+            slot,
+            spot_price: 0.5,
+            avail: 4,
+            on_demand: 1,
+            spot: 2,
+            mu: 1.0,
+            progress: 10.0,
+            cost,
+            mean_loss: 3.0,
+            steps: 4,
+            preemptions: 0,
+        }
+    }
+
+    #[test]
+    fn cost_accumulates() {
+        let mut m = Metrics::new();
+        m.record_slot(rec(0, 2.5));
+        m.record_slot(rec(1, 1.5));
+        assert!((m.total_cost - 4.0).abs() < 1e-12);
+        assert_eq!(m.slots.len(), 2);
+    }
+
+    #[test]
+    fn loss_summaries() {
+        let mut m = Metrics::new();
+        assert_eq!(m.final_loss(3), None);
+        for (i, l) in [5.0, 4.0, 3.0, 2.0].iter().enumerate() {
+            m.record_loss(i as i32, *l);
+        }
+        assert!((m.initial_loss(2).unwrap() - 4.5).abs() < 1e-6);
+        assert!((m.final_loss(2).unwrap() - 2.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_export() {
+        let mut m = Metrics::new();
+        m.record_slot(rec(0, 1.0));
+        m.record_loss(1, 2.5);
+        let dir = std::env::temp_dir()
+            .join(format!("spotfine_metrics_{}", std::process::id()));
+        m.write_slots_csv(&dir.join("slots.csv")).unwrap();
+        m.write_loss_csv(&dir.join("loss.csv")).unwrap();
+        let s = std::fs::read_to_string(dir.join("slots.csv")).unwrap();
+        assert!(s.starts_with("slot,"));
+        assert_eq!(s.lines().count(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

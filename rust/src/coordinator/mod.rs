@@ -1,0 +1,14 @@
+//! L3 coordinator: the slot-driven leader loop that binds scheduling
+//! decisions (AHAP/AHANP/…) to the execution substrate — instance pool
+//! management with spot preemption, checkpoint/restore, switching-cost
+//! accounting, and metrics.
+
+pub mod checkpoint;
+pub mod events;
+pub mod instances;
+pub mod leader;
+pub mod metrics;
+
+pub use instances::{InstanceKind, InstancePool};
+pub use leader::{Leader, LeaderConfig, RunOutcome, SlotReport};
+pub use metrics::Metrics;

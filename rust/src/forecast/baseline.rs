@@ -1,0 +1,187 @@
+//! Naive forecasting baselines: persistence ("last value"), moving
+//! average, and seasonal-naive (value one day ago). These calibrate how
+//! much ARIMA actually buys (Fig. 3 discussion) and serve as cheap
+//! fallbacks inside the policy pool.
+
+use crate::forecast::predictor::{Forecast, Predictor};
+
+/// Repeats the last observed value for the whole horizon.
+pub struct PersistencePredictor {
+    last_price: f64,
+    last_avail: f64,
+}
+
+impl PersistencePredictor {
+    pub fn new() -> Self {
+        PersistencePredictor { last_price: 0.5, last_avail: 0.0 }
+    }
+}
+
+impl Default for PersistencePredictor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Predictor for PersistencePredictor {
+    fn observe(&mut self, _t: usize, price: f64, avail: u32) {
+        self.last_price = price;
+        self.last_avail = avail as f64;
+    }
+
+    fn predict(&mut self, horizon: usize) -> Forecast {
+        Forecast {
+            price: vec![self.last_price; horizon],
+            avail: vec![self.last_avail; horizon],
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "persistence"
+    }
+}
+
+/// Forecasts the mean of the last `window` observations.
+pub struct MovingAveragePredictor {
+    window: usize,
+    price: Vec<f64>,
+    avail: Vec<f64>,
+}
+
+impl MovingAveragePredictor {
+    pub fn new(window: usize) -> Self {
+        assert!(window > 0);
+        MovingAveragePredictor { window, price: Vec::new(), avail: Vec::new() }
+    }
+
+    fn tail_mean(xs: &[f64], w: usize, default: f64) -> f64 {
+        if xs.is_empty() {
+            return default;
+        }
+        let s = &xs[xs.len().saturating_sub(w)..];
+        s.iter().sum::<f64>() / s.len() as f64
+    }
+}
+
+impl Predictor for MovingAveragePredictor {
+    fn observe(&mut self, _t: usize, price: f64, avail: u32) {
+        self.price.push(price);
+        self.avail.push(avail as f64);
+    }
+
+    fn predict(&mut self, horizon: usize) -> Forecast {
+        let p = Self::tail_mean(&self.price, self.window, 0.5);
+        let a = Self::tail_mean(&self.avail, self.window, 0.0);
+        Forecast { price: vec![p; horizon], avail: vec![a; horizon] }
+    }
+
+    fn name(&self) -> &'static str {
+        "moving-average"
+    }
+}
+
+/// Seasonal-naive: forecast slot t+h with the observation from one season
+/// (default one day = 48 slots) earlier, falling back to persistence when
+/// history is shorter than a season.
+pub struct SeasonalNaivePredictor {
+    season: usize,
+    price: Vec<f64>,
+    avail: Vec<f64>,
+}
+
+impl SeasonalNaivePredictor {
+    pub fn new(season: usize) -> Self {
+        assert!(season > 0);
+        SeasonalNaivePredictor { season, price: Vec::new(), avail: Vec::new() }
+    }
+}
+
+impl Predictor for SeasonalNaivePredictor {
+    fn observe(&mut self, _t: usize, price: f64, avail: u32) {
+        self.price.push(price);
+        self.avail.push(avail as f64);
+    }
+
+    fn predict(&mut self, horizon: usize) -> Forecast {
+        let n = self.price.len();
+        let mut price = Vec::with_capacity(horizon);
+        let mut avail = Vec::with_capacity(horizon);
+        for h in 1..=horizon {
+            // index of (t + h) - season in history
+            let idx = (n + h).checked_sub(self.season);
+            match idx {
+                Some(i) if i < n => {
+                    price.push(self.price[i]);
+                    avail.push(self.avail[i]);
+                }
+                _ => {
+                    price.push(self.price.last().copied().unwrap_or(0.5));
+                    avail.push(self.avail.last().copied().unwrap_or(0.0));
+                }
+            }
+        }
+        Forecast { price, avail }
+    }
+
+    fn name(&self) -> &'static str {
+        "seasonal-naive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn persistence_repeats_last() {
+        let mut p = PersistencePredictor::new();
+        p.observe(0, 0.3, 7);
+        p.observe(1, 0.6, 2);
+        let f = p.predict(3);
+        assert_eq!(f.price, vec![0.6; 3]);
+        assert_eq!(f.avail, vec![2.0; 3]);
+    }
+
+    #[test]
+    fn moving_average_uses_window() {
+        let mut p = MovingAveragePredictor::new(2);
+        p.observe(0, 0.2, 0);
+        p.observe(1, 0.4, 4);
+        p.observe(2, 0.6, 8);
+        let f = p.predict(1);
+        assert!((f.price[0] - 0.5).abs() < 1e-12);
+        assert!((f.avail[0] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn moving_average_empty_defaults() {
+        let mut p = MovingAveragePredictor::new(4);
+        let f = p.predict(2);
+        assert_eq!(f.price, vec![0.5, 0.5]);
+        assert_eq!(f.avail, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn seasonal_naive_reads_one_season_back() {
+        let mut p = SeasonalNaivePredictor::new(3);
+        for (t, &(pr, av)) in [(0.1, 1u32), (0.2, 2), (0.3, 3), (0.4, 4)]
+            .iter()
+            .enumerate()
+        {
+            p.observe(t, pr, av);
+        }
+        // history = [.1,.2,.3,.4]; forecasting t=4 (h=1) → idx 4+1-3=2 → .3
+        let f = p.predict(2);
+        assert!((f.price[0] - 0.3).abs() < 1e-12);
+        assert!((f.price[1] - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seasonal_naive_falls_back_when_short() {
+        let mut p = SeasonalNaivePredictor::new(48);
+        p.observe(0, 0.7, 5);
+        let f = p.predict(2);
+        assert_eq!(f.price, vec![0.7, 0.7]);
+        assert_eq!(f.avail, vec![5.0, 5.0]);
+    }
+}

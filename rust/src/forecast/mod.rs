@@ -1,0 +1,11 @@
+//! Forecasting substrate: the `Predictor` abstraction AHAP consumes, an
+//! ARIMA implementation (the paper's Fig. 3 forecaster), naive baselines,
+//! and the four prediction-noise regimes of the evaluation (§VI-A).
+
+pub mod arima;
+pub mod baseline;
+pub mod noise;
+pub mod predictor;
+
+pub use noise::{NoiseKind, NoiseMagnitude, NoiseSpec, NoisyOracle};
+pub use predictor::{Forecast, Predictor};

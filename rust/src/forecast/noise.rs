@@ -1,0 +1,263 @@
+//! The paper's four prediction-noise regimes (§VI-A "Prediction Noise"):
+//! noise is either **magnitude-dependent** (relative, scales with the true
+//! value) or **fixed-magnitude** (absolute), and drawn from either a
+//! **uniform** or a **heavy-tailed** (Pareto) distribution. A
+//! [`NoisyOracle`] wraps the true future trace and perturbs it, letting
+//! the evaluation dial prediction quality precisely (10%…200% error) —
+//! exactly how Figs. 9–10 are produced.
+
+use crate::forecast::predictor::{Forecast, Predictor};
+use crate::market::trace::SpotTrace;
+use crate::util::rng::Rng;
+
+/// Distribution family of the noise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NoiseKind {
+    Uniform,
+    HeavyTail,
+}
+
+/// Whether error scales with the value or is absolute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NoiseMagnitude {
+    /// Relative: perturbation proportional to the true value.
+    MagnitudeDependent,
+    /// Absolute: perturbation proportional to a fixed reference scale.
+    FixedMagnitude,
+}
+
+/// A full noise specification: regime × level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NoiseSpec {
+    pub kind: NoiseKind,
+    pub magnitude: NoiseMagnitude,
+    /// Error level, e.g. 0.1 = "10% error" in the paper's Figs. 9–10.
+    pub level: f64,
+    /// Errors accumulate with forecast distance: the h-step error scale is
+    /// `level * (1 + growth*(h-1))` (multi-step predictions degrade,
+    /// Definition 1's ω-step budget).
+    pub growth: f64,
+}
+
+impl NoiseSpec {
+    pub fn new(kind: NoiseKind, magnitude: NoiseMagnitude, level: f64) -> Self {
+        NoiseSpec { kind, magnitude, level, growth: 0.25 }
+    }
+
+    /// The paper's four named regimes.
+    pub fn mag_dep_uniform(level: f64) -> Self {
+        Self::new(NoiseKind::Uniform, NoiseMagnitude::MagnitudeDependent, level)
+    }
+    pub fn fixed_mag_uniform(level: f64) -> Self {
+        Self::new(NoiseKind::Uniform, NoiseMagnitude::FixedMagnitude, level)
+    }
+    pub fn mag_dep_heavy(level: f64) -> Self {
+        Self::new(NoiseKind::HeavyTail, NoiseMagnitude::MagnitudeDependent, level)
+    }
+    pub fn fixed_mag_heavy(level: f64) -> Self {
+        Self::new(NoiseKind::HeavyTail, NoiseMagnitude::FixedMagnitude, level)
+    }
+
+    pub fn label(&self) -> String {
+        let m = match self.magnitude {
+            NoiseMagnitude::MagnitudeDependent => "Mag-Dep.",
+            NoiseMagnitude::FixedMagnitude => "Fixed-Mag.",
+        };
+        let k = match self.kind {
+            NoiseKind::Uniform => "Uniform",
+            NoiseKind::HeavyTail => "Heavy-Tail",
+        };
+        format!("{m}+{k} {:.0}%", self.level * 100.0)
+    }
+
+    /// Draw one noise sample for a true value `truth` with reference
+    /// scale `ref_scale` at forecast step `h` (1-based).
+    fn sample(&self, rng: &mut Rng, truth: f64, ref_scale: f64, h: usize) -> f64 {
+        let scale = self.level * (1.0 + self.growth * (h.saturating_sub(1)) as f64);
+        let base = match self.magnitude {
+            NoiseMagnitude::MagnitudeDependent => truth.abs(),
+            NoiseMagnitude::FixedMagnitude => ref_scale,
+        };
+        let draw = match self.kind {
+            NoiseKind::Uniform => rng.uniform(-1.0, 1.0),
+            // Pareto(1, 2.2) has mean ~1.83; center and clip so the level
+            // parameter keeps comparable average magnitude but with a
+            // heavy right tail of outliers.
+            NoiseKind::HeavyTail => {
+                let mag = (rng.pareto(0.5, 2.2) - 0.9).min(12.0);
+                rng.sign() * mag
+            }
+        };
+        truth + scale * base * draw
+    }
+}
+
+/// Perfect-future oracle corrupted by a [`NoiseSpec`] — the evaluation's
+/// knob for prediction quality.
+pub struct NoisyOracle {
+    trace: SpotTrace,
+    spec: NoiseSpec,
+    rng: Rng,
+    seed: u64,
+    next_t: usize,
+    /// Reference scales for fixed-magnitude noise (on-demand price = 1
+    /// for prices; availability cap for availability).
+    pub price_ref: f64,
+    pub avail_ref: f64,
+}
+
+impl NoisyOracle {
+    pub fn new(trace: SpotTrace, spec: NoiseSpec, seed: u64) -> Self {
+        NoisyOracle {
+            trace,
+            spec,
+            rng: Rng::new(seed),
+            seed,
+            next_t: 0,
+            price_ref: 0.5,
+            avail_ref: 8.0,
+        }
+    }
+
+    pub fn spec(&self) -> NoiseSpec {
+        self.spec
+    }
+}
+
+impl Predictor for NoisyOracle {
+    fn observe(&mut self, t: usize, _price: f64, _avail: u32) {
+        self.next_t = t + 1;
+    }
+
+    fn predict(&mut self, horizon: usize) -> Forecast {
+        let mut price = Vec::with_capacity(horizon);
+        let mut avail = Vec::with_capacity(horizon);
+        for h in 1..=horizon {
+            let t = self.next_t + h - 1;
+            let p_true = self.trace.price_at(t);
+            let a_true = self.trace.avail_at(t) as f64;
+            let p = self
+                .spec
+                .sample(&mut self.rng, p_true, self.price_ref, h)
+                .clamp(0.01, 2.0);
+            let a = self
+                .spec
+                .sample(&mut self.rng, a_true, self.avail_ref, h)
+                .clamp(0.0, 64.0);
+            price.push(p);
+            avail.push(a);
+        }
+        Forecast { price, avail }
+    }
+
+    fn name(&self) -> &'static str {
+        "noisy-oracle"
+    }
+
+    fn reset(&mut self) {
+        self.rng = Rng::new(self.seed);
+        self.next_t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::generator::TraceGenerator;
+    use crate::util::stats;
+
+    fn trace() -> SpotTrace {
+        TraceGenerator::calibrated().generate(3)
+    }
+
+    #[test]
+    fn zero_noise_equals_oracle() {
+        let tr = trace();
+        let mut p = NoisyOracle::new(tr.clone(), NoiseSpec::mag_dep_uniform(0.0), 1);
+        p.observe(9, tr.price_at(9), tr.avail_at(9));
+        let f = p.predict(4);
+        for h in 0..4 {
+            assert!((f.price[h] - tr.price_at(10 + h)).abs() < 1e-12);
+            assert!((f.avail[h] - tr.avail_at(10 + h) as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn error_scales_with_level() {
+        let tr = trace();
+        let mut err_by_level = Vec::new();
+        for &level in &[0.1, 0.5] {
+            let mut p =
+                NoisyOracle::new(tr.clone(), NoiseSpec::fixed_mag_uniform(level), 7);
+            let mut errs = Vec::new();
+            for t in 0..200 {
+                p.observe(t, tr.price_at(t), tr.avail_at(t));
+                let f = p.predict(1);
+                errs.push((f.price[0] - tr.price_at(t + 1)).abs());
+            }
+            err_by_level.push(stats::mean(&errs));
+        }
+        assert!(err_by_level[1] > err_by_level[0] * 2.0);
+    }
+
+    #[test]
+    fn multistep_error_grows_with_horizon() {
+        let tr = trace();
+        let mut p = NoisyOracle::new(tr.clone(), NoiseSpec::mag_dep_uniform(0.3), 11);
+        let mut e1 = Vec::new();
+        let mut e5 = Vec::new();
+        for t in 0..200 {
+            p.observe(t, tr.price_at(t), tr.avail_at(t));
+            let f = p.predict(5);
+            e1.push((f.price[0] - tr.price_at(t + 1)).abs());
+            e5.push((f.price[4] - tr.price_at(t + 5)).abs());
+        }
+        assert!(stats::mean(&e5) > stats::mean(&e1) * 1.3);
+    }
+
+    #[test]
+    fn heavy_tail_has_outliers() {
+        let tr = trace();
+        let spec_u = NoiseSpec::fixed_mag_uniform(0.3);
+        let spec_h = NoiseSpec::fixed_mag_heavy(0.3);
+        let collect = |spec: NoiseSpec| -> Vec<f64> {
+            let mut p = NoisyOracle::new(tr.clone(), spec, 13);
+            let mut errs = Vec::new();
+            for t in 0..400 {
+                p.observe(t, tr.price_at(t), tr.avail_at(t));
+                let f = p.predict(1);
+                errs.push((f.avail[0] - tr.avail_at(t + 1) as f64).abs());
+            }
+            errs
+        };
+        let u = collect(spec_u);
+        let h = collect(spec_h);
+        // Heavy tail: max/median ratio much larger than uniform's.
+        let ru = stats::percentile(&u, 99.0) / stats::median(&u).max(1e-9);
+        let rh = stats::percentile(&h, 99.0) / stats::median(&h).max(1e-9);
+        assert!(rh > ru * 1.5, "uniform ratio {ru}, heavy ratio {rh}");
+    }
+
+    #[test]
+    fn forecasts_stay_in_bounds() {
+        let tr = trace();
+        let mut p = NoisyOracle::new(tr.clone(), NoiseSpec::mag_dep_heavy(2.0), 17);
+        for t in 0..100 {
+            p.observe(t, tr.price_at(t), tr.avail_at(t));
+            let f = p.predict(5);
+            for (pr, av) in f.price.iter().zip(&f.avail) {
+                assert!(*pr >= 0.01 && *pr <= 2.0);
+                assert!(*av >= 0.0 && *av <= 64.0);
+            }
+        }
+    }
+
+    #[test]
+    fn labels_are_human_readable() {
+        assert_eq!(NoiseSpec::mag_dep_uniform(0.1).label(), "Mag-Dep.+Uniform 10%");
+        assert_eq!(
+            NoiseSpec::fixed_mag_heavy(0.5).label(),
+            "Fixed-Mag.+Heavy-Tail 50%"
+        );
+    }
+}

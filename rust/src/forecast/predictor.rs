@@ -1,0 +1,116 @@
+//! The prediction interface consumed by AHAP (Algorithm 1, line 3):
+//! at slot `t`, produce `ω`-step-ahead forecasts of spot price and
+//! availability.
+
+use crate::market::trace::SpotTrace;
+
+/// An ω-step forecast produced at some slot t: entry `i` forecasts slot
+/// `t + 1 + i`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Forecast {
+    pub price: Vec<f64>,
+    pub avail: Vec<f64>,
+}
+
+impl Forecast {
+    pub fn horizon(&self) -> usize {
+        self.price.len()
+    }
+
+    /// Availability forecast rounded and clamped to a non-negative count.
+    pub fn avail_count(&self, i: usize) -> u32 {
+        self.avail[i].round().max(0.0) as u32
+    }
+}
+
+/// A forecaster of the spot market. Implementations may keep history;
+/// `observe` is called once per slot with the realized values before any
+/// `predict` calls for later slots.
+pub trait Predictor {
+    /// Record the realized (price, avail) of slot `t`.
+    fn observe(&mut self, t: usize, price: f64, avail: u32);
+
+    /// Forecast the next `horizon` slots after the last observed slot.
+    fn predict(&mut self, horizon: usize) -> Forecast;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Forget per-episode state (called when a new job starts). Seeded
+    /// history (e.g. market data preceding the job) survives resets.
+    fn reset(&mut self) {}
+}
+
+/// A perfect predictor: reads the true future from the trace. Used for
+/// the Fig. 4 "Perfect-Predictor" column and as the noise-free core of
+/// [`super::noise::NoisyOracle`].
+#[derive(Debug, Clone)]
+pub struct OraclePredictor {
+    trace: SpotTrace,
+    last_t: Option<usize>,
+}
+
+impl OraclePredictor {
+    pub fn new(trace: SpotTrace) -> Self {
+        OraclePredictor { trace, last_t: None }
+    }
+}
+
+impl Predictor for OraclePredictor {
+    fn observe(&mut self, t: usize, _price: f64, _avail: u32) {
+        self.last_t = Some(t);
+    }
+
+    fn predict(&mut self, horizon: usize) -> Forecast {
+        let t = self.last_t.map(|t| t + 1).unwrap_or(0);
+        let mut price = Vec::with_capacity(horizon);
+        let mut avail = Vec::with_capacity(horizon);
+        for i in 0..horizon {
+            price.push(self.trace.price_at(t + i));
+            avail.push(self.trace.avail_at(t + i) as f64);
+        }
+        Forecast { price, avail }
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn reset(&mut self) {
+        self.last_t = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_reads_future_exactly() {
+        let tr = SpotTrace::new(vec![0.1, 0.2, 0.3, 0.4], vec![1, 2, 3, 4]);
+        let mut o = OraclePredictor::new(tr);
+        o.observe(0, 0.1, 1);
+        let f = o.predict(2);
+        assert_eq!(f.price, vec![0.2, 0.3]);
+        assert_eq!(f.avail, vec![2.0, 3.0]);
+        assert_eq!(f.avail_count(1), 3);
+    }
+
+    #[test]
+    fn oracle_clamps_past_trace_end() {
+        let tr = SpotTrace::new(vec![0.1, 0.2], vec![5, 6]);
+        let mut o = OraclePredictor::new(tr);
+        o.observe(1, 0.2, 6);
+        let f = o.predict(3);
+        assert_eq!(f.price, vec![0.2, 0.2, 0.2]);
+        assert_eq!(f.avail, vec![6.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn oracle_before_any_observation_predicts_from_start() {
+        let tr = SpotTrace::new(vec![0.7, 0.8], vec![1, 2]);
+        let mut o = OraclePredictor::new(tr);
+        let f = o.predict(2);
+        assert_eq!(f.price, vec![0.7, 0.8]);
+    }
+}

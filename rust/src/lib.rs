@@ -1,0 +1,32 @@
+//! # spotfine
+//!
+//! Deadline-aware online scheduling for LLM fine-tuning on spot GPU
+//! markets — a full-system reproduction of Kong, Xu, Jiao & Xu,
+//! *"Deadline-Aware Online Scheduling for LLM Fine-Tuning with Spot
+//! Market Predictions"* (CS.DC 2025).
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//!
+//! - [`sched`] — the paper's algorithms: AHAP (Alg. 1), AHANP (Alg. 3),
+//!   the EG policy selector (Alg. 2), baselines, and the exact solvers
+//!   for Eq. 10 / the offline optimum;
+//! - [`market`] / [`forecast`] — the spot-market substrate and the
+//!   ARIMA + noise-regime prediction substrate;
+//! - [`runtime`] / [`train`] / [`coordinator`] — the execution substrate:
+//!   a PJRT client running the AOT-compiled JAX+Pallas LoRA train-step
+//!   (built once by `python/compile/aot.py`, never on the request path),
+//!   a data-parallel trainer, and the slot-loop leader binding scheduling
+//!   decisions to real training with preemption and checkpoint/restore;
+//! - [`config`] / [`cli`] / [`util`] — config system, CLI, and the
+//!   self-contained utility layer (PRNG, stats, bench + property-test
+//!   harnesses) this offline build uses instead of external crates.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod forecast;
+pub mod market;
+pub mod runtime;
+pub mod sched;
+pub mod train;
+pub mod util;

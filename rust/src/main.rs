@@ -1,0 +1,459 @@
+//! spotfine CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   train       end-to-end: schedule + really fine-tune via PJRT
+//!   simulate    run one policy on one job/market (fast, no training)
+//!   compare     policy comparison table on sampled jobs (Fig. 5 row)
+//!   select      online policy selection over a job stream (Alg. 2)
+//!   trace       generate / analyze a synthetic market trace (Fig. 2)
+//!   forecast    fit ARIMA on a trace and report accuracy (Fig. 3)
+//!   toy         the Fig. 4 five-strategy walkthrough
+//!
+//! Run `spotfine help` for flags.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use spotfine::cli::args::Args;
+use spotfine::config::schema::ExperimentConfig;
+use spotfine::coordinator::leader::{Leader, LeaderConfig};
+use spotfine::forecast::arima::{ArimaPredictor, ArimaSpec};
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::forecast::predictor::Predictor;
+use spotfine::market::analyze::analyze;
+use spotfine::market::generator::TraceGenerator;
+use spotfine::market::trace::SpotTrace;
+use spotfine::runtime::artifact::ArtifactBundle;
+use spotfine::runtime::client::RuntimeClient;
+use spotfine::runtime::executable::TrainStepExec;
+use spotfine::sched::job::Job;
+use spotfine::sched::offline::solve_offline;
+use spotfine::sched::pool::{paper_pool, PolicyEnv, PolicySpec, PredictorKind};
+use spotfine::sched::selector::{run_selection, SelectionConfig};
+use spotfine::sched::simulate::run_episode;
+use spotfine::train::trainer::{Trainer, TrainerConfig};
+use spotfine::util::rng::Rng;
+use spotfine::util::stats;
+use spotfine::util::table::{f, Table};
+
+const USAGE: &str = "spotfine — deadline-aware spot-market fine-tuning scheduler
+
+USAGE: spotfine <command> [--flags]
+
+COMMANDS:
+  train      end-to-end fine-tune under a scheduling policy (PJRT)
+  simulate   one policy x one job on a synthetic market
+  compare    policy comparison table over sampled jobs
+  select     online policy selection (Algorithm 2) over a job stream
+  trace      generate/analyze a market trace (Fig. 2 statistics)
+  forecast   ARIMA forecast accuracy on a trace (Fig. 3)
+  toy        the Fig. 4 five-strategy example
+  help       this message
+
+COMMON FLAGS:
+  --config <file.toml>  experiment config (defaults = paper settings)
+  --seed <u64>          RNG seed
+  --policy <spec>       od-only | msu | up | ahanp:SIGMA | ahap:W,V,SIGMA
+";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn load_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
+    match args.get("config") {
+        Some(path) => Ok(ExperimentConfig::from_file(std::path::Path::new(path))?),
+        None => Ok(ExperimentConfig::default()),
+    }
+}
+
+fn parse_policy(spec: &str) -> anyhow::Result<PolicySpec> {
+    let lower = spec.to_lowercase();
+    let (head, rest) = match lower.split_once(':') {
+        Some((h, r)) => (h, Some(r)),
+        None => (lower.as_str(), None),
+    };
+    Ok(match head {
+        "od-only" | "od" => PolicySpec::OdOnly,
+        "msu" => PolicySpec::Msu,
+        "up" => PolicySpec::UniformProgress,
+        "ahanp" => PolicySpec::Ahanp { sigma: rest.unwrap_or("0.5").parse()? },
+        "ahap" => {
+            let parts: Vec<&str> = rest.unwrap_or("3,1,0.7").split(',').collect();
+            if parts.len() != 3 {
+                anyhow::bail!("ahap takes W,V,SIGMA (e.g. ahap:3,1,0.7)");
+            }
+            PolicySpec::Ahap {
+                omega: parts[0].parse()?,
+                v: parts[1].parse()?,
+                sigma: parts[2].parse()?,
+            }
+        }
+        other => anyhow::bail!("unknown policy `{other}`"),
+    })
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("select") => cmd_select(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("forecast") => cmd_forecast(&args),
+        Some("toy") => cmd_toy(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown command `{other}` — try `spotfine help`"),
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let seed = args.get_u64("seed", cfg.seed)?;
+    let policy_spec = parse_policy(&args.get_string("policy", "ahap:3,1,0.7"))?;
+    let artifacts = PathBuf::from(args.get_string("artifacts", &cfg.artifacts_dir));
+    let steps_per_slot = args.get_usize("steps-per-slot", 4)?;
+    let workload = args.get_f64("workload", 80.0)?;
+    let deadline = args.get_usize("deadline", 10)?;
+    let noise = args.get_f64("noise", 0.1)?;
+
+    if !ArtifactBundle::present(&artifacts) {
+        anyhow::bail!(
+            "artifacts not found in {} — run `make artifacts` first",
+            artifacts.display()
+        );
+    }
+    let client = RuntimeClient::cpu()?;
+    eprintln!("[train] PJRT platform: {}", client.platform());
+    let bundle = ArtifactBundle::load(&artifacts)?;
+    eprintln!(
+        "[train] model preset `{}`: {} params ({} trainable tensors)",
+        bundle.meta.preset,
+        bundle.meta.param_count,
+        bundle.meta.trainable.len()
+    );
+    let exec = TrainStepExec::compile(&client, bundle)?;
+    let mut trainer = Trainer::new(exec, TrainerConfig::default())?;
+
+    let job = Job {
+        workload,
+        deadline,
+        n_min: 1,
+        n_max: 12,
+        value: 1.5 * workload,
+        gamma: 1.5,
+    };
+    let trace = TraceGenerator::new(cfg.market.clone()).generate(seed).slice_from(37);
+    let env = PolicyEnv {
+        predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(noise)),
+        trace: trace.clone(),
+        seed,
+    };
+    let mut policy = policy_spec.build(&env);
+
+    let leader = Leader::new(
+        LeaderConfig {
+            steps_per_slot,
+            bandwidth_mbps: args.get_f64("bandwidth", 800.0)?,
+            checkpoint_dir: std::env::temp_dir().join("spotfine_train_ckpt"),
+            verbose: args.get_bool("verbose"),
+        },
+        cfg.models,
+    );
+    let out = leader.run(&job, &trace, policy.as_mut(), &mut trainer)?;
+
+    println!("policy            {}", policy.name());
+    println!("utility           {:.2}", out.utility);
+    println!("value             {:.2}", out.value);
+    println!("cost              {:.2}", out.cost);
+    println!("completion slot   {} (deadline {})", out.completion_slot, deadline);
+    println!("on time           {}", out.on_time);
+    println!("preemptions       {}", out.metrics.preemptions);
+    println!("reconfigs         {}", out.metrics.reconfigs);
+    println!("train steps       {}", out.metrics.losses.len());
+    println!("samples           {}", out.metrics.total_samples);
+    if let (Some(l0), Some(l1)) = (out.metrics.initial_loss(3), out.metrics.final_loss(3)) {
+        println!("loss              {:.4} -> {:.4}", l0, l1);
+    }
+    if let Some(dir) = args.get("out") {
+        let dir = PathBuf::from(dir);
+        out.metrics.write_slots_csv(&dir.join("slots.csv"))?;
+        out.metrics.write_loss_csv(&dir.join("loss.csv"))?;
+        println!("wrote {}/slots.csv and loss.csv", dir.display());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let seed = args.get_u64("seed", cfg.seed)?;
+    let policy_spec = parse_policy(&args.get_string("policy", "ahap:3,1,0.7"))?;
+    let noise = args.get_f64("noise", 0.1)?;
+    let mut rng = Rng::new(seed);
+    let job = cfg.jobs.sample(&mut rng);
+    let trace = TraceGenerator::new(cfg.market.clone())
+        .generate(seed)
+        .slice_from(rng.index(300));
+    let env = PolicyEnv {
+        predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(noise)),
+        trace: trace.clone(),
+        seed,
+    };
+    let mut policy = policy_spec.build(&env);
+    let r = run_episode(&job, &trace, &cfg.models, policy.as_mut());
+    let opt = solve_offline(&job, &trace, &cfg.models, 0.1);
+
+    println!(
+        "job: L={:.1} d={} N=[{},{}] v={:.1}",
+        job.workload, job.deadline, job.n_min, job.n_max, job.value
+    );
+    println!("policy       {}", policy.name());
+    println!("utility      {:.2}   (offline OPT {:.2})", r.utility, opt.utility);
+    println!("cost         {:.2}", r.cost);
+    println!("completion   slot {} (on time: {})", r.completion_slot, r.on_time);
+    println!("decisions    (od, spot) per slot:");
+    for (t, a) in r.decisions.iter().enumerate() {
+        println!(
+            "  slot {t:>2}: od {:>2} spot {:>2}   price {:.2} avail {}",
+            a.on_demand,
+            a.spot,
+            trace.price_at(t),
+            trace.avail_at(t)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let seed = args.get_u64("seed", cfg.seed)?;
+    let jobs = args.get_usize("jobs", 100)?;
+    let noise = args.get_f64("noise", 0.1)?;
+    let specs = vec![
+        PolicySpec::OdOnly,
+        PolicySpec::Msu,
+        PolicySpec::UniformProgress,
+        PolicySpec::Ahanp { sigma: 0.5 },
+        PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+    ];
+    let gen = TraceGenerator::new(cfg.market.clone());
+    let mut rng = Rng::new(seed);
+    let mut sums = vec![0.0; specs.len()];
+    let mut misses = vec![0usize; specs.len()];
+    let mut opt_sum = 0.0;
+    for k in 0..jobs {
+        let job = cfg.jobs.sample(&mut rng);
+        let trace = gen
+            .generate(seed ^ (k as u64).wrapping_mul(0x9E37))
+            .slice_from(rng.index(400));
+        opt_sum += solve_offline(&job, &trace, &cfg.models, 0.1).utility;
+        let env = PolicyEnv {
+            predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(noise)),
+            trace: trace.clone(),
+            seed: k as u64,
+        };
+        for (i, s) in specs.iter().enumerate() {
+            let mut p = s.build(&env);
+            let r = run_episode(&job, &trace, &cfg.models, p.as_mut());
+            sums[i] += r.utility;
+            if !r.on_time {
+                misses[i] += 1;
+            }
+        }
+    }
+    let mut t = Table::new(&["policy", "mean utility", "deadline misses"]);
+    for (i, s) in specs.iter().enumerate() {
+        t.row(&[
+            s.label(),
+            f(sums[i] / jobs as f64, 2),
+            format!("{}/{}", misses[i], jobs),
+        ]);
+    }
+    t.row(&["offline OPT".into(), f(opt_sum / jobs as f64, 2), "-".into()]);
+    t.print();
+    Ok(())
+}
+
+fn cmd_select(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let k_jobs = args.get_usize("jobs", cfg.selection_jobs)?;
+    let seed = args.get_u64("seed", cfg.seed)?;
+    let specs = paper_pool();
+    let out = run_selection(
+        &specs,
+        &cfg.jobs,
+        &cfg.models,
+        &TraceGenerator::new(cfg.market.clone()),
+        |_| PredictorKind::Noisy(cfg.noise),
+        &SelectionConfig { k_jobs, seed, snapshot_every: (k_jobs / 10).max(1) },
+    );
+    println!("pool size          {}", specs.len());
+    println!("jobs               {k_jobs}");
+    println!("noise              {}", cfg.noise.label());
+    println!(
+        "converged policy   #{} {}",
+        out.converged_to + 1,
+        specs[out.converged_to].label()
+    );
+    println!(
+        "best fixed policy  #{} {}",
+        out.best_fixed + 1,
+        specs[out.best_fixed].label()
+    );
+    println!("final weight mass  {:.3}", out.final_weights[out.converged_to]);
+    println!(
+        "regret             {:.2} (bound {:.2})",
+        out.regret.last().unwrap(),
+        out.regret_bound()
+    );
+    println!("mean realized u    {:.4}", stats::mean(&out.realized));
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let seed = args.get_u64("seed", cfg.seed)?;
+    let gen = TraceGenerator::new(cfg.market.clone());
+    let trace = match args.get("load") {
+        Some(p) => SpotTrace::from_csv_file(std::path::Path::new(p))?,
+        None => gen.generate(seed),
+    };
+    let s = analyze(&trace);
+    println!("slots              {}", s.slots);
+    println!("days               {:.1}", s.days);
+    println!("price mean/std     {:.3} / {:.3}", s.price_mean, s.price_std);
+    println!("price median       {:.3}", s.price_median);
+    println!("price P10/P90      {:.3} / {:.3}", s.price_p10, s.price_p90);
+    println!("median / P90       {:.3}   (paper: ~0.6)", s.median_over_p90);
+    println!("avail mean/std     {:.2} / {:.2}", s.avail_mean, s.avail_std);
+    println!("avail min..max     {}..{}", s.avail_min, s.avail_max);
+    println!("starved slots      {:.1}%", 100.0 * s.starved_frac);
+    println!("autocorr (avail)   {:.3}", s.avail_autocorr1);
+    println!("autocorr (price)   {:.3}", s.price_autocorr1);
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, trace.to_csv_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_forecast(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let seed = args.get_u64("seed", cfg.seed)?;
+    let horizon = args.get_usize("horizon", 1)?.max(1);
+    let trace = TraceGenerator::new(cfg.market.clone()).generate(seed);
+    let split = trace.len() * 7 / 10;
+
+    let mut pred = ArimaPredictor::with_defaults();
+    pred.seed_history(&trace.price[..split], &trace.avail_f64()[..split]);
+    let mut p_true = Vec::new();
+    let mut p_hat = Vec::new();
+    let mut a_true = Vec::new();
+    let mut a_hat = Vec::new();
+    for t in split..trace.len() - horizon {
+        let fc = pred.predict(horizon);
+        p_hat.push(fc.price[horizon - 1]);
+        a_hat.push(fc.avail[horizon - 1]);
+        p_true.push(trace.price_at(t + horizon - 1));
+        a_true.push(trace.avail_at(t + horizon - 1) as f64);
+        pred.observe(t, trace.price_at(t), trace.avail_at(t));
+    }
+    println!("ARIMA{:?} horizon {horizon}", ArimaSpec::default());
+    println!(
+        "price  MAPE {:.1}%  RMSE {:.4}  (persistence RMSE {:.4})",
+        stats::mape(&p_true, &p_hat),
+        stats::rmse(&p_true, &p_hat),
+        persistence_rmse(&trace.price[split..])
+    );
+    println!(
+        "avail  MAPE {:.1}%  RMSE {:.3}  (persistence RMSE {:.3})",
+        stats::mape(&a_true, &a_hat),
+        stats::rmse(&a_true, &a_hat),
+        persistence_rmse(&trace.avail_f64()[split..])
+    );
+    Ok(())
+}
+
+fn persistence_rmse(xs: &[f64]) -> f64 {
+    stats::rmse(&xs[..xs.len() - 1], &xs[1..])
+}
+
+fn cmd_toy(args: &Args) -> anyhow::Result<()> {
+    // The Fig. 4 example: workload 20, deadline 5, on-demand price 1,
+    // prices .5/.7/.3/.5/.3, no reconfiguration cost.
+    let _ = args;
+    use spotfine::sched::policy::Models;
+    use spotfine::sched::throughput::{ReconfigModel, ThroughputModel};
+    let models = Models {
+        throughput: ThroughputModel::unit(),
+        reconfig: ReconfigModel::free(),
+        on_demand_price: 1.0,
+    };
+    let job = Job {
+        workload: 20.0,
+        deadline: 5,
+        n_min: 1,
+        n_max: 8,
+        value: 30.0,
+        gamma: 1.6,
+    };
+    let trace = SpotTrace::new(vec![0.5, 0.7, 0.3, 0.5, 0.3], vec![6, 2, 6, 6, 0]);
+    let mut t = Table::new(&["strategy", "workload done", "cost", "utility", "decisions (od+spot)"]);
+    let strategies: Vec<(&str, PolicySpec, PredictorKind)> = vec![
+        ("On-Demand Only", PolicySpec::OdOnly, PredictorKind::Oracle),
+        ("Spot-First (MSU)", PolicySpec::Msu, PredictorKind::Oracle),
+        ("Progress-Tracking (UP)", PolicySpec::UniformProgress, PredictorKind::Oracle),
+        (
+            "Perfect-Predictor AHAP",
+            PolicySpec::Ahap { omega: 4, v: 1, sigma: 0.6 },
+            PredictorKind::Oracle,
+        ),
+        (
+            "Imperfect-Predictor AHAP",
+            PolicySpec::Ahap { omega: 4, v: 1, sigma: 0.6 },
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.6)),
+        ),
+    ];
+    for (name, spec, pk) in strategies {
+        let env = PolicyEnv { predictor: pk, trace: trace.clone(), seed: 3 };
+        let mut p = spec.build(&env);
+        let r = run_episode(&job, &trace, &models, p.as_mut());
+        let dec = r
+            .decisions
+            .iter()
+            .map(|a| format!("{}+{}", a.on_demand, a.spot))
+            .collect::<Vec<_>>()
+            .join(" ");
+        t.row(&[
+            name.to_string(),
+            f(r.progress_at_deadline, 1),
+            f(r.cost, 1),
+            f(r.utility, 1),
+            dec,
+        ]);
+    }
+    let opt = solve_offline(&job, &trace, &models, 0.1);
+    t.row(&[
+        "Offline OPT".into(),
+        "20.0".into(),
+        f(job.value - opt.utility, 1),
+        f(opt.utility, 1),
+        opt.alloc
+            .iter()
+            .map(|a| format!("{}+{}", a.on_demand, a.spot))
+            .collect::<Vec<_>>()
+            .join(" "),
+    ]);
+    t.print();
+    Ok(())
+}

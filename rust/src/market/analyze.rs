@@ -1,0 +1,131 @@
+//! Trace statistics for Fig. 2: availability fluctuation over time and
+//! the price distribution (median vs P90 — the paper reports median ≈
+//! 60% of P90, motivating spot usage).
+
+use crate::market::trace::SpotTrace;
+use crate::util::stats;
+
+/// Summary statistics of a spot trace (Fig. 2 content).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceStats {
+    pub slots: usize,
+    pub days: f64,
+    pub price_mean: f64,
+    pub price_std: f64,
+    pub price_median: f64,
+    pub price_p10: f64,
+    pub price_p90: f64,
+    /// median / P90 — the paper's headline "≈ 0.6" statistic.
+    pub median_over_p90: f64,
+    pub avail_mean: f64,
+    pub avail_std: f64,
+    pub avail_min: u32,
+    pub avail_max: u32,
+    /// Fraction of slots with zero availability.
+    pub starved_frac: f64,
+    /// Lag-1 autocorrelation of availability (predictability signal).
+    pub avail_autocorr1: f64,
+    /// Lag-1 autocorrelation of price.
+    pub price_autocorr1: f64,
+}
+
+/// Compute [`TraceStats`] for a trace.
+pub fn analyze(trace: &SpotTrace) -> TraceStats {
+    let price = &trace.price;
+    let avail = trace.avail_f64();
+    let p90 = stats::percentile(price, 90.0);
+    let median = stats::median(price);
+    TraceStats {
+        slots: trace.len(),
+        days: trace.len() as f64 * trace.slot_minutes / (60.0 * 24.0),
+        price_mean: stats::mean(price),
+        price_std: stats::std_dev(price),
+        price_median: median,
+        price_p10: stats::percentile(price, 10.0),
+        price_p90: p90,
+        median_over_p90: if p90 > 0.0 { median / p90 } else { 0.0 },
+        avail_mean: stats::mean(&avail),
+        avail_std: stats::std_dev(&avail),
+        avail_min: trace.avail.iter().copied().min().unwrap_or(0),
+        avail_max: trace.avail.iter().copied().max().unwrap_or(0),
+        starved_frac: trace.avail.iter().filter(|&&a| a == 0).count() as f64
+            / trace.len().max(1) as f64,
+        avail_autocorr1: autocorr1(&avail),
+        price_autocorr1: autocorr1(price),
+    }
+}
+
+/// Lag-1 autocorrelation.
+pub fn autocorr1(xs: &[f64]) -> f64 {
+    if xs.len() < 3 {
+        return 0.0;
+    }
+    stats::pearson(&xs[..xs.len() - 1], &xs[1..])
+}
+
+/// Hourly availability profile (mean availability per slot-of-day),
+/// showing the diurnal cycle in Fig. 2(a).
+pub fn diurnal_profile(trace: &SpotTrace, slots_per_day: usize) -> Vec<f64> {
+    let mut sums = vec![0.0; slots_per_day];
+    let mut counts = vec![0usize; slots_per_day];
+    for (i, &a) in trace.avail.iter().enumerate() {
+        let k = i % slots_per_day;
+        sums[k] += a as f64;
+        counts[k] += 1;
+    }
+    sums.iter()
+        .zip(&counts)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::generator::TraceGenerator;
+
+    #[test]
+    fn stats_on_constant_trace() {
+        let t = SpotTrace::new(vec![0.5; 10], vec![4; 10]);
+        let s = analyze(&t);
+        assert_eq!(s.slots, 10);
+        assert!((s.price_mean - 0.5).abs() < 1e-12);
+        assert_eq!(s.price_std, 0.0);
+        assert!((s.median_over_p90 - 1.0).abs() < 1e-12);
+        assert_eq!(s.starved_frac, 0.0);
+        assert_eq!(s.avail_min, 4);
+        assert_eq!(s.avail_max, 4);
+    }
+
+    #[test]
+    fn starved_fraction() {
+        let t = SpotTrace::new(vec![0.5; 4], vec![0, 2, 0, 2]);
+        assert!((analyze(&t).starved_frac - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn generated_trace_is_autocorrelated() {
+        // The whole premise of the paper's prediction section: spot series
+        // are NOT white noise.
+        let t = TraceGenerator::calibrated().generate(11);
+        let s = analyze(&t);
+        assert!(s.avail_autocorr1 > 0.4, "avail ac1={}", s.avail_autocorr1);
+        assert!(s.price_autocorr1 > 0.4, "price ac1={}", s.price_autocorr1);
+    }
+
+    #[test]
+    fn diurnal_profile_shape() {
+        let t = TraceGenerator::calibrated().generate(2);
+        let prof = diurnal_profile(&t, 48);
+        assert_eq!(prof.len(), 48);
+        // midday (slot 24) > midnight (slot 0)
+        assert!(prof[24] > prof[0]);
+    }
+
+    #[test]
+    fn ten_day_duration() {
+        let t = TraceGenerator::calibrated().generate(1);
+        let s = analyze(&t);
+        assert!((s.days - 10.0).abs() < 1e-9);
+    }
+}

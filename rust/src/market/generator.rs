@@ -1,0 +1,220 @@
+//! Synthetic spot-market trace generator, calibrated to the Vast.ai A100
+//! statistics the paper reports (Fig. 2):
+//!
+//! - 30-minute slots, 10 days = 480 slots by default;
+//! - availability follows a **diurnal cycle** (higher daytime than night)
+//!   with AR(1) noise and occasional capacity "churn" spikes, capped to
+//!   `[0, avail_cap]` (paper: 16 after regional downscaling);
+//! - spot price is normalized to on-demand = 1, mean around ~0.45 with
+//!   median ≈ 0.6 × P90 (the paper's headline price statistic), driven by
+//!   an inverse-availability demand term plus AR(1) noise;
+//! - a `volatility` knob scales price fluctuation (Fig. 8) and an
+//!   `avail_scale` knob scales mean availability (Fig. 7).
+
+use crate::market::trace::SpotTrace;
+use crate::util::rng::Rng;
+
+/// Knobs for the synthetic generator. `Default` reproduces the paper's
+/// evaluation setting.
+#[derive(Debug, Clone)]
+pub struct GeneratorConfig {
+    /// Number of slots to generate (480 = 10 days of 30-min slots).
+    pub slots: usize,
+    /// Slots per day for the diurnal cycle (48 = 30-min slots).
+    pub slots_per_day: usize,
+    /// Hard cap on regional availability (paper: 16).
+    pub avail_cap: u32,
+    /// Mean availability scale factor in [0, ~2]; 1.0 = calibration.
+    pub avail_scale: f64,
+    /// Price volatility multiplier; 1.0 = calibration.
+    pub volatility: f64,
+    /// Base (mean) spot price, normalized to on-demand = 1.
+    pub base_price: f64,
+    /// Amplitude of the diurnal availability cycle (fraction of mean).
+    pub diurnal_amp: f64,
+    /// AR(1) coefficient of availability noise.
+    pub avail_ar: f64,
+    /// AR(1) coefficient of price noise.
+    pub price_ar: f64,
+    /// Per-slot probability of a churn event (provider joins/leaves).
+    pub churn_prob: f64,
+}
+
+impl Default for GeneratorConfig {
+    fn default() -> Self {
+        GeneratorConfig {
+            slots: 480,
+            slots_per_day: 48,
+            avail_cap: 16,
+            avail_scale: 1.0,
+            volatility: 1.0,
+            base_price: 0.5,
+            diurnal_amp: 0.8,
+            avail_ar: 0.85,
+            price_ar: 0.82,
+            churn_prob: 0.06,
+        }
+    }
+}
+
+/// Deterministic (seeded) synthetic trace generator.
+#[derive(Debug, Clone)]
+pub struct TraceGenerator {
+    pub cfg: GeneratorConfig,
+}
+
+impl TraceGenerator {
+    pub fn new(cfg: GeneratorConfig) -> Self {
+        TraceGenerator { cfg }
+    }
+
+    pub fn calibrated() -> Self {
+        TraceGenerator::new(GeneratorConfig::default())
+    }
+
+    /// Generate a trace with the given seed. Identical seeds and configs
+    /// yield identical traces (all experiments are reproducible).
+    pub fn generate(&self, seed: u64) -> SpotTrace {
+        let c = &self.cfg;
+        let mut rng = Rng::new(seed);
+        let mut price = Vec::with_capacity(c.slots);
+        let mut avail = Vec::with_capacity(c.slots);
+
+        // Availability: diurnal mean + AR(1) noise + churn spikes.
+        // Regional A100 pools are small (paper caps at 16 after regional
+        // downscaling) and *often insufficient* for a job's N^max — that
+        // scarcity is what makes spot-only strategies deadline-risky.
+        let mean_avail = 7.0 * c.avail_scale;
+        let mut a_noise = 0.0f64;
+        // Price: demand-coupled mean + AR(1) noise.
+        let mut p_noise = 0.0f64;
+        // Occasional multi-slot churn offsets.
+        let mut churn: f64 = 0.0;
+        let mut churn_left: u32 = 0;
+
+        for t in 0..c.slots {
+            // Diurnal cycle peaking mid-day (slot phase 0 = midnight).
+            let phase =
+                (t % c.slots_per_day) as f64 / c.slots_per_day as f64;
+            let diurnal = 1.0
+                + c.diurnal_amp
+                    * (std::f64::consts::TAU * (phase - 0.25)).sin();
+
+            a_noise = c.avail_ar * a_noise + rng.normal_ms(0.0, 1.6);
+            if churn_left == 0 && rng.bool(c.churn_prob) {
+                // A provider joining (+) or leaving (-) for a few hours.
+                churn = rng.sign() * rng.uniform(3.0, 7.0) * c.avail_scale;
+                churn_left = rng.int_range(4, 16) as u32;
+            }
+            if churn_left > 0 {
+                churn_left -= 1;
+                if churn_left == 0 {
+                    churn = 0.0;
+                }
+            }
+            let a = (mean_avail * diurnal + a_noise + churn)
+                .round()
+                .clamp(0.0, c.avail_cap as f64) as u32;
+            avail.push(a);
+
+            // Price rises when availability is scarce (demand pressure),
+            // falls when plentiful. Noise scaled by the volatility knob.
+            let scarcity = 1.0 - (a as f64 / c.avail_cap as f64);
+            p_noise = c.price_ar * p_noise
+                + rng.normal_ms(0.0, 0.065 * c.volatility);
+            let p = (c.base_price + 0.65 * c.volatility * (scarcity - 0.62)
+                + p_noise)
+                .clamp(0.05, 0.99);
+            price.push(p);
+        }
+
+        let mut tr = SpotTrace::new(price, avail);
+        tr.slot_minutes = 30.0 * (48.0 / c.slots_per_day as f64);
+        tr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = TraceGenerator::calibrated();
+        assert_eq!(g.generate(7), g.generate(7));
+        assert_ne!(g.generate(7), g.generate(8));
+    }
+
+    #[test]
+    fn respects_caps_and_bounds() {
+        let g = TraceGenerator::calibrated();
+        let t = g.generate(1);
+        assert_eq!(t.len(), 480);
+        for (&p, &a) in t.price.iter().zip(&t.avail) {
+            assert!(p > 0.0 && p < 1.0, "spot price must be < on-demand");
+            assert!(a <= 16);
+        }
+    }
+
+    #[test]
+    fn calibration_matches_paper_stats() {
+        // Median price ≈ 0.6 × P90 (paper Fig. 2b), averaged over seeds.
+        let g = TraceGenerator::calibrated();
+        let mut ratios = Vec::new();
+        for seed in 0..20 {
+            let t = g.generate(seed);
+            let med = stats::median(&t.price);
+            let p90 = stats::percentile(&t.price, 90.0);
+            ratios.push(med / p90);
+        }
+        let mean_ratio = stats::mean(&ratios);
+        assert!(
+            (0.5..=0.75).contains(&mean_ratio),
+            "median/P90 ratio {mean_ratio} outside calibration band"
+        );
+    }
+
+    #[test]
+    fn diurnal_cycle_present() {
+        // Daytime (slots 18..36 of each day) availability should exceed
+        // night-time availability on average.
+        let g = TraceGenerator::calibrated();
+        let t = g.generate(3);
+        let mut day = Vec::new();
+        let mut night = Vec::new();
+        for (i, &a) in t.avail.iter().enumerate() {
+            let phase = i % 48;
+            if (18..36).contains(&phase) {
+                day.push(a as f64);
+            } else if !(12..42).contains(&phase) {
+                night.push(a as f64);
+            }
+        }
+        assert!(stats::mean(&day) > stats::mean(&night) + 1.0);
+    }
+
+    #[test]
+    fn avail_scale_shifts_mean() {
+        let mut lo_cfg = GeneratorConfig::default();
+        lo_cfg.avail_scale = 0.4;
+        let mut hi_cfg = GeneratorConfig::default();
+        hi_cfg.avail_scale = 1.6;
+        let lo = TraceGenerator::new(lo_cfg).generate(5);
+        let hi = TraceGenerator::new(hi_cfg).generate(5);
+        assert!(
+            stats::mean(&hi.avail_f64()) > stats::mean(&lo.avail_f64()) + 2.0
+        );
+    }
+
+    #[test]
+    fn volatility_scales_price_std() {
+        let mut lo_cfg = GeneratorConfig::default();
+        lo_cfg.volatility = 0.3;
+        let mut hi_cfg = GeneratorConfig::default();
+        hi_cfg.volatility = 2.0;
+        let lo = TraceGenerator::new(lo_cfg).generate(6);
+        let hi = TraceGenerator::new(hi_cfg).generate(6);
+        assert!(stats::std_dev(&hi.price) > stats::std_dev(&lo.price) * 1.5);
+    }
+}

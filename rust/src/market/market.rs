@@ -1,0 +1,207 @@
+//! Per-slot spot-market simulator.
+//!
+//! The market advances in discrete slots (paper §III-B). At each slot the
+//! scheduler observes the current spot price and availability, requests an
+//! allocation `(n_o, n_s)`, and the market grants spot instances up to the
+//! available count. When availability drops below the number of running
+//! spot instances between slots, the excess instances are **preempted**
+//! (the coordinator must checkpoint/restore — paper §II-A switching cost).
+
+use crate::market::trace::SpotTrace;
+
+/// What the scheduler can see at the start of a slot (its online view).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MarketObs {
+    /// Slot index.
+    pub t: usize,
+    /// Spot price this slot (on-demand = 1).
+    pub spot_price: f64,
+    /// Spot instances available this slot.
+    pub avail: u32,
+    /// On-demand price (constant; paper normalizes to 1).
+    pub on_demand_price: f64,
+}
+
+/// Outcome of a grant request within one slot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Grant {
+    /// Spot instances actually granted (≤ requested, ≤ available).
+    pub spot: u32,
+    /// On-demand instances granted (always what was requested).
+    pub on_demand: u32,
+    /// Cost charged for this slot.
+    pub cost: f64,
+}
+
+/// Slot-stepped spot market over a fixed trace.
+#[derive(Debug, Clone)]
+pub struct SpotMarket {
+    trace: SpotTrace,
+    on_demand_price: f64,
+    t: usize,
+    /// Spot instances currently held by the tenant (for preemption calc).
+    held_spot: u32,
+    /// Total spot instances preempted so far.
+    pub preemptions: u64,
+    /// Total cost charged so far.
+    pub total_cost: f64,
+}
+
+impl SpotMarket {
+    pub fn new(trace: SpotTrace) -> Self {
+        SpotMarket {
+            trace,
+            on_demand_price: 1.0,
+            t: 0,
+            held_spot: 0,
+            preemptions: 0,
+            total_cost: 0.0,
+        }
+    }
+
+    pub fn with_on_demand_price(mut self, p: f64) -> Self {
+        assert!(p > 0.0);
+        self.on_demand_price = p;
+        self
+    }
+
+    /// Current slot index.
+    pub fn slot(&self) -> usize {
+        self.t
+    }
+
+    /// Observation for the current slot.
+    pub fn observe(&self) -> MarketObs {
+        MarketObs {
+            t: self.t,
+            spot_price: self.trace.price_at(self.t),
+            avail: self.trace.avail_at(self.t),
+            on_demand_price: self.on_demand_price,
+        }
+    }
+
+    /// The underlying trace (used by the offline-OPT solver and the
+    /// "perfect predictor" — online policies must not call this).
+    pub fn oracle_trace(&self) -> &SpotTrace {
+        &self.trace
+    }
+
+    /// Number of spot instances that were preempted at the *entry* to the
+    /// current slot, i.e. held instances above current availability.
+    pub fn preempted_now(&self) -> u32 {
+        self.held_spot.saturating_sub(self.trace.avail_at(self.t))
+    }
+
+    /// Request `(n_o, n_s)` for the current slot. Spot is clipped to
+    /// availability; cost is charged at the slot's prices. Does not
+    /// advance time — call [`advance`] after processing the slot.
+    pub fn request(&mut self, n_o: u32, n_s: u32) -> Grant {
+        let obs = self.observe();
+        let spot = n_s.min(obs.avail);
+        // Instances dropped relative to what we held count as preemptions
+        // only when forced by availability, not by a voluntary scale-down.
+        let forced_drop = self.held_spot.saturating_sub(obs.avail);
+        self.preemptions += forced_drop as u64;
+        self.held_spot = spot;
+        let cost =
+            n_o as f64 * obs.on_demand_price + spot as f64 * obs.spot_price;
+        self.total_cost += cost;
+        Grant { spot, on_demand: n_o, cost }
+    }
+
+    /// Advance to the next slot.
+    pub fn advance(&mut self) {
+        self.t += 1;
+    }
+
+    /// True once the underlying trace is exhausted (observations clamp to
+    /// the last slot after this point).
+    pub fn trace_exhausted(&self) -> bool {
+        self.t >= self.trace.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn market() -> SpotMarket {
+        SpotMarket::new(SpotTrace::new(
+            vec![0.5, 0.7, 0.3, 0.5, 0.3],
+            vec![4, 1, 6, 6, 0],
+        ))
+    }
+
+    #[test]
+    fn observe_reads_trace() {
+        let m = market();
+        let o = m.observe();
+        assert_eq!(o.t, 0);
+        assert_eq!(o.spot_price, 0.5);
+        assert_eq!(o.avail, 4);
+        assert_eq!(o.on_demand_price, 1.0);
+    }
+
+    #[test]
+    fn grant_clips_spot_to_availability() {
+        let mut m = market();
+        let g = m.request(2, 10);
+        assert_eq!(g.spot, 4);
+        assert_eq!(g.on_demand, 2);
+        assert!((g.cost - (2.0 + 4.0 * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn preemption_counted_on_availability_drop() {
+        let mut m = market();
+        m.request(0, 4); // hold 4 spot
+        m.advance(); // slot 1: avail 1 → 3 preempted
+        assert_eq!(m.preempted_now(), 3);
+        let g = m.request(0, 4);
+        assert_eq!(g.spot, 1);
+        assert_eq!(m.preemptions, 3);
+    }
+
+    #[test]
+    fn voluntary_scaledown_is_not_preemption() {
+        let mut m = market();
+        m.request(0, 4);
+        m.advance();
+        m.advance(); // slot 2: avail 6 ≥ held 4... but slot1 avail=1 skipped request
+        // Re-create cleanly: hold 3 on a slot with avail 6, then request 1.
+        let mut m2 = SpotMarket::new(SpotTrace::new(vec![0.5, 0.5], vec![6, 6]));
+        m2.request(0, 3);
+        m2.advance();
+        m2.request(0, 1);
+        assert_eq!(m2.preemptions, 0);
+    }
+
+    #[test]
+    fn cost_accumulates() {
+        let mut m = market();
+        m.request(1, 0);
+        m.advance();
+        m.request(1, 1);
+        assert!((m.total_cost - (1.0 + 1.0 + 0.7)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn custom_on_demand_price() {
+        let mut m = market().with_on_demand_price(2.0);
+        let g = m.request(3, 0);
+        assert!((g.cost - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exhaustion_flag_and_clamping() {
+        let mut m = market();
+        for _ in 0..5 {
+            assert!(!m.trace_exhausted());
+            m.advance();
+        }
+        assert!(m.trace_exhausted());
+        // clamps to last slot
+        assert_eq!(m.observe().avail, 0);
+        assert_eq!(m.observe().spot_price, 0.3);
+    }
+}

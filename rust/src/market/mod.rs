@@ -1,0 +1,12 @@
+//! Spot-market substrate: price/availability traces, a synthetic
+//! Vast.ai-calibrated generator, the per-slot market simulator (with
+//! preemption), and the Fig-2 trace analyzer.
+
+pub mod analyze;
+pub mod generator;
+pub mod market;
+pub mod trace;
+
+pub use generator::{GeneratorConfig, TraceGenerator};
+pub use market::{MarketObs, SpotMarket};
+pub use trace::SpotTrace;

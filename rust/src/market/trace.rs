@@ -1,0 +1,218 @@
+//! Spot market trace: per-slot spot price and availability.
+//!
+//! The paper samples the Vast.ai A100 market at 30-minute intervals over
+//! 10 days (480 slots), normalizing the on-demand price to 1. A trace is
+//! exactly that pair of series; everything downstream (market simulator,
+//! forecasters, policies) consumes only `(p_t^s, n_t^avail)` per slot.
+
+use std::fmt;
+use std::path::Path;
+
+/// A spot price + availability time series, one entry per slot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpotTrace {
+    /// Spot price per instance-slot, normalized to on-demand price = 1.
+    pub price: Vec<f64>,
+    /// Number of spot instances available in the region, capped (paper: 16).
+    pub avail: Vec<u32>,
+    /// Slot length in minutes (paper: 30). Informational.
+    pub slot_minutes: f64,
+}
+
+impl SpotTrace {
+    pub fn new(price: Vec<f64>, avail: Vec<u32>) -> Self {
+        assert_eq!(
+            price.len(),
+            avail.len(),
+            "price and availability series must be the same length"
+        );
+        SpotTrace { price, avail, slot_minutes: 30.0 }
+    }
+
+    /// Number of slots.
+    pub fn len(&self) -> usize {
+        self.price.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.price.is_empty()
+    }
+
+    /// Price at slot `t`, clamped to the last slot for overrun queries
+    /// (a job running past the trace keeps seeing the final regime).
+    pub fn price_at(&self, t: usize) -> f64 {
+        if self.is_empty() {
+            return 1.0;
+        }
+        self.price[t.min(self.len() - 1)]
+    }
+
+    /// Availability at slot `t`, clamped like [`price_at`].
+    pub fn avail_at(&self, t: usize) -> u32 {
+        if self.is_empty() {
+            return 0;
+        }
+        self.avail[t.min(self.len() - 1)]
+    }
+
+    /// Sub-trace starting at `offset` (used to run many jobs over one
+    /// long market trace at staggered arrival times).
+    pub fn slice_from(&self, offset: usize) -> SpotTrace {
+        let o = offset.min(self.len());
+        SpotTrace {
+            price: self.price[o..].to_vec(),
+            avail: self.avail[o..].to_vec(),
+            slot_minutes: self.slot_minutes,
+        }
+    }
+
+    /// Availability series as f64 (forecaster input).
+    pub fn avail_f64(&self) -> Vec<f64> {
+        self.avail.iter().map(|&a| a as f64).collect()
+    }
+
+    /// Parse from CSV with a `price,avail` pair per line. Lines starting
+    /// with `#` and a header line (non-numeric first field) are skipped.
+    pub fn from_csv_str(s: &str) -> Result<SpotTrace, TraceError> {
+        let mut price = Vec::new();
+        let mut avail = Vec::new();
+        for (lineno, line) in s.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split(',').map(str::trim);
+            let p = parts.next().ok_or(TraceError::Malformed(lineno + 1))?;
+            let a = parts.next().ok_or(TraceError::Malformed(lineno + 1))?;
+            let p: f64 = match p.parse() {
+                Ok(v) => v,
+                // tolerate a header row
+                Err(_) if price.is_empty() => continue,
+                Err(_) => return Err(TraceError::Malformed(lineno + 1)),
+            };
+            let a: f64 = a.parse().map_err(|_| TraceError::Malformed(lineno + 1))?;
+            if p < 0.0 || a < 0.0 {
+                return Err(TraceError::Negative(lineno + 1));
+            }
+            price.push(p);
+            avail.push(a.round() as u32);
+        }
+        if price.is_empty() {
+            return Err(TraceError::Empty);
+        }
+        Ok(SpotTrace::new(price, avail))
+    }
+
+    /// Load from a CSV file (see [`from_csv_str`]).
+    pub fn from_csv_file(path: &Path) -> Result<SpotTrace, TraceError> {
+        let s = std::fs::read_to_string(path).map_err(TraceError::Io)?;
+        SpotTrace::from_csv_str(&s)
+    }
+
+    /// Serialize to CSV (`price,avail` per line with a header).
+    pub fn to_csv_string(&self) -> String {
+        let mut out = String::with_capacity(self.len() * 12 + 16);
+        out.push_str("price,avail\n");
+        for (p, a) in self.price.iter().zip(&self.avail) {
+            out.push_str(&format!("{p:.6},{a}\n"));
+        }
+        out
+    }
+}
+
+/// Errors from trace parsing.
+#[derive(Debug, thiserror::Error)]
+pub enum TraceError {
+    #[error("trace is empty")]
+    Empty,
+    #[error("malformed trace line {0}")]
+    Malformed(usize),
+    #[error("negative value at trace line {0}")]
+    Negative(usize),
+    #[error("io error: {0}")]
+    Io(std::io::Error),
+}
+
+impl fmt::Display for SpotTrace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "SpotTrace[{} slots, {} min/slot]",
+            self.len(),
+            self.slot_minutes
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> SpotTrace {
+        SpotTrace::new(vec![0.5, 0.7, 0.3], vec![4, 0, 9])
+    }
+
+    #[test]
+    fn accessors_clamp_past_end() {
+        let t = small();
+        assert_eq!(t.price_at(0), 0.5);
+        assert_eq!(t.price_at(2), 0.3);
+        assert_eq!(t.price_at(99), 0.3);
+        assert_eq!(t.avail_at(99), 9);
+    }
+
+    #[test]
+    fn empty_trace_defaults() {
+        let t = SpotTrace::new(vec![], vec![]);
+        assert!(t.is_empty());
+        assert_eq!(t.price_at(0), 1.0);
+        assert_eq!(t.avail_at(5), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_lengths_panic() {
+        SpotTrace::new(vec![1.0], vec![1, 2]);
+    }
+
+    #[test]
+    fn slice_from_offsets() {
+        let t = small();
+        let s = t.slice_from(1);
+        assert_eq!(s.price, vec![0.7, 0.3]);
+        assert_eq!(s.avail, vec![0, 9]);
+        assert!(t.slice_from(10).is_empty());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = small();
+        let s = t.to_csv_string();
+        let u = SpotTrace::from_csv_str(&s).unwrap();
+        assert_eq!(t.avail, u.avail);
+        for (a, b) in t.price.iter().zip(&u.price) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn csv_skips_comments_and_header() {
+        let s = "# comment\nprice,avail\n0.5,3\n\n0.6,2\n";
+        let t = SpotTrace::from_csv_str(s).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.avail, vec![3, 2]);
+    }
+
+    #[test]
+    fn csv_rejects_garbage_and_negative() {
+        assert!(matches!(
+            SpotTrace::from_csv_str("0.5,3\nxx,yy\n"),
+            Err(TraceError::Malformed(2))
+        ));
+        assert!(matches!(
+            SpotTrace::from_csv_str("-0.5,3\n"),
+            Err(TraceError::Negative(1))
+        ));
+        assert!(matches!(SpotTrace::from_csv_str(""), Err(TraceError::Empty)));
+    }
+}

@@ -1,0 +1,261 @@
+//! Artifact bundle discovery: parses `artifacts/meta.toml` (written by
+//! `python/compile/aot.py`) into the model metadata and the positional
+//! parameter calling convention the executables expect.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::toml::{parse, Value};
+
+/// One tensor in the calling convention.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<i64>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<i64>().max(0) as usize
+    }
+}
+
+/// Parsed model metadata.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub preset: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub lora_rank: usize,
+    pub batch_per_shard: usize,
+    pub param_count: usize,
+    pub init_seed: i64,
+    pub lr: f64,
+    /// Ordered frozen tensors (first in every artifact signature).
+    pub frozen: Vec<TensorSpec>,
+    /// Ordered trainable tensors.
+    pub trainable: Vec<TensorSpec>,
+}
+
+impl ModelMeta {
+    pub fn trainable_elements(&self) -> usize {
+        self.trainable.iter().map(|t| t.elements()).sum()
+    }
+
+    pub fn frozen_elements(&self) -> usize {
+        self.frozen.iter().map(|t| t.elements()).sum()
+    }
+}
+
+/// Paths + metadata for one compiled artifact set.
+#[derive(Debug, Clone)]
+pub struct ArtifactBundle {
+    pub dir: PathBuf,
+    pub meta: ModelMeta,
+    pub grad_step: PathBuf,
+    pub apply_step: PathBuf,
+    pub init: PathBuf,
+}
+
+impl ArtifactBundle {
+    /// Quick existence check (used by `make`-style skip logic and by the
+    /// CLI to emit a helpful "run make artifacts" message).
+    pub fn present(dir: &Path) -> bool {
+        dir.join("meta.toml").exists()
+            && dir.join("grad_step.hlo.txt").exists()
+            && dir.join("apply_step.hlo.txt").exists()
+            && dir.join("init.hlo.txt").exists()
+    }
+
+    /// Load and validate the bundle in `dir`.
+    pub fn load(dir: &Path) -> Result<ArtifactBundle> {
+        let meta_path = dir.join("meta.toml");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let meta = parse_meta(&text)?;
+        let bundle = ArtifactBundle {
+            dir: dir.to_path_buf(),
+            grad_step: dir.join("grad_step.hlo.txt"),
+            apply_step: dir.join("apply_step.hlo.txt"),
+            init: dir.join("init.hlo.txt"),
+            meta,
+        };
+        for p in [&bundle.grad_step, &bundle.apply_step, &bundle.init] {
+            if !p.exists() {
+                bail!("missing artifact {} (run `make artifacts`)", p.display());
+            }
+        }
+        Ok(bundle)
+    }
+}
+
+fn get_usize(doc: &Value, path: &str) -> Result<usize> {
+    doc.get(path)
+        .and_then(Value::as_int)
+        .map(|v| v as usize)
+        .with_context(|| format!("meta.toml missing `{path}`"))
+}
+
+fn tensor_list(doc: &Value, table: &str) -> Result<Vec<TensorSpec>> {
+    let names = doc
+        .get(&format!("{table}.names"))
+        .and_then(Value::as_array)
+        .with_context(|| format!("meta.toml missing `{table}.names`"))?;
+    let shapes = doc
+        .get(&format!("{table}.shapes"))
+        .and_then(Value::as_array)
+        .with_context(|| format!("meta.toml missing `{table}.shapes`"))?;
+    if names.len() != shapes.len() {
+        bail!("{table}: names/shapes length mismatch");
+    }
+    let mut out = Vec::with_capacity(names.len());
+    for (n, s) in names.iter().zip(shapes) {
+        let name = n
+            .as_str()
+            .with_context(|| format!("{table}: non-string name"))?
+            .to_string();
+        let dims = s
+            .as_array()
+            .with_context(|| format!("{table}: non-array shape"))?;
+        let mut shape = Vec::with_capacity(dims.len());
+        for d in dims {
+            let d = d
+                .as_int()
+                .with_context(|| format!("{table}: non-int dim"))?;
+            if d <= 0 {
+                bail!("{table}: non-positive dim {d}");
+            }
+            shape.push(d);
+        }
+        out.push(TensorSpec { name, shape });
+    }
+    Ok(out)
+}
+
+/// Parse the meta.toml text into [`ModelMeta`].
+pub fn parse_meta(text: &str) -> Result<ModelMeta> {
+    let doc = parse(text).context("parsing meta.toml")?;
+    let meta = ModelMeta {
+        preset: doc
+            .get("model.preset")
+            .and_then(Value::as_str)
+            .unwrap_or("unknown")
+            .to_string(),
+        vocab: get_usize(&doc, "model.vocab")?,
+        d_model: get_usize(&doc, "model.d_model")?,
+        n_layers: get_usize(&doc, "model.n_layers")?,
+        n_heads: get_usize(&doc, "model.n_heads")?,
+        d_ff: get_usize(&doc, "model.d_ff")?,
+        seq_len: get_usize(&doc, "model.seq_len")?,
+        lora_rank: get_usize(&doc, "model.lora_rank")?,
+        batch_per_shard: get_usize(&doc, "model.batch_per_shard")?,
+        param_count: get_usize(&doc, "model.param_count")?,
+        init_seed: doc
+            .get("model.init_seed")
+            .and_then(Value::as_int)
+            .unwrap_or(0),
+        lr: doc
+            .get("optim.lr")
+            .and_then(Value::as_float)
+            .unwrap_or(1e-3),
+        frozen: tensor_list(&doc, "params.frozen")?,
+        trainable: tensor_list(&doc, "params.trainable")?,
+    };
+    // Cross-validate the declared parameter count.
+    let total = meta.frozen_elements() + meta.trainable_elements();
+    if total != meta.param_count {
+        bail!(
+            "meta.toml param_count {} != sum of shapes {}",
+            meta.param_count,
+            total
+        );
+    }
+    Ok(meta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[model]
+preset = "tiny"
+vocab = 4
+d_model = 2
+n_layers = 1
+n_heads = 1
+d_ff = 4
+seq_len = 8
+lora_rank = 2
+lora_alpha = 16.0
+batch_per_shard = 2
+param_count = 20
+init_seed = 0
+
+[optim]
+lr = 0.001
+
+[artifacts]
+grad_step = "grad_step.hlo.txt"
+apply_step = "apply_step.hlo.txt"
+init = "init.hlo.txt"
+
+[params.frozen]
+names = ["w1"]
+shapes = [[2, 6]]
+
+[params.trainable]
+names = ["emb"]
+shapes = [[4, 2]]
+"#;
+
+    #[test]
+    fn parses_sample_meta() {
+        let m = parse_meta(SAMPLE).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.vocab, 4);
+        assert_eq!(m.frozen.len(), 1);
+        assert_eq!(m.frozen[0].shape, vec![2, 6]);
+        assert_eq!(m.trainable[0].name, "emb");
+        assert_eq!(m.trainable_elements(), 8);
+        assert_eq!(m.frozen_elements(), 12);
+        assert!((m.lr - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_inconsistent_param_count() {
+        let bad = SAMPLE.replace("param_count = 20", "param_count = 21");
+        assert!(parse_meta(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = SAMPLE.replace("vocab = 4", "vocabx = 4");
+        assert!(parse_meta(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let bad = SAMPLE.replace("[[2, 6]]", "[[2, 0]]");
+        assert!(parse_meta(&bad).is_err());
+        let bad2 = SAMPLE.replace("names = [\"w1\"]", "names = []");
+        assert!(parse_meta(&bad2).is_err());
+    }
+
+    #[test]
+    fn real_meta_if_built() {
+        // If `make artifacts` has run, the real bundle must parse.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if ArtifactBundle::present(&dir) {
+            let b = ArtifactBundle::load(&dir).unwrap();
+            assert!(b.meta.param_count > 0);
+            assert!(!b.meta.trainable.is_empty());
+            assert_eq!(b.meta.trainable[0].name, "tok_emb");
+        }
+    }
+}

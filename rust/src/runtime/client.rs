@@ -1,0 +1,55 @@
+//! PJRT client wrapper: compiles HLO-text artifacts into executables.
+//!
+//! Follows the /opt/xla-example/load_hlo pattern: text → `HloModuleProto`
+//! (the parser reassigns instruction ids, avoiding the 64-bit-id protos
+//! jax ≥ 0.5 emits that xla_extension 0.5.1 rejects) → compile → execute.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A live PJRT client plus compile helpers.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Create a CPU PJRT client (the only backend on this testbed; GPU
+    /// and TPU construction would go through the same wrapper).
+    pub fn cpu() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile one HLO text file.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+impl std::fmt::Debug for RuntimeClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "RuntimeClient(platform={}, devices={})",
+            self.platform(),
+            self.device_count()
+        )
+    }
+}

@@ -1,0 +1,226 @@
+//! Typed wrappers over the compiled artifacts: host tensors in, host
+//! tensors out, with the positional calling convention enforced against
+//! `meta.toml`.
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::{ArtifactBundle, TensorSpec};
+use crate::runtime::client::RuntimeClient;
+
+/// A host-resident f32 tensor (the coordinator's currency for params,
+/// optimizer state, and gradients).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[i64]) -> Self {
+        let n = shape.iter().product::<i64>().max(0) as usize;
+        HostTensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_spec(spec: &TensorSpec) -> Self {
+        Self::zeros(&spec.shape)
+    }
+
+    pub fn elements(&self) -> usize {
+        self.data.len()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        xla::Literal::vec1(&self.data)
+            .reshape(&self.shape)
+            .context("reshaping host tensor to literal")
+    }
+
+    fn from_literal(lit: &xla::Literal, shape: &[i64]) -> Result<Self> {
+        let data = lit.to_vec::<f32>().context("reading literal to host")?;
+        let expect: usize = shape.iter().product::<i64>().max(0) as usize;
+        if data.len() != expect {
+            bail!("literal has {} elements, expected {}", data.len(), expect);
+        }
+        Ok(HostTensor { shape: shape.to_vec(), data })
+    }
+
+    /// In-place axpy-style accumulate (grad averaging).
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+}
+
+/// The train-step executables compiled from the artifact bundle.
+pub struct TrainStepExec {
+    pub bundle: ArtifactBundle,
+    grad: xla::PjRtLoadedExecutable,
+    apply: xla::PjRtLoadedExecutable,
+    init: xla::PjRtLoadedExecutable,
+}
+
+/// Output of one per-shard gradient step.
+#[derive(Debug, Clone)]
+pub struct GradOut {
+    pub loss: f32,
+    pub grads: Vec<HostTensor>,
+}
+
+impl TrainStepExec {
+    /// Compile all three artifacts on the client.
+    pub fn compile(client: &RuntimeClient, bundle: ArtifactBundle) -> Result<Self> {
+        let grad = client.compile_hlo_file(&bundle.grad_step)?;
+        let apply = client.compile_hlo_file(&bundle.apply_step)?;
+        let init = client.compile_hlo_file(&bundle.init)?;
+        Ok(TrainStepExec { bundle, grad, apply, init })
+    }
+
+    /// Run the init artifact → (frozen, trainable) host tensors.
+    pub fn init_params(&self) -> Result<(Vec<HostTensor>, Vec<HostTensor>)> {
+        let result = self.init.execute::<xla::Literal>(&[])?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple().context("init output tuple")?;
+        let meta = &self.bundle.meta;
+        let want = meta.frozen.len() + meta.trainable.len();
+        if parts.len() != want {
+            bail!("init returned {} tensors, expected {want}", parts.len());
+        }
+        let mut frozen = Vec::with_capacity(meta.frozen.len());
+        let mut trainable = Vec::with_capacity(meta.trainable.len());
+        for (i, spec) in meta.frozen.iter().enumerate() {
+            frozen.push(HostTensor::from_literal(&parts[i], &spec.shape)?);
+        }
+        for (i, spec) in meta.trainable.iter().enumerate() {
+            trainable.push(HostTensor::from_literal(
+                &parts[meta.frozen.len() + i],
+                &spec.shape,
+            )?);
+        }
+        Ok((frozen, trainable))
+    }
+
+    /// One per-shard fwd+bwd: tokens is row-major `[batch_per_shard,
+    /// seq_len+1]` i32.
+    pub fn grad_step(
+        &self,
+        frozen: &[HostTensor],
+        trainable: &[HostTensor],
+        tokens: &[i32],
+    ) -> Result<GradOut> {
+        let meta = &self.bundle.meta;
+        let b = meta.batch_per_shard as i64;
+        let s = meta.seq_len as i64 + 1;
+        if tokens.len() as i64 != b * s {
+            bail!("tokens len {} != {}x{}", tokens.len(), b, s);
+        }
+        if frozen.len() != meta.frozen.len()
+            || trainable.len() != meta.trainable.len()
+        {
+            bail!("parameter arity mismatch");
+        }
+        let mut args: Vec<xla::Literal> =
+            Vec::with_capacity(frozen.len() + trainable.len() + 1);
+        for t in frozen.iter().chain(trainable) {
+            args.push(t.to_literal()?);
+        }
+        args.push(xla::Literal::vec1(tokens).reshape(&[b, s])?);
+
+        let result =
+            self.grad.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple().context("grad output tuple")?;
+        if parts.len() != 1 + meta.trainable.len() {
+            bail!(
+                "grad_step returned {} tensors, expected {}",
+                parts.len(),
+                1 + meta.trainable.len()
+            );
+        }
+        let loss = parts[0].to_vec::<f32>()?[0];
+        let mut grads = Vec::with_capacity(meta.trainable.len());
+        for (i, spec) in meta.trainable.iter().enumerate() {
+            grads.push(HostTensor::from_literal(&parts[1 + i], &spec.shape)?);
+        }
+        Ok(GradOut { loss, grads })
+    }
+
+    /// AdamW apply: consumes (trainable, m, v, grads, step) and returns
+    /// the updated (trainable, m, v).
+    #[allow(clippy::type_complexity)]
+    pub fn apply_step(
+        &self,
+        trainable: &[HostTensor],
+        m: &[HostTensor],
+        v: &[HostTensor],
+        grads: &[HostTensor],
+        step: i32,
+    ) -> Result<(Vec<HostTensor>, Vec<HostTensor>, Vec<HostTensor>)> {
+        let meta = &self.bundle.meta;
+        let k = meta.trainable.len();
+        if trainable.len() != k || m.len() != k || v.len() != k || grads.len() != k {
+            bail!("apply_step arity mismatch");
+        }
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(4 * k + 1);
+        for group in [trainable, m, v, grads] {
+            for t in group {
+                args.push(t.to_literal()?);
+            }
+        }
+        args.push(xla::Literal::scalar(step));
+        let result =
+            self.apply.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple().context("apply output tuple")?;
+        if parts.len() != 3 * k {
+            bail!("apply_step returned {} tensors, expected {}", parts.len(), 3 * k);
+        }
+        let read = |offset: usize| -> Result<Vec<HostTensor>> {
+            meta.trainable
+                .iter()
+                .enumerate()
+                .map(|(i, spec)| {
+                    HostTensor::from_literal(&parts[offset + i], &spec.shape)
+                })
+                .collect()
+        };
+        Ok((read(0)?, read(k)?, read(2 * k)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_zeros_and_ops() {
+        let mut a = HostTensor::zeros(&[2, 3]);
+        assert_eq!(a.elements(), 6);
+        let b = HostTensor { shape: vec![2, 3], data: vec![1.0; 6] };
+        a.add_assign(&b);
+        a.add_assign(&b);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![1.0; 6]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn add_assign_shape_checked() {
+        let mut a = HostTensor::zeros(&[2]);
+        let b = HostTensor::zeros(&[3]);
+        a.add_assign(&b);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = HostTensor { shape: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit, &[2, 2]).unwrap();
+        assert_eq!(t, back);
+    }
+}

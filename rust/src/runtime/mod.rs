@@ -1,0 +1,12 @@
+//! PJRT execution substrate: loads the HLO-text artifacts that
+//! `python/compile/aot.py` emits (L2 JAX model + L1 Pallas kernels,
+//! lowered once at build time) and runs them from the rust request path.
+//! Python is never involved at runtime.
+
+pub mod artifact;
+pub mod client;
+pub mod executable;
+
+pub use artifact::{ArtifactBundle, ModelMeta};
+pub use client::RuntimeClient;
+pub use executable::{HostTensor, TrainStepExec};

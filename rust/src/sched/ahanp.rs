@@ -1,0 +1,265 @@
+//! AHANP — Adaptive Hybrid Allocation for Non-Predictive Scenarios
+//! (Algorithm 3). A reactive fallback for when forecasts are poor or
+//! unavailable: decisions are driven by three interpretable per-slot
+//! indicators —
+//!
+//! - `ẑ = Z_{t−1} / Z_exp(t−1)` — progress ratio vs the uniform slicing
+//!   trajectory (Eq. 6);
+//! - `p̂ = p_t^s / (σ·p^o)` — spot price relative to the threshold;
+//! - `n̂ = n_t^avail / n_{t−1}^avail` — availability change rate.
+//!
+//! The seven decision cases favour (1) deadline progress, (2) cheap spot,
+//! (3) allocation **stability** — AHANP avoids reconfiguration, which is
+//! why it degrades gracefully as bandwidth shrinks (Fig. 6).
+
+use crate::sched::policy::{Allocation, Policy, SlotContext};
+
+/// Availability change rate n̂, with the 0-denominator conventions the
+/// algorithm's cases need: no-spot→no-spot is 0 (treated like a vanish),
+/// no-spot→spot is ∞.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum AvailRate {
+    Zero,
+    Finite(f64),
+    Infinite,
+}
+
+fn avail_rate(prev: u32, cur: u32) -> AvailRate {
+    match (prev, cur) {
+        (_, 0) => AvailRate::Zero,
+        (0, _) => AvailRate::Infinite,
+        (p, c) => AvailRate::Finite(c as f64 / p as f64),
+    }
+}
+
+/// AHANP policy (Algorithm 3), parameterized by the price threshold σ.
+pub struct Ahanp {
+    pub sigma: f64,
+}
+
+impl Ahanp {
+    pub fn new(sigma: f64) -> Self {
+        assert!(sigma > 0.0);
+        Ahanp { sigma }
+    }
+
+    /// The case analysis of Algorithm 3 line 4: choose the total target
+    /// instance count n_t from (ẑ, n̂, p̂) and n_{t−1}.
+    fn target_total(&self, ctx: &SlotContext) -> u32 {
+        let z_exp = ctx.job.expected_progress(ctx.t); // Z_exp at t−1 slots done
+        let z_hat = if z_exp <= 1e-12 {
+            // First slot: no trajectory yet; treat as exactly on track.
+            1.0
+        } else {
+            ctx.progress / z_exp
+        };
+        let n_hat = avail_rate(ctx.prev_avail, ctx.obs.avail);
+        let p_hat =
+            ctx.obs.spot_price / (self.sigma * ctx.models.on_demand_price);
+        let prev = ctx.prev_total;
+
+        if z_hat >= 1.0 {
+            match n_hat {
+                // Case 1: ahead and no spot to be had → idle.
+                AvailRate::Zero => 0,
+                // Case 2: availability collapsed by >half → halve pool.
+                AvailRate::Finite(r) if r <= 0.5 => {
+                    ((prev as f64 * 0.5).ceil() as u32).max(ctx.job.n_min)
+                }
+                // Case 3: mild decline → hold steady (no reconfig).
+                AvailRate::Finite(r) if r <= 1.0 => prev,
+                // Case 4: growing but pricey → hold steady.
+                _ if p_hat > 1.0 => prev,
+                // Case 5: growing and cheap → grab all spot.
+                _ => prev.max(ctx.obs.avail),
+            }
+        } else {
+            match n_hat {
+                // Case 6: behind, spot just (re)appeared from nothing —
+                // start conservatively at N^min (paper's case 6).
+                AvailRate::Infinite => ctx.job.n_min,
+                // Case 7: behind → double the pool to catch up.
+                _ => (prev * 2).max(ctx.job.n_min),
+            }
+        }
+    }
+}
+
+impl Policy for Ahanp {
+    fn reset(&mut self) {}
+
+    fn decide(&mut self, ctx: &SlotContext) -> Allocation {
+        let mut n = self.target_total(ctx);
+        // Deadline guard — design goal (1) of the algorithm: if even
+        // flat-out execution in the remaining slots would barely cover
+        // the remaining workload, doubling is no longer fast enough; go
+        // straight to N^max.
+        let h_max = ctx.models.reconfig.mu_up
+            * ctx.models.throughput.h(ctx.job.n_max);
+        let slots_left = ctx.slots_left().max(1);
+        if ctx.remaining() > (slots_left - 1) as f64 * h_max + 1e-9 {
+            n = ctx.job.n_max;
+        }
+        // Line 5: limit n_t to [N^min, N^max] (0 stays 0 only when ahead).
+        if n > 0 {
+            n = n.clamp(ctx.job.n_min, ctx.job.n_max);
+        }
+        // Lines 6–7: fill with spot first, remainder on-demand.
+        let spot = n.min(ctx.obs.avail);
+        Allocation::new(n - spot, spot)
+    }
+
+    fn name(&self) -> String {
+        format!("AHANP(σ={:.1})", self.sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::market::MarketObs;
+    use crate::sched::job::Job;
+    use crate::sched::policy::Models;
+
+    fn job() -> Job {
+        Job { workload: 80.0, deadline: 10, n_min: 1, n_max: 12, value: 120.0, gamma: 1.5 }
+    }
+
+    fn ctx<'a>(
+        t: usize,
+        price: f64,
+        avail: u32,
+        prev_avail: u32,
+        prev_total: u32,
+        progress: f64,
+        job: &'a Job,
+        models: &'a Models,
+    ) -> SlotContext<'a> {
+        SlotContext {
+            t,
+            obs: MarketObs { t, spot_price: price, avail, on_demand_price: 1.0 },
+            progress,
+            prev_total,
+            prev_avail,
+            job,
+            models,
+        }
+    }
+
+    #[test]
+    fn case1_ahead_no_spot_idles() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Ahanp::new(0.5);
+        // t=2, progress 20 ≥ Z_exp(2)=16, avail 0
+        let a = p.decide(&ctx(2, 0.4, 0, 4, 4, 20.0, &j, &m));
+        assert_eq!(a.total(), 0);
+    }
+
+    #[test]
+    fn case2_sharp_drop_halves_pool() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Ahanp::new(0.5);
+        // avail 8 → 3 (ratio 0.375 ≤ 0.5), ahead, prev pool 8
+        let a = p.decide(&ctx(2, 0.4, 3, 8, 8, 20.0, &j, &m));
+        assert_eq!(a.total(), 4);
+        assert_eq!(a.spot, 3);
+        assert_eq!(a.on_demand, 1);
+    }
+
+    #[test]
+    fn case3_mild_drop_holds_steady() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Ahanp::new(0.5);
+        // avail 8 → 6 (ratio .75), ahead → keep 5
+        let a = p.decide(&ctx(2, 0.9, 6, 8, 5, 20.0, &j, &m));
+        assert_eq!(a.total(), 5);
+    }
+
+    #[test]
+    fn case4_growth_but_pricey_holds() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Ahanp::new(0.5);
+        // avail 4 → 8 (ratio 2), price 0.9 > σ=0.5 → keep 5
+        let a = p.decide(&ctx(2, 0.9, 8, 4, 5, 20.0, &j, &m));
+        assert_eq!(a.total(), 5);
+    }
+
+    #[test]
+    fn case5_growth_and_cheap_takes_all_spot() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Ahanp::new(0.5);
+        // avail 4 → 8, price 0.3 ≤ 0.5 → max(prev=5, avail=8) = 8
+        let a = p.decide(&ctx(2, 0.3, 8, 4, 5, 20.0, &j, &m));
+        assert_eq!(a.total(), 8);
+        assert_eq!(a.spot, 8);
+    }
+
+    #[test]
+    fn case6_behind_spot_reappears_starts_at_nmin() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Ahanp::new(0.5);
+        // behind (progress 5 < Z_exp(2)=16), prev avail 0 → n̂=∞ → N^min
+        let a = p.decide(&ctx(2, 0.4, 6, 0, 0, 5.0, &j, &m));
+        assert_eq!(a.total(), j.n_min);
+    }
+
+    #[test]
+    fn case7_behind_doubles_pool() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Ahanp::new(0.5);
+        let a = p.decide(&ctx(2, 0.4, 8, 6, 3, 5.0, &j, &m));
+        assert_eq!(a.total(), 6);
+        assert_eq!(a.spot, 6);
+    }
+
+    #[test]
+    fn doubling_clamps_to_nmax() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Ahanp::new(0.5);
+        let a = p.decide(&ctx(4, 0.4, 16, 10, 10, 5.0, &j, &m));
+        assert_eq!(a.total(), j.n_max);
+    }
+
+    #[test]
+    fn behind_with_zero_pool_goes_to_nmin_not_zero() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Ahanp::new(0.5);
+        // behind, prev pool 0, avail present (finite n̂)
+        let a = p.decide(&ctx(3, 0.6, 4, 4, 0, 5.0, &j, &m));
+        assert!(a.total() >= j.n_min);
+    }
+
+    #[test]
+    fn spot_first_split() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Ahanp::new(0.5);
+        // badly behind at t=4 (5 of 80 done): the deadline guard fires
+        // (5 remaining slots × μ₁·H(12) = 54 < 75 remaining) → N^max,
+        // split spot-first across the 3 available spot instances.
+        let a = p.decide(&ctx(4, 0.4, 3, 3, 4, 5.0, &j, &m));
+        assert_eq!(a.total(), 12);
+        assert_eq!(a.spot, 3);
+        assert_eq!(a.on_demand, 9);
+    }
+
+    #[test]
+    fn first_slot_counts_as_on_track() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Ahanp::new(0.5);
+        // t=0: Z_exp=0 → ẑ treated as 1 (on track); cheap growing spot
+        let a = p.decide(&ctx(0, 0.3, 8, 0, 0, 0.0, &j, &m));
+        // n̂ = ∞ (0→8)… ahead branch, growth+cheap → take all spot
+        assert_eq!(a.spot, 8);
+    }
+}

@@ -1,0 +1,360 @@
+//! AHAP — Adaptive Hybrid Allocation with Prediction (Algorithm 1).
+//!
+//! Committed-Horizon-Control allocator with three hyperparameters:
+//!
+//! - `ω` (prediction window): each slot plans over `[t, t+ω]` using the
+//!   observed slot `t` plus an ω-step forecast;
+//! - `v` (commitment level, 1 ≤ v ≤ ω+1): the decision executed at slot
+//!   `t` is the **average** of the plans computed at slots `t−v+1 … t`
+//!   (their entries for slot `t`), trading responsiveness for stability;
+//! - `σ` (spot price threshold): when the job is **ahead** of the uniform
+//!   progress trajectory (Eq. 6), the plan simply grabs all spot capacity
+//!   priced below `σ·p^o` — the aggressive cheap-spot branch that
+//!   distinguishes AHAP from vanilla CHC (and contributes the `D_{ω,σ}`
+//!   term in Theorem 1's bound).
+//!
+//! When the job is **behind** the trajectory, the window subproblem
+//! (Eq. 10) is solved exactly via [`crate::sched::horizon`].
+
+use std::collections::VecDeque;
+
+use crate::forecast::predictor::Predictor;
+use crate::sched::horizon::{solve_dp, solve_greedy, HorizonProblem, TerminalKind};
+use crate::sched::policy::{Allocation, Policy, SlotContext};
+
+/// Which Eq. 10 solver AHAP uses when behind schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SolverKind {
+    /// Marginal-unit greedy — exact for the paper's H(n)=n setting, and
+    /// fast enough for the 112-policy counterfactual sweeps.
+    Greedy,
+    /// Exact DP on a progress grid of the given step (handles β≠0, μ<1).
+    Dp { grid_step: f64 },
+}
+
+/// AHAP policy (Algorithm 1).
+pub struct Ahap {
+    pub omega: usize,
+    pub v: usize,
+    pub sigma: f64,
+    pub solver: SolverKind,
+    predictor: Box<dyn Predictor>,
+    /// Plans from the last `v` slots: `(start_slot, per-slot allocations
+    /// covering start_slot..=start_slot+ω)`.
+    plans: VecDeque<(usize, Vec<Allocation>)>,
+}
+
+impl Ahap {
+    pub fn new(
+        omega: usize,
+        v: usize,
+        sigma: f64,
+        predictor: Box<dyn Predictor>,
+    ) -> Self {
+        assert!(v >= 1 && v <= omega + 1, "need 1 ≤ v ≤ ω+1");
+        assert!(sigma > 0.0);
+        Ahap {
+            omega,
+            v,
+            sigma,
+            solver: SolverKind::Greedy,
+            predictor,
+            plans: VecDeque::new(),
+        }
+    }
+
+    pub fn with_solver(mut self, solver: SolverKind) -> Self {
+        self.solver = solver;
+        self
+    }
+
+    /// Receding Horizon Control: re-plan every slot, execute only the
+    /// first step — CHC with commitment v = 1. The paper rejects RHC as
+    /// "sensitive to prediction errors" (§IV-A); the `ablation_chc`
+    /// bench quantifies that on our market.
+    pub fn rhc(omega: usize, sigma: f64, predictor: Box<dyn Predictor>) -> Self {
+        Ahap::new(omega, 1, sigma, predictor)
+    }
+
+    /// Averaging Fixed Horizon Control: average over all ω+1 overlapping
+    /// plans — CHC with maximum commitment v = ω+1. The paper rejects
+    /// AFHC for "error accumulation" (§IV-A).
+    pub fn afhc(omega: usize, sigma: f64, predictor: Box<dyn Predictor>) -> Self {
+        Ahap::new(omega, omega + 1, sigma, predictor)
+    }
+
+    /// The cheap-spot plan used when ahead of schedule (Alg. 1 lines
+    /// 6–11): take every spot instance priced below `σ·p^o` wherever
+    /// availability supports at least `N^min`.
+    fn threshold_plan(
+        &self,
+        ctx: &SlotContext,
+        prices: &[f64],
+        avail: &[f64],
+    ) -> Vec<Allocation> {
+        prices
+            .iter()
+            .zip(avail)
+            .map(|(&p, &a)| {
+                let a = a.round().max(0.0) as u32;
+                if p <= self.sigma * ctx.models.on_demand_price
+                    && a >= ctx.job.n_min
+                {
+                    Allocation::new(0, a.min(ctx.job.n_max))
+                } else {
+                    Allocation::idle()
+                }
+            })
+            .collect()
+    }
+}
+
+impl Policy for Ahap {
+    fn reset(&mut self) {
+        self.plans.clear();
+        self.predictor.reset();
+    }
+
+    fn decide(&mut self, ctx: &SlotContext) -> Allocation {
+        // Line 3: observe this slot, forecast ω steps ahead.
+        self.predictor
+            .observe(ctx.t, ctx.obs.spot_price, ctx.obs.avail);
+        let fc = self.predictor.predict(self.omega);
+
+        // Window of up to ω+1 slots: the current (observed) one +
+        // forecasts, truncated at the deadline — slots past `d` cannot
+        // contribute value (the episode terminates there), so planning
+        // into them would just tempt the solver into missing the
+        // deadline for marginally cheaper capacity.
+        let win = (self.omega + 1).min(ctx.job.deadline - ctx.t.min(ctx.job.deadline));
+        let win = win.max(1);
+        let mut prices = Vec::with_capacity(win);
+        let mut avail_f = Vec::with_capacity(win);
+        prices.push(ctx.obs.spot_price);
+        avail_f.push(ctx.obs.avail as f64);
+        for i in 0..win.saturating_sub(1) {
+            prices.push(fc.price[i]);
+            avail_f.push(fc.avail[i]);
+        }
+
+        // Line 4: expected progress at the end of the window (Eq. 6),
+        // capped at the deadline.
+        let end = (ctx.t + win).min(ctx.job.deadline);
+        let z_exp = ctx.job.expected_progress(end);
+
+        // Lines 5–13: pick the plan for [t, t+ω].
+        let plan = if ctx.progress >= z_exp {
+            self.threshold_plan(ctx, &prices, &avail_f)
+        } else {
+            let avail_u: Vec<u32> =
+                avail_f.iter().map(|a| a.round().max(0.0) as u32).collect();
+            let prob = HorizonProblem {
+                job: ctx.job,
+                models: ctx.models,
+                start_slot: ctx.t,
+                z0: ctx.progress,
+                prices: &prices,
+                avail: &avail_u,
+                n_prev: ctx.prev_total,
+                // Mid-horizon windows must not see the blocky
+                // termination cost (phantom-slot exploitation); a window
+                // reaching the deadline prices termination exactly.
+                terminal_kind: if ctx.t + win >= ctx.job.deadline {
+                    TerminalKind::Exact
+                } else {
+                    TerminalKind::LinearCost
+                },
+            };
+            match self.solver {
+                // Under harsh reconfiguration overhead the greedy's
+                // μ-deflation heuristic misprices capacity badly (it
+                // assumes every slot reconfigures); the DP models μ
+                // against the running count exactly and naturally plans
+                // *stable* allocations, so switch to it automatically.
+                SolverKind::Greedy if ctx.models.reconfig.mu_up < 0.7 => {
+                    solve_dp(&prob, 0.25).alloc
+                }
+                SolverKind::Greedy => solve_greedy(&prob).alloc,
+                SolverKind::Dp { grid_step } => solve_dp(&prob, grid_step).alloc,
+            }
+        };
+
+        // Commit: keep the last v plans, average their slot-t entries
+        // (lines 14–16).
+        self.plans.push_back((ctx.t, plan));
+        while self.plans.len() > self.v {
+            self.plans.pop_front();
+        }
+        let mut sum_o = 0u32;
+        let mut sum_s = 0u32;
+        let mut n_used = 0u32;
+        for (start, plan) in &self.plans {
+            let idx = ctx.t - start;
+            if let Some(a) = plan.get(idx) {
+                sum_o += a.on_demand;
+                sum_s += a.spot;
+                n_used += 1;
+            }
+        }
+        let n_used = n_used.max(1);
+        // Round-to-nearest averaging.
+        let a = Allocation::new(
+            (sum_o + n_used / 2) / n_used,
+            (sum_s + n_used / 2) / n_used,
+        );
+        a.clamp_to_job(ctx.job, ctx.obs.avail)
+    }
+
+    fn name(&self) -> String {
+        format!("AHAP(ω={},v={},σ={:.1})", self.omega, self.v, self.sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forecast::predictor::OraclePredictor;
+    use crate::market::market::MarketObs;
+    use crate::market::trace::SpotTrace;
+    use crate::sched::job::Job;
+    use crate::sched::policy::Models;
+    use crate::sched::throughput::{ReconfigModel, ThroughputModel};
+
+    fn models() -> Models {
+        Models {
+            throughput: ThroughputModel::unit(),
+            reconfig: ReconfigModel::free(),
+            on_demand_price: 1.0,
+        }
+    }
+
+    fn job() -> Job {
+        Job { workload: 40.0, deadline: 5, n_min: 1, n_max: 12, value: 60.0, gamma: 1.5 }
+    }
+
+    fn ctx<'a>(
+        t: usize,
+        price: f64,
+        avail: u32,
+        progress: f64,
+        job: &'a Job,
+        models: &'a Models,
+    ) -> SlotContext<'a> {
+        SlotContext {
+            t,
+            obs: MarketObs { t, spot_price: price, avail, on_demand_price: 1.0 },
+            progress,
+            prev_total: 0,
+            prev_avail: avail,
+            job,
+            models,
+        }
+    }
+
+    fn oracle(trace: &SpotTrace) -> Box<dyn Predictor> {
+        Box::new(OraclePredictor::new(trace.clone()))
+    }
+
+    #[test]
+    fn ahead_of_schedule_takes_cheap_spot_only() {
+        let tr = SpotTrace::new(vec![0.3; 8], vec![6; 8]);
+        let j = job();
+        let m = models();
+        let mut p = Ahap::new(2, 1, 0.5, oracle(&tr));
+        // progress 40 = done… use 39.9 > Z_exp(3 slots)=24 → ahead.
+        let a = p.decide(&ctx(0, 0.3, 6, 39.0, &j, &m));
+        assert_eq!(a.on_demand, 0);
+        assert_eq!(a.spot, 6); // cheap (0.3 ≤ 0.5) → take all 6
+    }
+
+    #[test]
+    fn ahead_of_schedule_idles_on_expensive_spot() {
+        let tr = SpotTrace::new(vec![0.8; 8], vec![6; 8]);
+        let j = job();
+        let m = models();
+        let mut p = Ahap::new(2, 1, 0.5, oracle(&tr));
+        let a = p.decide(&ctx(0, 0.8, 6, 39.0, &j, &m));
+        assert_eq!(a.total(), 0); // 0.8 > σ·p^o = 0.5 → idle
+    }
+
+    #[test]
+    fn behind_schedule_buys_capacity() {
+        let tr = SpotTrace::new(vec![0.4; 8], vec![8; 8]);
+        let j = job();
+        let m = models();
+        let mut p = Ahap::new(2, 1, 0.5, oracle(&tr));
+        // behind: progress 0 at t=2 (Z_exp(5)=40)
+        let a = p.decide(&ctx(2, 0.4, 8, 0.0, &j, &m));
+        assert!(a.total() > 0);
+        assert!(a.spot > 0); // spot is cheap, should dominate
+    }
+
+    #[test]
+    fn commitment_averages_plans() {
+        // With v=2, slot-1's decision averages plan(0)[1] and plan(1)[0].
+        // Construct a price flip so the two plans disagree, and check the
+        // executed decision is between them.
+        let tr = SpotTrace::new(vec![0.2, 0.9, 0.2, 0.9, 0.2, 0.9], vec![12; 6]);
+        let j = Job { workload: 48.0, deadline: 4, ..job() };
+        let m = models();
+        let mut p = Ahap::new(2, 2, 0.3, oracle(&tr));
+        let _a0 = p.decide(&ctx(0, 0.2, 12, 0.0, &j, &m));
+        let a1 = p.decide(&ctx(1, 0.9, 12, 10.0, &j, &m));
+        // both plans exist now
+        assert_eq!(p.plans.len(), 2);
+        // decision is the average of the two plans' slot-1 entries
+        let (s0, plan0) = &p.plans[0];
+        let (s1, plan1) = &p.plans[1];
+        let e0 = plan0[1 - s0];
+        let e1 = plan1[1 - s1];
+        let want_total =
+            ((e0.total() + e1.total()) as f64 / 2.0).round() as u32;
+        // clamping can shift by n_min, allow ±1
+        assert!(
+            (a1.total() as i64 - want_total as i64).abs() <= 1,
+            "a1={a1:?} e0={e0:?} e1={e1:?}"
+        );
+    }
+
+    #[test]
+    fn reset_clears_history() {
+        let tr = SpotTrace::new(vec![0.4; 8], vec![8; 8]);
+        let j = job();
+        let m = models();
+        let mut p = Ahap::new(2, 2, 0.5, oracle(&tr));
+        let a = p.decide(&ctx(0, 0.4, 8, 0.0, &j, &m));
+        p.reset();
+        assert!(p.plans.is_empty());
+        let b = p.decide(&ctx(0, 0.4, 8, 0.0, &j, &m));
+        assert_eq!(a, b, "post-reset decision must be reproducible");
+    }
+
+    #[test]
+    fn never_exceeds_availability_or_nmax() {
+        let tr = SpotTrace::new(vec![0.1; 10], vec![16; 10]);
+        let j = job(); // n_max 12
+        let m = models();
+        let mut p = Ahap::new(3, 2, 0.9, oracle(&tr));
+        for t in 0..5 {
+            let a = p.decide(&ctx(t, 0.1, 3, 0.0, &j, &m));
+            assert!(a.spot <= 3);
+            assert!(a.total() <= 12);
+        }
+    }
+
+    #[test]
+    fn rhc_and_afhc_are_chc_extremes() {
+        let tr = SpotTrace::new(vec![0.4; 8], vec![8; 8]);
+        let r = Ahap::rhc(3, 0.5, oracle(&tr));
+        assert_eq!((r.omega, r.v), (3, 1));
+        let a = Ahap::afhc(3, 0.5, oracle(&tr));
+        assert_eq!((a.omega, a.v), (3, 4));
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_commitment_rejected() {
+        let tr = SpotTrace::new(vec![0.1], vec![1]);
+        Ahap::new(2, 4, 0.5, oracle(&tr)); // v > ω+1
+    }
+}

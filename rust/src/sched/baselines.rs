@@ -1,0 +1,266 @@
+//! The paper's comparison baselines (§VI-A):
+//!
+//! - **OD-Only** — on-demand instances only, provisioned at the uniform
+//!   rate needed to finish exactly by the deadline. Deadline-safe,
+//!   expensive.
+//! - **MSU** (Maximal Spot Utilization) — all available spot early,
+//!   switching to on-demand only when the remaining capacity would no
+//!   longer cover the remaining workload. Cheap, deadline-risky.
+//! - **UP** (Uniform Progress, Wu et al. NSDI'24) — tracks the uniform
+//!   progress trajectory; prefers spot when available, tops up with
+//!   on-demand only when behind.
+
+use crate::sched::policy::{Allocation, Policy, SlotContext};
+
+/// On-Demand Only: buy the uniform-progress rate with on-demand
+/// instances every slot; never touches the spot market.
+pub struct OdOnly;
+
+impl Policy for OdOnly {
+    fn reset(&mut self) {}
+
+    fn decide(&mut self, ctx: &SlotContext) -> Allocation {
+        let slots_left = ctx.slots_left().max(1);
+        let rate = ctx.remaining() / slots_left as f64;
+        let n = ctx.mu_aware_need(rate).min(ctx.job.n_max);
+        if n == 0 {
+            return Allocation::idle();
+        }
+        Allocation::new(n.max(ctx.job.n_min), 0)
+    }
+
+    fn name(&self) -> String {
+        "OD-Only".to_string()
+    }
+}
+
+/// Maximal Spot Utilization: use every available spot instance (up to
+/// N^max); go full on-demand top-up only once even maximal usage in the
+/// remaining slots could miss the deadline.
+pub struct Msu;
+
+impl Policy for Msu {
+    fn reset(&mut self) {}
+
+    fn decide(&mut self, ctx: &SlotContext) -> Allocation {
+        let spot = ctx.obs.avail.min(ctx.job.n_max);
+        let slots_left = ctx.slots_left().max(1);
+        // If, after this slot, running flat-out can no longer finish,
+        // we are at the last-safe moment: top up with on-demand now.
+        // Future capacity is μ₁-deflated: a panic scramble reconfigures,
+        // so count only the effective computation fraction.
+        let h_max = ctx.models.reconfig.mu_up
+            * ctx.models.throughput.h(ctx.job.n_max);
+        let after_this =
+            ctx.remaining() - ctx.models.throughput.h(spot);
+        let panic = after_this > (slots_left - 1) as f64 * h_max + 1e-9;
+        if panic {
+            Allocation::new(ctx.job.n_max - spot, spot)
+                .clamp_to_job(ctx.job, ctx.obs.avail)
+        } else if spot >= ctx.job.n_min {
+            Allocation::new(0, spot)
+        } else {
+            // Not enough spot to run at all and no deadline pressure yet:
+            // the pure-spot phase cannot run below N^min → idle.
+            Allocation::idle()
+        }
+    }
+
+    fn name(&self) -> String {
+        "MSU".to_string()
+    }
+}
+
+/// Uniform Progress [16]: follow the Eq. 6 trajectory; spot-first, with
+/// on-demand top-up only when behind schedule.
+pub struct UniformProgress;
+
+impl Policy for UniformProgress {
+    fn reset(&mut self) {}
+
+    fn decide(&mut self, ctx: &SlotContext) -> Allocation {
+        // Rate needed so that the trajectory point Z_exp(t+1) is met at
+        // the *end* of this slot — catch-up deficit plus this slot's
+        // uniform share, in one number.
+        let z_target = ctx.job.expected_progress(ctx.t + 1);
+        let rate = (z_target - ctx.progress).max(0.0).min(ctx.remaining());
+        if rate <= 0.0 {
+            // At or ahead of the trajectory with nothing due this slot.
+            return Allocation::idle();
+        }
+        let need = ctx.mu_aware_need(rate).clamp(ctx.job.n_min, ctx.job.n_max);
+        let spot = ctx.obs.avail.min(need);
+        // Spot first; on-demand covers whatever spot cannot — UP keeps
+        // the trajectory at all costs (its guarantee in [16]) but never
+        // buys beyond it (its weakness: cheap surplus spot goes unused).
+        Allocation::new(need - spot, spot)
+    }
+
+    fn name(&self) -> String {
+        "UP".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::market::MarketObs;
+    use crate::sched::job::Job;
+    use crate::sched::policy::Models;
+
+    fn job() -> Job {
+        Job { workload: 80.0, deadline: 10, n_min: 1, n_max: 12, value: 120.0, gamma: 1.5 }
+    }
+
+    fn ctx<'a>(
+        t: usize,
+        price: f64,
+        avail: u32,
+        progress: f64,
+        job: &'a Job,
+        models: &'a Models,
+    ) -> SlotContext<'a> {
+        SlotContext {
+            t,
+            obs: MarketObs { t, spot_price: price, avail, on_demand_price: 1.0 },
+            progress,
+            prev_total: 0,
+            prev_avail: avail,
+            job,
+            models,
+        }
+    }
+
+    #[test]
+    fn od_only_uniform_rate() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = OdOnly;
+        // 80 work / 10 slots needs rate 8; launching from 0 instances
+        // costs μ₁ = 0.9, so the μ-aware provisioner buys ⌈8/0.9⌉ = 9.
+        let a = p.decide(&ctx(0, 0.2, 16, 0.0, &j, &m));
+        assert_eq!(a.on_demand, 9);
+        assert_eq!(a.spot, 0);
+        // halfway and on track, but prev_total=0 in this ctx → again 9
+        let a = p.decide(&ctx(5, 0.2, 16, 40.0, &j, &m));
+        assert_eq!(a.on_demand, 9);
+    }
+
+    #[test]
+    fn od_only_never_buys_spot() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = OdOnly;
+        for t in 0..10 {
+            let a = p.decide(&ctx(t, 0.01, 16, 8.0 * t as f64, &j, &m));
+            assert_eq!(a.spot, 0);
+        }
+    }
+
+    #[test]
+    fn od_only_finishes_idle() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = OdOnly;
+        let a = p.decide(&ctx(9, 0.2, 16, 80.0, &j, &m));
+        assert_eq!(a.total(), 0);
+    }
+
+    #[test]
+    fn msu_rides_spot_when_safe() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Msu;
+        let a = p.decide(&ctx(0, 0.5, 6, 0.0, &j, &m));
+        assert_eq!(a.spot, 6);
+        assert_eq!(a.on_demand, 0);
+    }
+
+    #[test]
+    fn msu_caps_spot_at_nmax() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Msu;
+        let a = p.decide(&ctx(0, 0.5, 16, 0.0, &j, &m));
+        assert_eq!(a.spot, 12);
+    }
+
+    #[test]
+    fn msu_panics_near_deadline() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = Msu;
+        // t=8 (2 slots left), nothing done, no spot: even 12/slot for the
+        // single remaining slot after this one can't cover 80 → top-up.
+        let a = p.decide(&ctx(8, 0.5, 0, 0.0, &j, &m));
+        assert_eq!(a.on_demand, 12);
+    }
+
+    #[test]
+    fn msu_idles_below_nmin_without_panic() {
+        let j = Job { n_min: 4, ..job() };
+        let m = Models::paper_default();
+        let mut p = Msu;
+        // plenty of time, only 2 spot available (< N^min=4) → idle
+        let a = p.decide(&ctx(0, 0.5, 2, 0.0, &j, &m));
+        assert_eq!(a.total(), 0);
+    }
+
+    #[test]
+    fn up_rides_spot_on_track() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = UniformProgress;
+        // on track at t=5 (Z=40): needs 8/slot → 9 μ-aware (prev=0),
+        // 10 spot available
+        let a = p.decide(&ctx(5, 0.5, 10, 40.0, &j, &m));
+        assert_eq!(a.spot, 9);
+        assert_eq!(a.on_demand, 0);
+    }
+
+    #[test]
+    fn up_tops_up_when_behind_and_spot_short() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = UniformProgress;
+        // behind at t=5: Z=20 vs target Z_exp(6)=48 → need 28 → clamp 12;
+        // 3 spot → 9 on-demand.
+        let a = p.decide(&ctx(5, 0.5, 3, 20.0, &j, &m));
+        assert_eq!(a.total(), 12);
+        assert_eq!(a.spot, 3);
+        assert_eq!(a.on_demand, 9);
+    }
+
+    #[test]
+    fn up_uses_on_demand_for_share_when_no_spot() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = UniformProgress;
+        // on track at t=5 but zero spot: the slot's share (8 → 9
+        // μ-aware) must come from on-demand — UP defends the trajectory
+        // unconditionally.
+        let a = p.decide(&ctx(5, 0.5, 0, 40.0, &j, &m));
+        assert_eq!(a.on_demand, 9);
+        assert_eq!(a.spot, 0);
+    }
+
+    #[test]
+    fn up_idles_when_ahead_of_target() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = UniformProgress;
+        // ahead at t=5: Z=60 ≥ Z_exp(6)=48 → nothing due this slot; UP
+        // does not speculate on surplus spot (its documented weakness).
+        let a = p.decide(&ctx(5, 0.5, 2, 60.0, &j, &m));
+        assert_eq!(a.total(), 0);
+    }
+
+    #[test]
+    fn up_idles_when_done() {
+        let j = job();
+        let m = Models::paper_default();
+        let mut p = UniformProgress;
+        let a = p.decide(&ctx(7, 0.5, 5, 80.0, &j, &m));
+        assert_eq!(a.total(), 0);
+    }
+}

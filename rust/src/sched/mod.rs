@@ -1,0 +1,21 @@
+//! The paper's scheduling contribution: job + value model (§III), the
+//! CHC horizon solver for Eq. 10, AHAP (Alg. 1), AHANP (Alg. 3), the
+//! OD-Only/MSU/UP baselines, the offline-optimal DP, the episode
+//! simulator, the 112-policy pool, and the EG online policy selector
+//! (Alg. 2).
+
+pub mod ahanp;
+pub mod ahap;
+pub mod baselines;
+pub mod horizon;
+pub mod job;
+pub mod offline;
+pub mod policy;
+pub mod pool;
+pub mod selector;
+pub mod simulate;
+pub mod throughput;
+
+pub use job::{Job, JobGenerator};
+pub use policy::{Allocation, Models, Policy, SlotContext};
+pub use simulate::{run_episode, EpisodeResult};

@@ -1,0 +1,187 @@
+//! The policy abstraction: per-slot allocation decisions given the
+//! online observable state. AHAP, AHANP, and the baselines all implement
+//! [`Policy`]; the episode simulator drives them slot by slot.
+
+use crate::market::market::MarketObs;
+use crate::sched::job::Job;
+use crate::sched::throughput::{ReconfigModel, ThroughputModel};
+
+/// Shared environment models: throughput H(n), reconfiguration μ, and the
+/// (constant) on-demand price.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Models {
+    pub throughput: ThroughputModel,
+    pub reconfig: ReconfigModel,
+    pub on_demand_price: f64,
+}
+
+impl Models {
+    /// The paper's evaluation setting (§VI-A).
+    pub fn paper_default() -> Models {
+        Models {
+            throughput: ThroughputModel::unit(),
+            reconfig: ReconfigModel::paper_default(),
+            on_demand_price: 1.0,
+        }
+    }
+}
+
+/// One slot's allocation decision `(n_t^o, n_t^s)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Allocation {
+    pub on_demand: u32,
+    pub spot: u32,
+}
+
+impl Allocation {
+    pub fn new(on_demand: u32, spot: u32) -> Self {
+        Allocation { on_demand, spot }
+    }
+
+    pub fn idle() -> Self {
+        Allocation::default()
+    }
+
+    pub fn total(&self) -> u32 {
+        self.on_demand + self.spot
+    }
+
+    /// Enforce the δ_t constraint (Eq. 5c–5d): the total is either 0
+    /// (pending) or within `[n_min, n_max]` (executing); spot never
+    /// exceeds availability. When forcing up to `n_min`, the deficit is
+    /// covered by on-demand instances (always available).
+    pub fn clamp_to_job(mut self, job: &Job, avail: u32) -> Allocation {
+        self.spot = self.spot.min(avail);
+        let total = self.total();
+        if total == 0 {
+            return self;
+        }
+        if total > job.n_max {
+            // Shed on-demand first (it is the expensive component).
+            let excess = total - job.n_max;
+            let shed_od = excess.min(self.on_demand);
+            self.on_demand -= shed_od;
+            let excess = excess - shed_od;
+            self.spot -= excess;
+        } else if total < job.n_min {
+            self.on_demand += job.n_min - total;
+        }
+        self
+    }
+}
+
+/// Everything a policy may observe when deciding slot `t` (its *online*
+/// view — no future information).
+#[derive(Debug, Clone, Copy)]
+pub struct SlotContext<'a> {
+    /// 0-based slot index within the job's horizon (slot `t+1` in the
+    /// paper's 1-based notation).
+    pub t: usize,
+    /// Market observation for this slot (current spot price/availability).
+    pub obs: MarketObs,
+    /// Progress accumulated through the end of the previous slot, Z_{t-1}.
+    pub progress: f64,
+    /// Total instances actually running in the previous slot, n_{t-1}.
+    pub prev_total: u32,
+    /// Spot availability observed in the previous slot (for AHANP's n̂).
+    pub prev_avail: u32,
+    pub job: &'a Job,
+    pub models: &'a Models,
+}
+
+impl SlotContext<'_> {
+    /// Slots remaining including this one before the soft deadline.
+    pub fn slots_left(&self) -> usize {
+        self.job.deadline.saturating_sub(self.t)
+    }
+
+    /// Remaining workload.
+    pub fn remaining(&self) -> f64 {
+        (self.job.workload - self.progress).max(0.0)
+    }
+
+    /// Instance count needed to process `rate` workload this slot,
+    /// accounting for the reconfiguration penalty μ the change itself
+    /// would trigger (two-pass fixed point: compute the naive count, see
+    /// whether it reconfigures, then re-provision against that μ).
+    /// Policies that guarantee trajectories (OD-Only, UP) need this —
+    /// μ-unaware provisioning systematically undershoots and compounds.
+    pub fn mu_aware_need(&self, rate: f64) -> u32 {
+        if rate <= 0.0 {
+            return 0;
+        }
+        let tp = &self.models.throughput;
+        let n1 = tp.instances_for_rate(rate).min(self.job.n_max);
+        let mu = self.models.reconfig.mu(self.prev_total, n1);
+        tp.instances_for_rate(rate / mu)
+    }
+}
+
+/// A per-slot allocation policy. `reset` is called at the start of every
+/// episode so one policy instance can be reused across jobs.
+pub trait Policy {
+    fn reset(&mut self);
+    fn decide(&mut self, ctx: &SlotContext) -> Allocation;
+    fn name(&self) -> String;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job() -> Job {
+        Job { workload: 80.0, deadline: 10, n_min: 2, n_max: 12, value: 120.0, gamma: 1.5 }
+    }
+
+    #[test]
+    fn clamp_limits_spot_to_availability() {
+        let a = Allocation::new(0, 10).clamp_to_job(&job(), 4);
+        assert_eq!(a.spot, 4);
+        assert_eq!(a.on_demand, 0);
+    }
+
+    #[test]
+    fn clamp_enforces_n_min_with_on_demand() {
+        let a = Allocation::new(0, 1).clamp_to_job(&job(), 1);
+        assert_eq!(a.total(), 2);
+        assert_eq!(a.on_demand, 1);
+    }
+
+    #[test]
+    fn clamp_keeps_idle_idle() {
+        let a = Allocation::idle().clamp_to_job(&job(), 8);
+        assert_eq!(a.total(), 0);
+    }
+
+    #[test]
+    fn clamp_sheds_on_demand_first_above_n_max() {
+        let a = Allocation::new(8, 8).clamp_to_job(&job(), 8);
+        assert_eq!(a.total(), 12);
+        assert_eq!(a.spot, 8);
+        assert_eq!(a.on_demand, 4);
+    }
+
+    #[test]
+    fn clamp_sheds_spot_if_needed() {
+        let a = Allocation::new(0, 16).clamp_to_job(&job(), 16);
+        assert_eq!(a.total(), 12);
+        assert_eq!(a.spot, 12);
+    }
+
+    #[test]
+    fn slot_context_helpers() {
+        let j = job();
+        let m = Models::paper_default();
+        let ctx = SlotContext {
+            t: 3,
+            obs: MarketObs { t: 3, spot_price: 0.5, avail: 4, on_demand_price: 1.0 },
+            progress: 30.0,
+            prev_total: 5,
+            prev_avail: 6,
+            job: &j,
+            models: &m,
+        };
+        assert_eq!(ctx.slots_left(), 7);
+        assert!((ctx.remaining() - 50.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,196 @@
+//! The policy pool (§V-A): 105 AHAP policies (ω ∈ 1..5, v ∈ 1..ω,
+//! σ ∈ {0.3,…,0.9}) plus 7 AHANP policies (same σ grid), indexed 1..112
+//! as in Fig. 10. Policies are described by a [`PolicySpec`] and built
+//! per job (each gets a fresh predictor) from a [`PolicyEnv`].
+
+use crate::forecast::arima::ArimaPredictor;
+use crate::forecast::noise::{NoiseSpec, NoisyOracle};
+use crate::forecast::predictor::{OraclePredictor, Predictor};
+use crate::market::trace::SpotTrace;
+use crate::sched::ahanp::Ahanp;
+use crate::sched::ahap::Ahap;
+use crate::sched::baselines::{Msu, OdOnly, UniformProgress};
+use crate::sched::policy::Policy;
+
+/// σ grid shared by AHAP and AHANP in the paper's pool.
+pub const SIGMA_GRID: [f64; 7] = [0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9];
+
+/// How a policy's predictor is realized for a given job.
+#[derive(Debug, Clone)]
+pub enum PredictorKind {
+    /// Perfect foresight (Fig. 4's Perfect-Predictor).
+    Oracle,
+    /// Perfect foresight corrupted by a noise regime (Figs. 9–10).
+    Noisy(NoiseSpec),
+    /// Honest ARIMA fitted online from observed history (Fig. 3 setting).
+    Arima,
+}
+
+/// Per-job environment used to instantiate policies: the true trace the
+/// job will run on (for oracle-based predictors) and a seed.
+#[derive(Debug, Clone)]
+pub struct PolicyEnv {
+    pub predictor: PredictorKind,
+    pub trace: SpotTrace,
+    pub seed: u64,
+}
+
+impl PolicyEnv {
+    fn make_predictor(&self) -> Box<dyn Predictor> {
+        match &self.predictor {
+            PredictorKind::Oracle => {
+                Box::new(OraclePredictor::new(self.trace.clone()))
+            }
+            PredictorKind::Noisy(spec) => {
+                Box::new(NoisyOracle::new(self.trace.clone(), *spec, self.seed))
+            }
+            PredictorKind::Arima => Box::new(ArimaPredictor::with_defaults()),
+        }
+    }
+}
+
+/// A declarative policy description — hashable, printable, buildable.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicySpec {
+    Ahap { omega: usize, v: usize, sigma: f64 },
+    Ahanp { sigma: f64 },
+    OdOnly,
+    Msu,
+    UniformProgress,
+}
+
+impl PolicySpec {
+    /// Instantiate the policy for one job.
+    pub fn build(&self, env: &PolicyEnv) -> Box<dyn Policy> {
+        match *self {
+            PolicySpec::Ahap { omega, v, sigma } => {
+                Box::new(Ahap::new(omega, v, sigma, env.make_predictor()))
+            }
+            PolicySpec::Ahanp { sigma } => Box::new(Ahanp::new(sigma)),
+            PolicySpec::OdOnly => Box::new(OdOnly),
+            PolicySpec::Msu => Box::new(Msu),
+            PolicySpec::UniformProgress => Box::new(UniformProgress),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            PolicySpec::Ahap { omega, v, sigma } => {
+                format!("AHAP(ω={omega},v={v},σ={sigma:.1})")
+            }
+            PolicySpec::Ahanp { sigma } => format!("AHANP(σ={sigma:.1})"),
+            PolicySpec::OdOnly => "OD-Only".into(),
+            PolicySpec::Msu => "MSU".into(),
+            PolicySpec::UniformProgress => "UP".into(),
+        }
+    }
+
+    pub fn is_ahap(&self) -> bool {
+        matches!(self, PolicySpec::Ahap { .. })
+    }
+}
+
+/// The 105 AHAP policies of the paper's pool.
+pub fn ahap_pool() -> Vec<PolicySpec> {
+    let mut out = Vec::with_capacity(105);
+    for omega in 1..=5 {
+        for v in 1..=omega {
+            for &sigma in &SIGMA_GRID {
+                out.push(PolicySpec::Ahap { omega, v, sigma });
+            }
+        }
+    }
+    out
+}
+
+/// The 7 AHANP policies.
+pub fn ahanp_pool() -> Vec<PolicySpec> {
+    SIGMA_GRID
+        .iter()
+        .map(|&sigma| PolicySpec::Ahanp { sigma })
+        .collect()
+}
+
+/// The full 112-policy paper pool (AHAP first, then AHANP — indices
+/// match Fig. 10's 1..112 axis).
+pub fn paper_pool() -> Vec<PolicySpec> {
+    let mut p = ahap_pool();
+    p.extend(ahanp_pool());
+    p
+}
+
+/// AHAP pool with the commitment level pinned (Fig. 9's "fixed v" study).
+pub fn ahap_pool_fixed_v(v: usize) -> Vec<PolicySpec> {
+    ahap_pool()
+        .into_iter()
+        .filter(|s| matches!(s, PolicySpec::Ahap { v: pv, .. } if *pv == v))
+        .collect()
+}
+
+/// AHAP pool with σ pinned (Fig. 9's "fixed σ" study).
+pub fn ahap_pool_fixed_sigma(sigma: f64) -> Vec<PolicySpec> {
+    ahap_pool()
+        .into_iter()
+        .filter(
+            |s| matches!(s, PolicySpec::Ahap { sigma: ps, .. } if (*ps - sigma).abs() < 1e-9),
+        )
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_sizes_match_paper() {
+        assert_eq!(ahap_pool().len(), 105);
+        assert_eq!(ahanp_pool().len(), 7);
+        assert_eq!(paper_pool().len(), 112);
+    }
+
+    #[test]
+    fn ahap_pool_constraints() {
+        for s in ahap_pool() {
+            if let PolicySpec::Ahap { omega, v, sigma } = s {
+                assert!((1..=5).contains(&omega));
+                assert!(v >= 1 && v <= omega);
+                assert!((0.3..=0.9).contains(&sigma));
+            } else {
+                panic!("non-AHAP in ahap_pool");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_pools_filter_correctly() {
+        let fv = ahap_pool_fixed_v(1);
+        assert_eq!(fv.len(), 5 * 7); // all ω, all σ
+        let fs = ahap_pool_fixed_sigma(0.9);
+        assert_eq!(fs.len(), 15); // all (ω,v) combos
+    }
+
+    #[test]
+    fn every_spec_builds() {
+        let env = PolicyEnv {
+            predictor: PredictorKind::Noisy(NoiseSpec::mag_dep_uniform(0.1)),
+            trace: SpotTrace::new(vec![0.5; 4], vec![4; 4]),
+            seed: 1,
+        };
+        for s in paper_pool() {
+            let p = s.build(&env);
+            assert!(!p.name().is_empty());
+        }
+        for s in [PolicySpec::OdOnly, PolicySpec::Msu, PolicySpec::UniformProgress] {
+            let _ = s.build(&env);
+        }
+    }
+
+    #[test]
+    fn labels_are_unique() {
+        let pool = paper_pool();
+        let mut labels: Vec<String> = pool.iter().map(|s| s.label()).collect();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), pool.len());
+    }
+}

@@ -1,0 +1,325 @@
+//! Online Policy Selection (Algorithm 2): exponentiated-gradient /
+//! multiplicative-weights learning over the policy pool, with the
+//! `η = √(2 ln M / K)` rate that yields the `√(2K ln M)` regret bound of
+//! Theorem 2.
+
+use crate::market::generator::TraceGenerator;
+use crate::sched::job::JobGenerator;
+use crate::sched::policy::Models;
+use crate::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use crate::sched::simulate::run_episode;
+use crate::util::rng::Rng;
+
+/// The multiplicative-weights learner itself (decoupled from the
+/// scheduling domain so it can be tested on synthetic utility streams).
+#[derive(Debug, Clone)]
+pub struct EgSelector {
+    weights: Vec<f64>,
+    eta: f64,
+}
+
+impl EgSelector {
+    /// `m` experts, tuned for `k_total` rounds (Alg. 2 line 3).
+    pub fn new(m: usize, k_total: usize) -> Self {
+        assert!(m >= 1 && k_total >= 1);
+        EgSelector {
+            weights: vec![1.0 / m as f64; m],
+            eta: (2.0 * (m as f64).ln() / k_total as f64).sqrt(),
+        }
+    }
+
+    pub fn with_eta(m: usize, eta: f64) -> Self {
+        assert!(eta > 0.0);
+        EgSelector { weights: vec![1.0 / m as f64; m], eta }
+    }
+
+    pub fn eta(&self) -> f64 {
+        self.eta
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Sample a policy index from the current distribution (line 6).
+    pub fn select(&self, rng: &mut Rng) -> usize {
+        rng.categorical(&self.weights)
+    }
+
+    /// Index of the currently highest-weighted policy.
+    pub fn best(&self) -> usize {
+        self.weights
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    /// Expected utility of the current distribution on a utility vector.
+    pub fn expected(&self, u: &[f64]) -> f64 {
+        self.weights.iter().zip(u).map(|(w, u)| w * u).sum()
+    }
+
+    /// EG update (lines 9–10): `w ∝ w · exp(η·u)`, with utilities in
+    /// [0, 1]. Numerically stabilized by subtracting the max exponent.
+    pub fn update(&mut self, u: &[f64]) {
+        assert_eq!(u.len(), self.weights.len());
+        debug_assert!(
+            u.iter().all(|&x| (-1e-9..=1.0 + 1e-9).contains(&x)),
+            "utilities must be normalized to [0,1]"
+        );
+        let max_u = u.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut z = 0.0;
+        for (w, &ui) in self.weights.iter_mut().zip(u) {
+            *w *= (self.eta * (ui - max_u)).exp();
+            z += *w;
+        }
+        if z <= 0.0 || !z.is_finite() {
+            // Degenerate round: reset to uniform rather than poisoning.
+            let m = self.weights.len() as f64;
+            self.weights.iter_mut().for_each(|w| *w = 1.0 / m);
+            return;
+        }
+        self.weights.iter_mut().for_each(|w| *w /= z);
+    }
+}
+
+/// Configuration for a full selection run over a stream of jobs.
+#[derive(Debug, Clone)]
+pub struct SelectionConfig {
+    pub k_jobs: usize,
+    pub seed: u64,
+    /// Record a weight snapshot every this many jobs (0 = never).
+    pub snapshot_every: usize,
+}
+
+impl Default for SelectionConfig {
+    fn default() -> Self {
+        SelectionConfig { k_jobs: 1000, seed: 7, snapshot_every: 50 }
+    }
+}
+
+/// Output of [`run_selection`].
+#[derive(Debug, Clone)]
+pub struct SelectionOutcome {
+    /// Normalized utility of the sampled policy, per job.
+    pub realized: Vec<f64>,
+    /// Expected normalized utility under w_k, per job (Thm. 2's E_w[u]).
+    pub expected: Vec<f64>,
+    /// Cumulative normalized utility per policy (hindsight reference).
+    pub per_policy_cum: Vec<f64>,
+    /// Final weight vector.
+    pub final_weights: Vec<f64>,
+    /// (job index, weights) snapshots for heatmaps (Fig. 10).
+    pub snapshots: Vec<(usize, Vec<f64>)>,
+    /// Cumulative regret vs the best fixed policy after each job.
+    pub regret: Vec<f64>,
+    /// Index of the best fixed policy in hindsight.
+    pub best_fixed: usize,
+    /// Index of the highest-weighted policy at the end.
+    pub converged_to: usize,
+}
+
+impl SelectionOutcome {
+    /// The Theorem 2 bound √(2K ln M) for this run's dimensions.
+    pub fn regret_bound(&self) -> f64 {
+        let k = self.realized.len() as f64;
+        let m = self.final_weights.len() as f64;
+        (2.0 * k * m.ln()).sqrt()
+    }
+}
+
+/// Run Algorithm 2 over `cfg.k_jobs` jobs. Each job `k` gets its own
+/// market trace (seeded deterministically) and noise regime from
+/// `noise_at(k)`; all `M` policies are evaluated counterfactually on the
+/// job (full-information EG, as in the paper's line 7–8).
+pub fn run_selection(
+    specs: &[PolicySpec],
+    jobs: &JobGenerator,
+    models: &Models,
+    trace_gen: &TraceGenerator,
+    mut predictor_at: impl FnMut(usize) -> PredictorKind,
+    cfg: &SelectionConfig,
+) -> SelectionOutcome {
+    let m = specs.len();
+    assert!(m >= 1);
+    let mut selector = EgSelector::new(m, cfg.k_jobs.max(1));
+    let mut rng = Rng::new(cfg.seed);
+    let mut realized = Vec::with_capacity(cfg.k_jobs);
+    let mut expected = Vec::with_capacity(cfg.k_jobs);
+    let mut per_policy_cum = vec![0.0; m];
+    let mut snapshots = Vec::new();
+    let mut regret = Vec::with_capacity(cfg.k_jobs);
+    let mut cum_expected = 0.0;
+
+    for k in 0..cfg.k_jobs {
+        let job = jobs.sample(&mut rng);
+        // Fresh market segment per job: new seed, random offset into the
+        // 10-day trace so jobs see different diurnal phases.
+        let trace_seed = cfg.seed ^ (k as u64).wrapping_mul(0x9E37_79B9);
+        let full = trace_gen.generate(trace_seed);
+        let max_off = full.len().saturating_sub(2 * job.deadline).max(1);
+        let trace = full.slice_from(rng.index(max_off));
+        let env = PolicyEnv {
+            predictor: predictor_at(k),
+            trace: trace.clone(),
+            seed: trace_seed ^ 0xABCD,
+        };
+
+        // Counterfactual utilities for the whole pool.
+        let mut u = Vec::with_capacity(m);
+        for spec in specs {
+            let mut policy = spec.build(&env);
+            let r = run_episode(&job, &trace, models, policy.as_mut());
+            u.push(job.normalize_utility(r.utility, models.on_demand_price));
+        }
+
+        let chosen = selector.select(&mut rng);
+        realized.push(u[chosen]);
+        let e = selector.expected(&u);
+        expected.push(e);
+        cum_expected += e;
+        for (c, ui) in per_policy_cum.iter_mut().zip(&u) {
+            *c += ui;
+        }
+        let best_cum = per_policy_cum
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, f64::max);
+        regret.push(best_cum - cum_expected);
+
+        selector.update(&u);
+        if cfg.snapshot_every > 0 && (k + 1) % cfg.snapshot_every == 0 {
+            snapshots.push((k + 1, selector.weights().to_vec()));
+        }
+    }
+
+    let best_fixed = per_policy_cum
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    let converged_to = selector.best();
+    SelectionOutcome {
+        realized,
+        expected,
+        per_policy_cum,
+        final_weights: selector.weights().to_vec(),
+        snapshots,
+        regret,
+        best_fixed,
+        converged_to,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forecast::noise::NoiseSpec;
+
+    #[test]
+    fn weights_stay_normalized() {
+        let mut s = EgSelector::new(4, 100);
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let u: Vec<f64> = (0..4).map(|_| rng.f64()).collect();
+            s.update(&u);
+            let sum: f64 = s.weights().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9);
+            assert!(s.weights().iter().all(|&w| w >= 0.0));
+        }
+    }
+
+    #[test]
+    fn converges_to_dominant_expert() {
+        let mut s = EgSelector::new(3, 300);
+        for _ in 0..300 {
+            s.update(&[0.2, 0.9, 0.4]);
+        }
+        assert_eq!(s.best(), 1);
+        assert!(s.weights()[1] > 0.95);
+    }
+
+    #[test]
+    fn regret_bound_holds_on_adversarial_stream() {
+        // Alternating utilities: regret must stay under √(2K ln M).
+        let k_total = 400;
+        let m = 5;
+        let mut s = EgSelector::new(m, k_total);
+        let mut rng = Rng::new(3);
+        let mut cum = vec![0.0; m];
+        let mut cum_exp = 0.0;
+        for k in 0..k_total {
+            let mut u: Vec<f64> = (0..m).map(|_| rng.f64()).collect();
+            // expert 2 is slightly better on average
+            u[2] = (u[2] + 0.3).min(1.0);
+            let _ = k;
+            cum_exp += s.expected(&u);
+            for (c, ui) in cum.iter_mut().zip(&u) {
+                *c += ui;
+            }
+            s.update(&u);
+        }
+        let best = cum.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let regret = best - cum_exp;
+        let bound = (2.0 * k_total as f64 * (m as f64).ln()).sqrt();
+        assert!(regret <= bound, "regret {regret} > bound {bound}");
+    }
+
+    #[test]
+    fn full_selection_run_is_deterministic_and_bounded() {
+        let specs = vec![
+            PolicySpec::OdOnly,
+            PolicySpec::Msu,
+            PolicySpec::UniformProgress,
+            PolicySpec::Ahanp { sigma: 0.5 },
+            PolicySpec::Ahap { omega: 2, v: 1, sigma: 0.5 },
+        ];
+        let jobs = JobGenerator::default();
+        let models = Models::paper_default();
+        let gen = TraceGenerator::calibrated();
+        let cfg = SelectionConfig { k_jobs: 40, seed: 11, snapshot_every: 10 };
+        let out1 = run_selection(
+            &specs, &jobs, &models, &gen,
+            |_| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            &cfg,
+        );
+        let out2 = run_selection(
+            &specs, &jobs, &models, &gen,
+            |_| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            &cfg,
+        );
+        assert_eq!(out1.final_weights, out2.final_weights);
+        assert_eq!(out1.snapshots.len(), 4);
+        let last_regret = *out1.regret.last().unwrap();
+        assert!(
+            last_regret <= out1.regret_bound() + 1e-9,
+            "regret {last_regret} exceeds bound {}",
+            out1.regret_bound()
+        );
+        // utilities normalized
+        assert!(out1.realized.iter().all(|&u| (0.0..=1.0).contains(&u)));
+    }
+
+    #[test]
+    fn good_predictions_select_ahap() {
+        // With near-perfect predictions, an AHAP policy should out-rank
+        // OD-Only in the learned weights.
+        let specs = vec![
+            PolicySpec::OdOnly,
+            PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+        ];
+        let jobs = JobGenerator::default();
+        let models = Models::paper_default();
+        let gen = TraceGenerator::calibrated();
+        let cfg = SelectionConfig { k_jobs: 120, seed: 5, snapshot_every: 0 };
+        let out = run_selection(
+            &specs, &jobs, &models, &gen,
+            |_| PredictorKind::Noisy(NoiseSpec::mag_dep_uniform(0.05)),
+            &cfg,
+        );
+        assert_eq!(out.converged_to, 1, "weights: {:?}", out.final_weights);
+    }
+}

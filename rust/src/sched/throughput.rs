@@ -1,0 +1,157 @@
+//! Throughput and reconfiguration models (§III-B).
+//!
+//! `H(n) = α·n + β` for n ≥ 1 and `H(0) = 0` (Eq. 1) — validated as
+//! near-linear on real hardware in Fig. 1 (and by our `fig1` bench on the
+//! PJRT trainer). The effective-computation fraction μ (Eq. 2) models
+//! reconfiguration overhead: scaling **up** pays instance-launch +
+//! reconfig (μ₁), scaling **down** pays reconfig only (μ₂), steady state
+//! pays nothing (μ = 1), with μ₁ ≤ μ₂ ≤ 1.
+
+/// Linear-throughput model `H(n) = α·n + β` (Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThroughputModel {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl ThroughputModel {
+    pub fn new(alpha: f64, beta: f64) -> Self {
+        assert!(alpha > 0.0, "throughput must increase with instances");
+        ThroughputModel { alpha, beta }
+    }
+
+    /// The paper's evaluation setting: unit GPU compute power (α=1, β=0),
+    /// so one instance-slot completes one workload unit.
+    pub fn unit() -> Self {
+        ThroughputModel { alpha: 1.0, beta: 0.0 }
+    }
+
+    /// Throughput of `n` instances (Eq. 1): 0 when idle.
+    #[inline]
+    pub fn h(&self, n: u32) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.alpha * n as f64 + self.beta
+        }
+    }
+
+    /// Smallest instance count whose throughput reaches `rate`
+    /// (∞-safe: returns `u32::MAX` if unreachable — callers clamp).
+    pub fn instances_for_rate(&self, rate: f64) -> u32 {
+        if rate <= 0.0 {
+            return 0;
+        }
+        let n = (rate - self.beta) / self.alpha;
+        n.ceil().max(1.0).min(u32::MAX as f64) as u32
+    }
+}
+
+/// Reconfiguration model μ_t (Eq. 2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReconfigModel {
+    /// Effective fraction when the pool **grew** (launch + reconfig).
+    pub mu_up: f64,
+    /// Effective fraction when the pool **shrank** (reconfig only).
+    pub mu_down: f64,
+}
+
+impl ReconfigModel {
+    pub fn new(mu_up: f64, mu_down: f64) -> Self {
+        assert!(
+            (0.0..=1.0).contains(&mu_up)
+                && (0.0..=1.0).contains(&mu_down)
+                && mu_up <= mu_down,
+            "need 0 ≤ μ₁ ≤ μ₂ ≤ 1"
+        );
+        ReconfigModel { mu_up, mu_down }
+    }
+
+    /// The paper's evaluation setting: μ = 0.9 at 800 Mbps (3-minute
+    /// launch within a 30-minute slot).
+    pub fn paper_default() -> Self {
+        ReconfigModel { mu_up: 0.9, mu_down: 0.95 }
+    }
+
+    /// No reconfiguration cost (used by the toy Fig. 4 example).
+    pub fn free() -> Self {
+        ReconfigModel { mu_up: 1.0, mu_down: 1.0 }
+    }
+
+    /// Map network bandwidth to μ (Fig. 6's x-axis). The paper measures a
+    /// ~3-minute launch at 800 Mbps dominated by checkpoint transfer, so
+    /// overhead scales inversely with bandwidth, clamped to a slot.
+    pub fn from_bandwidth_mbps(mbps: f64, slot_minutes: f64) -> Self {
+        assert!(mbps > 0.0);
+        let launch_minutes = 3.0 * (800.0 / mbps);
+        let up = (1.0 - launch_minutes / slot_minutes).max(0.0);
+        // Scale-down skips instance launch: half the overhead.
+        let down = (1.0 - 0.5 * launch_minutes / slot_minutes).max(0.0);
+        ReconfigModel { mu_up: up, mu_down: down }
+    }
+
+    /// Effective computation fraction for a slot where the instance count
+    /// went from `prev` to `cur` (Eq. 2).
+    #[inline]
+    pub fn mu(&self, prev: u32, cur: u32) -> f64 {
+        use std::cmp::Ordering::*;
+        match cur.cmp(&prev) {
+            Greater => self.mu_up,
+            Less => self.mu_down,
+            Equal => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h_is_zero_at_zero_and_linear_after() {
+        let m = ThroughputModel::new(2.0, 1.0);
+        assert_eq!(m.h(0), 0.0);
+        assert_eq!(m.h(1), 3.0);
+        assert_eq!(m.h(4), 9.0);
+    }
+
+    #[test]
+    fn unit_model_matches_paper() {
+        let m = ThroughputModel::unit();
+        assert_eq!(m.h(8), 8.0); // 8 A100s × 10 slots = workload 80
+    }
+
+    #[test]
+    fn instances_for_rate_rounds_up() {
+        let m = ThroughputModel::unit();
+        assert_eq!(m.instances_for_rate(0.0), 0);
+        assert_eq!(m.instances_for_rate(7.2), 8);
+        assert_eq!(m.instances_for_rate(8.0), 8);
+        let m2 = ThroughputModel::new(2.0, 1.0);
+        assert_eq!(m2.instances_for_rate(9.0), 4); // H(4)=9
+        assert_eq!(m2.instances_for_rate(9.1), 5);
+    }
+
+    #[test]
+    fn mu_cases() {
+        let r = ReconfigModel::new(0.8, 0.9);
+        assert_eq!(r.mu(4, 6), 0.8); // grow
+        assert_eq!(r.mu(6, 4), 0.9); // shrink
+        assert_eq!(r.mu(5, 5), 1.0); // steady
+    }
+
+    #[test]
+    fn bandwidth_mapping_monotone() {
+        let slow = ReconfigModel::from_bandwidth_mbps(100.0, 30.0);
+        let fast = ReconfigModel::from_bandwidth_mbps(800.0, 30.0);
+        assert!(slow.mu_up < fast.mu_up);
+        assert!((fast.mu_up - 0.9).abs() < 1e-9); // paper's 3 min / 30 min
+        assert!(slow.mu_up >= 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mu_ordering_enforced() {
+        ReconfigModel::new(0.95, 0.9);
+    }
+}

@@ -1,0 +1,202 @@
+//! Parameter + optimizer-state store for the training loop, with binary
+//! checkpoint serialization (the payload whose transfer time defines the
+//! paper's switching cost, §II-A).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::artifact::ModelMeta;
+use crate::runtime::executable::HostTensor;
+
+/// All mutable training state: trainable params, AdamW moments, step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamStore {
+    pub trainable: Vec<HostTensor>,
+    pub m: Vec<HostTensor>,
+    pub v: Vec<HostTensor>,
+    pub step: i32,
+}
+
+const MAGIC: u32 = 0x5350_4F54; // "SPOT"
+const VERSION: u32 = 1;
+
+impl ParamStore {
+    /// Fresh store from initialized trainables (moments zeroed).
+    pub fn new(trainable: Vec<HostTensor>) -> Self {
+        let m = trainable
+            .iter()
+            .map(|t| HostTensor::zeros(&t.shape))
+            .collect();
+        let v = trainable
+            .iter()
+            .map(|t| HostTensor::zeros(&t.shape))
+            .collect();
+        ParamStore { trainable, m, v, step: 0 }
+    }
+
+    /// Total f32 elements in the checkpoint payload.
+    pub fn elements(&self) -> usize {
+        self.trainable.iter().map(|t| t.elements()).sum::<usize>() * 3
+    }
+
+    /// Checkpoint size in bytes (header + step + 3 tensor groups).
+    pub fn checkpoint_bytes(&self) -> usize {
+        16 + self.elements() * 4
+    }
+
+    /// Validate against the artifact calling convention.
+    pub fn check_meta(&self, meta: &ModelMeta) -> Result<()> {
+        if self.trainable.len() != meta.trainable.len() {
+            bail!(
+                "store has {} trainables, meta {}",
+                self.trainable.len(),
+                meta.trainable.len()
+            );
+        }
+        for (t, spec) in self.trainable.iter().zip(&meta.trainable) {
+            if t.shape != spec.shape {
+                bail!("shape mismatch for {}: {:?} vs {:?}", spec.name, t.shape, spec.shape);
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to a writer (little-endian f32s; shapes come from meta,
+    /// so the checkpoint stores only counts for integrity checking).
+    pub fn save(&self, w: &mut impl Write) -> Result<()> {
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.trainable.len() as u32).to_le_bytes())?;
+        w.write_all(&self.step.to_le_bytes())?;
+        for group in [&self.trainable, &self.m, &self.v] {
+            for t in group.iter() {
+                for x in &t.data {
+                    w.write_all(&x.to_le_bytes())?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Restore from a reader using `template` (an existing store or one
+    /// built from meta shapes) for the tensor geometry.
+    pub fn load(r: &mut impl Read, template: &ParamStore) -> Result<ParamStore> {
+        let mut buf4 = [0u8; 4];
+        r.read_exact(&mut buf4)?;
+        if u32::from_le_bytes(buf4) != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        r.read_exact(&mut buf4)?;
+        if u32::from_le_bytes(buf4) != VERSION {
+            bail!("unsupported checkpoint version");
+        }
+        r.read_exact(&mut buf4)?;
+        let k = u32::from_le_bytes(buf4) as usize;
+        if k != template.trainable.len() {
+            bail!("checkpoint has {k} tensors, expected {}", template.trainable.len());
+        }
+        r.read_exact(&mut buf4)?;
+        let step = i32::from_le_bytes(buf4);
+        let mut out = template.clone();
+        out.step = step;
+        for group in [&mut out.trainable, &mut out.m, &mut out.v] {
+            for t in group.iter_mut() {
+                for x in t.data.iter_mut() {
+                    r.read_exact(&mut buf4)?;
+                    *x = f32::from_le_bytes(buf4);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn save_file(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("creating {}", path.display()))?,
+        );
+        self.save(&mut f)
+    }
+
+    pub fn load_file(path: &Path, template: &ParamStore) -> Result<ParamStore> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?,
+        );
+        Self::load(&mut f, template)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> ParamStore {
+        let t = vec![
+            HostTensor { shape: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] },
+            HostTensor { shape: vec![3], data: vec![5.0, 6.0, 7.0] },
+        ];
+        let mut s = ParamStore::new(t);
+        s.step = 42;
+        s.m[0].data[1] = 0.5;
+        s.v[1].data[2] = 0.25;
+        s
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = store();
+        let mut buf = Vec::new();
+        s.save(&mut buf).unwrap();
+        assert_eq!(buf.len(), s.checkpoint_bytes());
+        let template = ParamStore::new(
+            s.trainable.iter().map(|t| HostTensor::zeros(&t.shape)).collect(),
+        );
+        let loaded = ParamStore::load(&mut buf.as_slice(), &template).unwrap();
+        assert_eq!(loaded, s);
+    }
+
+    #[test]
+    fn corrupt_magic_rejected() {
+        let s = store();
+        let mut buf = Vec::new();
+        s.save(&mut buf).unwrap();
+        buf[0] ^= 0xFF;
+        let template = store();
+        assert!(ParamStore::load(&mut buf.as_slice(), &template).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let s = store();
+        let mut buf = Vec::new();
+        s.save(&mut buf).unwrap();
+        buf.truncate(buf.len() - 3);
+        let template = store();
+        assert!(ParamStore::load(&mut buf.as_slice(), &template).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let s = store();
+        let dir = std::env::temp_dir()
+            .join(format!("spotfine_ckpt_{}", std::process::id()));
+        let path = dir.join("test.ckpt");
+        s.save_file(&path).unwrap();
+        let loaded = ParamStore::load_file(&path, &store()).unwrap();
+        assert_eq!(loaded, s);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn checkpoint_bytes_formula() {
+        let s = store();
+        // 7 elements × 3 groups × 4 bytes + 16 header
+        assert_eq!(s.checkpoint_bytes(), 16 + 21 * 4);
+    }
+}

@@ -1,0 +1,139 @@
+//! Data-parallel trainer: maps "n instances" from the scheduler into n
+//! gradient shards per optimizer step, averages the gradients (the AllReduce
+//! a real deployment would run over NCCL/RDMA — here executed shard-by-shard
+//! on the single-host PJRT client, which is the simulation substrate for
+//! the paper's multi-instance data parallelism), and applies AdamW via the
+//! AOT apply-step artifact.
+
+use anyhow::Result;
+
+use crate::runtime::executable::{HostTensor, TrainStepExec};
+use crate::train::data::Corpus;
+use crate::train::params::ParamStore;
+use crate::util::rng::Rng;
+
+/// Trainer configuration.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub data_seed: u64,
+    /// Corpus size in bytes.
+    pub corpus_bytes: usize,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig { data_seed: 1234, corpus_bytes: 1 << 16 }
+    }
+}
+
+/// Statistics from one optimizer step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepStats {
+    pub step: i32,
+    pub loss: f32,
+    /// Samples consumed (shards × batch_per_shard).
+    pub samples: usize,
+    pub shards: usize,
+}
+
+/// The training engine the coordinator drives.
+pub struct Trainer {
+    pub exec: TrainStepExec,
+    pub frozen: Vec<HostTensor>,
+    pub store: ParamStore,
+    corpus: Corpus,
+    rng: Rng,
+}
+
+impl Trainer {
+    /// Initialize params via the init artifact and build the corpus.
+    pub fn new(exec: TrainStepExec, cfg: TrainerConfig) -> Result<Self> {
+        let (frozen, trainable) = exec.init_params()?;
+        let store = ParamStore::new(trainable);
+        store.check_meta(&exec.bundle.meta)?;
+        let corpus = Corpus::synthetic(cfg.corpus_bytes, cfg.data_seed);
+        Ok(Trainer { exec, frozen, store, corpus, rng: Rng::new(cfg.data_seed) })
+    }
+
+    /// Restore training state (checkpoint recovery after preemption).
+    pub fn restore(&mut self, store: ParamStore) -> Result<()> {
+        store.check_meta(&self.exec.bundle.meta)?;
+        self.store = store;
+        Ok(())
+    }
+
+    pub fn meta(&self) -> &crate::runtime::artifact::ModelMeta {
+        &self.exec.bundle.meta
+    }
+
+    /// One data-parallel optimizer step over `shards` instances: each
+    /// shard draws its own micro-batch, gradients are averaged, and one
+    /// AdamW update is applied. Returns the mean shard loss.
+    pub fn step_parallel(&mut self, shards: usize) -> Result<StepStats> {
+        assert!(shards >= 1, "need at least one shard");
+        let meta = self.exec.bundle.meta.clone();
+        let mut acc: Option<Vec<HostTensor>> = None;
+        let mut loss_sum = 0.0f32;
+        for _ in 0..shards {
+            let batch = self.corpus.next_batch(
+                &mut self.rng,
+                meta.batch_per_shard,
+                meta.seq_len,
+            );
+            let out = self.exec.grad_step(
+                &self.frozen,
+                &self.store.trainable,
+                &batch.data,
+            )?;
+            loss_sum += out.loss;
+            match acc.as_mut() {
+                None => acc = Some(out.grads),
+                Some(acc) => {
+                    for (a, g) in acc.iter_mut().zip(&out.grads) {
+                        a.add_assign(g);
+                    }
+                }
+            }
+        }
+        let mut grads = acc.expect("shards >= 1");
+        if shards > 1 {
+            let inv = 1.0 / shards as f32;
+            for g in grads.iter_mut() {
+                g.scale(inv);
+            }
+        }
+        let step = self.store.step + 1;
+        let (t, m, v) = self.exec.apply_step(
+            &self.store.trainable,
+            &self.store.m,
+            &self.store.v,
+            &grads,
+            step,
+        )?;
+        self.store.trainable = t;
+        self.store.m = m;
+        self.store.v = v;
+        self.store.step = step;
+        Ok(StepStats {
+            step,
+            loss: loss_sum / shards as f32,
+            samples: shards * meta.batch_per_shard,
+            shards,
+        })
+    }
+
+    /// Measured samples/second for `steps` steps at a given shard count
+    /// (the Fig. 1 primitive).
+    pub fn measure_throughput(&mut self, shards: usize, steps: usize) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        let mut samples = 0usize;
+        for _ in 0..steps {
+            samples += self.step_parallel(shards)?.samples;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        Ok(samples as f64 / dt.max(1e-9))
+    }
+}
+
+// Integration tests for the trainer live in rust/tests/runtime_train.rs —
+// they need compiled artifacts, which `cargo test` may run without.

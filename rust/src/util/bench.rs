@@ -1,0 +1,126 @@
+//! Tiny wallclock benchmark harness (criterion is unavailable offline):
+//! warmup + timed iterations, reporting mean/min/p50/p95 per iteration.
+//! Used by every `rust/benches/*.rs` target (`harness = false`).
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of timing one closure.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+
+    /// Human-friendly single-line summary.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p95 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+        )
+    }
+}
+
+/// Format nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs and `iters` measured runs.
+/// `f` should return something observable to keep the optimizer honest;
+/// the return value is passed through `std::hint::black_box`.
+pub fn bench<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_ns: stats::mean(&samples),
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        p50_ns: stats::percentile(&samples, 50.0),
+        p95_ns: stats::percentile(&samples, 95.0),
+    }
+}
+
+/// Time a single execution (for expensive end-to-end benches).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Print a section header used by the bench binaries.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", 2, 50, || {
+            (0..100).map(|i| i * i).sum::<usize>()
+        });
+        assert_eq!(r.iters, 50);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.mean_ns * 1.001);
+        assert!(r.p50_ns <= r.p95_ns + 1e-9);
+        assert!(r.line().contains("noop-ish"));
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).ends_with("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, secs) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,91 @@
+//! CSV writing for figure data (`results/*.csv`) — each bench target
+//! regenerating a paper figure also persists its series here so plots
+//! can be rebuilt outside the harness.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// A CSV writer with a fixed header, creating parent directories.
+pub struct CsvWriter {
+    path: PathBuf,
+    ncols: usize,
+    buf: String,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut buf = String::new();
+        buf.push_str(&header.join(","));
+        buf.push('\n');
+        Ok(CsvWriter { path, ncols: header.len(), buf })
+    }
+
+    /// Append a row of already-stringified cells.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.ncols, "csv row width mismatch");
+        for (i, c) in cells.iter().enumerate() {
+            if i > 0 {
+                self.buf.push(',');
+            }
+            // quote cells containing commas/quotes
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                self.buf.push('"');
+                self.buf.push_str(&c.replace('"', "\"\""));
+                self.buf.push('"');
+            } else {
+                self.buf.push_str(c);
+            }
+        }
+        self.buf.push('\n');
+    }
+
+    /// Convenience: a row of f64s at 6 decimals.
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        let strs: Vec<String> =
+            cells.iter().map(|x| format!("{x:.6}")).collect();
+        self.row(&strs);
+    }
+
+    /// Flush to disk.
+    pub fn finish(self) -> std::io::Result<PathBuf> {
+        let mut f = std::fs::File::create(&self.path)?;
+        f.write_all(self.buf.as_bytes())?;
+        Ok(self.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("spotfine_csv_{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn writes_header_and_rows() {
+        let p = tmp("basic").join("a.csv");
+        let mut w = CsvWriter::create(&p, &["x", "y"]).unwrap();
+        w.row_f64(&[1.0, 2.0]);
+        w.row(&["a,b".to_string(), "q\"q".to_string()]);
+        let path = w.finish().unwrap();
+        let s = std::fs::read_to_string(path).unwrap();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[0], "x,y");
+        assert!(lines[1].starts_with("1.000000"));
+        assert_eq!(lines[2], "\"a,b\",\"q\"\"q\"");
+        std::fs::remove_dir_all(tmp("basic")).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let p = tmp("width").join("b.csv");
+        let mut w = CsvWriter::create(p, &["x", "y"]).unwrap();
+        w.row(&["one".to_string()]);
+    }
+}

@@ -1,0 +1,11 @@
+//! Small self-contained utilities: PRNG, distributions, statistics,
+//! property-testing and benchmarking harnesses, table/CSV reporting.
+//! This crate builds fully offline, so these replace `rand`, `proptest`,
+//! and `criterion`.
+
+pub mod bench;
+pub mod csvio;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

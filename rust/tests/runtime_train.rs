@@ -1,0 +1,141 @@
+//! Integration: PJRT runtime + trainer against the real AOT artifacts.
+//! Requires `make artifacts` (skips gracefully when absent so plain
+//! `cargo test` works on a fresh checkout).
+
+use std::path::PathBuf;
+
+use spotfine::runtime::artifact::ArtifactBundle;
+use spotfine::runtime::client::RuntimeClient;
+use spotfine::runtime::executable::TrainStepExec;
+use spotfine::train::params::ParamStore;
+use spotfine::train::trainer::{Trainer, TrainerConfig};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn skip() -> bool {
+    if !ArtifactBundle::present(&artifacts_dir()) {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
+fn make_trainer() -> Trainer {
+    let client = RuntimeClient::cpu().expect("pjrt cpu client");
+    let bundle = ArtifactBundle::load(&artifacts_dir()).expect("bundle");
+    let exec = TrainStepExec::compile(&client, bundle).expect("compile");
+    Trainer::new(exec, TrainerConfig::default()).expect("trainer")
+}
+
+#[test]
+fn artifacts_compile_and_init() {
+    if skip() {
+        return;
+    }
+    let trainer = make_trainer();
+    let meta = trainer.meta();
+    assert!(meta.param_count > 0);
+    assert_eq!(trainer.frozen.len(), meta.frozen.len());
+    assert_eq!(trainer.store.trainable.len(), meta.trainable.len());
+    // LoRA B tensors must start at zero (standard init).
+    for (t, spec) in trainer.store.trainable.iter().zip(&meta.trainable) {
+        if spec.name.ends_with("_b") {
+            assert!(t.data.iter().all(|&x| x == 0.0), "{} not zero", spec.name);
+        }
+        assert!(t.data.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[test]
+fn single_step_produces_finite_loss_and_grads() {
+    if skip() {
+        return;
+    }
+    let mut trainer = make_trainer();
+    let stats = trainer.step_parallel(1).expect("step");
+    assert_eq!(stats.step, 1);
+    assert!(stats.loss.is_finite());
+    // byte-level vocab 256 → initial loss near ln(256) ≈ 5.5
+    assert!(
+        stats.loss > 2.0 && stats.loss < 8.0,
+        "initial loss {} implausible",
+        stats.loss
+    );
+}
+
+#[test]
+fn loss_decreases_over_training() {
+    if skip() {
+        return;
+    }
+    let mut trainer = make_trainer();
+    let mut losses = Vec::new();
+    for _ in 0..30 {
+        losses.push(trainer.step_parallel(1).expect("step").loss);
+    }
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[25..].iter().sum::<f32>() / 5.0;
+    assert!(
+        tail < head - 0.2,
+        "loss did not decrease: head {head:.3} tail {tail:.3} ({losses:?})"
+    );
+}
+
+#[test]
+fn data_parallel_grads_average() {
+    if skip() {
+        return;
+    }
+    // A 4-shard step must advance exactly one optimizer step and keep
+    // the state finite; its loss should be close to the 1-shard loss at
+    // init (same distribution, more samples).
+    let mut t4 = make_trainer();
+    let s4 = t4.step_parallel(4).expect("step");
+    assert_eq!(s4.step, 1);
+    assert_eq!(s4.shards, 4);
+    assert_eq!(s4.samples, 4 * t4.meta().batch_per_shard);
+    let mut t1 = make_trainer();
+    let s1 = t1.step_parallel(1).expect("step");
+    assert!((s4.loss - s1.loss).abs() < 1.0, "{} vs {}", s4.loss, s1.loss);
+}
+
+#[test]
+fn checkpoint_restore_resumes_identically() {
+    if skip() {
+        return;
+    }
+    let mut a = make_trainer();
+    for _ in 0..3 {
+        a.step_parallel(2).unwrap();
+    }
+    // snapshot, run 2 more steps → L_a
+    let snap = a.store.clone();
+    let mut buf = Vec::new();
+    snap.save(&mut buf).unwrap();
+    let after_a: Vec<f32> =
+        (0..2).map(|_| a.step_parallel(2).unwrap().loss).collect();
+
+    // restore into a *fresh* trainer with the same data seed and replayed
+    // RNG position: reconstruct by re-running 3 steps then restoring.
+    let mut b = make_trainer();
+    for _ in 0..3 {
+        b.step_parallel(2).unwrap();
+    }
+    let restored = ParamStore::load(&mut buf.as_slice(), &b.store).unwrap();
+    b.restore(restored).unwrap();
+    let after_b: Vec<f32> =
+        (0..2).map(|_| b.step_parallel(2).unwrap().loss).collect();
+    assert_eq!(after_a, after_b, "restore is not bit-identical");
+}
+
+#[test]
+fn throughput_measurement_runs() {
+    if skip() {
+        return;
+    }
+    let mut t = make_trainer();
+    let sps = t.measure_throughput(2, 2).expect("throughput");
+    assert!(sps > 0.0);
+}

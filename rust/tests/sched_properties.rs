@@ -1,0 +1,283 @@
+//! Property-based tests (via the in-crate `util::prop` harness) of the
+//! scheduling core's invariants: allocation feasibility (Eq. 5b–5e),
+//! episode accounting identities, solver consistency, and value-function
+//! monotonicity — each over hundreds of randomized cases.
+
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::generator::{GeneratorConfig, TraceGenerator};
+use spotfine::market::trace::SpotTrace;
+use spotfine::prop_assert;
+use spotfine::sched::horizon::{evaluate, solve_dp, solve_greedy, HorizonProblem, TerminalKind};
+use spotfine::sched::job::Job;
+use spotfine::sched::offline::solve_offline;
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{paper_pool, PolicyEnv, PolicySpec, PredictorKind};
+use spotfine::sched::simulate::run_episode;
+use spotfine::sched::throughput::{ReconfigModel, ThroughputModel};
+use spotfine::util::prop::{check, PropConfig};
+use spotfine::util::rng::Rng;
+
+fn random_job(rng: &mut Rng) -> Job {
+    let workload = rng.uniform(20.0, 120.0);
+    let deadline = rng.int_range(4, 14) as usize;
+    let n_min = rng.int_range(1, 4) as u32;
+    let n_max = rng.int_range(8, 16) as u32;
+    Job {
+        workload,
+        deadline,
+        n_min,
+        n_max,
+        value: workload * rng.uniform(1.2, 2.0),
+        gamma: rng.uniform(1.2, 2.0),
+    }
+}
+
+fn random_trace(rng: &mut Rng, slots: usize) -> SpotTrace {
+    let price: Vec<f64> = (0..slots).map(|_| rng.uniform(0.05, 0.99)).collect();
+    let avail: Vec<u32> =
+        (0..slots).map(|_| rng.int_range(0, 16) as u32).collect();
+    SpotTrace::new(price, avail)
+}
+
+fn free_models() -> Models {
+    Models {
+        throughput: ThroughputModel::unit(),
+        reconfig: ReconfigModel::free(),
+        on_demand_price: 1.0,
+    }
+}
+
+fn random_spec(rng: &mut Rng) -> PolicySpec {
+    let pool = paper_pool();
+    match rng.index(8) {
+        0 => PolicySpec::OdOnly,
+        1 => PolicySpec::Msu,
+        2 => PolicySpec::UniformProgress,
+        _ => pool[rng.index(pool.len())],
+    }
+}
+
+/// Every policy, on every market, produces feasible allocations and the
+/// episode satisfies the accounting identities.
+#[test]
+fn prop_episode_feasibility_and_accounting() {
+    check(
+        "episode-feasibility",
+        PropConfig { cases: 300, seed: 0xFEED },
+        |rng| {
+            let job = random_job(rng);
+            let trace = random_trace(rng, job.deadline + 4);
+            let models = Models::paper_default();
+            let spec = random_spec(rng);
+            let env = PolicyEnv {
+                predictor: PredictorKind::Noisy(NoiseSpec::mag_dep_uniform(
+                    rng.uniform(0.0, 1.0),
+                )),
+                trace: trace.clone(),
+                seed: rng.next_u64(),
+            };
+            let mut p = spec.build(&env);
+            let r = run_episode(&job, &trace, &models, p.as_mut());
+
+            prop_assert!(
+                (r.utility - (r.value - r.cost)).abs() < 1e-9,
+                "utility identity broken for {}",
+                spec.label()
+            );
+            prop_assert!(r.value >= 0.0 && r.value <= job.value + 1e-9, "value out of range");
+            prop_assert!(r.cost >= 0.0, "negative cost");
+            prop_assert!(
+                r.decisions.len() <= job.deadline,
+                "more decisions than deadline slots"
+            );
+            // Recompute cost of the pre-deadline decisions.
+            let mut pre_cost = 0.0;
+            for (t, a) in r.decisions.iter().enumerate() {
+                prop_assert!(
+                    a.spot <= trace.avail_at(t),
+                    "{}: spot {} > avail {} at slot {t}",
+                    spec.label(),
+                    a.spot,
+                    trace.avail_at(t)
+                );
+                let total = a.total();
+                prop_assert!(
+                    total == 0 || (job.n_min..=job.n_max).contains(&total),
+                    "{}: total {total} violates [N^min,N^max]",
+                    spec.label()
+                );
+                pre_cost +=
+                    a.on_demand as f64 * 1.0 + a.spot as f64 * trace.price_at(t);
+            }
+            prop_assert!(
+                r.cost >= pre_cost - 1e-9,
+                "episode cost below recomputed pre-deadline cost"
+            );
+            if r.on_time {
+                prop_assert!(
+                    (r.cost - pre_cost).abs() < 1e-9,
+                    "on-time jobs must incur no termination cost"
+                );
+                prop_assert!(
+                    (r.value - job.value).abs() < 1e-9,
+                    "on-time value must be v"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Greedy and exact-DP window solvers agree on the paper's linear,
+/// reconfiguration-free setting (where the greedy is provably exact).
+#[test]
+fn prop_greedy_matches_dp_on_linear_model() {
+    check(
+        "greedy-vs-dp",
+        PropConfig { cases: 120, seed: 0xD00D },
+        |rng| {
+            let mut job = random_job(rng);
+            job.n_min = 1; // N^min repair is heuristic; exactness claim is for n_min=1
+            let models = free_models();
+            let len = rng.int_range(1, 6) as usize;
+            let trace = random_trace(rng, len);
+            let prices: Vec<f64> = (0..len).map(|i| trace.price_at(i)).collect();
+            let avail: Vec<u32> = (0..len).map(|i| trace.avail_at(i)).collect();
+            let prob = HorizonProblem {
+                job: &job,
+                models: &models,
+                start_slot: 0,
+                z0: rng.uniform(0.0, job.workload * 0.5),
+                prices: &prices,
+                avail: &avail,
+                n_prev: 0,
+                terminal_kind: TerminalKind::Exact,
+            };
+            let g = solve_greedy(&prob);
+            let d = solve_dp(&prob, 0.25);
+            let ug = evaluate(&prob, &g.alloc);
+            let ud = evaluate(&prob, &d.alloc);
+            prop_assert!(
+                ug >= ud - 0.26, // one grid cell of slack
+                "greedy {ug} materially below DP {ud} (greedy must be ~exact here)"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// The offline DP dominates every online policy (it is OPT).
+#[test]
+fn prop_offline_dominates_online() {
+    check(
+        "offline-dominates",
+        PropConfig { cases: 60, seed: 0xBEEF },
+        |rng| {
+            let mut job = random_job(rng);
+            job.n_min = 1;
+            let models = free_models();
+            let trace = random_trace(rng, job.deadline + 2);
+            let opt = solve_offline(&job, &trace, &models, 0.1).utility;
+            let spec = random_spec(rng);
+            let env = PolicyEnv {
+                predictor: PredictorKind::Oracle,
+                trace: trace.clone(),
+                seed: rng.next_u64(),
+            };
+            let mut p = spec.build(&env);
+            let r = run_episode(&job, &trace, &models, p.as_mut());
+            prop_assert!(
+                opt >= r.utility - 0.15, // grid slack
+                "OPT {} < {} {}",
+                opt,
+                spec.label(),
+                r.utility
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Terminal value Ṽ is monotone non-decreasing in progress for random
+/// jobs and models.
+#[test]
+fn prop_terminal_value_monotone() {
+    check(
+        "terminal-monotone",
+        PropConfig { cases: 200, seed: 0xCAFE },
+        |rng| {
+            let job = random_job(rng);
+            let tp = ThroughputModel::new(rng.uniform(0.5, 2.0), rng.uniform(0.0, 1.0));
+            let mu = rng.uniform(0.5, 1.0);
+            let p_o = rng.uniform(0.5, 2.0);
+            let end = rng.int_range(1, job.deadline as i64) as usize;
+            let mut prev = f64::NEG_INFINITY;
+            let steps = 40;
+            for i in 0..=steps {
+                let z = job.workload * i as f64 / steps as f64;
+                let v = job.terminal_value(z, end, &tp, mu, p_o);
+                prop_assert!(
+                    v >= prev - 1e-9,
+                    "Ṽ not monotone at z={z} (prev {prev}, now {v})"
+                );
+                prev = v;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Generated market traces always satisfy the calibration envelope.
+#[test]
+fn prop_generator_bounds() {
+    check(
+        "generator-bounds",
+        PropConfig { cases: 60, seed: 0xAB },
+        |rng| {
+            let cfg = GeneratorConfig {
+                avail_scale: rng.uniform(0.2, 2.0),
+                volatility: rng.uniform(0.2, 2.5),
+                slots: 96,
+                ..GeneratorConfig::default()
+            };
+            let cap = cfg.avail_cap;
+            let t = TraceGenerator::new(cfg).generate(rng.next_u64());
+            for i in 0..t.len() {
+                let p = t.price_at(i);
+                prop_assert!(p > 0.0 && p < 1.0, "price {p} out of (0,1)");
+                prop_assert!(t.avail_at(i) <= cap, "avail above cap");
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Episodes are deterministic given identical inputs (the reproducibility
+/// contract every figure relies on).
+#[test]
+fn prop_episode_deterministic() {
+    check(
+        "episode-deterministic",
+        PropConfig { cases: 80, seed: 0x5EED },
+        |rng| {
+            let job = random_job(rng);
+            let trace = random_trace(rng, job.deadline + 2);
+            let models = Models::paper_default();
+            let spec = random_spec(rng);
+            let seed = rng.next_u64();
+            let run = || {
+                let env = PolicyEnv {
+                    predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_heavy(0.3)),
+                    trace: trace.clone(),
+                    seed,
+                };
+                let mut p = spec.build(&env);
+                run_episode(&job, &trace, &models, p.as_mut())
+            };
+            let a = run();
+            let b = run();
+            prop_assert!(a == b, "episode not deterministic for {}", spec.label());
+            Ok(())
+        },
+    );
+}

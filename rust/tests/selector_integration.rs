@@ -1,0 +1,152 @@
+//! Integration tests for Algorithm 2 (online policy selection) at the
+//! system level: regret bounds across pools and seeds, adaptation to
+//! regime changes, and selection quality vs prediction noise.
+
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::generator::TraceGenerator;
+use spotfine::sched::job::JobGenerator;
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{
+    ahanp_pool, ahap_pool_fixed_v, paper_pool, PolicySpec, PredictorKind,
+};
+use spotfine::sched::selector::{run_selection, SelectionConfig};
+use spotfine::util::stats;
+
+fn setup() -> (JobGenerator, Models, TraceGenerator) {
+    (
+        JobGenerator::default(),
+        Models::paper_default(),
+        TraceGenerator::calibrated(),
+    )
+}
+
+#[test]
+fn regret_bound_holds_across_pools_and_seeds() {
+    let (jobs, models, gen) = setup();
+    for (pool, k_jobs) in [
+        (ahanp_pool(), 120usize),
+        (ahap_pool_fixed_v(1), 100),
+    ] {
+        for seed in [1u64, 2, 3] {
+            let out = run_selection(
+                &pool,
+                &jobs,
+                &models,
+                &gen,
+                |_| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.3)),
+                &SelectionConfig { k_jobs, seed, snapshot_every: 0 },
+            );
+            let regret = *out.regret.last().unwrap();
+            assert!(
+                regret <= out.regret_bound() + 1e-9,
+                "pool {} seed {seed}: regret {regret} > bound {}",
+                pool.len(),
+                out.regret_bound()
+            );
+        }
+    }
+}
+
+#[test]
+fn selector_prefers_prediction_when_accurate() {
+    // Small pool: one good AHAP config vs OD-Only. With near-perfect
+    // predictions the learned weight must concentrate on AHAP.
+    let (jobs, models, gen) = setup();
+    let pool = vec![
+        PolicySpec::OdOnly,
+        PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+    ];
+    let out = run_selection(
+        &pool,
+        &jobs,
+        &models,
+        &gen,
+        |_| PredictorKind::Noisy(NoiseSpec::mag_dep_uniform(0.05)),
+        &SelectionConfig { k_jobs: 150, seed: 5, snapshot_every: 0 },
+    );
+    assert_eq!(out.converged_to, 1, "weights {:?}", out.final_weights);
+    assert!(out.final_weights[1] > 0.6);
+}
+
+#[test]
+fn weights_shift_after_regime_change() {
+    // Phase 1: accurate predictions; phase 2: catastrophic ones. The
+    // top-weighted policy must change (the Fig. 10 mechanism).
+    let (jobs, models, gen) = setup();
+    let pool = paper_pool();
+    let phase_len = 200;
+    let out = run_selection(
+        &pool,
+        &jobs,
+        &models,
+        &gen,
+        |k| {
+            if k < phase_len {
+                PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.05))
+            } else {
+                PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(3.0))
+            }
+        },
+        &SelectionConfig { k_jobs: 2 * phase_len, seed: 9, snapshot_every: phase_len },
+    );
+    assert_eq!(out.snapshots.len(), 2);
+    let top = |w: &[f64]| {
+        w.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    };
+    let w1 = top(&out.snapshots[0].1);
+    let w2 = top(&out.snapshots[1].1);
+    // Under catastrophic noise the winner should not be the same
+    // aggressive predictive config that won the clean phase.
+    assert_ne!(
+        pool[w1].label(),
+        pool[w2].label(),
+        "regime change did not shift the learned best policy"
+    );
+}
+
+#[test]
+fn realized_utility_tracks_best_fixed_policy() {
+    let (jobs, models, gen) = setup();
+    let pool = paper_pool();
+    let k_jobs = 250;
+    let out = run_selection(
+        &pool,
+        &jobs,
+        &models,
+        &gen,
+        |_| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+        &SelectionConfig { k_jobs, seed: 17, snapshot_every: 0 },
+    );
+    let best_mean = out.per_policy_cum[out.best_fixed] / k_jobs as f64;
+    let expected_mean = stats::mean(&out.expected);
+    // The average regret per job must be small (sublinear / K).
+    assert!(
+        best_mean - expected_mean <= out.regret_bound() / k_jobs as f64 + 1e-9,
+        "per-job regret too large: best {best_mean} vs learned {expected_mean}"
+    );
+}
+
+#[test]
+fn arima_predictor_is_usable_in_selection() {
+    // Smoke: the honest ARIMA path (no oracle) runs through selection.
+    let (jobs, models, gen) = setup();
+    let pool = vec![
+        PolicySpec::OdOnly,
+        PolicySpec::Ahap { omega: 2, v: 1, sigma: 0.7 },
+        PolicySpec::Ahanp { sigma: 0.5 },
+    ];
+    let out = run_selection(
+        &pool,
+        &jobs,
+        &models,
+        &gen,
+        |_| PredictorKind::Arima,
+        &SelectionConfig { k_jobs: 20, seed: 3, snapshot_every: 0 },
+    );
+    assert_eq!(out.final_weights.len(), 3);
+    assert!(out.realized.iter().all(|u| (0.0..=1.0).contains(u)));
+}
