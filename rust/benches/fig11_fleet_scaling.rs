@@ -1,0 +1,116 @@
+//! Fig. 11 (ours) — fleet scaling: wall-clock of the multi-job,
+//! multi-region fleet engine as the fleet grows (jobs × regions), and
+//! the speedup of the `std::thread::scope` parallel sweep engine over
+//! sequential execution at 1/2/4/8 threads on a 64-job fleet.
+//!
+//! Acceptance target: >2× sweep speedup at ≥4 threads on a 64-job
+//! fleet (on a host with ≥4 cores). Parallel results are also checked
+//! identical to sequential — the sweep is deterministic by design.
+
+use spotfine::fleet::{available_threads, run_fleet_sweep, FleetScenario};
+use spotfine::util::bench::{section, time_once};
+use spotfine::util::csvio::CsvWriter;
+use spotfine::util::table::{f, Table};
+
+fn main() {
+    println!("=== Fig. 11: fleet scaling (jobs x regions x threads) ===");
+    println!("host parallelism: {} threads\n", available_threads());
+
+    let mut csv = CsvWriter::create(
+        "results/fig11_fleet_scaling.csv",
+        &["section", "jobs", "regions", "threads", "seconds", "speedup"],
+    )
+    .expect("csv");
+
+    // --- Engine scaling: one fleet, growing jobs × regions. -----------
+    section("engine scaling (single fleet, sequential)");
+    let mut t = Table::new(&[
+        "jobs",
+        "regions",
+        "seconds",
+        "job-slots/s",
+        "mean utility",
+        "on-time",
+    ]);
+    for &jobs in &[8usize, 16, 32, 64] {
+        for &regions in &[1usize, 2, 4] {
+            let sc = FleetScenario::new(jobs, regions, 42).with_stagger(2);
+            let (r, secs) = time_once(|| sc.run());
+            let job_slots: usize =
+                r.jobs.iter().map(|j| j.episode.decisions.len()).sum();
+            t.row(&[
+                format!("{jobs}"),
+                format!("{regions}"),
+                format!("{secs:.3}"),
+                format!("{:.0}", job_slots as f64 / secs.max(1e-9)),
+                f(r.mean_utility(), 2),
+                format!("{:.0}%", 100.0 * r.on_time_rate),
+            ]);
+            csv.row(&[
+                "engine".into(),
+                format!("{jobs}"),
+                format!("{regions}"),
+                "1".into(),
+                format!("{secs:.6}"),
+                "1.0".into(),
+            ]);
+        }
+    }
+    t.print();
+
+    // --- Parallel sweep: 64-job fleets fanned across threads. ---------
+    section("parallel sweep speedup (64-job, 4-region fleets x 16 seeds)");
+    let scenarios: Vec<FleetScenario> = (0..16)
+        .map(|s| FleetScenario::new(64, 4, 1000 + s).with_stagger(2))
+        .collect();
+
+    let (baseline, base_secs) = time_once(|| run_fleet_sweep(&scenarios, 1));
+    let mut t = Table::new(&["threads", "seconds", "speedup", "identical"]);
+    t.row(&[
+        "1".into(),
+        format!("{base_secs:.3}"),
+        "1.00x".into(),
+        "-".into(),
+    ]);
+    csv.row(&[
+        "sweep".into(),
+        "64".into(),
+        "4".into(),
+        "1".into(),
+        format!("{base_secs:.6}"),
+        "1.0".into(),
+    ]);
+    for &threads in &[2usize, 4, 8] {
+        let (r, secs) = time_once(|| run_fleet_sweep(&scenarios, threads));
+        let speedup = base_secs / secs.max(1e-9);
+        let identical = r == baseline;
+        assert!(
+            identical,
+            "parallel sweep at {threads} threads diverged from sequential"
+        );
+        t.row(&[
+            format!("{threads}"),
+            format!("{secs:.3}"),
+            format!("{speedup:.2}x"),
+            "yes".into(),
+        ]);
+        csv.row(&[
+            "sweep".into(),
+            "64".into(),
+            "4".into(),
+            format!("{threads}"),
+            format!("{secs:.6}"),
+            format!("{speedup:.3}"),
+        ]);
+        if threads >= 4 && available_threads() >= 4 {
+            println!(
+                "  -> {threads}-thread speedup {speedup:.2}x \
+                 (target >2x on a 64-job fleet)"
+            );
+        }
+    }
+    t.print();
+
+    let path = csv.finish().expect("write csv");
+    println!("\nwrote {}", path.display());
+}

@@ -96,8 +96,8 @@ impl Leader {
         trainer: &mut Trainer,
     ) -> Result<RunOutcome> {
         policy.reset();
-        let mut market = SpotMarket::new(trace.clone())
-            .with_on_demand_price(self.models.on_demand_price);
+        let mut market =
+            SpotMarket::new(trace).with_on_demand_price(self.models.on_demand_price);
         let mut log = EventLog::new(self.cfg.verbose);
         let mut metrics = Metrics::new();
         let mut pool = InstancePool::new();

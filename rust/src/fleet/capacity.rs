@@ -1,0 +1,316 @@
+//! Shared-capacity arbitration: all jobs in a region submit their
+//! per-slot spot requests and the arbiter grants under the regional
+//! availability cap — fair-share water-filling within a priority tier,
+//! higher tiers served first, with cascading preemption when
+//! availability drops below what the fleet collectively holds.
+//!
+//! The contract the fleet engine relies on:
+//!
+//! - **capacity conservation** — `Σ granted ≤ avail` every slot;
+//! - **single-tenant degeneracy** — with one requester, `granted =
+//!   min(want, avail)` and `preempted = held − min(held, avail)`,
+//!   exactly the per-job [`crate::market::market::SpotMarket`] semantics
+//!   (this is what makes a 1-job fleet reproduce `run_episode`);
+//! - **determinism** — grants depend only on `(avail, requests)`, with
+//!   ties broken by job id.
+
+/// Scheduling priority tier; higher tiers are granted (and keep their
+/// instances) first. Within a tier capacity is fair-shared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Tier {
+    Low,
+    Normal,
+    High,
+}
+
+impl Tier {
+    /// Round-robin tier assignment for synthetic fleets.
+    pub fn cycle(i: usize) -> Tier {
+        match i % 3 {
+            0 => Tier::High,
+            1 => Tier::Normal,
+            _ => Tier::Low,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Tier::Low => "low",
+            Tier::Normal => "normal",
+            Tier::High => "high",
+        }
+    }
+}
+
+/// One job's spot demand for the current slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpotRequest {
+    /// Fleet-wide job index (tie-break key; must be unique per call).
+    pub job: usize,
+    pub tier: Tier,
+    /// Spot instances the job's policy wants this slot.
+    pub want: u32,
+    /// Spot instances the job held at the end of the previous slot
+    /// (for forced-preemption accounting).
+    pub held: u32,
+}
+
+/// The arbiter's answer for one job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpotGrant {
+    pub job: usize,
+    /// Spot instances granted this slot (≤ want, Σ ≤ avail).
+    pub granted: u32,
+    /// Held instances forcibly lost at slot entry — the region (or
+    /// higher-priority demand) can no longer support them. Voluntary
+    /// scale-downs are not counted.
+    pub preempted: u32,
+}
+
+/// Water-fill `cap` units across `requests` (already paired with their
+/// demands): tiers from high to low; within a tier, one unit per job per
+/// round in ascending job-id order until demands or capacity run out.
+fn water_fill(cap: u32, requests: &[SpotRequest], demands: &[u32]) -> Vec<u32> {
+    debug_assert_eq!(requests.len(), demands.len());
+    let mut out = vec![0u32; requests.len()];
+    let mut left = cap;
+
+    let mut tiers: Vec<Tier> = requests.iter().map(|r| r.tier).collect();
+    tiers.sort();
+    tiers.dedup();
+
+    for tier in tiers.into_iter().rev() {
+        if left == 0 {
+            break;
+        }
+        let mut members: Vec<usize> = (0..requests.len())
+            .filter(|&i| requests[i].tier == tier)
+            .collect();
+        members.sort_by_key(|&i| requests[i].job);
+        loop {
+            let mut progressed = false;
+            for &i in &members {
+                if left == 0 {
+                    break;
+                }
+                if out[i] < demands[i] {
+                    out[i] += 1;
+                    left -= 1;
+                    progressed = true;
+                }
+            }
+            if !progressed || left == 0 {
+                break;
+            }
+        }
+    }
+    out
+}
+
+/// Arbitrate one region-slot.
+///
+/// Each job stakes a *claim* of `max(held, want)` — defending what it
+/// already runs and bidding for what it wants — and claims are
+/// water-filled under the cap (tiers first, fair-share within). From a
+/// job's filled claim `fill`:
+///
+/// - `granted = min(fill, want)` — never above the request;
+/// - `kept    = min(fill, held)` — instances that survive the slot;
+///   `preempted = held − kept` — a drop is forced exactly when the
+///   job's share (capacity minus higher-priority and fair-share claims)
+///   can no longer cover it, whether the cause is an availability
+///   collapse or a higher tier's demand displacing a holder;
+/// - capacity a job claimed for retention but did not request again is
+///   redistributed to still-hungry requesters in a second fill.
+///
+/// With a single requester this reduces *exactly* to the per-job
+/// market: `granted = min(want, avail)`, `preempted = held − min(held,
+/// avail)` — in every case, including a voluntary scale-down during an
+/// availability drop.
+pub fn arbitrate(avail: u32, requests: &[SpotRequest]) -> Vec<SpotGrant> {
+    let claims: Vec<u32> =
+        requests.iter().map(|r| r.held.max(r.want)).collect();
+    let fill = water_fill(avail, requests, &claims);
+
+    let mut granted: Vec<u32> = requests
+        .iter()
+        .zip(&fill)
+        .map(|(r, &f)| f.min(r.want))
+        .collect();
+    // Redistribute capacity held-but-not-rewanted to unmet requests.
+    let leftover = avail - granted.iter().sum::<u32>();
+    if leftover > 0 {
+        let residual: Vec<u32> = requests
+            .iter()
+            .zip(&granted)
+            .map(|(r, &g)| r.want - g)
+            .collect();
+        let extra = water_fill(leftover, requests, &residual);
+        for (g, e) in granted.iter_mut().zip(&extra) {
+            *g += e;
+        }
+    }
+
+    requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| SpotGrant {
+            job: r.job,
+            granted: granted[i],
+            preempted: r.held - fill[i].min(r.held),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(job: usize, tier: Tier, want: u32, held: u32) -> SpotRequest {
+        SpotRequest { job, tier, want, held }
+    }
+
+    #[test]
+    fn single_tenant_matches_market_semantics() {
+        // granted = min(want, avail); preempted = held - min(held, avail)
+        let g = arbitrate(4, &[req(0, Tier::Normal, 10, 7)]);
+        assert_eq!(g[0].granted, 4);
+        assert_eq!(g[0].preempted, 3);
+        let g = arbitrate(9, &[req(0, Tier::Normal, 2, 7)]);
+        assert_eq!(g[0].granted, 2);
+        assert_eq!(g[0].preempted, 0); // voluntary scale-down
+    }
+
+    #[test]
+    fn conserves_capacity() {
+        let rs = [
+            req(0, Tier::High, 6, 0),
+            req(1, Tier::Normal, 6, 0),
+            req(2, Tier::Low, 6, 0),
+        ];
+        for avail in 0..=18 {
+            let total: u32 =
+                arbitrate(avail, &rs).iter().map(|g| g.granted).sum();
+            assert!(total <= avail);
+            assert_eq!(total, avail.min(18));
+        }
+    }
+
+    #[test]
+    fn higher_tier_served_first() {
+        let g = arbitrate(
+            5,
+            &[req(0, Tier::Low, 4, 0), req(1, Tier::High, 4, 0)],
+        );
+        assert_eq!(g[1].granted, 4);
+        assert_eq!(g[0].granted, 1);
+    }
+
+    #[test]
+    fn fair_share_within_tier() {
+        let g = arbitrate(
+            5,
+            &[req(0, Tier::Normal, 5, 0), req(1, Tier::Normal, 5, 0)],
+        );
+        // water-fill: 3/2 split, extra unit to the lower job id.
+        assert_eq!(g[0].granted, 3);
+        assert_eq!(g[1].granted, 2);
+    }
+
+    #[test]
+    fn unneeded_capacity_flows_down() {
+        let g = arbitrate(
+            8,
+            &[req(0, Tier::High, 2, 0), req(1, Tier::Low, 10, 0)],
+        );
+        assert_eq!(g[0].granted, 2);
+        assert_eq!(g[1].granted, 6);
+    }
+
+    #[test]
+    fn cascading_preemption_hits_low_tier_first() {
+        // Fleet collectively holds 10, availability collapses to 4:
+        // the high-tier job keeps all 4, everyone else is preempted.
+        let g = arbitrate(
+            4,
+            &[
+                req(0, Tier::Low, 3, 3),
+                req(1, Tier::High, 4, 4),
+                req(2, Tier::Normal, 3, 3),
+            ],
+        );
+        assert_eq!(g[1].preempted, 0);
+        assert_eq!(g[2].preempted, 3);
+        assert_eq!(g[0].preempted, 3);
+        let kept: u32 = [3u32, 4, 3]
+            .iter()
+            .zip(&g)
+            .map(|(h, x)| h - x.preempted)
+            .sum();
+        assert_eq!(kept, 4); // exactly the surviving capacity
+    }
+
+    #[test]
+    fn deterministic_and_order_independent_output_mapping() {
+        let rs = [
+            req(2, Tier::Normal, 4, 1),
+            req(0, Tier::Normal, 4, 1),
+            req(1, Tier::High, 4, 1),
+        ];
+        let a = arbitrate(6, &rs);
+        let b = arbitrate(6, &rs);
+        assert_eq!(a, b);
+        // grants come back positionally aligned with the input slice
+        assert_eq!(a[0].job, 2);
+        assert_eq!(a[1].job, 0);
+        assert_eq!(a[2].job, 1);
+        // high tier fully served, remainder fair-shared by job id
+        assert_eq!(a[2].granted, 4);
+        assert_eq!(a[1].granted, 1);
+        assert_eq!(a[0].granted, 1);
+    }
+
+    #[test]
+    fn high_tier_demand_displacing_a_holder_counts_as_preemption() {
+        // Steady avail=4: a low-tier job holds all 4; a high-tier job
+        // holding nothing demands 4. The holder is forcibly stripped —
+        // that is a preemption even though availability never dropped.
+        let g = arbitrate(
+            4,
+            &[req(0, Tier::Low, 4, 4), req(1, Tier::High, 4, 0)],
+        );
+        assert_eq!(g[1].granted, 4);
+        assert_eq!(g[0].granted, 0);
+        assert_eq!(g[0].preempted, 4);
+        assert_eq!(g[1].preempted, 0);
+    }
+
+    #[test]
+    fn retention_claims_do_not_strand_capacity() {
+        // A scales down voluntarily (held 8 → want 2) while B wants 10
+        // with avail 10: B must end up with 8, not blocked by A's
+        // retention claim.
+        let g = arbitrate(
+            10,
+            &[
+                req(0, Tier::Normal, 2, 8),
+                req(1, Tier::Normal, 10, 0),
+            ],
+        );
+        assert_eq!(g[0].granted, 2);
+        assert_eq!(g[1].granted, 8);
+        let total: u32 = g.iter().map(|x| x.granted).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn zero_availability_preempts_everything_grants_nothing() {
+        let g = arbitrate(
+            0,
+            &[req(0, Tier::High, 5, 2), req(1, Tier::Low, 5, 3)],
+        );
+        assert!(g.iter().all(|x| x.granted == 0));
+        assert_eq!(g[0].preempted, 2);
+        assert_eq!(g[1].preempted, 3);
+    }
+}

@@ -1,0 +1,602 @@
+//! The fleet engine: many concurrent jobs, each driven by its own
+//! [`Policy`], stepped slot-by-slot across multiple regional spot
+//! markets with *shared* capacity. Jobs in a region compete through the
+//! capacity arbiter instead of each seeing a private market; a job that
+//! starves long enough may migrate to a better region (paying the
+//! migration model).
+//!
+//! The load-bearing invariant, enforced by `tests/fleet_integration.rs`
+//! across the whole 112-policy pool: a fleet of **one job in one
+//! region** produces an [`EpisodeResult`] bit-for-bit identical to
+//! [`run_episode`]. Every accounting expression below mirrors the
+//! episode simulator's exactly (same operations, same order), and the
+//! end-of-horizon settlement is the shared
+//! [`crate::sched::simulate::settle_episode`].
+
+use crate::fleet::capacity::{arbitrate, SpotRequest, Tier};
+use crate::fleet::region::RegionSet;
+use crate::sched::job::Job;
+use crate::sched::policy::{Allocation, Models, Policy, SlotContext};
+use crate::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use crate::sched::simulate::{settle_episode, EpisodeResult};
+
+/// One job's membership in a fleet: the job itself, the policy that
+/// drives it, and its fleet-level attributes.
+#[derive(Debug, Clone)]
+pub struct FleetJobSpec {
+    pub job: Job,
+    pub policy: PolicySpec,
+    pub predictor: PredictorKind,
+    /// Seed for the policy's (noisy) predictor.
+    pub seed: u64,
+    /// Priority tier for capacity arbitration.
+    pub tier: Tier,
+    /// Region the job starts in.
+    pub home_region: usize,
+    /// Global slot at which the job arrives (0 = fleet start).
+    pub arrival: usize,
+}
+
+impl FleetJobSpec {
+    /// A job with fleet defaults: normal tier, region 0, arrival 0.
+    pub fn new(job: Job, policy: PolicySpec, predictor: PredictorKind) -> Self {
+        FleetJobSpec {
+            job,
+            policy,
+            predictor,
+            seed: 0,
+            tier: Tier::Normal,
+            home_region: 0,
+            arrival: 0,
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_tier(mut self, tier: Tier) -> Self {
+        self.tier = tier;
+        self
+    }
+
+    pub fn in_region(mut self, r: usize) -> Self {
+        self.home_region = r;
+        self
+    }
+
+    pub fn arriving_at(mut self, slot: usize) -> Self {
+        self.arrival = slot;
+        self
+    }
+}
+
+/// Per-job outcome: the episode-equivalent result plus fleet-level
+/// facts (where it ran, how often it moved).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobOutcome {
+    /// Policy label (for reports).
+    pub label: String,
+    pub tier: Tier,
+    pub home_region: usize,
+    pub final_region: usize,
+    pub migrations: u32,
+    pub episode: EpisodeResult,
+}
+
+/// Aggregate outcome of a fleet run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetResult {
+    pub jobs: Vec<JobOutcome>,
+    /// Global slots simulated.
+    pub slots: usize,
+    pub total_utility: f64,
+    pub total_value: f64,
+    pub total_cost: f64,
+    /// Fraction of jobs meeting their soft deadline.
+    pub on_time_rate: f64,
+    pub total_preemptions: u64,
+    pub total_migrations: u32,
+    /// Mean granted/available spot fraction per region (slots with zero
+    /// availability excluded).
+    pub region_utilization: Vec<f64>,
+    /// Spot granted per region per global slot (for conservation checks).
+    pub region_granted: Vec<Vec<u32>>,
+    /// Spot available per region per global slot.
+    pub region_avail: Vec<Vec<u32>>,
+}
+
+impl FleetResult {
+    /// Mean utility per job.
+    pub fn mean_utility(&self) -> f64 {
+        if self.jobs.is_empty() {
+            0.0
+        } else {
+            self.total_utility / self.jobs.len() as f64
+        }
+    }
+}
+
+/// Internal per-job simulation state.
+struct JobState {
+    policy: Box<dyn Policy>,
+    region: usize,
+    progress: f64,
+    prev_total: u32,
+    prev_avail: u32,
+    held_spot: u32,
+    decisions: Vec<Allocation>,
+    reconfigs: u32,
+    spot_slots: u32,
+    on_demand_slots: u32,
+    preemptions: u64,
+    cost: f64,
+    /// Consecutive slots the job wanted spot and got none.
+    starved: usize,
+    migrations: u32,
+    /// Apply the migration μ to the next slot's progress.
+    migration_mu_pending: bool,
+    /// 1-based local completion slot, if the job finished in-horizon.
+    completion_slot: Option<usize>,
+    /// No longer simulated (completed or horizon exhausted).
+    done: bool,
+    /// This slot's clamped request + observation (phase 1 → phase 3).
+    pending: Option<(Allocation, crate::market::market::MarketObs)>,
+}
+
+/// The multi-job, multi-region simulator.
+#[derive(Debug, Clone)]
+pub struct FleetEngine {
+    pub models: Models,
+    pub regions: RegionSet,
+    /// Consecutive fully-starved slots before a job migrates to a
+    /// better region; 0 disables migration entirely.
+    pub migration_patience: usize,
+}
+
+impl FleetEngine {
+    pub fn new(models: Models, regions: RegionSet) -> Self {
+        FleetEngine { models, regions, migration_patience: 2 }
+    }
+
+    pub fn with_migration_patience(mut self, patience: usize) -> Self {
+        self.migration_patience = patience;
+        self
+    }
+
+    /// Run the fleet to quiescence: every job either completes or
+    /// exhausts its deadline horizon (post-deadline termination is
+    /// settled analytically, exactly as in `run_episode`).
+    pub fn run(&self, specs: &[FleetJobSpec]) -> FleetResult {
+        for s in specs {
+            assert!(
+                s.home_region < self.regions.len(),
+                "home_region {} out of range ({} regions)",
+                s.home_region,
+                self.regions.len()
+            );
+        }
+        let horizon = specs
+            .iter()
+            .map(|s| s.arrival + s.job.deadline)
+            .max()
+            .unwrap_or(0);
+        let n_regions = self.regions.len();
+
+        // Build per-job state. Each policy sees its home region's trace
+        // from its own arrival onward (the same view `run_episode` gets),
+        // so oracle/noisy predictors index local slots correctly.
+        let mut states: Vec<JobState> = specs
+            .iter()
+            .map(|s| {
+                let env = PolicyEnv {
+                    predictor: s.predictor.clone(),
+                    trace: self.regions.get(s.home_region).trace.slice_from(s.arrival),
+                    seed: s.seed,
+                };
+                let mut policy = s.policy.build(&env);
+                policy.reset();
+                JobState {
+                    policy,
+                    region: s.home_region,
+                    progress: 0.0,
+                    prev_total: 0,
+                    prev_avail: 0,
+                    held_spot: 0,
+                    decisions: Vec::with_capacity(s.job.deadline),
+                    reconfigs: 0,
+                    spot_slots: 0,
+                    on_demand_slots: 0,
+                    preemptions: 0,
+                    cost: 0.0,
+                    starved: 0,
+                    migrations: 0,
+                    migration_mu_pending: false,
+                    completion_slot: None,
+                    done: false,
+                    pending: None,
+                }
+            })
+            .collect();
+
+        let mut region_granted: Vec<Vec<u32>> = vec![Vec::with_capacity(horizon); n_regions];
+        let mut region_avail: Vec<Vec<u32>> = vec![Vec::with_capacity(horizon); n_regions];
+
+        for t in 0..horizon {
+            // Phase 1 — every active job observes its region and decides.
+            for (j, s) in specs.iter().enumerate() {
+                let st = &mut states[j];
+                st.pending = None;
+                if st.done || t < s.arrival {
+                    continue;
+                }
+                let local_t = t - s.arrival;
+                if local_t >= s.job.deadline {
+                    st.done = true;
+                    continue;
+                }
+                let obs = self.regions.observe(
+                    st.region,
+                    t,
+                    local_t,
+                    self.models.on_demand_price,
+                );
+                let ctx = SlotContext {
+                    t: local_t,
+                    obs,
+                    progress: st.progress,
+                    prev_total: st.prev_total,
+                    prev_avail: st.prev_avail,
+                    job: &s.job,
+                    models: &self.models,
+                };
+                let want = st.policy.decide(&ctx).clamp_to_job(&s.job, obs.avail);
+                st.pending = Some((want, obs));
+            }
+
+            // Phase 2 — per-region shared-capacity arbitration.
+            let mut spot_grant: Vec<u32> = vec![0; specs.len()];
+            let mut preempted: Vec<u32> = vec![0; specs.len()];
+            for r in 0..n_regions {
+                let avail = self.regions.avail(r, t);
+                let members: Vec<usize> = (0..specs.len())
+                    .filter(|&j| states[j].pending.is_some() && states[j].region == r)
+                    .collect();
+                let requests: Vec<SpotRequest> = members
+                    .iter()
+                    .map(|&j| SpotRequest {
+                        job: j,
+                        tier: specs[j].tier,
+                        want: states[j].pending.as_ref().unwrap().0.spot,
+                        held: states[j].held_spot,
+                    })
+                    .collect();
+                let grants = arbitrate(avail, &requests);
+                let mut granted_sum = 0u32;
+                for g in &grants {
+                    spot_grant[g.job] = g.granted;
+                    preempted[g.job] = g.preempted;
+                    granted_sum += g.granted;
+                }
+                region_granted[r].push(granted_sum);
+                region_avail[r].push(avail);
+            }
+
+            // Phase 3 — per-job accounting (mirrors `run_episode`).
+            for (j, s) in specs.iter().enumerate() {
+                let st = &mut states[j];
+                let Some((want, obs)) = st.pending.take() else {
+                    continue;
+                };
+                let local_t = t - s.arrival;
+                let spot = spot_grant[j];
+                st.preemptions += preempted[j] as u64;
+                st.held_spot = spot;
+                let total = spot + want.on_demand;
+                let mut mu = self.models.reconfig.mu(st.prev_total, total);
+                if st.migration_mu_pending {
+                    mu *= self.regions.migration.mu;
+                    st.migration_mu_pending = false;
+                }
+                st.progress += mu * self.models.throughput.h(total);
+                if total != st.prev_total {
+                    st.reconfigs += 1;
+                }
+                st.spot_slots += spot;
+                st.on_demand_slots += want.on_demand;
+                let slot_cost = want.on_demand as f64 * obs.on_demand_price
+                    + spot as f64 * obs.spot_price;
+                st.cost += slot_cost;
+                st.decisions.push(Allocation::new(want.on_demand, spot));
+                st.prev_total = total;
+                st.prev_avail = obs.avail;
+
+                if st.progress >= s.job.workload - 1e-9 {
+                    st.completion_slot = Some(local_t + 1);
+                    st.done = true;
+                    st.held_spot = 0; // capacity freed for the next slot
+                    continue;
+                }
+
+                // Starvation-triggered migration. Two ways to starve:
+                // the job asked for spot and the arbiter granted none
+                // (contention), or the policy idled because the region
+                // cannot even support N^min (spot-first policies like
+                // MSU idle rather than run below the floor). After
+                // `patience` such slots, flee to the observably best
+                // region if it is strictly better.
+                if (want.spot > 0 && spot == 0)
+                    || (total == 0 && obs.avail < s.job.n_min)
+                {
+                    st.starved += 1;
+                } else {
+                    st.starved = 0;
+                }
+                if self.migration_patience > 0
+                    && n_regions > 1
+                    && st.starved >= self.migration_patience
+                {
+                    let best = self.regions.best_region(t);
+                    if best != st.region
+                        && self.regions.avail(best, t) > obs.avail
+                    {
+                        st.region = best;
+                        st.cost += self.regions.migration.cost;
+                        st.migrations += 1;
+                        st.held_spot = 0;
+                        st.migration_mu_pending = true;
+                        st.starved = 0;
+                        // Replan against the destination market: the
+                        // policy (and its predictor) were built on the
+                        // home region's trace and would otherwise keep
+                        // forecasting the market the job just left.
+                        // Rebuilding drops accumulated planner state —
+                        // a migration is a disruption; the job replans
+                        // cold, aligned to its local slot clock.
+                        let env = PolicyEnv {
+                            predictor: s.predictor.clone(),
+                            trace: self
+                                .regions
+                                .get(best)
+                                .trace
+                                .slice_from(s.arrival),
+                            seed: s.seed,
+                        };
+                        st.policy = s.policy.build(&env);
+                        st.policy.reset();
+                    }
+                }
+            }
+        }
+
+        // Settle every job (identical math to `run_episode`).
+        let jobs: Vec<JobOutcome> = specs
+            .iter()
+            .zip(states)
+            .map(|(s, st)| {
+                let slots_run = st.decisions.len();
+                let progress_at_deadline = st.progress.min(s.job.workload);
+                let (value, total_cost, completion) = settle_episode(
+                    &s.job,
+                    &self.models,
+                    st.progress,
+                    slots_run,
+                    st.cost,
+                    st.completion_slot,
+                );
+                JobOutcome {
+                    label: s.policy.label(),
+                    tier: s.tier,
+                    home_region: s.home_region,
+                    final_region: st.region,
+                    migrations: st.migrations,
+                    episode: EpisodeResult {
+                        utility: value - total_cost,
+                        value,
+                        cost: total_cost,
+                        completion_slot: completion,
+                        on_time: completion <= s.job.deadline,
+                        progress_at_deadline,
+                        decisions: st.decisions,
+                        spot_slots: st.spot_slots,
+                        on_demand_slots: st.on_demand_slots,
+                        preemptions: st.preemptions,
+                        reconfigs: st.reconfigs,
+                    },
+                }
+            })
+            .collect();
+
+        let n = jobs.len().max(1) as f64;
+        let total_utility = jobs.iter().map(|j| j.episode.utility).sum();
+        let total_value = jobs.iter().map(|j| j.episode.value).sum();
+        let total_cost = jobs.iter().map(|j| j.episode.cost).sum();
+        let on_time_rate =
+            jobs.iter().filter(|j| j.episode.on_time).count() as f64 / n;
+        let total_preemptions =
+            jobs.iter().map(|j| j.episode.preemptions).sum();
+        let total_migrations = jobs.iter().map(|j| j.migrations).sum();
+        let region_utilization = (0..n_regions)
+            .map(|r| {
+                let mut used = 0u64;
+                let mut cap = 0u64;
+                for (g, a) in region_granted[r].iter().zip(&region_avail[r]) {
+                    if *a > 0 {
+                        used += *g as u64;
+                        cap += *a as u64;
+                    }
+                }
+                if cap == 0 {
+                    0.0
+                } else {
+                    used as f64 / cap as f64
+                }
+            })
+            .collect();
+
+        FleetResult {
+            jobs,
+            slots: horizon,
+            total_utility,
+            total_value,
+            total_cost,
+            on_time_rate,
+            total_preemptions,
+            total_migrations,
+            region_utilization,
+            region_granted,
+            region_avail,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::region::{MigrationModel, Region};
+    use crate::market::trace::SpotTrace;
+    use crate::sched::simulate::run_episode;
+
+    fn job() -> Job {
+        Job { workload: 80.0, deadline: 10, n_min: 1, n_max: 12, value: 120.0, gamma: 1.5 }
+    }
+
+    fn flat_trace(price: f64, avail: u32, slots: usize) -> SpotTrace {
+        SpotTrace::new(vec![price; slots], vec![avail; slots])
+    }
+
+    fn engine_single(trace: SpotTrace) -> FleetEngine {
+        FleetEngine::new(Models::paper_default(), RegionSet::single(trace))
+    }
+
+    #[test]
+    fn one_job_one_region_equals_run_episode() {
+        let j = job();
+        let models = Models::paper_default();
+        let trace = flat_trace(0.4, 8, 12);
+        let spec = FleetJobSpec::new(
+            j,
+            PolicySpec::Msu,
+            PredictorKind::Oracle,
+        );
+        let fleet = engine_single(trace.clone()).run(&[spec]);
+        let env = PolicyEnv {
+            predictor: PredictorKind::Oracle,
+            trace: trace.clone(),
+            seed: 0,
+        };
+        let mut p = PolicySpec::Msu.build(&env);
+        let solo = run_episode(&j, &trace, &models, p.as_mut());
+        assert_eq!(fleet.jobs[0].episode, solo);
+    }
+
+    #[test]
+    fn contention_caps_total_spot() {
+        // Two MSU jobs share a region with 6 spot; each would take 12
+        // alone. The arbiter must keep the sum within 6 every slot.
+        let j = job();
+        let trace = flat_trace(0.3, 6, 24);
+        let specs = vec![
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle),
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle),
+        ];
+        let r = engine_single(trace).run(&specs);
+        for (g, a) in r.region_granted[0].iter().zip(&r.region_avail[0]) {
+            assert!(g <= a, "granted {g} exceeds availability {a}");
+        }
+        // Contention must bite: neither job can have taken 12 every slot.
+        assert!(r.jobs.iter().all(|jo| jo.episode.spot_slots < 12 * 10));
+    }
+
+    #[test]
+    fn high_tier_outperforms_low_tier_under_scarcity() {
+        let j = job();
+        let trace = flat_trace(0.3, 6, 24);
+        let specs = vec![
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::Low),
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::High),
+        ];
+        let r = engine_single(trace).run(&specs);
+        assert!(
+            r.jobs[1].episode.spot_slots > r.jobs[0].episode.spot_slots,
+            "high tier {} vs low tier {}",
+            r.jobs[1].episode.spot_slots,
+            r.jobs[0].episode.spot_slots
+        );
+    }
+
+    #[test]
+    fn starved_job_migrates_and_pays_for_it() {
+        let j = job();
+        let dead = flat_trace(0.5, 0, 16);
+        let rich = flat_trace(0.4, 12, 16);
+        let regions = RegionSet::new(vec![
+            Region { name: "dead".into(), trace: dead },
+            Region { name: "rich".into(), trace: rich },
+        ])
+        .with_migration(MigrationModel::new(3.0, 0.5));
+        let engine = FleetEngine::new(Models::paper_default(), regions)
+            .with_migration_patience(2);
+        let spec = FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle);
+        let r = engine.run(&[spec]);
+        assert!(r.jobs[0].migrations >= 1);
+        assert_eq!(r.jobs[0].final_region, 1);
+        assert_eq!(r.total_migrations, r.jobs[0].migrations);
+    }
+
+    #[test]
+    fn migration_disabled_keeps_job_home() {
+        let j = job();
+        let dead = flat_trace(0.5, 0, 16);
+        let rich = flat_trace(0.4, 12, 16);
+        let regions = RegionSet::new(vec![
+            Region { name: "dead".into(), trace: dead },
+            Region { name: "rich".into(), trace: rich },
+        ]);
+        let engine = FleetEngine::new(Models::paper_default(), regions)
+            .with_migration_patience(0);
+        let spec = FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle);
+        let r = engine.run(&[spec]);
+        assert_eq!(r.jobs[0].migrations, 0);
+        assert_eq!(r.jobs[0].final_region, 0);
+    }
+
+    #[test]
+    fn staggered_arrival_shifts_the_market_window() {
+        let j = job();
+        // Spot only exists from slot 5 on; a job arriving at 5 sees it
+        // from its first local slot.
+        let mut avail = vec![0u32; 20];
+        for a in avail.iter_mut().skip(5) {
+            *a = 12;
+        }
+        let trace = SpotTrace::new(vec![0.3; 20], avail);
+        let spec = FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle)
+            .arriving_at(5);
+        let r = engine_single(trace).run(&[spec]);
+        assert!(r.jobs[0].episode.spot_slots > 0);
+        assert_eq!(r.slots, 15);
+    }
+
+    #[test]
+    fn aggregates_are_consistent() {
+        let j = job();
+        let trace = flat_trace(0.4, 10, 24);
+        let specs: Vec<FleetJobSpec> = (0..4)
+            .map(|k| {
+                FleetJobSpec::new(j, PolicySpec::UniformProgress, PredictorKind::Oracle)
+                    .with_tier(Tier::cycle(k))
+            })
+            .collect();
+        let r = engine_single(trace).run(&specs);
+        let u: f64 = r.jobs.iter().map(|jo| jo.episode.utility).sum();
+        assert!((r.total_utility - u).abs() < 1e-9);
+        assert!((0.0..=1.0).contains(&r.on_time_rate));
+        for util in &r.region_utilization {
+            assert!((0.0..=1.0).contains(util));
+        }
+    }
+}

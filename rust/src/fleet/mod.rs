@@ -1,0 +1,27 @@
+//! Fleet layer: multi-job, multi-region spot simulation with shared,
+//! contended capacity — the cluster-scale generalization of the paper's
+//! per-job episode.
+//!
+//! - [`region`] — a [`region::RegionSet`] of independently traced
+//!   regional spot markets plus the migration-cost model;
+//! - [`capacity`] — the shared-capacity arbiter (fair-share water-fill
+//!   with priority tiers and cascading preemption);
+//! - [`engine`] — the [`engine::FleetEngine`] stepping every job
+//!   slot-by-slot under its own policy, with the invariant that a
+//!   1-job/1-region fleet reproduces `run_episode` bit-for-bit;
+//! - [`sweep`] — the `std::thread::scope`-based parallel executor that
+//!   fleets, benches, and the selector's counterfactual evaluation
+//!   route through.
+
+pub mod capacity;
+pub mod engine;
+pub mod region;
+pub mod sweep;
+
+pub use capacity::{arbitrate, SpotGrant, SpotRequest, Tier};
+pub use engine::{FleetEngine, FleetJobSpec, FleetResult, JobOutcome};
+pub use region::{MigrationModel, Region, RegionSet};
+pub use sweep::{
+    available_threads, run_fleet_sweep, run_parallel, run_selection_parallel,
+    FleetScenario,
+};

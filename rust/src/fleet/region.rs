@@ -1,0 +1,214 @@
+//! Multi-region spot-market substrate: a [`RegionSet`] of independently
+//! traced regional markets (each a [`SpotTrace`], reusing
+//! [`crate::market::generator`]) plus the migration-cost model charged
+//! when a job moves its training pool between regions (checkpoint
+//! transfer + cold restart — the SkyNomad-style cross-region move).
+
+use crate::market::generator::TraceGenerator;
+use crate::market::market::MarketObs;
+use crate::market::trace::SpotTrace;
+
+/// One regional spot market: a name and its price/availability trace.
+/// Availability is the *shared* regional capacity — all jobs homed in the
+/// region compete for it through the capacity arbiter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Region {
+    pub name: String,
+    pub trace: SpotTrace,
+}
+
+/// Cost model for moving a job between regions: a flat monetary charge
+/// (checkpoint egress + instance relaunch) and a progress factor applied
+/// to the first slot in the new region (the pool restarts cold, so the
+/// slot is only partially effective — analogous to the μ₁ scale-up but
+/// strictly worse).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationModel {
+    /// Monetary cost charged to the job at the moment it migrates.
+    pub cost: f64,
+    /// Effective-computation fraction of the migration slot, in [0, 1].
+    pub mu: f64,
+}
+
+impl MigrationModel {
+    pub fn new(cost: f64, mu: f64) -> Self {
+        assert!(cost >= 0.0, "migration cost must be non-negative");
+        assert!((0.0..=1.0).contains(&mu), "migration μ must be in [0,1]");
+        MigrationModel { cost, mu }
+    }
+
+    /// Free, instant migration (useful in tests).
+    pub fn free() -> Self {
+        MigrationModel { cost: 0.0, mu: 1.0 }
+    }
+}
+
+impl Default for MigrationModel {
+    /// Calibrated to a 30-min slot: moving a LoRA checkpoint plus
+    /// relaunching costs about two on-demand instance-slots and wipes
+    /// half of the arrival slot.
+    fn default() -> Self {
+        MigrationModel { cost: 2.0, mu: 0.5 }
+    }
+}
+
+/// A set of regional spot markets sharing one slot clock, plus the
+/// migration model between them.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionSet {
+    pub regions: Vec<Region>,
+    pub migration: MigrationModel,
+}
+
+impl RegionSet {
+    pub fn new(regions: Vec<Region>) -> Self {
+        assert!(!regions.is_empty(), "a fleet needs at least one region");
+        RegionSet { regions, migration: MigrationModel::default() }
+    }
+
+    /// Single-region set over an existing trace — the degenerate fleet
+    /// that must reproduce [`crate::sched::simulate::run_episode`].
+    pub fn single(trace: SpotTrace) -> Self {
+        RegionSet::new(vec![Region { name: "region-0".to_string(), trace }])
+    }
+
+    /// `n` regions with independent synthetic traces from `gen`, seeded
+    /// deterministically off `seed`. The mix uses `r + 1` so region 0
+    /// does not collapse to the bare `seed` — callers derive other
+    /// streams (job sampling, predictor noise) from the same seed, and
+    /// those must stay decorrelated from every region's trace.
+    pub fn generated(n: usize, gen: &TraceGenerator, seed: u64) -> Self {
+        assert!(n >= 1);
+        let regions = (0..n)
+            .map(|r| Region {
+                name: format!("region-{r}"),
+                trace: gen.generate(
+                    seed ^ (r as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A),
+                ),
+            })
+            .collect();
+        RegionSet::new(regions)
+    }
+
+    pub fn with_migration(mut self, m: MigrationModel) -> Self {
+        self.migration = m;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.regions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.regions.is_empty()
+    }
+
+    pub fn get(&self, r: usize) -> &Region {
+        &self.regions[r]
+    }
+
+    /// Spot availability of region `r` at global slot `t`.
+    pub fn avail(&self, r: usize, t: usize) -> u32 {
+        self.regions[r].trace.avail_at(t)
+    }
+
+    /// Spot price of region `r` at global slot `t`.
+    pub fn price(&self, r: usize, t: usize) -> f64 {
+        self.regions[r].trace.price_at(t)
+    }
+
+    /// What a job homed in region `r` observes at global slot `t`.
+    /// `local_t` is the slot index within the *job's* horizon (differs
+    /// from `t` when the job arrived late), matching the episode
+    /// simulator's convention that `obs.t` counts the job's own slots.
+    pub fn observe(
+        &self,
+        r: usize,
+        t: usize,
+        local_t: usize,
+        on_demand_price: f64,
+    ) -> MarketObs {
+        MarketObs {
+            t: local_t,
+            spot_price: self.price(r, t),
+            avail: self.avail(r, t),
+            on_demand_price,
+        }
+    }
+
+    /// Best region to flee to at global slot `t`, judged only on the
+    /// currently observable state (no future information): maximum spot
+    /// availability, ties broken by lower spot price, then lower index.
+    pub fn best_region(&self, t: usize) -> usize {
+        let mut best = 0usize;
+        for r in 1..self.len() {
+            let (a, p) = (self.avail(r, t), self.price(r, t));
+            let (ba, bp) = (self.avail(best, t), self.price(best, t));
+            if a > ba || (a == ba && p < bp) {
+                best = r;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_regions() -> RegionSet {
+        RegionSet::new(vec![
+            Region {
+                name: "a".into(),
+                trace: SpotTrace::new(vec![0.5, 0.5], vec![2, 0]),
+            },
+            Region {
+                name: "b".into(),
+                trace: SpotTrace::new(vec![0.3, 0.6], vec![2, 8]),
+            },
+        ])
+    }
+
+    #[test]
+    fn observe_reads_region_trace_with_local_slot() {
+        let rs = two_regions();
+        let o = rs.observe(1, 1, 0, 1.0);
+        assert_eq!(o.t, 0);
+        assert_eq!(o.avail, 8);
+        assert!((o.spot_price - 0.6).abs() < 1e-12);
+        assert!((o.on_demand_price - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn best_region_prefers_availability_then_price() {
+        let rs = two_regions();
+        // slot 0: equal availability (2 vs 2) → cheaper region 1 wins.
+        assert_eq!(rs.best_region(0), 1);
+        // slot 1: region 1 has 8 vs 0 → wins on availability.
+        assert_eq!(rs.best_region(1), 1);
+    }
+
+    #[test]
+    fn generated_regions_are_independent_and_deterministic() {
+        let gen = TraceGenerator::calibrated();
+        let a = RegionSet::generated(3, &gen, 7);
+        let b = RegionSet::generated(3, &gen, 7);
+        assert_eq!(a, b);
+        assert_ne!(a.get(0).trace, a.get(1).trace);
+        assert_ne!(a.get(1).trace, a.get(2).trace);
+    }
+
+    #[test]
+    fn single_region_wraps_trace() {
+        let tr = SpotTrace::new(vec![0.4], vec![5]);
+        let rs = RegionSet::single(tr.clone());
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs.get(0).trace, tr);
+    }
+
+    #[test]
+    #[should_panic]
+    fn migration_model_rejects_bad_mu() {
+        MigrationModel::new(1.0, 1.5);
+    }
+}

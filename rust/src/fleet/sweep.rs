@@ -1,0 +1,291 @@
+//! Parallel sweep engine: fan policy × trace × fleet evaluations across
+//! cores with `std::thread::scope` (no external thread-pool crate). Work
+//! is pulled off a shared atomic counter, so long tasks don't straggle a
+//! static partition; results come back in input order, making parallel
+//! runs bit-identical to sequential ones.
+//!
+//! The benches (`fig11_fleet_scaling`) and the policy selector's
+//! counterfactual evaluation ([`run_selection_parallel`]) both route
+//! through [`run_parallel`].
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::fleet::capacity::Tier;
+use crate::fleet::engine::{FleetEngine, FleetJobSpec, FleetResult};
+use crate::fleet::region::{MigrationModel, RegionSet};
+use crate::forecast::noise::NoiseSpec;
+use crate::market::generator::{GeneratorConfig, TraceGenerator};
+use crate::market::trace::SpotTrace;
+use crate::sched::job::{Job, JobGenerator};
+use crate::sched::policy::Models;
+use crate::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use crate::sched::selector::{
+    run_selection_with, SelectionConfig, SelectionOutcome,
+};
+use crate::sched::simulate::run_episode;
+use crate::util::rng::Rng;
+
+/// Threads the host can usefully run.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Map `f` over `items` on `threads` OS threads (work-stealing via an
+/// atomic cursor). Returns results in input order; with `threads <= 1`
+/// this degrades to a plain sequential map, and for any thread count the
+/// output is identical to the sequential one (tasks are independent).
+pub fn run_parallel<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                done.lock().unwrap().push((i, r));
+            });
+        }
+    });
+    let mut out = done.into_inner().unwrap();
+    out.sort_by_key(|(i, _)| *i);
+    out.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Counterfactual utilities of a whole policy pool on one job/trace,
+/// normalized for the EG selector — the selector's inner loop, fanned
+/// across cores. Episodes are independent and deterministic, so the
+/// result equals the sequential evaluation exactly.
+pub fn counterfactual_utilities(
+    specs: &[PolicySpec],
+    job: &Job,
+    trace: &SpotTrace,
+    models: &Models,
+    env: &PolicyEnv,
+    threads: usize,
+) -> Vec<f64> {
+    run_parallel(specs, threads, |_, spec| {
+        let mut policy = spec.build(env);
+        let r = run_episode(job, trace, models, policy.as_mut());
+        job.normalize_utility(r.utility, models.on_demand_price)
+    })
+}
+
+/// Algorithm 2 with the per-job counterfactual pool evaluation (112
+/// episodes per job) fanned across `threads` cores. Produces exactly the
+/// same [`SelectionOutcome`] as [`crate::sched::selector::run_selection`]
+/// — only faster.
+pub fn run_selection_parallel(
+    specs: &[PolicySpec],
+    jobs: &JobGenerator,
+    models: &Models,
+    trace_gen: &TraceGenerator,
+    predictor_at: impl FnMut(usize) -> PredictorKind,
+    cfg: &SelectionConfig,
+    threads: usize,
+) -> SelectionOutcome {
+    run_selection_with(
+        specs,
+        jobs,
+        models,
+        trace_gen,
+        predictor_at,
+        cfg,
+        |specs, job, trace, models, env| {
+            counterfactual_utilities(specs, job, trace, models, env, threads)
+        },
+    )
+}
+
+/// A self-contained fleet experiment: how many jobs across how many
+/// regions, under which market/job/noise calibration. The unit of work
+/// for [`run_fleet_sweep`].
+#[derive(Debug, Clone)]
+pub struct FleetScenario {
+    pub n_jobs: usize,
+    pub n_regions: usize,
+    pub seed: u64,
+    pub market: GeneratorConfig,
+    pub jobs: JobGenerator,
+    pub models: Models,
+    pub noise: NoiseSpec,
+    pub migration: MigrationModel,
+    pub migration_patience: usize,
+    /// Arrival spacing: job k arrives at `(k % 4) * stagger` (0 = all at
+    /// slot 0).
+    pub stagger: usize,
+}
+
+impl FleetScenario {
+    /// Paper-calibrated scenario.
+    pub fn new(n_jobs: usize, n_regions: usize, seed: u64) -> Self {
+        assert!(n_jobs >= 1 && n_regions >= 1);
+        FleetScenario {
+            n_jobs,
+            n_regions,
+            seed,
+            market: GeneratorConfig::default(),
+            jobs: JobGenerator::default(),
+            models: Models::paper_default(),
+            noise: NoiseSpec::fixed_mag_uniform(0.1),
+            migration: MigrationModel::default(),
+            migration_patience: 2,
+            stagger: 0,
+        }
+    }
+
+    pub fn with_stagger(mut self, stagger: usize) -> Self {
+        self.stagger = stagger;
+        self
+    }
+
+    /// Materialize the engine and job roster. Policies are drawn
+    /// round-robin from [`fleet_roster`]; tiers and home regions cycle.
+    ///
+    /// The scenario seed fans out into three domain-separated streams —
+    /// region traces, job sampling, and per-job predictor noise — so no
+    /// two of them ever consume the same PRNG sequence (a shared stream
+    /// would correlate a job's forecast errors with the very market it
+    /// runs on and bias sweep statistics).
+    pub fn build(&self) -> (FleetEngine, Vec<FleetJobSpec>) {
+        const JOBS_STREAM: u64 = 0x9E37_79B9_7F4A_7C15;
+        const NOISE_STREAM: u64 = 0xD1B5_4A32_D192_ED03;
+        let gen = TraceGenerator::new(self.market.clone());
+        let regions = RegionSet::generated(self.n_regions, &gen, self.seed)
+            .with_migration(self.migration);
+        let engine = FleetEngine::new(self.models, regions)
+            .with_migration_patience(self.migration_patience);
+        let roster = fleet_roster();
+        let mut rng = Rng::new(self.seed ^ JOBS_STREAM);
+        let specs = (0..self.n_jobs)
+            .map(|k| {
+                let job = self.jobs.sample(&mut rng);
+                FleetJobSpec {
+                    job,
+                    policy: roster[k % roster.len()],
+                    predictor: PredictorKind::Noisy(self.noise),
+                    seed: self.seed
+                        ^ NOISE_STREAM
+                        ^ (k as u64 + 1).wrapping_mul(0x9E37_79B9),
+                    tier: Tier::cycle(k),
+                    home_region: k % self.n_regions,
+                    arrival: (k % 4) * self.stagger,
+                }
+            })
+            .collect();
+        (engine, specs)
+    }
+
+    /// Build and run.
+    pub fn run(&self) -> FleetResult {
+        let (engine, specs) = self.build();
+        engine.run(&specs)
+    }
+}
+
+/// The policy mix synthetic fleets cycle through: the three baselines,
+/// a mid-grid AHANP, and three representative AHAP corners.
+pub fn fleet_roster() -> Vec<PolicySpec> {
+    vec![
+        PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+        PolicySpec::Msu,
+        PolicySpec::Ahanp { sigma: 0.5 },
+        PolicySpec::UniformProgress,
+        PolicySpec::Ahap { omega: 5, v: 2, sigma: 0.9 },
+        PolicySpec::OdOnly,
+        PolicySpec::Ahap { omega: 1, v: 1, sigma: 0.5 },
+    ]
+}
+
+/// Run many scenarios across `threads` cores (the fig11 bench's outer
+/// loop and the CLI's `fleet --sweeps` path).
+pub fn run_fleet_sweep(
+    scenarios: &[FleetScenario],
+    threads: usize,
+) -> Vec<FleetResult> {
+    run_parallel(scenarios, threads, |_, sc| sc.run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_parallel_preserves_order_and_values() {
+        let items: Vec<usize> = (0..97).collect();
+        let seq = run_parallel(&items, 1, |i, &x| i * 1000 + x * x);
+        let par = run_parallel(&items, 4, |i, &x| i * 1000 + x * x);
+        assert_eq!(seq, par);
+        assert_eq!(seq.len(), 97);
+        assert_eq!(seq[3], 3 * 1000 + 9);
+    }
+
+    #[test]
+    fn run_parallel_handles_empty_and_oversubscription() {
+        let empty: Vec<u32> = vec![];
+        assert!(run_parallel(&empty, 8, |_, &x| x).is_empty());
+        let one = [5u32];
+        assert_eq!(run_parallel(&one, 64, |_, &x| x * 2), vec![10]);
+    }
+
+    #[test]
+    fn scenario_is_deterministic() {
+        let sc = FleetScenario::new(6, 2, 11).with_stagger(3);
+        assert_eq!(sc.run(), sc.run());
+    }
+
+    #[test]
+    fn sweep_parallel_equals_sequential() {
+        let scenarios: Vec<FleetScenario> =
+            (0..4).map(|s| FleetScenario::new(4, 2, s)).collect();
+        let seq = run_fleet_sweep(&scenarios, 1);
+        let par = run_fleet_sweep(&scenarios, 4);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn counterfactuals_match_sequential_episodes() {
+        let specs = vec![
+            PolicySpec::OdOnly,
+            PolicySpec::Msu,
+            PolicySpec::UniformProgress,
+            PolicySpec::Ahanp { sigma: 0.5 },
+        ];
+        let job = Job::paper_reference();
+        let models = Models::paper_default();
+        let trace = TraceGenerator::calibrated().generate(3).slice_from(40);
+        let env = PolicyEnv {
+            predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace: trace.clone(),
+            seed: 9,
+        };
+        let par =
+            counterfactual_utilities(&specs, &job, &trace, &models, &env, 4);
+        let seq: Vec<f64> = specs
+            .iter()
+            .map(|s| {
+                let mut p = s.build(&env);
+                let r = run_episode(&job, &trace, &models, p.as_mut());
+                job.normalize_utility(r.utility, models.on_demand_price)
+            })
+            .collect();
+        assert_eq!(par, seq);
+    }
+}

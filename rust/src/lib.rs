@@ -10,6 +10,10 @@
 //! - [`sched`] — the paper's algorithms: AHAP (Alg. 1), AHANP (Alg. 3),
 //!   the EG policy selector (Alg. 2), baselines, and the exact solvers
 //!   for Eq. 10 / the offline optimum;
+//! - [`fleet`] — the cluster-scale layer above them: many concurrent
+//!   jobs across multiple regional spot markets with shared, contended
+//!   capacity (fair-share arbitration, cascading preemption, migration),
+//!   plus the thread-scoped parallel sweep engine;
 //! - [`market`] / [`forecast`] — the spot-market substrate and the
 //!   ARIMA + noise-regime prediction substrate;
 //! - [`runtime`] / [`train`] / [`coordinator`] — the execution substrate:
@@ -24,6 +28,7 @@
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod fleet;
 pub mod forecast;
 pub mod market;
 pub mod runtime;

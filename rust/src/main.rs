@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train       end-to-end: schedule + really fine-tune via PJRT
 //!   simulate    run one policy on one job/market (fast, no training)
+//!   fleet       multi-job multi-region fleet with shared capacity
 //!   compare     policy comparison table on sampled jobs (Fig. 5 row)
 //!   select      online policy selection over a job stream (Alg. 2)
 //!   trace       generate / analyze a synthetic market trace (Fig. 2)
@@ -17,6 +18,10 @@ use std::process::ExitCode;
 use spotfine::cli::args::Args;
 use spotfine::config::schema::ExperimentConfig;
 use spotfine::coordinator::leader::{Leader, LeaderConfig};
+use spotfine::fleet::{
+    available_threads, run_fleet_sweep, run_selection_parallel, FleetScenario,
+    MigrationModel,
+};
 use spotfine::forecast::arima::{ArimaPredictor, ArimaSpec};
 use spotfine::forecast::noise::NoiseSpec;
 use spotfine::forecast::predictor::Predictor;
@@ -29,7 +34,7 @@ use spotfine::runtime::executable::TrainStepExec;
 use spotfine::sched::job::Job;
 use spotfine::sched::offline::solve_offline;
 use spotfine::sched::pool::{paper_pool, PolicyEnv, PolicySpec, PredictorKind};
-use spotfine::sched::selector::{run_selection, SelectionConfig};
+use spotfine::sched::selector::SelectionConfig;
 use spotfine::sched::simulate::run_episode;
 use spotfine::train::trainer::{Trainer, TrainerConfig};
 use spotfine::util::rng::Rng;
@@ -43,6 +48,8 @@ USAGE: spotfine <command> [--flags]
 COMMANDS:
   train      end-to-end fine-tune under a scheduling policy (PJRT)
   simulate   one policy x one job on a synthetic market
+  fleet      many concurrent jobs across regional spot markets with
+             shared capacity, priority arbitration and migration
   compare    policy comparison table over sampled jobs
   select     online policy selection (Algorithm 2) over a job stream
   trace      generate/analyze a market trace (Fig. 2 statistics)
@@ -54,6 +61,16 @@ COMMON FLAGS:
   --config <file.toml>  experiment config (defaults = paper settings)
   --seed <u64>          RNG seed
   --policy <spec>       od-only | msu | up | ahanp:SIGMA | ahap:W,V,SIGMA
+  --threads <n>         worker threads for fleet/select sweeps
+
+FLEET FLAGS:
+  --jobs <n>            concurrent jobs in the fleet (default 16)
+  --regions <n>         regional spot markets (default 3)
+  --sweeps <n>          independent seeded fleets to run (default 1)
+  --stagger <slots>     arrival spacing between job cohorts (default 2)
+  --patience <slots>    starved slots before migration, 0=never (default 2)
+  --migration-cost <$>  flat cost charged per region move (default 2.0)
+  --per-job             print the per-job outcome table
 ";
 
 fn main() -> ExitCode {
@@ -104,6 +121,7 @@ fn run() -> anyhow::Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("simulate") => cmd_simulate(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("compare") => cmd_compare(&args),
         Some("select") => cmd_select(&args),
         Some("trace") => cmd_trace(&args),
@@ -234,6 +252,100 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let seed = args.get_u64("seed", cfg.seed)?;
+    let n_jobs = args.get_usize("jobs", 16)?.max(1);
+    let n_regions = args.get_usize("regions", 3)?.max(1);
+    let sweeps = args.get_usize("sweeps", 1)?.max(1);
+    let threads = args.get_usize("threads", available_threads())?;
+    let patience = args.get_usize("patience", 2)?;
+    let migration_cost = args.get_f64("migration-cost", 2.0)?;
+    let stagger = args.get_usize("stagger", 2)?;
+
+    let scenarios: Vec<FleetScenario> = (0..sweeps)
+        .map(|s| {
+            let mut sc = FleetScenario::new(n_jobs, n_regions, seed + s as u64);
+            sc.market = cfg.market.clone();
+            sc.jobs = cfg.jobs.clone();
+            sc.models = cfg.models;
+            sc.noise = cfg.noise;
+            sc.migration = MigrationModel::new(migration_cost, 0.5);
+            sc.migration_patience = patience;
+            sc.stagger = stagger;
+            sc
+        })
+        .collect();
+
+    let (results, secs) =
+        spotfine::util::bench::time_once(|| run_fleet_sweep(&scenarios, threads));
+
+    println!(
+        "fleet: {n_jobs} jobs x {n_regions} regions x {sweeps} sweep(s), {threads} thread(s), {secs:.2}s"
+    );
+    let mut t = Table::new(&[
+        "sweep",
+        "mean utility",
+        "on-time",
+        "cost",
+        "preemptions",
+        "migrations",
+        "region util",
+    ]);
+    for (s, r) in results.iter().enumerate() {
+        let util = r
+            .region_utilization
+            .iter()
+            .map(|u| format!("{:.0}%", 100.0 * u))
+            .collect::<Vec<_>>()
+            .join(" ");
+        t.row(&[
+            format!("{}", s + 1),
+            f(r.mean_utility(), 2),
+            format!("{:.0}%", 100.0 * r.on_time_rate),
+            f(r.total_cost, 1),
+            format!("{}", r.total_preemptions),
+            format!("{}", r.total_migrations),
+            util,
+        ]);
+    }
+    t.print();
+
+    if args.get_bool("per-job") {
+        for (s, r) in results.iter().enumerate() {
+            println!("\nper-job outcomes, sweep {} (seed {}):", s + 1, seed + s as u64);
+            let mut jt = Table::new(&[
+                "job",
+                "policy",
+                "tier",
+                "region",
+                "utility",
+                "on-time",
+                "preempt",
+                "moves",
+            ]);
+            for (k, jo) in r.jobs.iter().enumerate() {
+                jt.row(&[
+                    format!("{k}"),
+                    jo.label.clone(),
+                    jo.tier.label().to_string(),
+                    if jo.home_region == jo.final_region {
+                        format!("{}", jo.home_region)
+                    } else {
+                        format!("{}->{}", jo.home_region, jo.final_region)
+                    },
+                    f(jo.episode.utility, 2),
+                    if jo.episode.on_time { "yes".into() } else { "NO".into() },
+                    format!("{}", jo.episode.preemptions),
+                    format!("{}", jo.migrations),
+                ]);
+            }
+            jt.print();
+        }
+    }
+    Ok(())
+}
+
 fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let seed = args.get_u64("seed", cfg.seed)?;
@@ -288,17 +400,23 @@ fn cmd_select(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let k_jobs = args.get_usize("jobs", cfg.selection_jobs)?;
     let seed = args.get_u64("seed", cfg.seed)?;
+    let threads = args.get_usize("threads", 1)?.max(1);
     let specs = paper_pool();
-    let out = run_selection(
+    let sel_cfg =
+        SelectionConfig { k_jobs, seed, snapshot_every: (k_jobs / 10).max(1) };
+    // The parallel path fans the per-job 112-policy counterfactual
+    // evaluation across cores; its outcome is identical to sequential.
+    let out = run_selection_parallel(
         &specs,
         &cfg.jobs,
         &cfg.models,
         &TraceGenerator::new(cfg.market.clone()),
         |_| PredictorKind::Noisy(cfg.noise),
-        &SelectionConfig { k_jobs, seed, snapshot_every: (k_jobs / 10).max(1) },
+        &sel_cfg,
+        threads,
     );
     println!("pool size          {}", specs.len());
-    println!("jobs               {k_jobs}");
+    println!("jobs               {k_jobs} ({threads} thread(s))");
     println!("noise              {}", cfg.noise.label());
     println!(
         "converged policy   #{} {}",

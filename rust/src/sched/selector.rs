@@ -4,6 +4,7 @@
 //! Theorem 2.
 
 use crate::market::generator::TraceGenerator;
+use crate::market::trace::SpotTrace;
 use crate::sched::job::JobGenerator;
 use crate::sched::policy::Models;
 use crate::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
@@ -139,8 +140,47 @@ pub fn run_selection(
     jobs: &JobGenerator,
     models: &Models,
     trace_gen: &TraceGenerator,
+    predictor_at: impl FnMut(usize) -> PredictorKind,
+    cfg: &SelectionConfig,
+) -> SelectionOutcome {
+    run_selection_with(
+        specs,
+        jobs,
+        models,
+        trace_gen,
+        predictor_at,
+        cfg,
+        |specs, job, trace, models, env| {
+            let mut u = Vec::with_capacity(specs.len());
+            for spec in specs {
+                let mut policy = spec.build(env);
+                let r = run_episode(job, trace, models, policy.as_mut());
+                u.push(job.normalize_utility(r.utility, models.on_demand_price));
+            }
+            u
+        },
+    )
+}
+
+/// [`run_selection`] with the counterfactual pool evaluation injected:
+/// `eval` must return the *normalized* utility of every spec on the
+/// given job/trace. This is the seam `fleet::sweep::run_selection_parallel`
+/// uses to fan the 112 per-job episodes across cores while keeping the
+/// selection trajectory (RNG stream, weights, regret) byte-identical.
+pub fn run_selection_with(
+    specs: &[PolicySpec],
+    jobs: &JobGenerator,
+    models: &Models,
+    trace_gen: &TraceGenerator,
     mut predictor_at: impl FnMut(usize) -> PredictorKind,
     cfg: &SelectionConfig,
+    mut eval: impl FnMut(
+        &[PolicySpec],
+        &crate::sched::job::Job,
+        &SpotTrace,
+        &Models,
+        &PolicyEnv,
+    ) -> Vec<f64>,
 ) -> SelectionOutcome {
     let m = specs.len();
     assert!(m >= 1);
@@ -168,12 +208,8 @@ pub fn run_selection(
         };
 
         // Counterfactual utilities for the whole pool.
-        let mut u = Vec::with_capacity(m);
-        for spec in specs {
-            let mut policy = spec.build(&env);
-            let r = run_episode(&job, &trace, models, policy.as_mut());
-            u.push(job.normalize_utility(r.utility, models.on_demand_price));
-        }
+        let u = eval(specs, &job, &trace, models, &env);
+        assert_eq!(u.len(), m, "evaluator must score every policy");
 
         let chosen = selector.select(&mut rng);
         realized.push(u[chosen]);

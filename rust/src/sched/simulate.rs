@@ -35,6 +35,43 @@ pub struct EpisodeResult {
     pub reconfigs: u32,
 }
 
+/// Close out an episode's value/cost accounting: a completed job scores
+/// the value at its completion slot; an unfinished one enters the
+/// termination configuration (§III-E) — on-demand at `N^max` until done,
+/// with the first extra slot paying the μ₁ scale-up. Shared verbatim by
+/// [`run_episode`] and the fleet engine so a 1-job/1-region fleet is
+/// bit-for-bit identical to an episode.
+///
+/// Returns `(value, total_cost, completion_slot)`.
+pub fn settle_episode(
+    job: &Job,
+    models: &Models,
+    progress: f64,
+    slots_run: usize,
+    pre_deadline_cost: f64,
+    completion_slot: Option<usize>,
+) -> (f64, f64, usize) {
+    match completion_slot {
+        Some(t) => (job.value_at(t as f64), pre_deadline_cost, t),
+        None => {
+            let g = models.throughput.h(job.n_max);
+            let remaining = job.workload - progress;
+            let first = models.reconfig.mu_up * g;
+            let extra = if g <= 0.0 {
+                usize::MAX / 2
+            } else if remaining <= first {
+                1
+            } else {
+                1 + ((remaining - first) / g).ceil() as usize
+            };
+            let t = slots_run + extra;
+            let term_cost =
+                extra as f64 * job.n_max as f64 * models.on_demand_price;
+            (job.value_at(t as f64), pre_deadline_cost + term_cost, t)
+        }
+    }
+}
+
 /// Run a single job under `policy` over `trace` (slot 0 of the trace is
 /// the job's first slot). The policy is `reset` first, so instances can
 /// be reused across episodes.
@@ -45,8 +82,8 @@ pub fn run_episode(
     policy: &mut dyn Policy,
 ) -> EpisodeResult {
     policy.reset();
-    let mut market = SpotMarket::new(trace.clone())
-        .with_on_demand_price(models.on_demand_price);
+    let mut market =
+        SpotMarket::new(trace).with_on_demand_price(models.on_demand_price);
 
     let mut progress = 0.0f64;
     let mut prev_total = 0u32;
@@ -92,27 +129,14 @@ pub fn run_episode(
     let pre_deadline_cost = market.total_cost;
     let progress_at_deadline = progress.min(job.workload);
 
-    let (value, total_cost, completion) = match completion_slot {
-        Some(t) => (job.value_at(t as f64), pre_deadline_cost, t),
-        None => {
-            // Termination configuration (§III-E): on-demand at N^max
-            // until done; first extra slot pays the μ₁ scale-up.
-            let g = models.throughput.h(job.n_max);
-            let remaining = job.workload - progress;
-            let first = models.reconfig.mu_up * g;
-            let extra = if g <= 0.0 {
-                usize::MAX / 2
-            } else if remaining <= first {
-                1
-            } else {
-                1 + ((remaining - first) / g).ceil() as usize
-            };
-            let t = slots_run + extra;
-            let term_cost =
-                extra as f64 * job.n_max as f64 * models.on_demand_price;
-            (job.value_at(t as f64), pre_deadline_cost + term_cost, t)
-        }
-    };
+    let (value, total_cost, completion) = settle_episode(
+        job,
+        models,
+        progress,
+        slots_run,
+        pre_deadline_cost,
+        completion_slot,
+    );
 
     EpisodeResult {
         utility: value - total_cost,

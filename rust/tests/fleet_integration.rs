@@ -1,0 +1,317 @@
+//! Fleet subsystem integration tests: the 1-job/1-region ≡ `run_episode`
+//! equivalence across the entire 112-policy pool, capacity conservation
+//! under contention (property-tested), migration behavior, and the
+//! determinism of the parallel sweep engine (including the selector's
+//! parallel counterfactual path).
+
+use spotfine::fleet::{
+    arbitrate, run_fleet_sweep, run_selection_parallel, FleetEngine,
+    FleetJobSpec, FleetScenario, MigrationModel, Region, RegionSet,
+    SpotRequest, Tier,
+};
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::generator::TraceGenerator;
+use spotfine::market::trace::SpotTrace;
+use spotfine::prop_assert;
+use spotfine::sched::job::{Job, JobGenerator};
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{paper_pool, PolicyEnv, PolicySpec, PredictorKind};
+use spotfine::sched::selector::{run_selection, SelectionConfig};
+use spotfine::sched::simulate::run_episode;
+use spotfine::util::prop::{check, PropConfig};
+use spotfine::util::rng::Rng;
+
+/// Every policy in the paper pool (plus the baselines), run as a
+/// single-job single-region fleet, must produce an `EpisodeResult`
+/// bit-for-bit identical to `run_episode` — same utility, same decision
+/// trace, same preemption count, everything.
+#[test]
+fn one_job_fleet_reproduces_run_episode_for_every_pool_policy() {
+    let job = Job::paper_reference();
+    let models = Models::paper_default();
+    let trace = TraceGenerator::calibrated().generate(17).slice_from(60);
+
+    let mut specs = paper_pool();
+    specs.push(PolicySpec::OdOnly);
+    specs.push(PolicySpec::Msu);
+    specs.push(PolicySpec::UniformProgress);
+
+    for (i, spec) in specs.iter().enumerate() {
+        for predictor in [
+            PredictorKind::Oracle,
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.2)),
+        ] {
+            let seed = 1000 + i as u64;
+            let env = PolicyEnv {
+                predictor: predictor.clone(),
+                trace: trace.clone(),
+                seed,
+            };
+            let mut policy = spec.build(&env);
+            let solo = run_episode(&job, &trace, &models, policy.as_mut());
+
+            let fleet_spec =
+                FleetJobSpec::new(job, *spec, predictor).with_seed(seed);
+            let fleet =
+                FleetEngine::new(models, RegionSet::single(trace.clone()))
+                    .run(&[fleet_spec]);
+
+            assert_eq!(
+                fleet.jobs[0].episode,
+                solo,
+                "fleet != episode for {}",
+                spec.label()
+            );
+        }
+    }
+}
+
+/// Capacity conservation under random contention: for every region and
+/// every slot, the spot the arbiter granted never exceeds what the
+/// region had available.
+#[test]
+fn prop_fleet_capacity_conserved_every_slot() {
+    check(
+        "fleet capacity conservation",
+        PropConfig { cases: 40, seed: 0xF1EE7 },
+        |rng: &mut Rng| {
+            let n_jobs = rng.int_range(2, 10) as usize;
+            let n_regions = rng.int_range(1, 3) as usize;
+            let mut sc =
+                FleetScenario::new(n_jobs, n_regions, rng.next_u64());
+            sc.stagger = rng.int_range(0, 3) as usize;
+            sc.migration_patience = rng.int_range(0, 3) as usize;
+            let r = sc.run();
+            for (reg, (granted, avail)) in r
+                .region_granted
+                .iter()
+                .zip(&r.region_avail)
+                .enumerate()
+            {
+                prop_assert!(
+                    granted.len() == avail.len(),
+                    "region {reg}: ragged grant/avail series"
+                );
+                for (t, (g, a)) in granted.iter().zip(avail).enumerate() {
+                    prop_assert!(
+                        g <= a,
+                        "region {reg} slot {t}: granted {g} > avail {a}"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The arbiter itself conserves capacity and never grants above demand,
+/// for arbitrary request mixes.
+#[test]
+fn prop_arbiter_conserves_and_respects_demand() {
+    check(
+        "arbiter conservation",
+        PropConfig { cases: 300, seed: 0xA5B1 },
+        |rng: &mut Rng| {
+            let avail = rng.int_range(0, 20) as u32;
+            let n = rng.int_range(1, 8) as usize;
+            let requests: Vec<SpotRequest> = (0..n)
+                .map(|j| SpotRequest {
+                    job: j,
+                    tier: Tier::cycle(rng.index(3)),
+                    want: rng.int_range(0, 16) as u32,
+                    held: rng.int_range(0, 16) as u32,
+                })
+                .collect();
+            let grants = arbitrate(avail, &requests);
+            let total: u32 = grants.iter().map(|g| g.granted).sum();
+            prop_assert!(
+                total <= avail,
+                "granted {total} > avail {avail}"
+            );
+            for (req, g) in requests.iter().zip(&grants) {
+                prop_assert!(
+                    g.granted <= req.want,
+                    "job {} granted {} above want {}",
+                    req.job,
+                    g.granted,
+                    req.want
+                );
+                prop_assert!(
+                    g.preempted <= req.held,
+                    "job {} preempted {} above held {}",
+                    req.job,
+                    g.preempted,
+                    req.held
+                );
+            }
+            // kept capacity (held - preempted) also fits under avail
+            let kept: u32 =
+                requests.iter().zip(&grants).map(|(r, g)| r.held - g.preempted).sum();
+            prop_assert!(kept <= avail, "kept {kept} > avail {avail}");
+            Ok(())
+        },
+    );
+}
+
+/// With everything else equal, adding a competitor in the same region
+/// can only reduce (never increase) the spot a job receives.
+#[test]
+fn contention_monotonicity() {
+    let job = Job::paper_reference();
+    let trace = TraceGenerator::calibrated().generate(5).slice_from(30);
+    let models = Models::paper_default();
+    let alone = FleetEngine::new(models, RegionSet::single(trace.clone()))
+        .run(&[FleetJobSpec::new(job, PolicySpec::Msu, PredictorKind::Oracle)
+            .with_tier(Tier::Low)]);
+    let contended = FleetEngine::new(models, RegionSet::single(trace))
+        .run(&[
+            FleetJobSpec::new(job, PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::Low),
+            FleetJobSpec::new(job, PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::High),
+        ]);
+    assert!(
+        contended.jobs[0].episode.spot_slots
+            <= alone.jobs[0].episode.spot_slots,
+        "contention increased a low-tier job's spot share"
+    );
+}
+
+/// A job starving in a dead region migrates to the rich one, pays the
+/// migration cost, and still beats staying home.
+#[test]
+fn migration_rescues_a_starved_job() {
+    let job = Job::paper_reference();
+    let models = Models::paper_default();
+    let dead = SpotTrace::new(vec![0.5; 16], vec![0; 16]);
+    let rich = SpotTrace::new(vec![0.35; 16], vec![12; 16]);
+    let regions = || {
+        RegionSet::new(vec![
+            Region { name: "dead".into(), trace: dead.clone() },
+            Region { name: "rich".into(), trace: rich.clone() },
+        ])
+        .with_migration(MigrationModel::new(2.0, 0.5))
+    };
+    let spec =
+        || FleetJobSpec::new(job, PolicySpec::Msu, PredictorKind::Oracle);
+
+    let mobile = FleetEngine::new(models, regions())
+        .with_migration_patience(2)
+        .run(&[spec()]);
+    let stuck = FleetEngine::new(models, regions())
+        .with_migration_patience(0)
+        .run(&[spec()]);
+
+    assert!(mobile.jobs[0].migrations >= 1);
+    assert_eq!(mobile.jobs[0].final_region, 1);
+    assert_eq!(stuck.jobs[0].migrations, 0);
+    assert!(
+        mobile.jobs[0].episode.utility > stuck.jobs[0].episode.utility,
+        "migration should pay off: mobile {} vs stuck {}",
+        mobile.jobs[0].episode.utility,
+        stuck.jobs[0].episode.utility
+    );
+}
+
+/// A predictor-driven policy that migrates must replan against the
+/// destination region's market, not its stale home-region forecast.
+#[test]
+fn migrated_ahap_replans_against_destination_market() {
+    let job = Job::paper_reference(); // n_max 12
+    let models = Models::paper_default();
+    // Home region: 4 cheap spot — but a high-tier MSU squatter takes all
+    // of it every slot, starving the AHAP job. Destination: 12 spot.
+    let home = SpotTrace::new(vec![0.3; 20], vec![4; 20]);
+    let rich = SpotTrace::new(vec![0.3; 20], vec![12; 20]);
+    let regions = RegionSet::new(vec![
+        Region { name: "home".into(), trace: home },
+        Region { name: "rich".into(), trace: rich },
+    ])
+    .with_migration(MigrationModel::new(1.0, 0.5));
+    let engine = FleetEngine::new(models, regions).with_migration_patience(2);
+    let specs = vec![
+        FleetJobSpec::new(job, PolicySpec::Msu, PredictorKind::Oracle)
+            .with_tier(Tier::High),
+        FleetJobSpec::new(
+            job,
+            PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+            PredictorKind::Oracle,
+        )
+        .with_tier(Tier::Low),
+    ];
+    let r = engine.run(&specs);
+    let ahap = &r.jobs[1];
+    assert!(ahap.migrations >= 1, "AHAP never migrated: {ahap:?}");
+    assert_eq!(ahap.final_region, 1);
+    // A stale home-region oracle would keep forecasting 4 available and
+    // cap every post-migration spot request at 4/slot (≤ 32 spot-slots
+    // across the ≤ 8 remaining slots). Seeing 12 proves the replan.
+    assert!(
+        ahap.episode.spot_slots > 32,
+        "post-migration spot usage {} consistent with a stale forecast",
+        ahap.episode.spot_slots
+    );
+}
+
+/// The parallel sweep engine returns exactly the sequential results,
+/// regardless of thread count.
+#[test]
+fn parallel_sweep_is_bit_identical_to_sequential() {
+    let scenarios: Vec<FleetScenario> = (0..6)
+        .map(|s| FleetScenario::new(8, 3, 77 + s).with_stagger(1))
+        .collect();
+    let seq = run_fleet_sweep(&scenarios, 1);
+    for threads in [2usize, 4, 8] {
+        let par = run_fleet_sweep(&scenarios, threads);
+        assert_eq!(seq, par, "sweep diverged at {threads} threads");
+    }
+}
+
+/// The selector's parallel counterfactual path yields the same
+/// selection trajectory as the sequential Algorithm 2.
+#[test]
+fn parallel_selection_matches_sequential() {
+    let specs = vec![
+        PolicySpec::OdOnly,
+        PolicySpec::Msu,
+        PolicySpec::UniformProgress,
+        PolicySpec::Ahanp { sigma: 0.5 },
+        PolicySpec::Ahap { omega: 2, v: 1, sigma: 0.7 },
+        PolicySpec::Ahap { omega: 4, v: 2, sigma: 0.5 },
+    ];
+    let jobs = JobGenerator::default();
+    let models = Models::paper_default();
+    let gen = TraceGenerator::calibrated();
+    let cfg = SelectionConfig { k_jobs: 30, seed: 13, snapshot_every: 10 };
+    let noise = |_: usize| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1));
+
+    let seq = run_selection(&specs, &jobs, &models, &gen, noise, &cfg);
+    let par =
+        run_selection_parallel(&specs, &jobs, &models, &gen, noise, &cfg, 4);
+
+    assert_eq!(seq.final_weights, par.final_weights);
+    assert_eq!(seq.realized, par.realized);
+    assert_eq!(seq.regret, par.regret);
+    assert_eq!(seq.converged_to, par.converged_to);
+    assert_eq!(seq.best_fixed, par.best_fixed);
+}
+
+/// Aggregate bookkeeping sanity on a contended multi-region fleet.
+#[test]
+fn fleet_aggregates_consistent_under_contention() {
+    let r = FleetScenario::new(24, 3, 99).with_stagger(2).run();
+    assert_eq!(r.jobs.len(), 24);
+    let sum_u: f64 = r.jobs.iter().map(|j| j.episode.utility).sum();
+    assert!((r.total_utility - sum_u).abs() < 1e-9);
+    let sum_p: u64 = r.jobs.iter().map(|j| j.episode.preemptions).sum();
+    assert_eq!(r.total_preemptions, sum_p);
+    assert!((0.0..=1.0).contains(&r.on_time_rate));
+    assert_eq!(r.region_utilization.len(), 3);
+    for u in &r.region_utilization {
+        assert!((0.0..=1.0).contains(u));
+    }
+    // every job ran at most its deadline's worth of slots
+    for jo in &r.jobs {
+        assert!(jo.episode.decisions.len() <= 10);
+    }
+}
