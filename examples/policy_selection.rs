@@ -11,6 +11,7 @@ use spotfine::sched::policy::Models;
 use spotfine::sched::pool::{paper_pool, PredictorKind};
 use spotfine::sched::selector::{run_selection, SelectionConfig};
 use spotfine::util::stats;
+use spotfine::util::stats::argmax_total;
 
 fn main() {
     let specs = paper_pool();
@@ -47,12 +48,8 @@ fn main() {
 
     println!("snapshots (top policy by weight):");
     for (k, w) in &out.snapshots {
-        let (best, mass) = w
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, m)| (i, *m))
-            .unwrap();
+        let best = argmax_total(w);
+        let mass = w[best];
         let phase = phases
             .iter()
             .scan(0usize, |acc, (n, s)| {

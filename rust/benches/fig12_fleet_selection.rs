@@ -1,0 +1,158 @@
+//! Fig. 12 (ours) — isolated vs contention-aware policy selection: run
+//! Algorithm 2 twice on the same job stream, once scoring candidates on
+//! private markets and once inside a contended fleet (committed
+//! background jobs replaying while each candidate is swapped into the
+//! learner's slot), then judge both learners' final picks by their
+//! *fleet* utility on held-out contended rounds.
+//!
+//! `--smoke` runs a single round of everything (the CI rot check for
+//! this target); the full run uses 80 learning + 20 evaluation rounds.
+
+use spotfine::fleet::{
+    available_threads, run_fleet_selection, FleetContendedEvaluator,
+};
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::generator::TraceGenerator;
+use spotfine::sched::job::JobGenerator;
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use spotfine::sched::selector::{
+    run_selection, EpisodeEvaluator, SelectionConfig,
+};
+use spotfine::util::bench::{section, time_once};
+use spotfine::util::csvio::CsvWriter;
+use spotfine::util::rng::Rng;
+use spotfine::util::stats;
+use spotfine::util::table::{f, Table};
+
+fn pool() -> Vec<PolicySpec> {
+    vec![
+        PolicySpec::OdOnly,
+        PolicySpec::Msu,
+        PolicySpec::UniformProgress,
+        PolicySpec::Ahanp { sigma: 0.5 },
+        PolicySpec::Ahap { omega: 1, v: 1, sigma: 0.5 },
+        PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+        PolicySpec::Ahap { omega: 5, v: 2, sigma: 0.9 },
+    ]
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let rounds = if smoke { 1 } else { 80 };
+    let eval_rounds = if smoke { 1 } else { 20 };
+    let threads = available_threads();
+    let seed = 42u64;
+
+    println!("=== Fig. 12: isolated vs contention-aware selection ===");
+    println!(
+        "{rounds} learning rounds, {eval_rounds} evaluation rounds, \
+         {threads} thread(s){}\n",
+        if smoke { "  [smoke]" } else { "" }
+    );
+
+    let specs = pool();
+    let jobs = JobGenerator::default();
+    let models = Models::paper_default();
+    let gen = TraceGenerator::calibrated();
+    let cfg = SelectionConfig { k_jobs: rounds, seed, snapshot_every: 0 };
+    let noise =
+        |_: usize| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1));
+
+    let mut csv = CsvWriter::create(
+        "results/fig12_fleet_selection.csv",
+        &["learner", "converged_policy", "regret", "seconds", "fleet_utility"],
+    )
+    .expect("csv");
+
+    // --- Learn both ways on the same stream. --------------------------
+    section("learning");
+    let (isolated, iso_secs) =
+        time_once(|| run_selection(&specs, &jobs, &models, &gen, noise, &cfg));
+    println!(
+        "isolated:    converged to {} in {iso_secs:.2}s (regret {:.2})",
+        specs[isolated.converged_to].label(),
+        isolated.regret.last().unwrap()
+    );
+
+    let mut evaluator = FleetContendedEvaluator::synthetic(8, 2, seed)
+        .with_threads(threads);
+    let (fleet_aware, fleet_secs) = time_once(|| {
+        run_fleet_selection(
+            &specs, &jobs, &models, &gen, noise, &cfg, &mut evaluator,
+        )
+    });
+    println!(
+        "fleet-aware: converged to {} in {fleet_secs:.2}s (regret {:.2})",
+        specs[fleet_aware.converged_to].label(),
+        fleet_aware.regret.last().unwrap()
+    );
+
+    // --- Judge both picks by held-out *fleet* utility. ----------------
+    section("held-out contended evaluation");
+    let mut judge = FleetContendedEvaluator::synthetic(8, 2, seed)
+        .with_threads(threads);
+    let mut rng = Rng::new(seed ^ 0xE7A1_5A17);
+    let mut iso_u = Vec::with_capacity(eval_rounds);
+    let mut fleet_u = Vec::with_capacity(eval_rounds);
+    for e in 0..eval_rounds {
+        let job = jobs.sample(&mut rng);
+        let full = gen.generate(0x5157 + e as u64);
+        let max_off = full.len().saturating_sub(2 * job.deadline).max(1);
+        let trace = full.slice_from(rng.index(max_off));
+        let env = PolicyEnv {
+            predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace: trace.clone(),
+            seed: 0x5157 + e as u64,
+        };
+        let u = judge.utilities(&specs, &job, &trace, &models, &env);
+        iso_u.push(u[isolated.converged_to]);
+        fleet_u.push(u[fleet_aware.converged_to]);
+    }
+    let iso_mean = stats::mean(&iso_u);
+    let fleet_mean = stats::mean(&fleet_u);
+
+    let mut t = Table::new(&[
+        "learner",
+        "converged policy",
+        "regret",
+        "learn secs",
+        "fleet utility (held-out)",
+    ]);
+    t.row(&[
+        "isolated".into(),
+        specs[isolated.converged_to].label(),
+        f(*isolated.regret.last().unwrap(), 2),
+        format!("{iso_secs:.2}"),
+        f(iso_mean, 4),
+    ]);
+    t.row(&[
+        "fleet-aware".into(),
+        specs[fleet_aware.converged_to].label(),
+        f(*fleet_aware.regret.last().unwrap(), 2),
+        format!("{fleet_secs:.2}"),
+        f(fleet_mean, 4),
+    ]);
+    t.print();
+    println!(
+        "\ncontention-aware learning advantage: {:+.4} normalized utility",
+        fleet_mean - iso_mean
+    );
+
+    csv.row(&[
+        "isolated".into(),
+        specs[isolated.converged_to].label(),
+        format!("{:.4}", isolated.regret.last().unwrap()),
+        format!("{iso_secs:.4}"),
+        format!("{iso_mean:.6}"),
+    ]);
+    csv.row(&[
+        "fleet-aware".into(),
+        specs[fleet_aware.converged_to].label(),
+        format!("{:.4}", fleet_aware.regret.last().unwrap()),
+        format!("{fleet_secs:.4}"),
+        format!("{fleet_mean:.6}"),
+    ]);
+    let path = csv.finish().expect("write csv");
+    println!("wrote {}", path.display());
+}

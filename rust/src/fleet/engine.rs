@@ -118,9 +118,44 @@ impl FleetResult {
     }
 }
 
+/// One job's committed per-slot behavior from a recorded fleet run,
+/// indexed by the job's *local* slot (0 = its arrival slot): the
+/// pre-arbitration allocation it requested and the region it occupied.
+/// Replaying a committed trace re-submits exactly these requests to the
+/// arbiter — the job's *choices* are frozen, while its *outcomes*
+/// (grants, preemptions, progress) still respond to whatever contention
+/// the counterfactual fleet produces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommittedTrace {
+    /// Post-clamp allocation requested at each local slot.
+    pub wants: Vec<Allocation>,
+    /// Region occupied at each local slot (migrations appear as a
+    /// change between consecutive entries).
+    pub regions: Vec<usize>,
+}
+
+/// A recorded fleet run: the full result plus every job's committed
+/// trace, replayable through [`FleetEngine::run_with_override`]. This is
+/// what makes per-round counterfactuals cheap: the fleet is simulated
+/// live **once**, then each candidate policy is swapped into one job's
+/// slot while everyone else replays — no policy or predictor rebuilds
+/// for the rest of the fleet.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommittedRun {
+    pub result: FleetResult,
+    pub traces: Vec<CommittedTrace>,
+}
+
+/// What drives a job through the fleet loop: a live policy deciding
+/// slot-by-slot, or a committed trace replaying recorded choices.
+enum JobDriver<'a> {
+    Live(Box<dyn Policy>),
+    Replay(&'a CommittedTrace),
+}
+
 /// Internal per-job simulation state.
-struct JobState {
-    policy: Box<dyn Policy>,
+struct JobState<'a> {
+    driver: JobDriver<'a>,
     region: usize,
     progress: f64,
     prev_total: u32,
@@ -169,6 +204,106 @@ impl FleetEngine {
     /// exhausts its deadline horizon (post-deadline termination is
     /// settled analytically, exactly as in `run_episode`).
     pub fn run(&self, specs: &[FleetJobSpec]) -> FleetResult {
+        self.run_inner(specs, self.live_drivers(specs), false).0
+    }
+
+    /// [`FleetEngine::run`], additionally recording every job's
+    /// committed trace (per-slot requests and regions) so individual
+    /// jobs can later be re-simulated under [`run_with_override`]
+    /// without rebuilding the rest of the fleet.
+    ///
+    /// [`run_with_override`]: FleetEngine::run_with_override
+    pub fn run_recorded(&self, specs: &[FleetJobSpec]) -> CommittedRun {
+        let (result, traces) =
+            self.run_inner(specs, self.live_drivers(specs), true);
+        CommittedRun { result, traces }
+    }
+
+    /// Re-run the fleet with job `live_job`'s policy swapped for
+    /// `policy`, every other job replaying its committed trace from a
+    /// prior [`run_recorded`]. The replayed jobs re-submit exactly their
+    /// recorded requests and re-enter their recorded regions (paying the
+    /// recorded migration costs); the arbiter re-decides every grant
+    /// under the new contention, so the live job's outcome — and the
+    /// replayed jobs' grants, preemptions, and progress — genuinely
+    /// reflect the counterfactual.
+    ///
+    /// Swapping in the *same* policy the recorded run used reproduces
+    /// the recorded [`FleetResult`] bit-for-bit (enforced in
+    /// `tests/fleet_integration.rs`): identical requests from everyone
+    /// arbitrate identically, slot by slot.
+    ///
+    /// [`run_recorded`]: FleetEngine::run_recorded
+    pub fn run_with_override(
+        &self,
+        specs: &[FleetJobSpec],
+        traces: &[CommittedTrace],
+        live_job: usize,
+        policy: PolicySpec,
+    ) -> FleetResult {
+        assert_eq!(
+            specs.len(),
+            traces.len(),
+            "one committed trace per fleet job"
+        );
+        assert!(live_job < specs.len(), "live_job out of range");
+        let mut swapped = specs[live_job].clone();
+        swapped.policy = policy;
+        let drivers: Vec<JobDriver> = specs
+            .iter()
+            .enumerate()
+            .map(|(j, _)| {
+                if j == live_job {
+                    JobDriver::Live(self.build_policy(&swapped))
+                } else {
+                    JobDriver::Replay(&traces[j])
+                }
+            })
+            .collect();
+        let mut all = specs.to_vec();
+        all[live_job] = swapped;
+        self.run_inner(&all, drivers, false).0
+    }
+
+    /// Build (and reset) the live policy for a job spec. The policy sees
+    /// its home region's trace from its own arrival onward (the same
+    /// view `run_episode` gets), so oracle/noisy predictors index local
+    /// slots correctly.
+    fn build_policy(&self, s: &FleetJobSpec) -> Box<dyn Policy> {
+        let env = PolicyEnv {
+            predictor: s.predictor.clone(),
+            trace: self.regions.get(s.home_region).trace.slice_from(s.arrival),
+            seed: s.seed,
+        };
+        let mut policy = s.policy.build(&env);
+        policy.reset();
+        policy
+    }
+
+    fn live_drivers(&self, specs: &[FleetJobSpec]) -> Vec<JobDriver<'static>> {
+        specs
+            .iter()
+            .map(|s| JobDriver::Live(self.build_policy(s)))
+            .collect()
+    }
+
+    /// The shared slot loop behind [`run`], [`run_recorded`], and
+    /// [`run_with_override`]. Every accounting expression mirrors
+    /// `run_episode`'s exactly (same operations, same order) — that is
+    /// the 1-job/1-region equivalence invariant — and replay drivers
+    /// differ from live ones *only* in where a slot's request and region
+    /// come from.
+    ///
+    /// [`run`]: FleetEngine::run
+    /// [`run_recorded`]: FleetEngine::run_recorded
+    /// [`run_with_override`]: FleetEngine::run_with_override
+    fn run_inner<'a>(
+        &self,
+        specs: &[FleetJobSpec],
+        drivers: Vec<JobDriver<'a>>,
+        record: bool,
+    ) -> (FleetResult, Vec<CommittedTrace>) {
+        assert_eq!(specs.len(), drivers.len());
         for s in specs {
             assert!(
                 s.home_region < self.regions.len(),
@@ -184,21 +319,12 @@ impl FleetEngine {
             .unwrap_or(0);
         let n_regions = self.regions.len();
 
-        // Build per-job state. Each policy sees its home region's trace
-        // from its own arrival onward (the same view `run_episode` gets),
-        // so oracle/noisy predictors index local slots correctly.
         let mut states: Vec<JobState> = specs
             .iter()
-            .map(|s| {
-                let env = PolicyEnv {
-                    predictor: s.predictor.clone(),
-                    trace: self.regions.get(s.home_region).trace.slice_from(s.arrival),
-                    seed: s.seed,
-                };
-                let mut policy = s.policy.build(&env);
-                policy.reset();
+            .zip(drivers)
+            .map(|(s, driver)| {
                 JobState {
-                    policy,
+                    driver,
                     region: s.home_region,
                     progress: 0.0,
                     prev_total: 0,
@@ -222,9 +348,17 @@ impl FleetEngine {
 
         let mut region_granted: Vec<Vec<u32>> = vec![Vec::with_capacity(horizon); n_regions];
         let mut region_avail: Vec<Vec<u32>> = vec![Vec::with_capacity(horizon); n_regions];
+        let mut committed: Vec<CommittedTrace> = specs
+            .iter()
+            .map(|s| CommittedTrace {
+                wants: Vec::with_capacity(if record { s.job.deadline } else { 0 }),
+                regions: Vec::with_capacity(if record { s.job.deadline } else { 0 }),
+            })
+            .collect();
 
         for t in 0..horizon {
-            // Phase 1 — every active job observes its region and decides.
+            // Phase 1 — every active job observes its region and decides
+            // (or replays its committed decision).
             for (j, s) in specs.iter().enumerate() {
                 let st = &mut states[j];
                 st.pending = None;
@@ -236,22 +370,59 @@ impl FleetEngine {
                     st.done = true;
                     continue;
                 }
+                if let JobDriver::Replay(tr) = &st.driver {
+                    if local_t < tr.regions.len() {
+                        let region_now = tr.regions[local_t];
+                        if region_now != st.region {
+                            // The recorded migration, replayed: same
+                            // cost, same cold-restart μ, same freed
+                            // capacity. The live path books these at the
+                            // decision slot and the replay at the
+                            // arrival slot — invisible in the totals,
+                            // identical at arbitration time.
+                            st.cost += self.regions.migration.cost;
+                            st.migrations += 1;
+                            st.held_spot = 0;
+                            st.migration_mu_pending = true;
+                            st.region = region_now;
+                        }
+                    }
+                }
                 let obs = self.regions.observe(
                     st.region,
                     t,
                     local_t,
                     self.models.on_demand_price,
                 );
-                let ctx = SlotContext {
-                    t: local_t,
-                    obs,
-                    progress: st.progress,
-                    prev_total: st.prev_total,
-                    prev_avail: st.prev_avail,
-                    job: &s.job,
-                    models: &self.models,
+                let want = match &mut st.driver {
+                    JobDriver::Live(policy) => {
+                        let ctx = SlotContext {
+                            t: local_t,
+                            obs,
+                            progress: st.progress,
+                            prev_total: st.prev_total,
+                            prev_avail: st.prev_avail,
+                            job: &s.job,
+                            models: &self.models,
+                        };
+                        policy.decide(&ctx).clamp_to_job(&s.job, obs.avail)
+                    }
+                    // Recorded wants are post-clamp against the same
+                    // job and the same observation (regions replay, so
+                    // the trace lookup is identical) — re-clamping
+                    // would be a no-op. Past the committed plan's end
+                    // (the job completed there in the recorded run but
+                    // is behind under this contention) its frozen
+                    // choice is to buy nothing: it idles out the
+                    // horizon and settles like any live job that did.
+                    JobDriver::Replay(tr) => {
+                        if local_t < tr.wants.len() {
+                            tr.wants[local_t]
+                        } else {
+                            Allocation::idle()
+                        }
+                    }
                 };
-                let want = st.policy.decide(&ctx).clamp_to_job(&s.job, obs.avail);
                 st.pending = Some((want, obs));
             }
 
@@ -290,6 +461,10 @@ impl FleetEngine {
                     continue;
                 };
                 let local_t = t - s.arrival;
+                if record {
+                    committed[j].wants.push(want);
+                    committed[j].regions.push(st.region);
+                }
                 let spot = spot_grant[j];
                 st.preemptions += preempted[j] as u64;
                 st.held_spot = spot;
@@ -319,13 +494,19 @@ impl FleetEngine {
                     continue;
                 }
 
-                // Starvation-triggered migration. Two ways to starve:
-                // the job asked for spot and the arbiter granted none
-                // (contention), or the policy idled because the region
-                // cannot even support N^min (spot-first policies like
-                // MSU idle rather than run below the floor). After
-                // `patience` such slots, flee to the observably best
-                // region if it is strictly better.
+                // Starvation-triggered migration — live jobs only: a
+                // replayed job's migrations come from its recorded
+                // region sequence, applied at slot entry above.
+                if matches!(st.driver, JobDriver::Replay(_)) {
+                    continue;
+                }
+                // Two ways to starve: the job asked for spot and the
+                // arbiter granted none (contention), or the policy
+                // idled because the region cannot even support N^min
+                // (spot-first policies like MSU idle rather than run
+                // below the floor). After `patience` such slots, flee
+                // to the observably best region if it is strictly
+                // better.
                 if (want.spot > 0 && spot == 0)
                     || (total == 0 && obs.avail < s.job.n_min)
                 {
@@ -363,8 +544,9 @@ impl FleetEngine {
                                 .slice_from(s.arrival),
                             seed: s.seed,
                         };
-                        st.policy = s.policy.build(&env);
-                        st.policy.reset();
+                        let mut policy = s.policy.build(&env);
+                        policy.reset();
+                        st.driver = JobDriver::Live(policy);
                     }
                 }
             }
@@ -435,19 +617,22 @@ impl FleetEngine {
             })
             .collect();
 
-        FleetResult {
-            jobs,
-            slots: horizon,
-            total_utility,
-            total_value,
-            total_cost,
-            on_time_rate,
-            total_preemptions,
-            total_migrations,
-            region_utilization,
-            region_granted,
-            region_avail,
-        }
+        (
+            FleetResult {
+                jobs,
+                slots: horizon,
+                total_utility,
+                total_value,
+                total_cost,
+                on_time_rate,
+                total_preemptions,
+                total_migrations,
+                region_utilization,
+                region_granted,
+                region_avail,
+            },
+            committed,
+        )
     }
 }
 
@@ -579,6 +764,109 @@ mod tests {
         let r = engine_single(trace).run(&[spec]);
         assert!(r.jobs[0].episode.spot_slots > 0);
         assert_eq!(r.slots, 15);
+    }
+
+    #[test]
+    fn recorded_traces_align_with_ran_slots() {
+        let j = job();
+        let trace = flat_trace(0.3, 6, 24);
+        let specs = vec![
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle),
+            FleetJobSpec::new(j, PolicySpec::UniformProgress, PredictorKind::Oracle)
+                .arriving_at(3),
+        ];
+        let rec = engine_single(trace).run_recorded(&specs);
+        assert_eq!(rec.traces.len(), 2);
+        for (jo, tr) in rec.result.jobs.iter().zip(&rec.traces) {
+            // one recorded want + region per slot the job actually ran
+            assert_eq!(tr.wants.len(), jo.episode.decisions.len());
+            assert_eq!(tr.regions.len(), tr.wants.len());
+            assert!(tr.regions.iter().all(|&r| r == 0));
+        }
+        // run_recorded's result is exactly run's
+        assert_eq!(rec.result, engine_single(flat_trace(0.3, 6, 24)).run(&specs));
+    }
+
+    #[test]
+    fn override_with_committed_policy_is_identity() {
+        // Swapping a job's own policy back in (others replaying) must
+        // reproduce the recorded contended run bit-for-bit.
+        let j = job();
+        let trace = flat_trace(0.3, 6, 24);
+        let specs = vec![
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::High),
+            FleetJobSpec::new(j, PolicySpec::UniformProgress, PredictorKind::Oracle)
+                .with_tier(Tier::Low),
+        ];
+        let engine = engine_single(trace);
+        let rec = engine.run_recorded(&specs);
+        for live in 0..specs.len() {
+            let replayed = engine.run_with_override(
+                &specs,
+                &rec.traces,
+                live,
+                specs[live].policy,
+            );
+            assert_eq!(replayed, rec.result, "identity broke for job {live}");
+        }
+    }
+
+    #[test]
+    fn override_identity_holds_across_a_recorded_migration() {
+        // The committed run migrates (dead home region); replaying the
+        // other job's recorded regions must reproduce the result.
+        let j = job();
+        let dead = flat_trace(0.5, 0, 16);
+        let rich = flat_trace(0.4, 12, 16);
+        let regions = RegionSet::new(vec![
+            Region { name: "dead".into(), trace: dead },
+            Region { name: "rich".into(), trace: rich },
+        ])
+        .with_migration(MigrationModel::new(3.0, 0.5));
+        let engine = FleetEngine::new(Models::paper_default(), regions)
+            .with_migration_patience(2);
+        let specs = vec![
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle),
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle)
+                .in_region(1),
+        ];
+        let rec = engine.run_recorded(&specs);
+        assert!(rec.result.jobs[0].migrations >= 1, "scenario lost its migration");
+        // job 1 is live again, job 0 (the migrant) replays its move
+        let replayed =
+            engine.run_with_override(&specs, &rec.traces, 1, PolicySpec::Msu);
+        assert_eq!(replayed, rec.result);
+        let migrant = &rec.traces[0];
+        assert!(migrant.regions.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn override_swaps_one_policy_and_relieves_contention() {
+        // Two MSU jobs fight over 6 spot. Swapping job 0 to OD-Only in
+        // the counterfactual frees the whole region for the replaying
+        // job 1, whose frozen requests now get fully granted.
+        let j = job();
+        let trace = flat_trace(0.3, 6, 24);
+        let specs = vec![
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::High),
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::Low),
+        ];
+        let engine = engine_single(trace);
+        let rec = engine.run_recorded(&specs);
+        let counter =
+            engine.run_with_override(&specs, &rec.traces, 0, PolicySpec::OdOnly);
+        assert_eq!(counter.jobs[0].label, PolicySpec::OdOnly.label());
+        assert_eq!(counter.jobs[0].episode.spot_slots, 0);
+        assert!(
+            counter.jobs[1].episode.spot_slots
+                > rec.result.jobs[1].episode.spot_slots,
+            "replayed job should pick up the freed spot: {} vs {}",
+            counter.jobs[1].episode.spot_slots,
+            rec.result.jobs[1].episode.spot_slots
+        );
     }
 
     #[test]

@@ -8,19 +8,31 @@
 //!   with priority tiers and cascading preemption);
 //! - [`engine`] — the [`engine::FleetEngine`] stepping every job
 //!   slot-by-slot under its own policy, with the invariant that a
-//!   1-job/1-region fleet reproduces `run_episode` bit-for-bit;
+//!   1-job/1-region fleet reproduces `run_episode` bit-for-bit, plus the
+//!   record/replay API ([`engine::FleetEngine::run_recorded`] /
+//!   [`engine::FleetEngine::run_with_override`]) that makes one-job
+//!   counterfactuals cheap;
+//! - [`select`] — fleet-aware policy selection: the EG learner's
+//!   counterfactuals evaluated *under contention*, each candidate
+//!   swapped into the fleet while the other jobs replay their committed
+//!   choices;
 //! - [`sweep`] — the `std::thread::scope`-based parallel executor that
-//!   fleets, benches, and the selector's counterfactual evaluation
+//!   fleets, benches, and both selectors' counterfactual evaluations
 //!   route through.
 
 pub mod capacity;
 pub mod engine;
 pub mod region;
+pub mod select;
 pub mod sweep;
 
 pub use capacity::{arbitrate, SpotGrant, SpotRequest, Tier};
-pub use engine::{FleetEngine, FleetJobSpec, FleetResult, JobOutcome};
+pub use engine::{
+    CommittedRun, CommittedTrace, FleetEngine, FleetJobSpec, FleetResult,
+    JobOutcome,
+};
 pub use region::{MigrationModel, Region, RegionSet};
+pub use select::{run_fleet_selection, FleetContendedEvaluator};
 pub use sweep::{
     available_threads, run_fleet_sweep, run_parallel, run_selection_parallel,
     FleetScenario,

@@ -1,0 +1,326 @@
+//! Fleet-aware policy selection: Algorithm 2's EG learner run *inside*
+//! the contended fleet. The paper's selector scores every candidate
+//! policy against a private market, so its learned "best policy" can be
+//! wrong the moment capacity is shared — a spot-greedy policy that
+//! dominates in isolation can starve behind higher-priority tenants.
+//!
+//! [`FleetContendedEvaluator`] closes that gap: each selection round it
+//! simulates the fleet **once** with the incumbent policy in the
+//! learner's slot ([`FleetEngine::run_recorded`]), then swaps each
+//! candidate into that slot while every other job replays its committed
+//! choices ([`FleetEngine::run_with_override`]), fanning the M
+//! counterfactual fleet runs across threads with
+//! [`crate::fleet::sweep::run_parallel`]. The EG learner itself — the
+//! job stream, weights, regret accounting — is untouched: both
+//! evaluators plug into the same
+//! [`crate::sched::selector::run_selection_eval`] loop, so isolated and
+//! contention-aware selection trajectories are directly comparable.
+//!
+//! Degenerate invariant: with no background jobs and one region, every
+//! counterfactual is a 1-job/1-region fleet, which reproduces
+//! `run_episode` bit-for-bit — so fleet-aware selection with an empty
+//! fleet yields *exactly* the isolated selection trajectory (enforced in
+//! `tests/fleet_integration.rs`).
+
+use crate::fleet::capacity::Tier;
+use crate::fleet::engine::{FleetEngine, FleetJobSpec};
+use crate::fleet::region::{MigrationModel, Region, RegionSet};
+use crate::fleet::sweep::{fleet_roster, run_parallel};
+use crate::forecast::noise::NoiseSpec;
+use crate::market::generator::TraceGenerator;
+use crate::market::trace::SpotTrace;
+use crate::sched::job::{Job, JobGenerator};
+use crate::sched::policy::Models;
+use crate::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use crate::sched::selector::{
+    run_selection_eval, EpisodeEvaluator, SelectionConfig, SelectionOutcome,
+};
+use crate::util::rng::Rng;
+use crate::util::stats::argmax_total;
+
+/// Scores each candidate policy by its utility inside a contended
+/// multi-job, multi-region fleet rather than on a private market.
+///
+/// The learner's job (the one the selection loop samples each round) is
+/// homed in region 0, whose market is exactly the trace the loop hands
+/// over; regions 1.. get independent per-round traces seeded off the
+/// round's environment seed. The `background` jobs are the rest of the
+/// fleet — their policies are fixed ("committed"), and within a round
+/// their per-slot choices are recorded once and replayed under every
+/// candidate, so all M candidates are judged against the *same* fleet
+/// behavior (the full-information EG setting Theorem 2 assumes).
+#[derive(Debug, Clone)]
+pub struct FleetContendedEvaluator {
+    /// The committed fleet the learner contends with. Home regions must
+    /// be `< n_regions`.
+    pub background: Vec<FleetJobSpec>,
+    /// Regions in the fleet; region 0 is the learner's.
+    pub n_regions: usize,
+    /// Generator for regions 1.. (fresh per-round traces).
+    pub region_gen: TraceGenerator,
+    pub migration: MigrationModel,
+    pub migration_patience: usize,
+    /// Priority tier of the learner's job.
+    pub learner_tier: Tier,
+    /// Threads for fanning the per-round counterfactual fleet runs.
+    pub threads: usize,
+    /// Candidate run in the learner's slot during the recorded run:
+    /// starts at index 0, then tracks each round's best candidate
+    /// (lowest index on ties).
+    incumbent: usize,
+}
+
+impl FleetContendedEvaluator {
+    /// Evaluator over an explicit committed fleet (scripted scenarios).
+    pub fn new(background: Vec<FleetJobSpec>, n_regions: usize) -> Self {
+        assert!(n_regions >= 1);
+        for s in &background {
+            assert!(
+                s.home_region < n_regions,
+                "background job homed in region {} of {n_regions}",
+                s.home_region
+            );
+        }
+        FleetContendedEvaluator {
+            background,
+            n_regions,
+            region_gen: TraceGenerator::calibrated(),
+            migration: MigrationModel::default(),
+            migration_patience: 2,
+            learner_tier: Tier::Normal,
+            threads: 1,
+            incumbent: 0,
+        }
+    }
+
+    /// A synthetic committed fleet: `n_background` jobs sampled from the
+    /// default [`JobGenerator`], policies cycling through
+    /// [`fleet_roster`], tiers and home regions cycling — the same mix
+    /// [`crate::fleet::sweep::FleetScenario`] fields.
+    pub fn synthetic(n_background: usize, n_regions: usize, seed: u64) -> Self {
+        const BG_STREAM: u64 = 0x5EED_0B06_5EED_0B06;
+        let gen = JobGenerator::default();
+        let roster = fleet_roster();
+        let mut rng = Rng::new(seed ^ BG_STREAM);
+        let background = (0..n_background)
+            .map(|k| {
+                let job = gen.sample(&mut rng);
+                FleetJobSpec {
+                    job,
+                    policy: roster[k % roster.len()],
+                    predictor: PredictorKind::Noisy(
+                        NoiseSpec::fixed_mag_uniform(0.1),
+                    ),
+                    seed: seed
+                        ^ BG_STREAM
+                        ^ (k as u64 + 1).wrapping_mul(0x9E37_79B9),
+                    tier: Tier::cycle(k),
+                    home_region: k % n_regions,
+                    arrival: 0,
+                }
+            })
+            .collect();
+        FleetContendedEvaluator::new(background, n_regions)
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn with_learner_tier(mut self, tier: Tier) -> Self {
+        self.learner_tier = tier;
+        self
+    }
+
+    pub fn with_migration(mut self, m: MigrationModel) -> Self {
+        self.migration = m;
+        self
+    }
+
+    pub fn with_migration_patience(mut self, patience: usize) -> Self {
+        self.migration_patience = patience;
+        self
+    }
+
+    /// Index of the candidate currently run in the learner's slot
+    /// during recorded runs.
+    pub fn incumbent(&self) -> usize {
+        self.incumbent
+    }
+
+    /// Materialize this round's fleet: region 0 carries the learner's
+    /// trace, regions 1.. get generated traces seeded off `round_seed`.
+    fn build_engine(
+        &self,
+        models: &Models,
+        trace: &SpotTrace,
+        round_seed: u64,
+    ) -> FleetEngine {
+        let mut regions = Vec::with_capacity(self.n_regions);
+        regions.push(Region { name: "learner".to_string(), trace: trace.clone() });
+        for r in 1..self.n_regions {
+            regions.push(Region {
+                name: format!("bg-{r}"),
+                trace: self.region_gen.generate(
+                    round_seed ^ (r as u64).wrapping_mul(0xA5A5_5A5A_9E37_79B9),
+                ),
+            });
+        }
+        FleetEngine::new(
+            *models,
+            RegionSet::new(regions).with_migration(self.migration),
+        )
+        .with_migration_patience(self.migration_patience)
+    }
+}
+
+impl EpisodeEvaluator for FleetContendedEvaluator {
+    fn utilities(
+        &mut self,
+        specs: &[PolicySpec],
+        job: &Job,
+        trace: &SpotTrace,
+        models: &Models,
+        env: &PolicyEnv,
+    ) -> Vec<f64> {
+        let engine = self.build_engine(models, trace, env.seed);
+        let incumbent = self.incumbent.min(specs.len() - 1);
+        let mut all = self.background.clone();
+        let learner_idx = all.len();
+        all.push(FleetJobSpec {
+            job: *job,
+            policy: specs[incumbent],
+            predictor: env.predictor.clone(),
+            seed: env.seed,
+            tier: self.learner_tier,
+            home_region: 0,
+            arrival: 0,
+        });
+
+        // One live fleet simulation, then M−1 replayed counterfactuals:
+        // overriding with the incumbent itself reproduces the recorded
+        // run bit-for-bit (the identity enforced in engine and
+        // integration tests), so its utility is read straight off the
+        // recorded result instead of re-simulating.
+        let committed = engine.run_recorded(&all);
+        let u: Vec<f64> = run_parallel(specs, self.threads, |i, cand| {
+            let utility = if i == incumbent {
+                committed.result.jobs[learner_idx].episode.utility
+            } else {
+                engine
+                    .run_with_override(
+                        &all,
+                        &committed.traces,
+                        learner_idx,
+                        *cand,
+                    )
+                    .jobs[learner_idx]
+                    .episode
+                    .utility
+            };
+            job.normalize_utility(utility, models.on_demand_price)
+        });
+        self.incumbent = argmax_total(&u);
+        u
+    }
+}
+
+/// Algorithm 2 learning *under contention*: the standard selection loop
+/// with the counterfactual pool evaluated inside `evaluator`'s fleet.
+/// Deterministic for a fixed evaluator configuration — the trajectory is
+/// bit-identical for any `threads` (the counterfactual fan-out preserves
+/// input order).
+pub fn run_fleet_selection(
+    specs: &[PolicySpec],
+    jobs: &JobGenerator,
+    models: &Models,
+    trace_gen: &TraceGenerator,
+    predictor_at: impl FnMut(usize) -> PredictorKind,
+    cfg: &SelectionConfig,
+    evaluator: &mut FleetContendedEvaluator,
+) -> SelectionOutcome {
+    run_selection_eval(specs, jobs, models, trace_gen, predictor_at, cfg, evaluator)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_pool() -> Vec<PolicySpec> {
+        vec![
+            PolicySpec::OdOnly,
+            PolicySpec::Msu,
+            PolicySpec::UniformProgress,
+            PolicySpec::Ahanp { sigma: 0.5 },
+        ]
+    }
+
+    #[test]
+    fn empty_fleet_matches_isolated_selection_exactly() {
+        // No background, one region: every counterfactual is a
+        // 1-job/1-region fleet == run_episode, so the whole trajectory
+        // must equal the isolated selector's bit-for-bit.
+        use crate::sched::selector::run_selection;
+        let specs = small_pool();
+        let jobs = JobGenerator::default();
+        let models = Models::paper_default();
+        let gen = TraceGenerator::calibrated();
+        let cfg = SelectionConfig { k_jobs: 15, seed: 21, snapshot_every: 5 };
+        let noise =
+            |_: usize| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1));
+
+        let isolated = run_selection(&specs, &jobs, &models, &gen, noise, &cfg);
+        let mut ev = FleetContendedEvaluator::new(Vec::new(), 1);
+        let fleet =
+            run_fleet_selection(&specs, &jobs, &models, &gen, noise, &cfg, &mut ev);
+
+        assert_eq!(isolated.realized, fleet.realized);
+        assert_eq!(isolated.expected, fleet.expected);
+        assert_eq!(isolated.regret, fleet.regret);
+        assert_eq!(isolated.final_weights, fleet.final_weights);
+        assert_eq!(isolated.snapshots, fleet.snapshots);
+        assert_eq!(isolated.converged_to, fleet.converged_to);
+        assert_eq!(isolated.best_fixed, fleet.best_fixed);
+    }
+
+    #[test]
+    fn synthetic_evaluator_is_deterministic_and_normalized() {
+        let specs = small_pool();
+        let models = Models::paper_default();
+        let gen = TraceGenerator::calibrated();
+        let job = Job::paper_reference();
+        let trace = gen.generate(9).slice_from(40);
+        let env = PolicyEnv {
+            predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace: trace.clone(),
+            seed: 77,
+        };
+        let mut a = FleetContendedEvaluator::synthetic(5, 2, 3);
+        let mut b = FleetContendedEvaluator::synthetic(5, 2, 3);
+        let ua = a.utilities(&specs, &job, &trace, &models, &env);
+        let ub = b.utilities(&specs, &job, &trace, &models, &env);
+        assert_eq!(ua, ub);
+        assert_eq!(ua.len(), specs.len());
+        assert!(ua.iter().all(|u| (0.0..=1.0).contains(u)));
+        assert_eq!(a.incumbent(), b.incumbent());
+    }
+
+    #[test]
+    fn incumbent_tracks_round_best() {
+        let specs = small_pool();
+        let models = Models::paper_default();
+        let gen = TraceGenerator::calibrated();
+        let job = Job::paper_reference();
+        let trace = gen.generate(2).slice_from(30);
+        let env = PolicyEnv {
+            predictor: PredictorKind::Oracle,
+            trace: trace.clone(),
+            seed: 5,
+        };
+        let mut ev = FleetContendedEvaluator::synthetic(3, 2, 11);
+        assert_eq!(ev.incumbent(), 0);
+        let u = ev.utilities(&specs, &job, &trace, &models, &env);
+        assert_eq!(ev.incumbent(), crate::util::stats::argmax_total(&u));
+    }
+}

@@ -4,9 +4,11 @@
 //! static partition; results come back in input order, making parallel
 //! runs bit-identical to sequential ones.
 //!
-//! The benches (`fig11_fleet_scaling`) and the policy selector's
-//! counterfactual evaluation ([`run_selection_parallel`]) both route
-//! through [`run_parallel`].
+//! The benches (`fig11_fleet_scaling`), the policy selector's
+//! counterfactual evaluation ([`run_selection_parallel`]), and the
+//! fleet-aware selector's per-round counterfactual fleet runs
+//! ([`crate::fleet::select::FleetContendedEvaluator`]) all route through
+//! [`run_parallel`].
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;

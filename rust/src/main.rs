@@ -1,14 +1,16 @@
 //! spotfine CLI — the leader entrypoint.
 //!
 //! Subcommands:
-//!   train       end-to-end: schedule + really fine-tune via PJRT
-//!   simulate    run one policy on one job/market (fast, no training)
-//!   fleet       multi-job multi-region fleet with shared capacity
-//!   compare     policy comparison table on sampled jobs (Fig. 5 row)
-//!   select      online policy selection over a job stream (Alg. 2)
-//!   trace       generate / analyze a synthetic market trace (Fig. 2)
-//!   forecast    fit ARIMA on a trace and report accuracy (Fig. 3)
-//!   toy         the Fig. 4 five-strategy walkthrough
+//!   train        end-to-end: schedule + really fine-tune via PJRT
+//!   simulate     run one policy on one job/market (fast, no training)
+//!   fleet        multi-job multi-region fleet with shared capacity
+//!   compare      policy comparison table on sampled jobs (Fig. 5 row)
+//!   select       online policy selection over a job stream (Alg. 2)
+//!   fleet-select Alg. 2 learning *inside* the contended fleet, vs the
+//!                isolated learner on the same job stream
+//!   trace        generate / analyze a synthetic market trace (Fig. 2)
+//!   forecast     fit ARIMA on a trace and report accuracy (Fig. 3)
+//!   toy          the Fig. 4 five-strategy walkthrough
 //!
 //! Run `spotfine help` for flags.
 
@@ -19,7 +21,8 @@ use spotfine::cli::args::Args;
 use spotfine::config::schema::ExperimentConfig;
 use spotfine::coordinator::leader::{Leader, LeaderConfig};
 use spotfine::fleet::{
-    available_threads, run_fleet_sweep, run_selection_parallel, FleetScenario,
+    available_threads, run_fleet_selection, run_fleet_sweep,
+    run_selection_parallel, FleetContendedEvaluator, FleetScenario,
     MigrationModel,
 };
 use spotfine::forecast::arima::{ArimaPredictor, ArimaSpec};
@@ -52,6 +55,9 @@ COMMANDS:
              shared capacity, priority arbitration and migration
   compare    policy comparison table over sampled jobs
   select     online policy selection (Algorithm 2) over a job stream
+  fleet-select  policy selection learned *inside* a contended fleet
+             (counterfactuals under shared capacity), compared against
+             the isolated learner on the same job stream
   trace      generate/analyze a market trace (Fig. 2 statistics)
   forecast   ARIMA forecast accuracy on a trace (Fig. 3)
   toy        the Fig. 4 five-strategy example
@@ -71,6 +77,12 @@ FLEET FLAGS:
   --patience <slots>    starved slots before migration, 0=never (default 2)
   --migration-cost <$>  flat cost charged per region move (default 2.0)
   --per-job             print the per-job outcome table
+
+FLEET-SELECT FLAGS:
+  --jobs <n>            selection rounds K (default 60)
+  --fleet-jobs <n>      committed background jobs contending (default 8)
+  --regions <n>         regional spot markets (default 2)
+  --skip-isolated       don't run the isolated-learner comparison
 ";
 
 fn main() -> ExitCode {
@@ -124,6 +136,7 @@ fn run() -> anyhow::Result<()> {
         Some("fleet") => cmd_fleet(&args),
         Some("compare") => cmd_compare(&args),
         Some("select") => cmd_select(&args),
+        Some("fleet-select") => cmd_fleet_select(&args),
         Some("trace") => cmd_trace(&args),
         Some("forecast") => cmd_forecast(&args),
         Some("toy") => cmd_toy(&args),
@@ -435,6 +448,112 @@ fn cmd_select(args: &Args) -> anyhow::Result<()> {
         out.regret_bound()
     );
     println!("mean realized u    {:.4}", stats::mean(&out.realized));
+    Ok(())
+}
+
+fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let seed = args.get_u64("seed", cfg.seed)?;
+    let rounds = args.get_usize("jobs", 60)?.max(1);
+    let n_background = args.get_usize("fleet-jobs", 8)?;
+    let n_regions = args.get_usize("regions", 2)?.max(1);
+    let threads = args.get_usize("threads", available_threads())?.max(1);
+    let specs = paper_pool();
+    let sel_cfg = SelectionConfig {
+        k_jobs: rounds,
+        seed,
+        snapshot_every: (rounds / 10).max(1),
+    };
+    let gen = TraceGenerator::new(cfg.market.clone());
+
+    // Contention-aware: each round's 112 counterfactuals are fleet runs
+    // in which the candidate replaces the learner's slot while the
+    // committed background replays.
+    let mut evaluator =
+        FleetContendedEvaluator::synthetic(n_background, n_regions, seed)
+            .with_threads(threads);
+    let (fleet_out, fleet_secs) = spotfine::util::bench::time_once(|| {
+        run_fleet_selection(
+            &specs,
+            &cfg.jobs,
+            &cfg.models,
+            &gen,
+            |_| PredictorKind::Noisy(cfg.noise),
+            &sel_cfg,
+            &mut evaluator,
+        )
+    });
+
+    println!("pool size          {}", specs.len());
+    println!(
+        "rounds             {rounds} x ({} bg jobs + learner) x {n_regions} region(s), {threads} thread(s)",
+        n_background
+    );
+    println!("noise              {}", cfg.noise.label());
+    println!();
+    println!("contention-aware   ({fleet_secs:.1}s)");
+    println!(
+        "  converged policy #{} {}",
+        fleet_out.converged_to + 1,
+        specs[fleet_out.converged_to].label()
+    );
+    println!(
+        "  best fixed       #{} {}",
+        fleet_out.best_fixed + 1,
+        specs[fleet_out.best_fixed].label()
+    );
+    println!(
+        "  regret           {:.2} (bound {:.2})",
+        fleet_out.regret.last().unwrap(),
+        fleet_out.regret_bound()
+    );
+    println!(
+        "  mean realized u  {:.4}",
+        stats::mean(&fleet_out.realized)
+    );
+
+    if !args.get_bool("skip-isolated") {
+        // The isolated learner on the exact same job stream (same seeds,
+        // same traces, same noise): what Alg. 2 would have learned
+        // believing each job had the market to itself.
+        let (iso_out, iso_secs) = spotfine::util::bench::time_once(|| {
+            run_selection_parallel(
+                &specs,
+                &cfg.jobs,
+                &cfg.models,
+                &gen,
+                |_| PredictorKind::Noisy(cfg.noise),
+                &sel_cfg,
+                threads,
+            )
+        });
+        println!();
+        println!("isolated           ({iso_secs:.1}s)");
+        println!(
+            "  converged policy #{} {}",
+            iso_out.converged_to + 1,
+            specs[iso_out.converged_to].label()
+        );
+        println!(
+            "  regret           {:.2} (bound {:.2})",
+            iso_out.regret.last().unwrap(),
+            iso_out.regret_bound()
+        );
+        println!("  mean realized u  {:.4}", stats::mean(&iso_out.realized));
+        println!();
+        if iso_out.converged_to == fleet_out.converged_to {
+            println!(
+                "both learners agree on {} for this fleet",
+                specs[fleet_out.converged_to].label()
+            );
+        } else {
+            println!(
+                "contention changes the learned policy: isolated {} vs fleet-aware {}",
+                specs[iso_out.converged_to].label(),
+                specs[fleet_out.converged_to].label()
+            );
+        }
+    }
     Ok(())
 }
 

@@ -5,11 +5,12 @@
 
 use crate::market::generator::TraceGenerator;
 use crate::market::trace::SpotTrace;
-use crate::sched::job::JobGenerator;
+use crate::sched::job::{Job, JobGenerator};
 use crate::sched::policy::Models;
 use crate::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
 use crate::sched::simulate::run_episode;
 use crate::util::rng::Rng;
+use crate::util::stats::argmax_total;
 
 /// The multiplicative-weights learner itself (decoupled from the
 /// scheduling domain so it can be tested on synthetic utility streams).
@@ -47,14 +48,12 @@ impl EgSelector {
         rng.categorical(&self.weights)
     }
 
-    /// Index of the currently highest-weighted policy.
+    /// Index of the currently highest-weighted policy, under a total
+    /// order: NaN weights are treated as −∞ and ties break to the
+    /// lowest index, so `best` never panics and is deterministic even
+    /// on a freshly-uniform (all-tied) distribution.
     pub fn best(&self) -> usize {
-        self.weights
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap()
+        argmax_total(&self.weights)
     }
 
     /// Expected utility of the current distribution on a utility vector.
@@ -131,6 +130,71 @@ impl SelectionOutcome {
     }
 }
 
+/// How one selection round's counterfactual pool utilities are produced.
+///
+/// Algorithm 2 is agnostic to *where* a policy's utility comes from —
+/// only that every candidate is scored on the same job. The seam exists
+/// because that "where" is exactly what changes between the paper's
+/// setting and the fleet: [`SingleJobEvaluator`] scores each candidate
+/// with [`run_episode`] against a private market, while the fleet's
+/// [`crate::fleet::select::FleetContendedEvaluator`] scores it inside a
+/// contended multi-job fleet where the other jobs replay their committed
+/// choices. Any `FnMut` with the matching signature is also an
+/// evaluator (the closure seam `fleet::sweep::run_selection_parallel`
+/// uses to fan episodes across cores).
+pub trait EpisodeEvaluator {
+    /// Normalized utility in [0, 1] of **every** spec on the given
+    /// job/trace (must return exactly `specs.len()` entries).
+    fn utilities(
+        &mut self,
+        specs: &[PolicySpec],
+        job: &Job,
+        trace: &SpotTrace,
+        models: &Models,
+        env: &PolicyEnv,
+    ) -> Vec<f64>;
+}
+
+impl<F> EpisodeEvaluator for F
+where
+    F: FnMut(&[PolicySpec], &Job, &SpotTrace, &Models, &PolicyEnv) -> Vec<f64>,
+{
+    fn utilities(
+        &mut self,
+        specs: &[PolicySpec],
+        job: &Job,
+        trace: &SpotTrace,
+        models: &Models,
+        env: &PolicyEnv,
+    ) -> Vec<f64> {
+        self(specs, job, trace, models, env)
+    }
+}
+
+/// The paper's evaluator: each candidate policy scored by
+/// [`run_episode`] on a private copy of the job's market — no
+/// contention, utilities exactly as in the original Algorithm 2.
+pub struct SingleJobEvaluator;
+
+impl EpisodeEvaluator for SingleJobEvaluator {
+    fn utilities(
+        &mut self,
+        specs: &[PolicySpec],
+        job: &Job,
+        trace: &SpotTrace,
+        models: &Models,
+        env: &PolicyEnv,
+    ) -> Vec<f64> {
+        let mut u = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let mut policy = spec.build(env);
+            let r = run_episode(job, trace, models, policy.as_mut());
+            u.push(job.normalize_utility(r.utility, models.on_demand_price));
+        }
+        u
+    }
+}
+
 /// Run Algorithm 2 over `cfg.k_jobs` jobs. Each job `k` gets its own
 /// market trace (seeded deterministically) and noise regime from
 /// `noise_at(k)`; all `M` policies are evaluated counterfactually on the
@@ -143,44 +207,55 @@ pub fn run_selection(
     predictor_at: impl FnMut(usize) -> PredictorKind,
     cfg: &SelectionConfig,
 ) -> SelectionOutcome {
-    run_selection_with(
+    run_selection_eval(
         specs,
         jobs,
         models,
         trace_gen,
         predictor_at,
         cfg,
-        |specs, job, trace, models, env| {
-            let mut u = Vec::with_capacity(specs.len());
-            for spec in specs {
-                let mut policy = spec.build(env);
-                let r = run_episode(job, trace, models, policy.as_mut());
-                u.push(job.normalize_utility(r.utility, models.on_demand_price));
-            }
-            u
-        },
+        &mut SingleJobEvaluator,
     )
 }
 
-/// [`run_selection`] with the counterfactual pool evaluation injected:
-/// `eval` must return the *normalized* utility of every spec on the
-/// given job/trace. This is the seam `fleet::sweep::run_selection_parallel`
-/// uses to fan the 112 per-job episodes across cores while keeping the
-/// selection trajectory (RNG stream, weights, regret) byte-identical.
+/// [`run_selection`] with the counterfactual pool evaluation injected as
+/// a closure: `eval` must return the *normalized* utility of every spec
+/// on the given job/trace. This is the seam
+/// `fleet::sweep::run_selection_parallel` uses to fan the 112 per-job
+/// episodes across cores while keeping the selection trajectory (RNG
+/// stream, weights, regret) byte-identical.
 pub fn run_selection_with(
+    specs: &[PolicySpec],
+    jobs: &JobGenerator,
+    models: &Models,
+    trace_gen: &TraceGenerator,
+    predictor_at: impl FnMut(usize) -> PredictorKind,
+    cfg: &SelectionConfig,
+    mut eval: impl FnMut(
+        &[PolicySpec],
+        &Job,
+        &SpotTrace,
+        &Models,
+        &PolicyEnv,
+    ) -> Vec<f64>,
+) -> SelectionOutcome {
+    run_selection_eval(specs, jobs, models, trace_gen, predictor_at, cfg, &mut eval)
+}
+
+/// The EG learner's outer loop (Alg. 2 lines 4–10) with the episode
+/// evaluation abstracted behind [`EpisodeEvaluator`]. The job stream,
+/// trace seeding, RNG consumption, weight updates, and regret accounting
+/// are identical for every evaluator — two evaluators differ *only* in
+/// the utility vector they hand back, which is what makes single-job and
+/// fleet-contended selection trajectories directly comparable.
+pub fn run_selection_eval(
     specs: &[PolicySpec],
     jobs: &JobGenerator,
     models: &Models,
     trace_gen: &TraceGenerator,
     mut predictor_at: impl FnMut(usize) -> PredictorKind,
     cfg: &SelectionConfig,
-    mut eval: impl FnMut(
-        &[PolicySpec],
-        &crate::sched::job::Job,
-        &SpotTrace,
-        &Models,
-        &PolicyEnv,
-    ) -> Vec<f64>,
+    eval: &mut dyn EpisodeEvaluator,
 ) -> SelectionOutcome {
     let m = specs.len();
     assert!(m >= 1);
@@ -208,7 +283,7 @@ pub fn run_selection_with(
         };
 
         // Counterfactual utilities for the whole pool.
-        let u = eval(specs, &job, &trace, models, &env);
+        let u = eval.utilities(specs, &job, &trace, models, &env);
         assert_eq!(u.len(), m, "evaluator must score every policy");
 
         let chosen = selector.select(&mut rng);
@@ -231,12 +306,7 @@ pub fn run_selection_with(
         }
     }
 
-    let best_fixed = per_policy_cum
-        .iter()
-        .enumerate()
-        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-        .map(|(i, _)| i)
-        .unwrap_or(0);
+    let best_fixed = argmax_total(&per_policy_cum);
     let converged_to = selector.best();
     SelectionOutcome {
         realized,
@@ -302,6 +372,132 @@ mod tests {
         let regret = best - cum_exp;
         let bound = (2.0 * k_total as f64 * (m as f64).ln()).sqrt();
         assert!(regret <= bound, "regret {regret} > bound {bound}");
+    }
+
+    #[test]
+    fn regret_bound_holds_across_seeds_on_adversarial_streams() {
+        // Three adversarial stream families, ten seeds each: the
+        // empirical regret must stay under the Theorem 2 bound
+        // √(2K ln M) for every one of them.
+        let k_total = 500;
+        let m = 6;
+        let bound = (2.0 * k_total as f64 * (m as f64).ln()).sqrt();
+        for family in 0..3 {
+            for seed in 0..10u64 {
+                let mut s = EgSelector::new(m, k_total);
+                let mut rng = Rng::new(1000 * family + seed);
+                let mut cum = vec![0.0; m];
+                let mut cum_exp = 0.0;
+                for k in 0..k_total {
+                    let u: Vec<f64> = match family {
+                        // rotating one-hot: yesterday's winner is
+                        // today's loser
+                        0 => (0..m)
+                            .map(|i| if (k + i) % m == 0 { 1.0 } else { 0.0 })
+                            .collect(),
+                        // random extremes, with one slightly-biased
+                        // expert the learner must find
+                        1 => (0..m)
+                            .map(|i| {
+                                let x = if rng.bool(0.5) { 1.0 } else { 0.0 };
+                                if i == 3 && rng.bool(0.2) { 1.0 } else { x }
+                            })
+                            .collect(),
+                        // regime switch halfway: the best expert flips
+                        _ => (0..m)
+                            .map(|i| {
+                                let hot =
+                                    if k < k_total / 2 { 0 } else { m - 1 };
+                                if i == hot {
+                                    0.9
+                                } else {
+                                    rng.f64() * 0.5
+                                }
+                            })
+                            .collect(),
+                    };
+                    cum_exp += s.expected(&u);
+                    for (c, ui) in cum.iter_mut().zip(&u) {
+                        *c += ui;
+                    }
+                    s.update(&u);
+                }
+                let best =
+                    cum.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                let regret = best - cum_exp;
+                assert!(
+                    regret <= bound,
+                    "family {family} seed {seed}: regret {regret} > bound {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weights_remain_distribution_after_many_extreme_updates() {
+        // 10k updates mixing extreme utility vectors (all-zero, all-one,
+        // one-hot, random): the weights must stay a valid probability
+        // distribution throughout — normalized, non-negative, finite.
+        let mut s = EgSelector::new(8, 10_000);
+        let mut rng = Rng::new(0xBAD5EED);
+        for k in 0..10_000usize {
+            let u: Vec<f64> = match k % 4 {
+                0 => vec![0.0; 8],
+                1 => vec![1.0; 8],
+                2 => (0..8).map(|i| if i == k % 8 { 1.0 } else { 0.0 }).collect(),
+                _ => (0..8).map(|_| rng.f64()).collect(),
+            };
+            s.update(&u);
+            let sum: f64 = s.weights().iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "step {k}: sum {sum}");
+            assert!(
+                s.weights().iter().all(|w| w.is_finite() && *w >= 0.0),
+                "step {k}: weights {:?}",
+                s.weights()
+            );
+        }
+    }
+
+    #[test]
+    fn best_breaks_ties_to_lowest_index() {
+        // A fresh selector is exactly uniform — every index is tied, and
+        // the total order must pick index 0 deterministically.
+        let s = EgSelector::new(5, 100);
+        assert_eq!(s.best(), 0);
+        // After pushing mass to a later index, ties are gone.
+        let mut s = EgSelector::new(3, 100);
+        s.update(&[0.0, 0.0, 1.0]);
+        assert_eq!(s.best(), 2);
+    }
+
+    #[test]
+    fn single_job_evaluator_matches_inline_episodes() {
+        // The named evaluator must produce exactly the closure-seam
+        // utilities run_selection has always used.
+        let specs = vec![
+            PolicySpec::OdOnly,
+            PolicySpec::Msu,
+            PolicySpec::Ahanp { sigma: 0.5 },
+        ];
+        let job = crate::sched::job::Job::paper_reference();
+        let models = Models::paper_default();
+        let trace = TraceGenerator::calibrated().generate(4).slice_from(25);
+        let env = PolicyEnv {
+            predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace: trace.clone(),
+            seed: 11,
+        };
+        let via_eval = SingleJobEvaluator
+            .utilities(&specs, &job, &trace, &models, &env);
+        let inline: Vec<f64> = specs
+            .iter()
+            .map(|s| {
+                let mut p = s.build(&env);
+                let r = run_episode(&job, &trace, &models, p.as_mut());
+                job.normalize_utility(r.utility, models.on_demand_price)
+            })
+            .collect();
+        assert_eq!(via_eval, inline);
     }
 
     #[test]

@@ -105,6 +105,24 @@ pub fn pearson(a: &[f64], b: &[f64]) -> f64 {
     num / (da.sqrt() * db.sqrt())
 }
 
+/// Index of the maximum under a *total* order: NaN is treated as −∞
+/// (it can never win), and ties break to the lowest index. The usual
+/// `max_by(partial_cmp().unwrap())` argmax panics the moment a NaN
+/// slips into a utility or weight vector; this cannot. Returns 0 on
+/// empty input.
+pub fn argmax_total(xs: &[f64]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f64::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        let v = if x.is_nan() { f64::NEG_INFINITY } else { x };
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best
+}
+
 /// Ordinary least squares fit y = a*x + b; returns (a, b).
 pub fn linfit(x: &[f64], y: &[f64]) -> (f64, f64) {
     assert_eq!(x.len(), y.len());
@@ -175,6 +193,30 @@ mod tests {
         assert!((pearson(&a, &b) - 1.0).abs() < 1e-12);
         let c = [8.0, 6.0, 4.0, 2.0];
         assert!((pearson(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_total_basic_and_ties() {
+        assert_eq!(argmax_total(&[0.1, 0.9, 0.4]), 1);
+        // ties go to the lowest index
+        assert_eq!(argmax_total(&[0.5, 0.5, 0.5]), 0);
+        assert_eq!(argmax_total(&[0.2, 0.7, 0.7]), 1);
+        // single element and empty input
+        assert_eq!(argmax_total(&[3.0]), 0);
+        assert_eq!(argmax_total(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_total_is_nan_safe() {
+        // NaN never wins, wherever it sits
+        assert_eq!(argmax_total(&[f64::NAN, 0.1, 0.9]), 2);
+        assert_eq!(argmax_total(&[0.9, f64::NAN, 0.1]), 0);
+        assert_eq!(argmax_total(&[0.1, 0.9, f64::NAN]), 1);
+        // all-NaN (or all −∞) degenerates to index 0, no panic
+        assert_eq!(argmax_total(&[f64::NAN, f64::NAN]), 0);
+        assert_eq!(argmax_total(&[f64::NEG_INFINITY, f64::NEG_INFINITY]), 0);
+        // +∞ still wins over finite values
+        assert_eq!(argmax_total(&[1.0, f64::INFINITY, f64::NAN]), 1);
     }
 
     #[test]

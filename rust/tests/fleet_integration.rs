@@ -5,21 +5,45 @@
 //! parallel counterfactual path).
 
 use spotfine::fleet::{
-    arbitrate, run_fleet_sweep, run_selection_parallel, FleetEngine,
-    FleetJobSpec, FleetScenario, MigrationModel, Region, RegionSet,
-    SpotRequest, Tier,
+    arbitrate, run_fleet_selection, run_fleet_sweep, run_selection_parallel,
+    FleetContendedEvaluator, FleetEngine, FleetJobSpec, FleetScenario,
+    MigrationModel, Region, RegionSet, SpotRequest, Tier,
 };
 use spotfine::forecast::noise::NoiseSpec;
-use spotfine::market::generator::TraceGenerator;
+use spotfine::market::generator::{GeneratorConfig, TraceGenerator};
 use spotfine::market::trace::SpotTrace;
 use spotfine::prop_assert;
 use spotfine::sched::job::{Job, JobGenerator};
 use spotfine::sched::policy::Models;
 use spotfine::sched::pool::{paper_pool, PolicyEnv, PolicySpec, PredictorKind};
-use spotfine::sched::selector::{run_selection, SelectionConfig};
+use spotfine::sched::selector::{
+    run_selection, EpisodeEvaluator, SelectionConfig, SingleJobEvaluator,
+};
 use spotfine::sched::simulate::run_episode;
 use spotfine::util::prop::{check, PropConfig};
 use spotfine::util::rng::Rng;
+use spotfine::util::stats::argmax_total;
+
+/// A job that wants every spot instance in the region, forever: huge
+/// workload, no completion value — pure scripted contention.
+fn squatter(n_max: u32) -> FleetJobSpec {
+    FleetJobSpec {
+        job: Job {
+            workload: 1e6,
+            deadline: 10,
+            n_min: 1,
+            n_max,
+            value: 0.0,
+            gamma: 1.5,
+        },
+        policy: PolicySpec::Msu,
+        predictor: PredictorKind::Oracle,
+        seed: 0,
+        tier: Tier::High,
+        home_region: 0,
+        arrival: 0,
+    }
+}
 
 /// Every policy in the paper pool (plus the baselines), run as a
 /// single-job single-region fleet, must produce an `EpisodeResult`
@@ -294,6 +318,176 @@ fn parallel_selection_matches_sequential() {
     assert_eq!(seq.regret, par.regret);
     assert_eq!(seq.converged_to, par.converged_to);
     assert_eq!(seq.best_fixed, par.best_fixed);
+}
+
+/// The scripted scenario `examples/fleet_selection.rs` demonstrates,
+/// asserted (the ISSUE's acceptance criterion): on a region whose cheap
+/// spot is entirely held by a high-tier squatter, isolated evaluation
+/// prefers MSU while contention-aware evaluation prefers OD-Only — a
+/// *different* policy with strictly higher fleet utility.
+#[test]
+fn contention_aware_selection_picks_a_different_higher_fleet_utility_policy() {
+    let pool = vec![PolicySpec::Msu, PolicySpec::OdOnly];
+    let models = Models::paper_default();
+    let job = Job::paper_reference();
+    let trace = SpotTrace::new(vec![0.3; 24], vec![12; 24]);
+    let env = PolicyEnv {
+        predictor: PredictorKind::Oracle,
+        trace: trace.clone(),
+        seed: 0,
+    };
+
+    let iso = SingleJobEvaluator.utilities(&pool, &job, &trace, &models, &env);
+    let mut contended = FleetContendedEvaluator::new(vec![squatter(12)], 1)
+        .with_learner_tier(Tier::Low);
+    let con = contended.utilities(&pool, &job, &trace, &models, &env);
+
+    let iso_pick = argmax_total(&iso);
+    let con_pick = argmax_total(&con);
+    assert_eq!(iso_pick, 0, "isolated must prefer MSU: iso={iso:?}");
+    assert_eq!(con_pick, 1, "contended must prefer OD-Only: con={con:?}");
+    assert!(
+        con[con_pick] > con[iso_pick],
+        "the contention-aware pick must have higher fleet utility: \
+         con={con:?}"
+    );
+    // OD-Only never touches spot, so its utility is contention-immune;
+    // MSU's collapses once the squatter owns the region.
+    assert!((iso[1] - con[1]).abs() < 1e-9, "OD-Only shifted: {iso:?} {con:?}");
+    assert!(iso[0] > con[0] + 0.1, "MSU did not starve: {iso:?} {con:?}");
+}
+
+/// The full learners disagree on the same scripted fleet: Algorithm 2
+/// run isolated converges to the spot-greedy policy, run inside the
+/// contended fleet it converges to the contention-immune one.
+#[test]
+fn isolated_and_fleet_aware_learners_converge_differently() {
+    let pool = vec![PolicySpec::Msu, PolicySpec::OdOnly];
+    let models = Models::paper_default();
+    let jobs = JobGenerator::default();
+    // Plentiful cheap spot so the isolated learner firmly prefers MSU.
+    let market = GeneratorConfig {
+        avail_scale: 1.6,
+        volatility: 0.4,
+        ..GeneratorConfig::default()
+    };
+    let gen = TraceGenerator::new(market);
+    let cfg = SelectionConfig { k_jobs: 60, seed: 13, snapshot_every: 0 };
+
+    let isolated = run_selection(
+        &pool,
+        &jobs,
+        &models,
+        &gen,
+        |_| PredictorKind::Oracle,
+        &cfg,
+    );
+    let mut evaluator = FleetContendedEvaluator::new(vec![squatter(16)], 1)
+        .with_learner_tier(Tier::Low);
+    let fleet_aware = run_fleet_selection(
+        &pool,
+        &jobs,
+        &models,
+        &gen,
+        |_| PredictorKind::Oracle,
+        &cfg,
+        &mut evaluator,
+    );
+
+    assert_eq!(
+        isolated.converged_to, 0,
+        "isolated learner should pick MSU; weights {:?}",
+        isolated.final_weights
+    );
+    assert_eq!(
+        fleet_aware.converged_to, 1,
+        "fleet-aware learner should pick OD-Only; weights {:?}",
+        fleet_aware.final_weights
+    );
+}
+
+/// Determinism regression (the `fleet-select --threads` guarantee): the
+/// fleet-aware selection trajectory is bit-identical whether the
+/// per-round counterfactual fleet runs are evaluated on 1 thread or
+/// many — extending the sweep-order guarantee to the new path.
+#[test]
+fn fleet_selection_trajectory_is_thread_count_invariant() {
+    let pool = vec![
+        PolicySpec::OdOnly,
+        PolicySpec::Msu,
+        PolicySpec::UniformProgress,
+        PolicySpec::Ahanp { sigma: 0.5 },
+        PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+    ];
+    let jobs = JobGenerator::default();
+    let models = Models::paper_default();
+    let gen = TraceGenerator::calibrated();
+    let cfg = SelectionConfig { k_jobs: 12, seed: 31, snapshot_every: 4 };
+    let noise =
+        |_: usize| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1));
+
+    let mut seq_eval =
+        FleetContendedEvaluator::synthetic(4, 2, 31).with_threads(1);
+    let seq = run_fleet_selection(
+        &pool, &jobs, &models, &gen, noise, &cfg, &mut seq_eval,
+    );
+    for threads in [2usize, 4, 8] {
+        let mut par_eval = FleetContendedEvaluator::synthetic(4, 2, 31)
+            .with_threads(threads);
+        let par = run_fleet_selection(
+            &pool, &jobs, &models, &gen, noise, &cfg, &mut par_eval,
+        );
+        assert_eq!(seq.realized, par.realized, "diverged at {threads} threads");
+        assert_eq!(seq.expected, par.expected, "diverged at {threads} threads");
+        assert_eq!(seq.regret, par.regret, "diverged at {threads} threads");
+        assert_eq!(
+            seq.final_weights, par.final_weights,
+            "diverged at {threads} threads"
+        );
+        assert_eq!(seq.snapshots, par.snapshots);
+        assert_eq!(seq.converged_to, par.converged_to);
+        assert_eq!(seq.best_fixed, par.best_fixed);
+        assert_eq!(seq_eval.incumbent(), par_eval.incumbent());
+    }
+}
+
+/// The replay/override identity at pool scale: for a spread of policies
+/// in the learner's slot, re-running the recorded fleet with the same
+/// policy swapped back in reproduces the recorded result bit-for-bit.
+#[test]
+fn override_identity_holds_for_a_policy_spread() {
+    let models = Models::paper_default();
+    let trace = TraceGenerator::calibrated().generate(23).slice_from(50);
+    let learner_policies = vec![
+        PolicySpec::OdOnly,
+        PolicySpec::Msu,
+        PolicySpec::UniformProgress,
+        PolicySpec::Ahanp { sigma: 0.7 },
+        PolicySpec::Ahap { omega: 2, v: 1, sigma: 0.5 },
+        PolicySpec::Ahap { omega: 5, v: 3, sigma: 0.9 },
+    ];
+    for (i, policy) in learner_policies.into_iter().enumerate() {
+        let specs = vec![
+            squatter(8),
+            FleetJobSpec::new(
+                Job::paper_reference(),
+                policy,
+                PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.2)),
+            )
+            .with_seed(300 + i as u64)
+            .with_tier(Tier::Low),
+        ];
+        let engine =
+            FleetEngine::new(models, RegionSet::single(trace.clone()));
+        let rec = engine.run_recorded(&specs);
+        let replayed =
+            engine.run_with_override(&specs, &rec.traces, 1, policy);
+        assert_eq!(
+            replayed, rec.result,
+            "override identity broke for {}",
+            policy.label()
+        );
+    }
 }
 
 /// Aggregate bookkeeping sanity on a contended multi-region fleet.

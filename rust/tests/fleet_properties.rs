@@ -1,0 +1,200 @@
+//! Property tests for the whole scheduling stack's capacity layer: the
+//! shared-capacity arbiter's contract, probed over randomized request
+//! mixes with `util::prop`. These are the invariants the fleet engine —
+//! and therefore the fleet-aware policy selector's counterfactuals —
+//! silently rely on every slot.
+
+use spotfine::fleet::{arbitrate, SpotRequest, Tier};
+use spotfine::prop_assert;
+use spotfine::util::prop::{check, PropConfig};
+use spotfine::util::rng::Rng;
+
+/// Random request mix: up to `max_jobs` jobs with arbitrary tiers,
+/// wants, and holdings.
+fn random_requests(rng: &mut Rng, max_jobs: usize) -> Vec<SpotRequest> {
+    let n = rng.int_range(1, max_jobs as i64) as usize;
+    (0..n)
+        .map(|j| SpotRequest {
+            job: j,
+            tier: Tier::cycle(rng.index(3)),
+            want: rng.int_range(0, 20) as u32,
+            held: rng.int_range(0, 20) as u32,
+        })
+        .collect()
+}
+
+/// Water-fill never exceeds regional availability: `Σ granted ≤ avail`
+/// for every request mix, and no job is granted above its request.
+#[test]
+fn prop_grants_never_exceed_availability_or_demand() {
+    check(
+        "grants within availability and demand",
+        PropConfig { cases: 500, seed: 0x11AB },
+        |rng: &mut Rng| {
+            let avail = rng.int_range(0, 24) as u32;
+            let requests = random_requests(rng, 10);
+            let grants = arbitrate(avail, &requests);
+            prop_assert!(
+                grants.len() == requests.len(),
+                "one grant per request: {} vs {}",
+                grants.len(),
+                requests.len()
+            );
+            let total: u32 = grants.iter().map(|g| g.granted).sum();
+            prop_assert!(total <= avail, "granted {total} > avail {avail}");
+            for (r, g) in requests.iter().zip(&grants) {
+                prop_assert!(g.job == r.job, "grants positionally aligned");
+                prop_assert!(
+                    g.granted <= r.want,
+                    "job {}: granted {} > want {}",
+                    r.job,
+                    g.granted,
+                    r.want
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Allocations conserve demand (work conservation): the arbiter hands
+/// out exactly `min(avail, Σ want)` — scarcity is split, never invented,
+/// and retention claims never strand capacity that live demand wants.
+#[test]
+fn prop_allocations_conserve_demand() {
+    check(
+        "work conservation",
+        PropConfig { cases: 500, seed: 0xC0A5 },
+        |rng: &mut Rng| {
+            let avail = rng.int_range(0, 24) as u32;
+            let requests = random_requests(rng, 10);
+            let grants = arbitrate(avail, &requests);
+            let total: u32 = grants.iter().map(|g| g.granted).sum();
+            let demand: u32 = requests.iter().map(|r| r.want).sum();
+            prop_assert!(
+                total == avail.min(demand),
+                "granted {total} != min(avail {avail}, demand {demand})"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// A single requester reduces to the per-job spot market exactly:
+/// `granted = min(want, avail)`, `preempted = held − min(held, avail)` —
+/// the degeneracy that makes a 1-job fleet reproduce `run_episode`.
+#[test]
+fn prop_single_requester_gets_full_market_semantics() {
+    check(
+        "single-tenant degeneracy",
+        PropConfig { cases: 400, seed: 0x51B1 },
+        |rng: &mut Rng| {
+            let avail = rng.int_range(0, 24) as u32;
+            let req = SpotRequest {
+                job: 0,
+                tier: Tier::cycle(rng.index(3)),
+                want: rng.int_range(0, 20) as u32,
+                held: rng.int_range(0, 20) as u32,
+            };
+            let g = arbitrate(avail, &[req]);
+            prop_assert!(
+                g[0].granted == req.want.min(avail),
+                "granted {} != min(want {}, avail {avail})",
+                g[0].granted,
+                req.want
+            );
+            let expect_preempt = req.held - req.held.min(avail);
+            prop_assert!(
+                g[0].preempted == expect_preempt,
+                "preempted {} != held {} - min(held, avail {avail})",
+                g[0].preempted,
+                req.held
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Tier monotonicity: a higher-tier job never receives less than an
+/// otherwise-identical lower-tier job in the same arbitration — and is
+/// never preempted harder, either.
+#[test]
+fn prop_higher_tier_never_receives_less_than_identical_lower_tier() {
+    check(
+        "tier monotonicity",
+        PropConfig { cases: 500, seed: 0x71E5 },
+        |rng: &mut Rng| {
+            let avail = rng.int_range(0, 24) as u32;
+            let mut requests = random_requests(rng, 8);
+            // Two probe jobs with identical demand and holdings, one
+            // strictly above the other. The high probe gets the *later*
+            // job id, so any advantage it shows comes from its tier, not
+            // the within-tier id tie-break.
+            let want = rng.int_range(0, 20) as u32;
+            let held = rng.int_range(0, 20) as u32;
+            let base = requests.len();
+            let (lo_tier, hi_tier) = match rng.index(3) {
+                0 => (Tier::Low, Tier::Normal),
+                1 => (Tier::Normal, Tier::High),
+                _ => (Tier::Low, Tier::High),
+            };
+            requests.push(SpotRequest { job: base, tier: lo_tier, want, held });
+            requests.push(SpotRequest {
+                job: base + 1,
+                tier: hi_tier,
+                want,
+                held,
+            });
+            let grants = arbitrate(avail, &requests);
+            let lo = grants[base];
+            let hi = grants[base + 1];
+            prop_assert!(
+                hi.granted >= lo.granted,
+                "tier inversion: {hi_tier:?} granted {} < {lo_tier:?} granted {} \
+                 (avail {avail}, want {want}, held {held})",
+                hi.granted,
+                lo.granted
+            );
+            prop_assert!(
+                hi.preempted <= lo.preempted,
+                "preemption inversion: {hi_tier:?} lost {} > {lo_tier:?} lost {} \
+                 (avail {avail}, want {want}, held {held})",
+                hi.preempted,
+                lo.preempted
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Preemption accounting stays within holdings, and what the fleet
+/// collectively keeps after a preemption cascade fits under the new
+/// availability.
+#[test]
+fn prop_preemption_cascade_fits_surviving_capacity() {
+    check(
+        "preemption cascade",
+        PropConfig { cases: 500, seed: 0xCA5C },
+        |rng: &mut Rng| {
+            let avail = rng.int_range(0, 24) as u32;
+            let requests = random_requests(rng, 10);
+            let grants = arbitrate(avail, &requests);
+            let mut kept = 0u32;
+            for (r, g) in requests.iter().zip(&grants) {
+                prop_assert!(
+                    g.preempted <= r.held,
+                    "job {}: preempted {} > held {}",
+                    r.job,
+                    g.preempted,
+                    r.held
+                );
+                kept += r.held - g.preempted;
+            }
+            prop_assert!(
+                kept <= avail,
+                "fleet keeps {kept} instances above availability {avail}"
+            );
+            Ok(())
+        },
+    );
+}
