@@ -64,11 +64,11 @@ fn main() -> anyhow::Result<()> {
     let models = Models::paper_default();
     let trace = TraceGenerator::calibrated().generate(21).slice_from(60);
 
-    let env = PolicyEnv {
-        predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
-        trace: trace.clone(),
-        seed: 21,
-    };
+    let env = PolicyEnv::new(
+        PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+        trace.clone(),
+        21,
+    );
     let spec = PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 };
     let mut policy = spec.build(&env);
 

@@ -54,11 +54,7 @@ fn main() {
     // --- One round, dissected: the same job scored both ways. ---------
     let job = Job::paper_reference();
     let trace = SpotTrace::new(vec![0.3; 24], vec![12; 24]);
-    let env = PolicyEnv {
-        predictor: PredictorKind::Oracle,
-        trace: trace.clone(),
-        seed: 0,
-    };
+    let env = PolicyEnv::new(PredictorKind::Oracle, trace.clone(), 0);
 
     let iso = SingleJobEvaluator.utilities(&pool, &job, &trace, &models, &env);
     let mut contended = FleetContendedEvaluator::new(vec![squatter(12)], 1)

@@ -75,11 +75,7 @@ fn main() {
     );
     let fleet_one = FleetEngine::new(models, RegionSet::single(trace.clone()))
         .run(&[spec]);
-    let env = PolicyEnv {
-        predictor: PredictorKind::Oracle,
-        trace: trace.clone(),
-        seed: 0,
-    };
+    let env = PolicyEnv::new(PredictorKind::Oracle, trace.clone(), 0);
     let mut policy =
         PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 }.build(&env);
     let solo = run_episode(&job, &trace, &models, policy.as_mut());

@@ -30,12 +30,12 @@ fn main() {
         stats.price_median, stats.price_p90, stats.avail_mean, stats.avail_std
     );
 
-    let env = PolicyEnv {
-        // 10% fixed-magnitude uniform prediction error (Fig. 9 regime).
-        predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
-        trace: trace.clone(),
-        seed: 7,
-    };
+    // 10% fixed-magnitude uniform prediction error (Fig. 9 regime).
+    let env = PolicyEnv::new(
+        PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+        trace.clone(),
+        7,
+    );
 
     let specs = [
         PolicySpec::OdOnly,

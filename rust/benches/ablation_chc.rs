@@ -59,13 +59,11 @@ fn main() {
                 let trace = gen
                     .generate(500 + k as u64)
                     .slice_from(rng.index(400));
-                let env = PolicyEnv {
-                    predictor: PredictorKind::Noisy(
-                        NoiseSpec::fixed_mag_uniform(level),
-                    ),
-                    trace: trace.clone(),
-                    seed: k as u64,
-                };
+                let env = PolicyEnv::new(
+                    PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(level)),
+                    trace.clone(),
+                    k as u64,
+                );
                 let mut p = spec.build(&env);
                 utils.push(run_episode(&job, &trace, &models, p.as_mut()).utility);
             }

@@ -100,11 +100,11 @@ fn main() {
         let full = gen.generate(0x5157 + e as u64);
         let max_off = full.len().saturating_sub(2 * job.deadline).max(1);
         let trace = full.slice_from(rng.index(max_off));
-        let env = PolicyEnv {
-            predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
-            trace: trace.clone(),
-            seed: 0x5157 + e as u64,
-        };
+        let env = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace.clone(),
+            0x5157 + e as u64,
+        );
         let u = judge.utilities(&specs, &job, &trace, &models, &env);
         iso_u.push(u[isolated.converged_to]);
         fleet_u.push(u[fleet_aware.converged_to]);

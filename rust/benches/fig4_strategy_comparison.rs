@@ -55,7 +55,7 @@ fn main() {
     .expect("csv");
     let mut rows: Vec<(String, f64, f64)> = Vec::new();
     for (name, spec, pk) in strategies {
-        let env = PolicyEnv { predictor: pk, trace: trace.clone(), seed: 3 };
+        let env = PolicyEnv::new(pk, trace.clone(), 3);
         let mut p = spec.build(&env);
         let r = run_episode(&job, &trace, &models, p.as_mut());
         let dec = r

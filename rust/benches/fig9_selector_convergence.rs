@@ -107,11 +107,11 @@ fn main() {
                 .generate(900 + k)
                 .slice_from(rng.index(400));
             let opt = solve_offline(&job, &trace, &models, 0.1).utility;
-            let env = PolicyEnv {
-                predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(level)),
-                trace: trace.clone(),
-                seed: k,
-            };
+            let env = PolicyEnv::new(
+                PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(level)),
+                trace.clone(),
+                k,
+            );
             let mut p = spec.build(&env);
             let r = run_episode(&job, &trace, &models, p.as_mut());
             gap += opt - r.utility;

@@ -75,11 +75,7 @@ pub fn evaluate_point(
         let trace = gen
             .generate(seed ^ (k as u64).wrapping_mul(0x9E37_79B9))
             .slice_from(rng.index(400));
-        let env = PolicyEnv {
-            predictor: PredictorKind::Noisy(noise),
-            trace: trace.clone(),
-            seed: seed ^ k as u64,
-        };
+        let env = PolicyEnv::new(PredictorKind::Noisy(noise), trace.clone(), seed ^ k as u64);
         for (gi, (_, members)) in groups.iter().enumerate() {
             for (mi, spec) in members.iter().enumerate() {
                 let mut p = spec.build(&env);

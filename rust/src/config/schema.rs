@@ -7,6 +7,7 @@ use std::path::Path;
 use crate::config::toml::parse;
 #[allow(unused_imports)]
 use crate::config::toml::Value;
+use crate::forecast::arima::ArimaConfig;
 use crate::forecast::noise::{NoiseKind, NoiseMagnitude, NoiseSpec};
 use crate::market::generator::GeneratorConfig;
 use crate::sched::job::JobGenerator;
@@ -24,6 +25,22 @@ pub enum ConfigError {
     Invalid(String),
 }
 
+/// Honest-predictor knobs (`[forecast]` in TOML).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ForecastSettings {
+    /// ARIMA refit cadence in slots (1 = refit every slot).
+    pub refit_every: usize,
+    /// Steps a shared forecast cache precomputes per slot; size it to
+    /// the pool's largest ω to avoid deterministic cache rebuilds.
+    pub max_horizon: usize,
+}
+
+impl Default for ForecastSettings {
+    fn default() -> Self {
+        ForecastSettings { refit_every: 1, max_horizon: 8 }
+    }
+}
+
 /// Top-level experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -31,6 +48,7 @@ pub struct ExperimentConfig {
     pub jobs: JobGenerator,
     pub models: Models,
     pub noise: NoiseSpec,
+    pub forecast: ForecastSettings,
     pub selection_jobs: usize,
     pub seed: u64,
     /// Directory where benches/figures write CSVs.
@@ -46,6 +64,7 @@ impl Default for ExperimentConfig {
             jobs: JobGenerator::default(),
             models: Models::paper_default(),
             noise: NoiseSpec::fixed_mag_uniform(0.1),
+            forecast: ForecastSettings::default(),
             selection_jobs: 1000,
             seed: 7,
             results_dir: "results".to_string(),
@@ -162,6 +181,21 @@ impl ExperimentConfig {
         read_opt!(doc, "noise.level", as_float, cfg.noise.level);
         read_opt!(doc, "noise.growth", as_float, cfg.noise.growth);
 
+        // [forecast] — range-check the raw i64s before the usize cast
+        // (a negative value would wrap to a huge cadence/horizon and
+        // sail past the `== 0` validation).
+        let mut refit = cfg.forecast.refit_every as i64;
+        read_opt!(doc, "forecast.refit_every", as_int, refit);
+        let mut max_h = cfg.forecast.max_horizon as i64;
+        read_opt!(doc, "forecast.max_horizon", as_int, max_h);
+        if refit < 1 || max_h < 1 {
+            return Err(ConfigError::Invalid(
+                "forecast.refit_every and max_horizon must be ≥ 1".into(),
+            ));
+        }
+        cfg.forecast.refit_every = refit as usize;
+        cfg.forecast.max_horizon = max_h as usize;
+
         // [run]
         let mut k = cfg.selection_jobs as i64;
         read_opt!(doc, "run.selection_jobs", as_int, k);
@@ -193,6 +227,15 @@ impl ExperimentConfig {
     pub fn from_file(path: &Path) -> Result<Self, ConfigError> {
         let s = std::fs::read_to_string(path)?;
         Self::from_toml_str(&s)
+    }
+
+    /// The ARIMA predictor configuration implied by `[forecast]`.
+    pub fn arima(&self) -> ArimaConfig {
+        ArimaConfig {
+            refit_every: self.forecast.refit_every,
+            max_horizon: self.forecast.max_horizon,
+            ..ArimaConfig::default()
+        }
     }
 
     /// Cross-field invariants the simulator assumes.
@@ -231,6 +274,9 @@ impl ExperimentConfig {
         }
         if self.noise.level < 0.0 || self.noise.growth < 0.0 {
             return e("noise.level and noise.growth must be non-negative");
+        }
+        if self.forecast.refit_every == 0 || self.forecast.max_horizon == 0 {
+            return e("forecast.refit_every and max_horizon must be ≥ 1");
         }
         if self.selection_jobs == 0 {
             return e("run.selection_jobs must be positive");
@@ -319,5 +365,24 @@ mod tests {
     fn wrong_types_rejected() {
         assert!(ExperimentConfig::from_toml_str("[market]\nslots = \"many\"\n").is_err());
         assert!(ExperimentConfig::from_toml_str("[noise]\nlevel = \"high\"\n").is_err());
+    }
+
+    #[test]
+    fn forecast_section_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[forecast]\nrefit_every = 4\nmax_horizon = 12\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.forecast.refit_every, 4);
+        assert_eq!(cfg.forecast.max_horizon, 12);
+        let arima = cfg.arima();
+        assert_eq!(arima.refit_every, 4);
+        assert_eq!(arima.max_horizon, 12);
+        assert!(arima.incremental);
+        assert!(ExperimentConfig::from_toml_str("[forecast]\nrefit_every = 0\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[forecast]\nmax_horizon = 0\n").is_err());
+        // Negative values must not wrap through the usize cast.
+        assert!(ExperimentConfig::from_toml_str("[forecast]\nrefit_every = -1\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[forecast]\nmax_horizon = -3\n").is_err());
     }
 }

@@ -15,6 +15,7 @@
 
 use crate::fleet::capacity::{arbitrate, SpotRequest, Tier};
 use crate::fleet::region::RegionSet;
+use crate::forecast::cache::ForecastCachePool;
 use crate::sched::job::Job;
 use crate::sched::policy::{Allocation, Models, Policy, SlotContext};
 use crate::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
@@ -188,15 +189,33 @@ pub struct FleetEngine {
     /// Consecutive fully-starved slots before a job migrates to a
     /// better region; 0 disables migration entirely.
     pub migration_patience: usize,
+    /// Shared per-(region, arrival) forecast caches for honest-ARIMA
+    /// jobs: one fit per slot serves every such job — and, crucially,
+    /// every counterfactual replay of a selection round, since engine
+    /// clones share the pool. `None` = private per-policy fits (the
+    /// reference path; results are bit-identical either way).
+    forecasts: Option<ForecastCachePool>,
 }
 
 impl FleetEngine {
     pub fn new(models: Models, regions: RegionSet) -> Self {
-        FleetEngine { models, regions, migration_patience: 2 }
+        FleetEngine {
+            models,
+            regions,
+            migration_patience: 2,
+            forecasts: Some(ForecastCachePool::new()),
+        }
     }
 
     pub fn with_migration_patience(mut self, patience: usize) -> Self {
         self.migration_patience = patience;
+        self
+    }
+
+    /// Disable the shared forecast cache (per-policy ARIMA fits). Only
+    /// useful as the baseline in equivalence tests and benches.
+    pub fn without_shared_forecasts(mut self) -> Self {
+        self.forecasts = None;
         self
     }
 
@@ -265,16 +284,40 @@ impl FleetEngine {
         self.run_inner(&all, drivers, false).0
     }
 
-    /// Build (and reset) the live policy for a job spec. The policy sees
-    /// its home region's trace from its own arrival onward (the same
-    /// view `run_episode` gets), so oracle/noisy predictors index local
-    /// slots correctly.
-    fn build_policy(&self, s: &FleetJobSpec) -> Box<dyn Policy> {
-        let env = PolicyEnv {
-            predictor: s.predictor.clone(),
-            trace: self.regions.get(s.home_region).trace.slice_from(s.arrival),
-            seed: s.seed,
+    /// The policy environment for a job running in `region`: the
+    /// region's trace from the job's arrival onward (the same view
+    /// `run_episode` gets, so oracle/noisy predictors index local slots
+    /// correctly), plus — for honest-ARIMA jobs on their *initial*
+    /// build — the shared forecast cache for that trace slice.
+    /// Mid-episode rebuilds (migrations, including a later return to
+    /// the home region) always get private predictors: a policy
+    /// rebuilt at slot t has only its own subsequent observations,
+    /// which is exactly what a private model sees, whereas a cache
+    /// knows the region's full history — so caching there would break
+    /// the cached-vs-private bit-identity.
+    fn policy_env(&self, s: &FleetJobSpec, region: usize, initial: bool) -> PolicyEnv {
+        let trace = self.regions.get(region).trace.slice_from(s.arrival);
+        let forecasts = if initial && region == s.home_region {
+            match (&self.forecasts, &s.predictor) {
+                (Some(pool), PredictorKind::Arima(cfg)) => Some(pool.for_slice(
+                    region,
+                    s.arrival,
+                    *cfg,
+                    || trace.clone(),
+                )),
+                _ => None,
+            }
+        } else {
+            None
         };
+        let mut env = PolicyEnv::new(s.predictor.clone(), trace, s.seed);
+        env.forecasts = forecasts;
+        env
+    }
+
+    /// Build (and reset) the live policy for a job spec.
+    fn build_policy(&self, s: &FleetJobSpec) -> Box<dyn Policy> {
+        let env = self.policy_env(s, s.home_region, true);
         let mut policy = s.policy.build(&env);
         policy.reset();
         policy
@@ -535,15 +578,7 @@ impl FleetEngine {
                         // Rebuilding drops accumulated planner state —
                         // a migration is a disruption; the job replans
                         // cold, aligned to its local slot clock.
-                        let env = PolicyEnv {
-                            predictor: s.predictor.clone(),
-                            trace: self
-                                .regions
-                                .get(best)
-                                .trace
-                                .slice_from(s.arrival),
-                            seed: s.seed,
-                        };
+                        let env = self.policy_env(s, best, false);
                         let mut policy = s.policy.build(&env);
                         policy.reset();
                         st.driver = JobDriver::Live(policy);
@@ -666,11 +701,7 @@ mod tests {
             PredictorKind::Oracle,
         );
         let fleet = engine_single(trace.clone()).run(&[spec]);
-        let env = PolicyEnv {
-            predictor: PredictorKind::Oracle,
-            trace: trace.clone(),
-            seed: 0,
-        };
+        let env = PolicyEnv::new(PredictorKind::Oracle, trace.clone(), 0);
         let mut p = PolicySpec::Msu.build(&env);
         let solo = run_episode(&j, &trace, &models, p.as_mut());
         assert_eq!(fleet.jobs[0].episode, solo);

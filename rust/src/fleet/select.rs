@@ -64,6 +64,10 @@ pub struct FleetContendedEvaluator {
     pub learner_tier: Tier,
     /// Threads for fanning the per-round counterfactual fleet runs.
     pub threads: usize,
+    /// Share one per-slot forecast cache across a round's M
+    /// counterfactual fleet runs when the learner uses honest ARIMA
+    /// predictions (bit-identical results; off = per-candidate fits).
+    pub shared_forecasts: bool,
     /// Candidate run in the learner's slot during the recorded run:
     /// starts at index 0, then tracks each round's best candidate
     /// (lowest index on ties).
@@ -89,6 +93,7 @@ impl FleetContendedEvaluator {
             migration_patience: 2,
             learner_tier: Tier::Normal,
             threads: 1,
+            shared_forecasts: true,
             incumbent: 0,
         }
     }
@@ -167,11 +172,16 @@ impl FleetContendedEvaluator {
                 ),
             });
         }
-        FleetEngine::new(
+        let engine = FleetEngine::new(
             *models,
             RegionSet::new(regions).with_migration(self.migration),
         )
-        .with_migration_patience(self.migration_patience)
+        .with_migration_patience(self.migration_patience);
+        if self.shared_forecasts {
+            engine
+        } else {
+            engine.without_shared_forecasts()
+        }
     }
 }
 
@@ -291,11 +301,11 @@ mod tests {
         let gen = TraceGenerator::calibrated();
         let job = Job::paper_reference();
         let trace = gen.generate(9).slice_from(40);
-        let env = PolicyEnv {
-            predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
-            trace: trace.clone(),
-            seed: 77,
-        };
+        let env = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace.clone(),
+            77,
+        );
         let mut a = FleetContendedEvaluator::synthetic(5, 2, 3);
         let mut b = FleetContendedEvaluator::synthetic(5, 2, 3);
         let ua = a.utilities(&specs, &job, &trace, &models, &env);
@@ -313,11 +323,7 @@ mod tests {
         let gen = TraceGenerator::calibrated();
         let job = Job::paper_reference();
         let trace = gen.generate(2).slice_from(30);
-        let env = PolicyEnv {
-            predictor: PredictorKind::Oracle,
-            trace: trace.clone(),
-            seed: 5,
-        };
+        let env = PolicyEnv::new(PredictorKind::Oracle, trace.clone(), 5);
         let mut ev = FleetContendedEvaluator::synthetic(3, 2, 11);
         assert_eq!(ev.incumbent(), 0);
         let u = ev.utilities(&specs, &job, &trace, &models, &env);

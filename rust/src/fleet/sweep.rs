@@ -273,11 +273,11 @@ mod tests {
         let job = Job::paper_reference();
         let models = Models::paper_default();
         let trace = TraceGenerator::calibrated().generate(3).slice_from(40);
-        let env = PolicyEnv {
-            predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
-            trace: trace.clone(),
-            seed: 9,
-        };
+        let env = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace.clone(),
+            9,
+        );
         let par =
             counterfactual_utilities(&specs, &job, &trace, &models, &env, 4);
         let seq: Vec<f64> = specs

@@ -8,11 +8,25 @@
 //! Forecasting iterates the fitted recursion with future innovations set
 //! to zero and inverts the differencing. An optional seasonal lag term
 //! (period `s`) captures the diurnal cycle of spot availability.
+//!
+//! Two fitting paths produce the same model:
+//!
+//! - [`fit`] — the batch reference: rebuilds both design matrices from
+//!   the full history, O(n·k²) per call;
+//! - [`crate::forecast::incremental::IncrementalArima`] — maintains the
+//!   normal-equation sufficient statistics as O(k²) rank-1 updates per
+//!   observation, so a refit is a k×k solve. Coefficients match the
+//!   batch path to ~1e-12 (within 1e-9 is enforced by
+//!   `tests/forecast_properties.rs`).
+//!
+//! [`ArimaPredictor`] wraps either path behind the [`Predictor`] trait
+//! and defaults to the incremental one; [`ArimaConfig`] carries the
+//! knobs (orders, refit cadence, cache horizon, fitting path).
 
 use crate::forecast::predictor::{Forecast, Predictor};
 
 /// ARIMA order specification.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ArimaSpec {
     /// Autoregressive order.
     pub p: usize,
@@ -35,28 +49,120 @@ impl Default for ArimaSpec {
     }
 }
 
+/// Everything configurable about the online ARIMA predictor: the model
+/// orders per series, the refit cadence, the horizon a shared forecast
+/// cache precomputes, and which fitting path runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ArimaConfig {
+    pub spec_price: ArimaSpec,
+    pub spec_avail: ArimaSpec,
+    /// Refit cadence in slots (1 = refit every slot).
+    pub refit_every: usize,
+    /// Steps a [`crate::forecast::cache::SharedForecaster`] precomputes
+    /// per slot; requests beyond it force a deterministic cache rebuild.
+    pub max_horizon: usize,
+    /// Incremental sufficient-statistic refits. `false` selects the
+    /// legacy full-history batch rebuild — kept as the reference and
+    /// perf baseline, not for production use.
+    pub incremental: bool,
+}
+
+impl Default for ArimaConfig {
+    fn default() -> Self {
+        ArimaConfig {
+            spec_price: ArimaSpec::default(),
+            spec_avail: ArimaSpec::default(),
+            refit_every: 1,
+            max_horizon: 8,
+            incremental: true,
+        }
+    }
+}
+
+/// Effective regression layout for a series of a given length: the
+/// shrunk orders, the stage-1 long-AR order, and the first usable
+/// stage-2 row. Shared by the batch and incremental fitters so both
+/// make identical structural decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct Structure {
+    pub p: usize,
+    pub q: usize,
+    pub seas: Option<usize>,
+    pub long_p: usize,
+    /// First stage-2 row index into the differenced series.
+    pub start: usize,
+    /// Stage-2 design width: 1 + p + q + (seasonal? 1 : 0).
+    pub ncols: usize,
+}
+
+/// What a series of length `len` supports: a full two-stage fit, or the
+/// degenerate mean-only model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum FitPlan {
+    Degenerate,
+    Full(Structure),
+}
+
+/// Structural decisions for a differenced series of length `len` —
+/// exactly the shrinkage rules the original batch fitter applied inline.
+pub(crate) fn fit_plan(len: usize, spec: ArimaSpec) -> FitPlan {
+    let p = spec.p.min(len / 3);
+    let q = spec.q.min(len / 4);
+    let seas = spec.seasonal_lag.filter(|&s| len > s + 8);
+    if len < 4 || (p == 0 && q == 0 && seas.is_none()) {
+        return FitPlan::Degenerate;
+    }
+    let long_p = (p + q + 2).min(len / 2).max(1);
+    let slag = seas.unwrap_or(0);
+    let start = p.max(q).max(slag).max(long_p);
+    let rows = len.saturating_sub(start);
+    let ncols = 1 + p + q + usize::from(seas.is_some());
+    if rows < ncols + 2 {
+        // Not enough rows for the full design: degrade to the mean
+        // model on the differenced series.
+        return FitPlan::Degenerate;
+    }
+    FitPlan::Full(Structure { p, q, seas, long_p, start, ncols })
+}
+
 /// A fitted ARIMA model, ready to forecast.
+///
+/// Holds only the trailing lag window of the differenced series and
+/// innovations — exactly the values the forecast recursion can reach —
+/// instead of the full fit-time history, so cloning a fitted model (and
+/// fitting itself) is O(max lag), not O(n).
 #[derive(Debug, Clone)]
 pub struct FittedArima {
-    spec: ArimaSpec,
+    pub(crate) spec: ArimaSpec,
     /// AR coefficients (lags 1..=p on the differenced series).
-    phi: Vec<f64>,
+    pub(crate) phi: Vec<f64>,
     /// MA coefficients (innovation lags 1..=q).
-    theta: Vec<f64>,
-    /// Seasonal AR coefficient (if seasonal_lag set).
-    phi_s: f64,
+    pub(crate) theta: Vec<f64>,
+    /// Seasonal AR coefficient (if seasonal_lag set and active).
+    pub(crate) phi_s: f64,
     /// Intercept of the differenced-series regression.
-    intercept: f64,
-    /// Differenced series used at fit time (history for the recursion).
-    diff: Vec<f64>,
-    /// Estimated innovations aligned with `diff`.
-    eps: Vec<f64>,
+    pub(crate) intercept: f64,
+    /// Length of the differenced series at fit time (recursion clock —
+    /// preserves the exact `t >= lag` guards of the full-history code).
+    pub(crate) n0: usize,
+    /// Last `min(n0, max(p, seasonal_lag))` differenced values.
+    pub(crate) hist_diff: Vec<f64>,
+    /// Last `min(n0, q)` innovation estimates.
+    pub(crate) hist_eps: Vec<f64>,
     /// Last `d` raw values (for un-differencing).
-    tail: Vec<f64>,
+    pub(crate) tail: Vec<f64>,
+}
+
+/// Lag window a fitted model must retain from the differenced series.
+pub(crate) fn diff_window(phi_len: usize, phi_s: f64, spec: ArimaSpec) -> usize {
+    let l_seas = if phi_s != 0.0 { spec.seasonal_lag.unwrap_or(0) } else { 0 };
+    phi_len.max(l_seas)
 }
 
 /// Fit an ARIMA model to a series. Falls back to progressively simpler
 /// models when the series is too short; never panics on short input.
+/// This is the batch reference path — it rebuilds the full design
+/// matrices every call (the incremental fitter matches it to ~1e-12).
 pub fn fit(series: &[f64], spec: ArimaSpec) -> FittedArima {
     assert!(spec.d <= 2, "only d<=2 supported");
     // Difference d times, remembering tails for inversion.
@@ -70,55 +176,25 @@ pub fn fit(series: &[f64], spec: ArimaSpec) -> FittedArima {
     }
     tail.reverse();
 
-    // Effective orders given the data we actually have.
-    let p = spec.p.min(diff.len() / 3);
-    let q = spec.q.min(diff.len() / 4);
-    let seas = spec.seasonal_lag.filter(|&s| diff.len() > s + 8);
-
-    if diff.len() < 4 || (p == 0 && q == 0 && seas.is_none()) {
-        // Degenerate: mean model on the differenced series.
-        let m = if diff.is_empty() {
-            0.0
-        } else {
-            diff.iter().sum::<f64>() / diff.len() as f64
-        };
-        return FittedArima {
-            spec,
-            phi: vec![],
-            theta: vec![],
-            phi_s: 0.0,
-            intercept: m,
-            eps: vec![0.0; diff.len()],
-            diff,
-            tail,
-        };
-    }
+    let st = match fit_plan(diff.len(), spec) {
+        FitPlan::Degenerate => {
+            let m = if diff.is_empty() {
+                0.0
+            } else {
+                diff.iter().sum::<f64>() / diff.len() as f64
+            };
+            return mean_model(spec, m, diff.len(), tail);
+        }
+        FitPlan::Full(st) => st,
+    };
+    let Structure { p, q, seas, long_p, start, ncols } = st;
 
     // Stage 1: long-AR for innovations.
-    let long_p = (p + q + 2).min(diff.len() / 2).max(1);
     let eps = innovations(&diff, long_p);
 
     // Stage 2: regress diff[t] on lags 1..=p, eps lags 1..=q, seasonal lag.
     let slag = seas.unwrap_or(0);
-    let start = p.max(q).max(slag).max(long_p);
-    let rows = diff.len().saturating_sub(start);
-    let ncols = 1 + p + q + usize::from(seas.is_some());
-    if rows < ncols + 2 {
-        // Not enough rows for the full design: degrade to the mean model
-        // on the differenced series (no recursion — short series stop
-        // here).
-        let m = diff.iter().sum::<f64>() / diff.len() as f64;
-        return FittedArima {
-            spec,
-            phi: vec![],
-            theta: vec![],
-            phi_s: 0.0,
-            intercept: m,
-            eps: vec![0.0; diff.len()],
-            diff,
-            tail,
-        };
-    }
+    let rows = diff.len() - start;
     let mut x = Vec::with_capacity(rows * ncols);
     let mut y = Vec::with_capacity(rows);
     for t in start..diff.len() {
@@ -134,7 +210,7 @@ pub fn fit(series: &[f64], spec: ArimaSpec) -> FittedArima {
         }
         y.push(diff[t]);
     }
-    let beta = ridge_ols(&x, &y, rows, ncols, 1e-4);
+    let beta = ridge_ols(&x, &y, rows, ncols, RIDGE_LAMBDA);
 
     let mut idx = 0;
     let intercept = beta[idx];
@@ -145,44 +221,115 @@ pub fn fit(series: &[f64], spec: ArimaSpec) -> FittedArima {
     idx += q;
     let phi_s = if seas.is_some() { beta[idx] } else { 0.0 };
 
-    FittedArima { spec, phi, theta, phi_s, intercept, eps, diff, tail }
+    let n0 = diff.len();
+    let l = diff_window(phi.len(), phi_s, spec);
+    let hist_diff = diff[n0 - l.min(n0)..].to_vec();
+    let hist_eps = eps[n0 - theta.len().min(n0)..].to_vec();
+    FittedArima { spec, phi, theta, phi_s, intercept, n0, hist_diff, hist_eps, tail }
 }
 
+/// The degenerate constant model (series too short or no regressors).
+pub(crate) fn mean_model(
+    spec: ArimaSpec,
+    mean: f64,
+    n0: usize,
+    tail: Vec<f64>,
+) -> FittedArima {
+    FittedArima {
+        spec,
+        phi: vec![],
+        theta: vec![],
+        phi_s: 0.0,
+        intercept: mean,
+        n0,
+        hist_diff: vec![],
+        hist_eps: vec![],
+        tail,
+    }
+}
+
+/// Ridge regularization shared by both fitting paths.
+pub(crate) const RIDGE_LAMBDA: f64 = 1e-4;
+
 impl FittedArima {
+    /// Fitted coefficients `(intercept, phi, theta, phi_s)` — exposed so
+    /// tests can compare the batch and incremental fitting paths.
+    pub fn coefficients(&self) -> (f64, &[f64], &[f64], f64) {
+        (self.intercept, &self.phi, &self.theta, self.phi_s)
+    }
+
     /// Forecast `h` steps ahead on the original (undifferenced) scale.
     pub fn forecast(&self, h: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(h);
+        self.forecast_into(h, &mut out);
+        out
+    }
+
+    /// [`forecast`](FittedArima::forecast) into a caller-provided buffer:
+    /// no history clones, no intermediate vectors — the only storage
+    /// touched is `out` (cleared first, so a reused buffer allocates
+    /// nothing once it has capacity `h`).
+    pub fn forecast_into(&self, h: usize, out: &mut Vec<f64>) {
+        out.clear();
+        out.reserve(h);
         let slag = self.spec.seasonal_lag.unwrap_or(0);
-        let mut d = self.diff.clone();
-        let mut e = self.eps.clone();
-        for _ in 0..h {
-            let t = d.len();
+        for j in 0..h {
+            // `t` is the absolute index into the (virtual) continuation
+            // of the fit-time differenced series, so the `t >= lag`
+            // guards below behave exactly as with full history.
+            let t = self.n0 + j;
             let mut v = self.intercept;
-            for (j, &c) in self.phi.iter().enumerate() {
-                let lag = j + 1;
+            for (i, &c) in self.phi.iter().enumerate() {
+                let lag = i + 1;
                 if t >= lag {
-                    v += c * d[t - lag];
+                    v += c * self.diff_at(t - lag, out);
                 }
             }
-            for (j, &c) in self.theta.iter().enumerate() {
-                let lag = j + 1;
+            for (i, &c) in self.theta.iter().enumerate() {
+                let lag = i + 1;
                 if t >= lag {
-                    v += c * e[t - lag];
+                    v += c * self.eps_at(t - lag);
                 }
             }
             if self.phi_s != 0.0 && slag > 0 && t >= slag {
-                v += self.phi_s * d[t - slag];
+                v += self.phi_s * self.diff_at(t - slag, out);
             }
-            d.push(v);
-            e.push(0.0); // future innovations have zero expectation
+            out.push(v);
         }
-        // Undifference the h forecasted increments.
-        let fdiff = &d[self.diff.len()..];
-        undifference(fdiff, &self.tail)
+        // Undifference the h forecasted increments in place.
+        for &t0 in &self.tail {
+            let mut acc = t0;
+            for v in out.iter_mut() {
+                acc += *v;
+                *v = acc;
+            }
+        }
+    }
+
+    /// Differenced value at absolute index `idx`: a forecasted value
+    /// (`idx >= n0`) or a retained history value. The caller guarantees
+    /// `idx` is within the retained lag window (every reachable lag is,
+    /// by construction of `hist_diff`).
+    fn diff_at(&self, idx: usize, future: &[f64]) -> f64 {
+        if idx >= self.n0 {
+            future[idx - self.n0]
+        } else {
+            self.hist_diff[self.hist_diff.len() - (self.n0 - idx)]
+        }
+    }
+
+    /// Innovation at absolute index `idx` (future innovations are zero).
+    fn eps_at(&self, idx: usize) -> f64 {
+        if idx >= self.n0 {
+            0.0
+        } else {
+            self.hist_eps[self.hist_eps.len() - (self.n0 - idx)]
+        }
     }
 }
 
 /// First difference.
-fn difference(xs: &[f64]) -> Vec<f64> {
+pub(crate) fn difference(xs: &[f64]) -> Vec<f64> {
     if xs.len() < 2 {
         return vec![];
     }
@@ -192,6 +339,7 @@ fn difference(xs: &[f64]) -> Vec<f64> {
 /// Invert differencing: given forecasted d-th differences and the last
 /// raw values at each differencing level (`tails[0]` = innermost level's
 /// last value ... `tails.last()` = original series' last value).
+#[cfg(test)]
 fn undifference(fdiff: &[f64], tails: &[f64]) -> Vec<f64> {
     let mut cur: Vec<f64> = fdiff.to_vec();
     for &t0 in tails {
@@ -220,7 +368,7 @@ fn innovations(diff: &[f64], long_p: usize) -> Vec<f64> {
         }
         y.push(diff[t]);
     }
-    let beta = ridge_ols(&x, &y, rows, ncols, 1e-4);
+    let beta = ridge_ols(&x, &y, rows, ncols, RIDGE_LAMBDA);
     let mut eps = vec![0.0; diff.len()];
     for t in long_p..diff.len() {
         let mut pred = beta[0];
@@ -237,7 +385,7 @@ fn innovations(diff: &[f64], long_p: usize) -> Vec<f64> {
 pub fn ridge_ols(x: &[f64], y: &[f64], rows: usize, ncols: usize, lambda: f64) -> Vec<f64> {
     assert_eq!(x.len(), rows * ncols);
     assert_eq!(y.len(), rows);
-    // Normal equations.
+    // Normal equations (upper triangle).
     let mut a = vec![0.0; ncols * ncols];
     let mut b = vec![0.0; ncols];
     for r in 0..rows {
@@ -249,18 +397,26 @@ pub fn ridge_ols(x: &[f64], y: &[f64], rows: usize, ncols: usize, lambda: f64) -
             }
         }
     }
-    for i in 0..ncols {
-        for j in 0..i {
-            a[i * ncols + j] = a[j * ncols + i];
-        }
-        a[i * ncols + i] += lambda;
-    }
-    solve_linear(&mut a, &mut b, ncols);
+    solve_normal_upper(&mut a, &mut b, ncols, lambda);
     b
 }
 
+/// Mirror an upper-triangular normal-equation accumulator, add the ridge
+/// term, and solve in place (solution left in `b`). Shared by the batch
+/// path above and the incremental fitter's stage-1 solve so both perform
+/// the identical floating-point operation sequence.
+pub(crate) fn solve_normal_upper(a: &mut [f64], b: &mut [f64], n: usize, lambda: f64) {
+    for i in 0..n {
+        for j in 0..i {
+            a[i * n + j] = a[j * n + i];
+        }
+        a[i * n + i] += lambda;
+    }
+    solve_linear(a, b, n);
+}
+
 /// In-place Gaussian elimination with partial pivoting; solution left in b.
-fn solve_linear(a: &mut [f64], b: &mut [f64], n: usize) {
+pub(crate) fn solve_linear(a: &mut [f64], b: &mut [f64], n: usize) {
     for col in 0..n {
         // pivot
         let mut piv = col;
@@ -304,17 +460,66 @@ fn solve_linear(a: &mut [f64], b: &mut [f64], n: usize) {
     }
 }
 
-/// Online ARIMA predictor: maintains price/availability histories, refits
-/// periodically, and produces joint forecasts for AHAP.
-pub struct ArimaPredictor {
-    spec_price: ArimaSpec,
-    spec_avail: ArimaSpec,
-    price_hist: Vec<f64>,
-    avail_hist: Vec<f64>,
-    refit_every: usize,
-    fitted_price: Option<FittedArima>,
-    fitted_avail: Option<FittedArima>,
+/// Forecast clamps: spot price in [0.01, 2.0] (on-demand = 1),
+/// availability in [0, 64] instances.
+pub(crate) const PRICE_CLAMP: (f64, f64) = (0.01, 2.0);
+pub(crate) const AVAIL_CLAMP: (f64, f64) = (0.0, 64.0);
+
+/// One forecasted series: its online fitter, the current fitted model,
+/// and its own refit clock (so price and availability fit lazily and
+/// independently — consuming only one series never fits the other).
+struct SeriesState {
+    inc: crate::forecast::incremental::IncrementalArima,
+    fitted: Option<FittedArima>,
     since_fit: usize,
+    fits: u64,
+}
+
+impl SeriesState {
+    fn new(spec: ArimaSpec, incremental: bool) -> Self {
+        SeriesState {
+            inc: crate::forecast::incremental::IncrementalArima::new(spec, incremental),
+            fitted: None,
+            since_fit: 0,
+            fits: 0,
+        }
+    }
+
+    fn observe(&mut self, x: f64) {
+        self.inc.observe(x);
+        self.since_fit += 1;
+    }
+
+    fn ensure_fit(&mut self, refit_every: usize) {
+        if self.fitted.is_none() || self.since_fit >= refit_every {
+            // The fitter's own `tracking` flag selects the path:
+            // incremental statistics when on, the batch reference when
+            // off (IncrementalArima::fit falls back internally).
+            self.fitted = Some(self.inc.fit());
+            self.since_fit = 0;
+            self.fits += 1;
+        }
+    }
+
+    fn forecast_clamped(&self, h: usize, clamp: (f64, f64), fallback: f64) -> Vec<f64> {
+        let mut v = match &self.fitted {
+            Some(f) => f.forecast(h),
+            None => vec![fallback; h],
+        };
+        for x in v.iter_mut() {
+            *x = x.clamp(clamp.0, clamp.1);
+        }
+        v
+    }
+}
+
+/// Online ARIMA predictor: maintains price/availability histories, refits
+/// periodically (incrementally by default), and produces joint forecasts
+/// for AHAP.
+pub struct ArimaPredictor {
+    cfg: ArimaConfig,
+    price: SeriesState,
+    avail: SeriesState,
     /// Historical seed data (e.g. past days of the market) so forecasts
     /// are sensible from the first job slot.
     pub warmup: usize,
@@ -322,75 +527,85 @@ pub struct ArimaPredictor {
 
 impl ArimaPredictor {
     pub fn new(spec_price: ArimaSpec, spec_avail: ArimaSpec) -> Self {
-        ArimaPredictor {
+        ArimaPredictor::configured(ArimaConfig {
             spec_price,
             spec_avail,
-            price_hist: Vec::new(),
-            avail_hist: Vec::new(),
-            refit_every: 1,
-            fitted_price: None,
-            fitted_avail: None,
-            since_fit: 0,
+            ..ArimaConfig::default()
+        })
+    }
+
+    pub fn with_defaults() -> Self {
+        ArimaPredictor::configured(ArimaConfig::default())
+    }
+
+    /// Build from a full [`ArimaConfig`] (specs, cadence, fitting path).
+    pub fn configured(cfg: ArimaConfig) -> Self {
+        ArimaPredictor {
+            cfg,
+            price: SeriesState::new(cfg.spec_price, cfg.incremental),
+            avail: SeriesState::new(cfg.spec_avail, cfg.incremental),
             warmup: 0,
         }
     }
 
-    pub fn with_defaults() -> Self {
-        ArimaPredictor::new(ArimaSpec::default(), ArimaSpec::default())
-    }
-
     /// Pre-load history (e.g. the days preceding the job's arrival).
     pub fn seed_history(&mut self, price: &[f64], avail: &[f64]) {
-        self.price_hist.extend_from_slice(price);
-        self.avail_hist.extend_from_slice(avail);
-        self.warmup = self.price_hist.len();
-        self.fitted_price = None;
-        self.fitted_avail = None;
+        for &p in price {
+            self.price.inc.observe(p);
+        }
+        for &a in avail {
+            self.avail.inc.observe(a);
+        }
+        self.warmup = self.price.inc.len();
+        self.price.fitted = None;
+        self.avail.fitted = None;
+        self.price.since_fit = 0;
+        self.avail.since_fit = 0;
     }
 
     /// Refit cadence (1 = every slot).
     pub fn set_refit_every(&mut self, k: usize) {
-        self.refit_every = k.max(1);
+        self.cfg.refit_every = k.max(1);
     }
 
-    fn ensure_fit(&mut self) {
-        let need = self.fitted_price.is_none()
-            || self.since_fit >= self.refit_every;
-        if need {
-            self.fitted_price =
-                Some(fit(&self.price_hist, self.spec_price));
-            self.fitted_avail =
-                Some(fit(&self.avail_hist, self.spec_avail));
-            self.since_fit = 0;
-        }
+    /// Select the fitting path (true = incremental sufficient-statistic
+    /// refits, false = legacy batch rebuilds).
+    pub fn set_incremental(&mut self, incremental: bool) {
+        self.cfg.incremental = incremental;
+        self.price.inc.set_tracking(incremental);
+        self.avail.inc.set_tracking(incremental);
+    }
+
+    /// Number of model fits performed so far, `(price, avail)` — the
+    /// lazy-fitting and refit-cadence observability hook.
+    pub fn fit_counts(&self) -> (u64, u64) {
+        (self.price.fits, self.avail.fits)
+    }
+
+    /// Price-only forecast: fits (at the configured cadence) and
+    /// forecasts the price series without ever touching the
+    /// availability model.
+    pub fn predict_price(&mut self, horizon: usize) -> Vec<f64> {
+        self.price.ensure_fit(self.cfg.refit_every);
+        self.price.forecast_clamped(horizon, PRICE_CLAMP, 0.5)
+    }
+
+    /// Availability-only forecast (the price model stays untouched).
+    pub fn predict_avail(&mut self, horizon: usize) -> Vec<f64> {
+        self.avail.ensure_fit(self.cfg.refit_every);
+        self.avail.forecast_clamped(horizon, AVAIL_CLAMP, 0.0)
     }
 }
 
 impl Predictor for ArimaPredictor {
     fn observe(&mut self, _t: usize, price: f64, avail: u32) {
-        self.price_hist.push(price);
-        self.avail_hist.push(avail as f64);
-        self.since_fit += 1;
+        self.price.observe(price);
+        self.avail.observe(avail as f64);
     }
 
     fn predict(&mut self, horizon: usize) -> Forecast {
-        self.ensure_fit();
-        let price = self
-            .fitted_price
-            .as_ref()
-            .map(|f| f.forecast(horizon))
-            .unwrap_or_else(|| vec![0.5; horizon])
-            .iter()
-            .map(|p| p.clamp(0.01, 2.0))
-            .collect();
-        let avail = self
-            .fitted_avail
-            .as_ref()
-            .map(|f| f.forecast(horizon))
-            .unwrap_or_else(|| vec![0.0; horizon])
-            .iter()
-            .map(|a| a.clamp(0.0, 64.0))
-            .collect();
+        let price = self.predict_price(horizon);
+        let avail = self.predict_avail(horizon);
         Forecast { price, avail }
     }
 
@@ -399,11 +614,12 @@ impl Predictor for ArimaPredictor {
     }
 
     fn reset(&mut self) {
-        self.price_hist.truncate(self.warmup);
-        self.avail_hist.truncate(self.warmup);
-        self.fitted_price = None;
-        self.fitted_avail = None;
-        self.since_fit = 0;
+        self.price.inc.truncate(self.warmup);
+        self.avail.inc.truncate(self.warmup);
+        self.price.fitted = None;
+        self.avail.fitted = None;
+        self.price.since_fit = 0;
+        self.avail.since_fit = 0;
     }
 }
 
@@ -485,6 +701,35 @@ mod tests {
     }
 
     #[test]
+    fn forecast_prefix_property_holds() {
+        // The j-th forecast step never depends on the requested horizon,
+        // so a long forecast's prefix equals the short forecast exactly —
+        // the identity the shared per-slot cache relies on.
+        let trace = TraceGenerator::calibrated().generate(11);
+        for spec in [
+            ArimaSpec::default(),
+            ArimaSpec { p: 2, d: 1, q: 1, seasonal_lag: None },
+        ] {
+            let m = fit(&trace.price[..200], spec);
+            let long = m.forecast(8);
+            for h in 1..=8 {
+                assert_eq!(m.forecast(h), long[..h].to_vec(), "h={h}");
+            }
+        }
+    }
+
+    #[test]
+    fn forecast_into_reuses_buffer() {
+        let trace = TraceGenerator::calibrated().generate(7);
+        let m = fit(&trace.price[..150], ArimaSpec::default());
+        let mut buf = vec![99.0; 3]; // stale contents must be cleared
+        m.forecast_into(5, &mut buf);
+        assert_eq!(buf, m.forecast(5));
+        m.forecast_into(2, &mut buf);
+        assert_eq!(buf, m.forecast(2));
+    }
+
+    #[test]
     fn predictor_beats_flat_baseline_on_synthetic_market() {
         // The Fig. 3 claim: ARIMA tracks the spot series. Compare 1-step
         // MAE against the "last value" persistence forecast on price.
@@ -515,5 +760,50 @@ mod tests {
             assert!(*p >= 0.01 && *p <= 2.0);
             assert!(*a >= 0.0 && *a <= 64.0);
         }
+    }
+
+    #[test]
+    fn price_only_prediction_never_fits_availability() {
+        let trace = TraceGenerator::calibrated().generate(3);
+        let mut pred = ArimaPredictor::with_defaults();
+        for t in 0..120 {
+            pred.observe(t, trace.price[t], trace.avail[t]);
+            let _ = pred.predict_price(3);
+        }
+        let (price_fits, avail_fits) = pred.fit_counts();
+        assert_eq!(price_fits, 120, "refit_every=1 → one price fit per slot");
+        assert_eq!(avail_fits, 0, "availability model must stay lazy");
+        // First joint predict fits availability exactly once.
+        let _ = pred.predict(3);
+        assert_eq!(pred.fit_counts().1, 1);
+    }
+
+    #[test]
+    fn refit_cadence_is_respected() {
+        let trace = TraceGenerator::calibrated().generate(4);
+        let mut pred = ArimaPredictor::with_defaults();
+        pred.set_refit_every(5);
+        for t in 0..100 {
+            pred.observe(t, trace.price[t], trace.avail[t]);
+            let _ = pred.predict(2);
+        }
+        let (pf, af) = pred.fit_counts();
+        // Fit on the first predict, then every 5th observation.
+        assert_eq!(pf, 20, "price fits {pf}");
+        assert_eq!(af, 20, "avail fits {af}");
+    }
+
+    #[test]
+    fn reset_restores_seeded_history_exactly() {
+        let trace = TraceGenerator::calibrated().generate(9);
+        let mut pred = ArimaPredictor::with_defaults();
+        pred.seed_history(&trace.price[..100], &trace.avail_f64()[..100]);
+        let before = pred.predict(4);
+        for t in 100..130 {
+            pred.observe(t, trace.price[t], trace.avail[t]);
+        }
+        pred.reset();
+        let after = pred.predict(4);
+        assert_eq!(before, after, "reset must rewind to the seeded history");
     }
 }

@@ -1,0 +1,364 @@
+//! Shared per-slot forecast cache for pool-scale sweeps.
+//!
+//! Every AHAP policy in the paper's 112-policy pool runs the *same*
+//! honest ARIMA predictor over the *same* market trace — a pool sweep
+//! used to repeat ~105 identical fits per slot. A [`SharedForecaster`]
+//! owns one incremental predictor per `(trace, config)` and memoizes a
+//! single max-horizon fit + forecast per slot; every policy holds a
+//! lightweight [`SharedArimaPredictor`] handle that serves its own
+//! horizon by prefix truncation.
+//!
+//! Bit-identity: the forecast recursion's step `j` never depends on the
+//! requested horizon, and the clamp is elementwise, so a truncated
+//! max-horizon forecast equals a direct `h`-step forecast exactly.
+//! Per-slot fits depend only on the observation history, which is the
+//! trace itself — so cached sweeps reproduce per-policy-predictor
+//! episodes bit-for-bit, for any thread count (enforced in
+//! `tests/forecast_properties.rs` and `tests/fleet_integration.rs`).
+//!
+//! [`ForecastCachePool`] is the fleet-engine flavor: one lazily built
+//! cache per `(region, arrival, config)`, shared across the M
+//! counterfactual replays of a selection round.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::forecast::arima::{ArimaConfig, ArimaPredictor};
+use crate::forecast::predictor::{Forecast, Predictor};
+use crate::market::trace::SpotTrace;
+
+/// Market observations preceding a job's first slot, used to seed honest
+/// predictors so forecasts are sensible from slot 0.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MarketHistory {
+    pub price: Vec<f64>,
+    pub avail: Vec<f64>,
+}
+
+impl MarketHistory {
+    /// The first `upto` slots of a trace as predictor history.
+    pub fn from_trace(trace: &SpotTrace, upto: usize) -> Self {
+        let upto = upto.min(trace.len());
+        MarketHistory {
+            price: trace.price[..upto].to_vec(),
+            avail: trace.avail[..upto].iter().map(|&a| a as f64).collect(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.price.is_empty() && self.avail.is_empty()
+    }
+}
+
+struct CacheInner {
+    pred: ArimaPredictor,
+    /// `slots[t]` = clamped `horizon`-step forecast issued at slot `t`
+    /// (after observing slots `0..=t` on top of the seeded history).
+    slots: Vec<Forecast>,
+    horizon: usize,
+}
+
+struct ForecastCache {
+    trace: SpotTrace,
+    cfg: ArimaConfig,
+    history: Option<MarketHistory>,
+    inner: Mutex<CacheInner>,
+}
+
+fn fresh_predictor(cfg: ArimaConfig, history: &Option<MarketHistory>) -> ArimaPredictor {
+    let mut p = ArimaPredictor::configured(cfg);
+    if let Some(h) = history {
+        p.seed_history(&h.price, &h.avail);
+    }
+    p
+}
+
+/// A cloneable, thread-safe handle to one trace's forecast cache.
+/// Cloning shares the cache; [`handle`](SharedForecaster::handle) mints
+/// per-policy [`Predictor`]s.
+#[derive(Clone)]
+pub struct SharedForecaster(Arc<ForecastCache>);
+
+impl fmt::Debug for SharedForecaster {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let slots = self.0.inner.lock().map(|g| g.slots.len()).unwrap_or(0);
+        write!(f, "SharedForecaster(slots={slots})")
+    }
+}
+
+impl SharedForecaster {
+    /// Cache over `trace` with an unseeded predictor.
+    pub fn new(trace: SpotTrace, cfg: ArimaConfig) -> Self {
+        SharedForecaster::with_history(trace, cfg, None)
+    }
+
+    /// Cache whose predictor is seeded with pre-trace market history —
+    /// equivalent to every per-policy predictor calling `seed_history`.
+    pub fn with_history(
+        trace: SpotTrace,
+        cfg: ArimaConfig,
+        history: Option<MarketHistory>,
+    ) -> Self {
+        let pred = fresh_predictor(cfg, &history);
+        SharedForecaster(Arc::new(ForecastCache {
+            trace,
+            cfg,
+            history,
+            inner: Mutex::new(CacheInner {
+                pred,
+                slots: Vec::new(),
+                horizon: cfg.max_horizon.max(1),
+            }),
+        }))
+    }
+
+    /// A per-policy predictor handle backed by this cache.
+    pub fn handle(&self) -> SharedArimaPredictor {
+        SharedArimaPredictor { cache: self.clone(), last_t: None }
+    }
+
+    /// Slots whose forecast has been computed so far.
+    pub fn slots_computed(&self) -> usize {
+        self.0.inner.lock().unwrap().slots.len()
+    }
+
+    /// Model fits performed by the backing predictor `(price, avail)` —
+    /// for a pool sweep this stays O(slots), not O(slots × policies).
+    pub fn fits(&self) -> (u64, u64) {
+        self.0.inner.lock().unwrap().pred.fit_counts()
+    }
+
+    /// The clamped forecast issued at slot `t`, truncated to `h` steps.
+    /// Advances the backing predictor slot-by-slot on demand; every
+    /// value is a pure function of `(trace, cfg, history, t)`, so the
+    /// result is identical no matter which caller (or thread) computes
+    /// it first.
+    fn forecast_at(&self, t: usize, h: usize) -> Forecast {
+        let c = &*self.0;
+        let mut g = self.0.inner.lock().unwrap();
+        if h > g.horizon {
+            // A caller outran the precomputed horizon: rebuild the cache
+            // at the larger one. Deterministic (same fits, longer
+            // forecasts) and rare — size `cfg.max_horizon` to the pool's
+            // max ω to avoid it entirely.
+            g.horizon = h;
+            let upto = g.slots.len();
+            g.pred = fresh_predictor(c.cfg, &c.history);
+            g.slots.clear();
+            for _ in 0..upto {
+                advance(&mut g, c);
+            }
+        }
+        while g.slots.len() <= t {
+            advance(&mut g, c);
+        }
+        let fc = &g.slots[t];
+        Forecast { price: fc.price[..h].to_vec(), avail: fc.avail[..h].to_vec() }
+    }
+
+    /// Forecast before any observation (a fresh predictor's view).
+    fn forecast_unobserved(&self, h: usize) -> Forecast {
+        let c = &*self.0;
+        fresh_predictor(c.cfg, &c.history).predict(h)
+    }
+}
+
+/// Observe the next trace slot and memoize its forecast.
+fn advance(g: &mut CacheInner, c: &ForecastCache) {
+    let s = g.slots.len();
+    g.pred.observe(s, c.trace.price_at(s), c.trace.avail_at(s));
+    let fc = g.pred.predict(g.horizon);
+    g.slots.push(fc);
+}
+
+/// A [`Predictor`] that reads a [`SharedForecaster`] instead of owning a
+/// private model: `observe` just tracks the slot clock (the cache
+/// already knows the trace), `predict` serves the memoized forecast.
+pub struct SharedArimaPredictor {
+    cache: SharedForecaster,
+    last_t: Option<usize>,
+}
+
+impl Predictor for SharedArimaPredictor {
+    fn observe(&mut self, t: usize, price: f64, avail: u32) {
+        debug_assert_eq!(
+            price,
+            self.cache.0.trace.price_at(t),
+            "shared forecaster observed a price off its trace at slot {t}"
+        );
+        debug_assert_eq!(avail, self.cache.0.trace.avail_at(t));
+        self.last_t = Some(t);
+    }
+
+    fn predict(&mut self, horizon: usize) -> Forecast {
+        match self.last_t {
+            Some(t) => self.cache.forecast_at(t, horizon),
+            None => self.cache.forecast_unobserved(horizon),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "arima"
+    }
+
+    fn reset(&mut self) {
+        self.last_t = None;
+    }
+}
+
+/// Lazily built [`SharedForecaster`]s keyed by `(region, arrival,
+/// config)` — the fleet engine's cache set, shared (via `Arc`) across
+/// the recorded run and every counterfactual replay of a round.
+#[derive(Clone, Default)]
+pub struct ForecastCachePool {
+    inner: Arc<Mutex<HashMap<(usize, usize, ArimaConfig), SharedForecaster>>>,
+}
+
+impl ForecastCachePool {
+    pub fn new() -> Self {
+        ForecastCachePool::default()
+    }
+
+    /// The cache for a region/arrival slice, building it (from
+    /// `make_trace`) on first use.
+    pub fn for_slice(
+        &self,
+        region: usize,
+        arrival: usize,
+        cfg: ArimaConfig,
+        make_trace: impl FnOnce() -> SpotTrace,
+    ) -> SharedForecaster {
+        self.inner
+            .lock()
+            .unwrap()
+            .entry((region, arrival, cfg))
+            .or_insert_with(|| SharedForecaster::new(make_trace(), cfg))
+            .clone()
+    }
+
+    /// Number of distinct caches built so far.
+    pub fn caches(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+}
+
+impl fmt::Debug for ForecastCachePool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ForecastCachePool(caches={})", self.caches())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::market::generator::TraceGenerator;
+
+    fn trace() -> SpotTrace {
+        TraceGenerator::calibrated().generate(5).slice_from(30)
+    }
+
+    #[test]
+    fn handle_matches_private_predictor_bit_for_bit() {
+        let tr = trace();
+        let cfg = ArimaConfig::default();
+        let shared = SharedForecaster::new(tr.clone(), cfg);
+        // Two handles with different horizons, interleaved with a
+        // private predictor observing the same slots.
+        let mut h3 = shared.handle();
+        let mut h5 = shared.handle();
+        let mut private = ArimaPredictor::configured(cfg);
+        for t in 0..40 {
+            h3.observe(t, tr.price_at(t), tr.avail_at(t));
+            h5.observe(t, tr.price_at(t), tr.avail_at(t));
+            private.observe(t, tr.price_at(t), tr.avail_at(t));
+            let want = private.predict(5);
+            assert_eq!(h5.predict(5), want, "slot {t}");
+            let got3 = h3.predict(3);
+            assert_eq!(got3.price, want.price[..3].to_vec(), "slot {t}");
+            assert_eq!(got3.avail, want.avail[..3].to_vec(), "slot {t}");
+        }
+        // One fit per slot total, not per handle.
+        assert_eq!(shared.fits().0, 40);
+        assert_eq!(shared.slots_computed(), 40);
+    }
+
+    #[test]
+    fn horizon_overrun_rebuilds_consistently() {
+        let tr = trace();
+        let cfg = ArimaConfig { max_horizon: 2, ..ArimaConfig::default() };
+        let shared = SharedForecaster::new(tr.clone(), cfg);
+        let mut h = shared.handle();
+        for t in 0..10 {
+            h.observe(t, tr.price_at(t), tr.avail_at(t));
+            let _ = h.predict(2);
+        }
+        // Ask past the precomputed horizon at an already-cached slot.
+        let long = h.predict(6);
+        assert_eq!(long.horizon(), 6);
+        let mut private = ArimaPredictor::configured(cfg);
+        for t in 0..10 {
+            private.observe(t, tr.price_at(t), tr.avail_at(t));
+            let _ = private.predict(2);
+        }
+        assert_eq!(long, private.predict(6));
+    }
+
+    #[test]
+    fn seeded_history_matches_seeded_private_predictor() {
+        let full = TraceGenerator::calibrated().generate(8);
+        let hist = MarketHistory::from_trace(&full, 120);
+        let tr = full.slice_from(120);
+        let cfg = ArimaConfig::default();
+        let shared = SharedForecaster::with_history(tr.clone(), cfg, Some(hist.clone()));
+        let mut h = shared.handle();
+        let mut private = ArimaPredictor::configured(cfg);
+        private.seed_history(&hist.price, &hist.avail);
+        // Pre-observation forecast, then a few slots.
+        assert_eq!(h.predict(4), {
+            let mut p = ArimaPredictor::configured(cfg);
+            p.seed_history(&hist.price, &hist.avail);
+            p.predict(4)
+        });
+        for t in 0..12 {
+            h.observe(t, tr.price_at(t), tr.avail_at(t));
+            private.observe(t, tr.price_at(t), tr.avail_at(t));
+            assert_eq!(h.predict(5), private.predict(5), "slot {t}");
+        }
+    }
+
+    #[test]
+    fn reset_handles_replay_identically() {
+        let tr = trace();
+        let shared = SharedForecaster::new(tr.clone(), ArimaConfig::default());
+        let mut h = shared.handle();
+        let mut first = Vec::new();
+        for t in 0..8 {
+            h.observe(t, tr.price_at(t), tr.avail_at(t));
+            first.push(h.predict(4));
+        }
+        h.reset();
+        for (t, want) in first.iter().enumerate() {
+            h.observe(t, tr.price_at(t), tr.avail_at(t));
+            assert_eq!(h.predict(4), *want);
+        }
+    }
+
+    #[test]
+    fn pool_builds_one_cache_per_key() {
+        let pool = ForecastCachePool::new();
+        let cfg = ArimaConfig::default();
+        let a = pool.for_slice(0, 0, cfg, trace);
+        let b = pool.for_slice(0, 0, cfg, || panic!("must reuse the cache"));
+        let _c = pool.for_slice(1, 0, cfg, trace);
+        assert_eq!(pool.caches(), 2);
+        // Same key → same underlying cache.
+        let mut ha = a.handle();
+        let mut hb = b.handle();
+        let tr = trace();
+        ha.observe(0, tr.price_at(0), tr.avail_at(0));
+        hb.observe(0, tr.price_at(0), tr.avail_at(0));
+        let _ = ha.predict(3);
+        assert_eq!(a.slots_computed(), b.slots_computed());
+    }
+}

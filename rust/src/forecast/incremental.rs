@@ -1,0 +1,531 @@
+//! Incremental Hannan–Rissanen fitting: the batch fitter in
+//! [`crate::forecast::arima`] rebuilds two full-history design matrices
+//! per refit (O(n·k²)); this module maintains the normal-equation
+//! sufficient statistics as O(k²) rank-1 updates per observation, so a
+//! refit is a pair of tiny k×k solves regardless of history length.
+//!
+//! What is maintained per observation:
+//!
+//! - **Stage 1 (long AR)** — the raw XᵀX / Xᵀy accumulators, updated
+//!   with exactly the same per-row operation sequence as the batch
+//!   `ridge_ols`, so the stage-1 coefficients are bit-identical to the
+//!   batch fit.
+//! - **Stage 2 (ARMA regression)** — its regressors include lagged
+//!   *innovations*, which are re-estimated from the current stage-1
+//!   coefficients at every refit, so its XᵀX cannot be accumulated
+//!   directly. Instead we maintain the lag **moment matrix**
+//!   `M[a][b] = Σ_t diff[t−a]·diff[t−b]` over the stage-2 rows; every
+//!   stage-2 design entry is a quadratic form in the stage-1
+//!   coefficients against `M` (an innovation is a linear function of
+//!   lagged values: `ε_t = diff_t − β₀ − Σ β_m diff_{t−m}`). The handful
+//!   of early rows whose innovation lags predate the long-AR window
+//!   (where the batch path pins ε = 0) are re-added exactly at refit
+//!   time from the retained series head.
+//!
+//! The reconstruction reorders floating-point summation relative to the
+//! batch path, so stage-2 coefficients agree to ~1e-12 rather than
+//! bit-for-bit; `tests/forecast_properties.rs` enforces 1e-9 across
+//! random series, specs, and lengths.
+//!
+//! When the structural plan changes (short series growing into higher
+//! effective orders, the seasonal term activating), the statistics are
+//! rebuilt by replaying the retained history — a bounded number of
+//! early, cheap rebuilds, after which every observation is O(k²).
+
+use crate::forecast::arima::{
+    diff_window, fit, fit_plan, mean_model, solve_linear, solve_normal_upper,
+    ArimaSpec, FitPlan, FittedArima, Structure, RIDGE_LAMBDA,
+};
+
+/// Sufficient statistics for one structural plan.
+#[derive(Debug, Clone)]
+struct SuffStats {
+    st: Structure,
+    /// Next differenced-series index to absorb.
+    next_t: usize,
+    /// Stage-1 accumulators: upper triangle of XᵀX and Xᵀy for the
+    /// long-AR design, plus the row count (validity check).
+    a1: Vec<f64>,
+    b1: Vec<f64>,
+    rows1: usize,
+    /// Distinct lags the stage-2 quadratic forms touch: 0..=max(p,
+    /// q+long_p), plus the seasonal lag when larger. Contiguous by
+    /// construction except for that optional seasonal tail entry.
+    lags: Vec<usize>,
+    /// Largest contiguous lag (for O(1) lag→basis-index mapping).
+    base_max: usize,
+    /// Moment matrix over `[1, diff[t−lags[0]], …]` (upper triangle).
+    mom: Vec<f64>,
+    /// First row the moment matrix covers: rows in `[st.start, start2)`
+    /// have innovation lags predating the long-AR window and are
+    /// re-added exactly at refit time.
+    start2: usize,
+}
+
+impl SuffStats {
+    fn build(st: Structure, diff: &[f64]) -> SuffStats {
+        let k1 = st.long_p + 1;
+        let base_max = st.p.max(if st.q > 0 { st.q + st.long_p } else { 0 });
+        let mut lags: Vec<usize> = (0..=base_max).collect();
+        if let Some(s) = st.seas {
+            if s > base_max {
+                lags.push(s);
+            }
+        }
+        let max_lag = *lags.last().unwrap();
+        let nb = lags.len() + 1;
+        let mut s = SuffStats {
+            st,
+            next_t: 0,
+            a1: vec![0.0; k1 * k1],
+            b1: vec![0.0; k1],
+            rows1: 0,
+            lags,
+            base_max,
+            mom: vec![0.0; nb * nb],
+            start2: st.start.max(max_lag),
+        };
+        s.absorb_upto(diff);
+        s
+    }
+
+    /// Basis index of a lag in the moment matrix (0 is the constant).
+    fn bidx(&self, lag: usize) -> usize {
+        if lag <= self.base_max {
+            lag + 1
+        } else {
+            self.lags.len() // the appended seasonal lag
+        }
+    }
+
+    /// Absorb every not-yet-seen row of `diff` into the accumulators.
+    fn absorb_upto(&mut self, diff: &[f64]) {
+        let k1 = self.st.long_p + 1;
+        let nb = self.lags.len() + 1;
+        for t in self.next_t..diff.len() {
+            if t >= self.st.long_p {
+                // Same per-row operation sequence as ridge_ols, so the
+                // stage-1 solve reproduces the batch path bit-for-bit.
+                for i in 0..k1 {
+                    let xi = if i == 0 { 1.0 } else { diff[t - i] };
+                    self.b1[i] += xi * diff[t];
+                    for j in i..k1 {
+                        let xj = if j == 0 { 1.0 } else { diff[t - j] };
+                        self.a1[i * k1 + j] += xi * xj;
+                    }
+                }
+                self.rows1 += 1;
+            }
+            if t >= self.start2 {
+                for i in 0..nb {
+                    let vi = if i == 0 { 1.0 } else { diff[t - self.lags[i - 1]] };
+                    for j in i..nb {
+                        let vj =
+                            if j == 0 { 1.0 } else { diff[t - self.lags[j - 1]] };
+                        self.mom[i * nb + j] += vi * vj;
+                    }
+                }
+            }
+        }
+        self.next_t = diff.len();
+    }
+}
+
+/// An online ARIMA fitter over one series: push observations with
+/// [`observe`](IncrementalArima::observe), pull a fitted model with
+/// [`fit`](IncrementalArima::fit) at any time. With tracking enabled
+/// (the default) a fit costs O(k³) independent of history length; with
+/// tracking disabled it falls back to the batch reference path.
+#[derive(Debug, Clone)]
+pub struct IncrementalArima {
+    spec: ArimaSpec,
+    tracking: bool,
+    series: Vec<f64>,
+    diff: Vec<f64>,
+    /// Running last value per differencing level (level 0 = raw).
+    level_last: Vec<Option<f64>>,
+    /// Running sum of the differenced series (mean model in O(1)).
+    diff_sum: f64,
+    stats: Option<SuffStats>,
+}
+
+impl IncrementalArima {
+    pub fn new(spec: ArimaSpec, tracking: bool) -> Self {
+        assert!(spec.d <= 2, "only d<=2 supported");
+        IncrementalArima {
+            spec,
+            tracking,
+            series: Vec::new(),
+            diff: Vec::new(),
+            level_last: vec![None; spec.d],
+            diff_sum: 0.0,
+            stats: None,
+        }
+    }
+
+    pub fn spec(&self) -> ArimaSpec {
+        self.spec
+    }
+
+    pub fn len(&self) -> usize {
+        self.series.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.series.is_empty()
+    }
+
+    /// The raw observation history (the batch path's input).
+    pub fn series(&self) -> &[f64] {
+        &self.series
+    }
+
+    /// Enable/disable sufficient-statistic tracking. Enabling replays
+    /// the retained history once.
+    pub fn set_tracking(&mut self, tracking: bool) {
+        if tracking == self.tracking {
+            return;
+        }
+        self.tracking = tracking;
+        self.stats = None;
+        if tracking {
+            self.sync_stats();
+        }
+    }
+
+    /// Append one observation: O(d) differencing plus (when tracking)
+    /// O(k²) accumulator updates.
+    pub fn observe(&mut self, x: f64) {
+        self.series.push(x);
+        self.ingest(x);
+    }
+
+    /// Drop observations past `n` (episode reset to seeded history).
+    /// Rebuilds the differencing state and statistics by replay.
+    pub fn truncate(&mut self, n: usize) {
+        if n >= self.series.len() {
+            return;
+        }
+        self.series.truncate(n);
+        self.diff.clear();
+        self.diff_sum = 0.0;
+        self.level_last = vec![None; self.spec.d];
+        self.stats = None;
+        let series = std::mem::take(&mut self.series);
+        for &x in &series {
+            self.ingest(x);
+        }
+        self.series = series;
+    }
+
+    fn ingest(&mut self, x: f64) {
+        let mut v = x;
+        for slot in self.level_last.iter_mut() {
+            match *slot {
+                None => {
+                    *slot = Some(v);
+                    return;
+                }
+                Some(prev) => {
+                    *slot = Some(v);
+                    v -= prev;
+                }
+            }
+        }
+        self.diff.push(v);
+        self.diff_sum += v;
+        if self.tracking {
+            self.sync_stats();
+        }
+    }
+
+    fn sync_stats(&mut self) {
+        match fit_plan(self.diff.len(), self.spec) {
+            FitPlan::Degenerate => self.stats = None,
+            FitPlan::Full(st) => match &mut self.stats {
+                Some(s) if s.st == st => s.absorb_upto(&self.diff),
+                _ => self.stats = Some(SuffStats::build(st, &self.diff)),
+            },
+        }
+    }
+
+    /// Last raw values per differencing level, innermost first — the
+    /// un-differencing tail, identical to the batch fitter's.
+    fn tail(&self) -> Vec<f64> {
+        (0..self.spec.d).rev().filter_map(|lvl| self.level_last[lvl]).collect()
+    }
+
+    /// Produce a fitted model from the current statistics.
+    pub fn fit(&self) -> FittedArima {
+        let len = self.diff.len();
+        let st = match fit_plan(len, self.spec) {
+            FitPlan::Degenerate => {
+                let m = if len == 0 { 0.0 } else { self.diff_sum / len as f64 };
+                return mean_model(self.spec, m, len, self.tail());
+            }
+            FitPlan::Full(st) => st,
+        };
+        let stats = match (&self.stats, self.tracking) {
+            (Some(s), true) if s.st == st => s,
+            // Tracking off (or stats out of step, which sync_stats
+            // prevents): batch reference path.
+            _ => return fit(&self.series, self.spec),
+        };
+        let Structure { p, q, seas, long_p, start, ncols } = st;
+        let diff = &self.diff;
+        let k1 = long_p + 1;
+
+        // Stage 1: identical solve to the batch path (same accumulators,
+        // same mirror/ridge/eliminate sequence). Too few rows → the
+        // batch path pins every innovation to zero; mirror that.
+        let beta1: Option<Vec<f64>> = if stats.rows1 < k1 + 1 {
+            None
+        } else {
+            let mut a = stats.a1.clone();
+            let mut b = stats.b1.clone();
+            solve_normal_upper(&mut a, &mut b, k1, RIDGE_LAMBDA);
+            Some(b)
+        };
+        let eps_at = |u: usize| -> f64 {
+            match &beta1 {
+                None => 0.0,
+                Some(b) => {
+                    if u < long_p {
+                        0.0
+                    } else {
+                        let mut pred = b[0];
+                        for m in 1..=long_p {
+                            pred += b[m] * diff[u - m];
+                        }
+                        diff[u] - pred
+                    }
+                }
+            }
+        };
+
+        // Stage 2: reconstruct the normal equations from the moment
+        // matrix. Every design column is linear in the lag basis
+        // `[1, diff[t−a]]`, innovations included (ε is linear in lagged
+        // values through the *current* β₁), so XᵀX entries are quadratic
+        // forms against `mom`.
+        let nb = stats.lags.len() + 1;
+        let mut m_full = stats.mom.clone();
+        for i in 0..nb {
+            for j in 0..i {
+                m_full[i * nb + j] = m_full[j * nb + i];
+            }
+        }
+        // Sparse basis-coefficient vector per design column.
+        let mut cols: Vec<Vec<(usize, f64)>> = Vec::with_capacity(ncols);
+        cols.push(vec![(0, 1.0)]); // intercept
+        for i in 1..=p {
+            cols.push(vec![(stats.bidx(i), 1.0)]);
+        }
+        for j in 1..=q {
+            match &beta1 {
+                None => cols.push(Vec::new()), // ε ≡ 0
+                Some(b) => {
+                    let mut c = Vec::with_capacity(long_p + 2);
+                    c.push((stats.bidx(j), 1.0));
+                    c.push((0, -b[0]));
+                    for m in 1..=long_p {
+                        c.push((stats.bidx(j + m), -b[m]));
+                    }
+                    cols.push(c);
+                }
+            }
+        }
+        if let Some(s) = seas {
+            cols.push(vec![(stats.bidx(s), 1.0)]);
+        }
+        let y_col = [(stats.bidx(0), 1.0)];
+
+        let form = |cu: &[(usize, f64)], cv: &[(usize, f64)]| -> f64 {
+            let mut acc = 0.0;
+            for &(a, ca) in cu {
+                for &(b, cb) in cv {
+                    acc += ca * cb * m_full[a * nb + b];
+                }
+            }
+            acc
+        };
+        let mut a2 = vec![0.0; ncols * ncols];
+        let mut b2 = vec![0.0; ncols];
+        for u in 0..ncols {
+            for v in u..ncols {
+                let val = form(&cols[u], &cols[v]);
+                a2[u * ncols + v] = val;
+                a2[v * ncols + u] = val;
+            }
+            b2[u] = form(&cols[u], &y_col);
+        }
+
+        // Early rows the moment matrix skipped (innovation lags before
+        // the long-AR window, where the batch design holds ε = 0):
+        // re-add their exact outer products.
+        let slag = seas.unwrap_or(0);
+        let mut f = vec![0.0; ncols];
+        for t in start..stats.start2 {
+            let mut idx = 0;
+            f[idx] = 1.0;
+            idx += 1;
+            for j in 1..=p {
+                f[idx] = diff[t - j];
+                idx += 1;
+            }
+            for j in 1..=q {
+                f[idx] = eps_at(t - j);
+                idx += 1;
+            }
+            if seas.is_some() {
+                f[idx] = diff[t - slag];
+            }
+            for u in 0..ncols {
+                b2[u] += f[u] * diff[t];
+                for v in 0..ncols {
+                    a2[u * ncols + v] += f[u] * f[v];
+                }
+            }
+        }
+
+        for i in 0..ncols {
+            a2[i * ncols + i] += RIDGE_LAMBDA;
+        }
+        solve_linear(&mut a2, &mut b2, ncols);
+        let beta = b2;
+
+        let mut idx = 0;
+        let intercept = beta[idx];
+        idx += 1;
+        let phi = beta[idx..idx + p].to_vec();
+        idx += p;
+        let theta = beta[idx..idx + q].to_vec();
+        idx += q;
+        let phi_s = if seas.is_some() { beta[idx] } else { 0.0 };
+
+        let l = diff_window(phi.len(), phi_s, self.spec);
+        let hist_diff = diff[len - l.min(len)..].to_vec();
+        let hist_eps: Vec<f64> =
+            (len - q.min(len)..len).map(eps_at).collect();
+        FittedArima {
+            spec: self.spec,
+            phi,
+            theta,
+            phi_s,
+            intercept,
+            n0: len,
+            hist_diff,
+            hist_eps,
+            tail: self.tail(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn assert_matches_batch(series: &[f64], spec: ArimaSpec, tol: f64) {
+        let mut inc = IncrementalArima::new(spec, true);
+        for &x in series {
+            inc.observe(x);
+        }
+        let a = inc.fit();
+        let b = fit(series, spec);
+        let (ia, pa, ta, sa) = a.coefficients();
+        let (ib, pb, tb, sb) = b.coefficients();
+        assert!((ia - ib).abs() <= tol, "intercept {ia} vs {ib}");
+        assert_eq!(pa.len(), pb.len());
+        assert_eq!(ta.len(), tb.len());
+        for (x, y) in pa.iter().zip(pb) {
+            assert!((x - y).abs() <= tol, "phi {x} vs {y}");
+        }
+        for (x, y) in ta.iter().zip(tb) {
+            assert!((x - y).abs() <= tol, "theta {x} vs {y}");
+        }
+        assert!((sa - sb).abs() <= tol, "phi_s {sa} vs {sb}");
+    }
+
+    #[test]
+    fn matches_batch_on_ar_series() {
+        let mut rng = Rng::new(17);
+        let mut xs = vec![0.3f64];
+        for _ in 0..240 {
+            let prev = *xs.last().unwrap();
+            xs.push(0.6 * prev + 0.2 + rng.normal_ms(0.0, 0.3));
+        }
+        for spec in [
+            ArimaSpec { p: 3, d: 0, q: 1, seasonal_lag: None },
+            ArimaSpec { p: 2, d: 1, q: 1, seasonal_lag: None },
+            ArimaSpec { p: 1, d: 0, q: 0, seasonal_lag: Some(12) },
+        ] {
+            assert_matches_batch(&xs, spec, 1e-9);
+        }
+    }
+
+    #[test]
+    fn matches_batch_at_every_length() {
+        // Every structural transition (orders growing with the series,
+        // the seasonal term activating, degenerate fallbacks) must agree
+        // with the batch fitter.
+        let mut rng = Rng::new(3);
+        let mut xs = Vec::new();
+        let mut inc =
+            IncrementalArima::new(ArimaSpec { p: 2, d: 0, q: 1, seasonal_lag: Some(10) }, true);
+        for n in 0..120 {
+            let x = (n as f64 * 0.7).sin() + rng.normal_ms(0.0, 0.2);
+            xs.push(x);
+            inc.observe(x);
+            let a = inc.fit();
+            let b = fit(&xs, ArimaSpec { p: 2, d: 0, q: 1, seasonal_lag: Some(10) });
+            let (ia, pa, ta, sa) = a.coefficients();
+            let (ib, pb, tb, sb) = b.coefficients();
+            assert!((ia - ib).abs() <= 1e-9, "len {}: {ia} vs {ib}", n + 1);
+            assert_eq!(pa.len(), pb.len(), "len {}", n + 1);
+            for (x, y) in pa.iter().zip(pb).chain(ta.iter().zip(tb)) {
+                assert!((x - y).abs() <= 1e-9, "len {}: {x} vs {y}", n + 1);
+            }
+            assert!((sa - sb).abs() <= 1e-9, "len {}", n + 1);
+        }
+    }
+
+    #[test]
+    fn truncate_rewinds_exactly() {
+        let mut rng = Rng::new(9);
+        let xs: Vec<f64> = (0..150).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let spec = ArimaSpec::default();
+        let mut inc = IncrementalArima::new(spec, true);
+        for &x in &xs[..100] {
+            inc.observe(x);
+        }
+        let before = inc.fit().forecast(5);
+        for &x in &xs[100..] {
+            inc.observe(x);
+        }
+        inc.truncate(100);
+        let after = inc.fit().forecast(5);
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn tracking_toggle_is_consistent() {
+        let mut rng = Rng::new(21);
+        let xs: Vec<f64> = (0..200).map(|_| rng.normal_ms(0.5, 0.2)).collect();
+        let mut inc = IncrementalArima::new(ArimaSpec::default(), false);
+        for &x in &xs {
+            inc.observe(x);
+        }
+        // Tracking off → batch path.
+        let off = inc.fit();
+        inc.set_tracking(true);
+        let on = inc.fit();
+        let (io, po, to, so) = off.coefficients();
+        let (ii, pi, ti, si) = on.coefficients();
+        assert!((io - ii).abs() <= 1e-9);
+        for (x, y) in po.iter().zip(pi).chain(to.iter().zip(ti)) {
+            assert!((x - y).abs() <= 1e-9);
+        }
+        assert!((so - si).abs() <= 1e-9);
+    }
+}

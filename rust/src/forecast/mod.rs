@@ -1,11 +1,18 @@
 //! Forecasting substrate: the `Predictor` abstraction AHAP consumes, an
-//! ARIMA implementation (the paper's Fig. 3 forecaster), naive baselines,
-//! and the four prediction-noise regimes of the evaluation (§VI-A).
+//! ARIMA implementation (the paper's Fig. 3 forecaster) with both batch
+//! and incremental sufficient-statistic fitting paths, a shared per-slot
+//! forecast cache for pool-scale sweeps, naive baselines, and the four
+//! prediction-noise regimes of the evaluation (§VI-A).
 
 pub mod arima;
 pub mod baseline;
+pub mod cache;
+pub mod incremental;
 pub mod noise;
 pub mod predictor;
 
+pub use arima::{ArimaConfig, ArimaPredictor, ArimaSpec};
+pub use cache::{ForecastCachePool, MarketHistory, SharedForecaster};
+pub use incremental::IncrementalArima;
 pub use noise::{NoiseKind, NoiseMagnitude, NoiseSpec, NoisyOracle};
 pub use predictor::{Forecast, Predictor};

@@ -68,6 +68,13 @@ COMMON FLAGS:
   --seed <u64>          RNG seed
   --policy <spec>       od-only | msu | up | ahanp:SIGMA | ahap:W,V,SIGMA
   --threads <n>         worker threads for fleet/select sweeps
+  --predictor <kind>    noisy | oracle | arima (simulate/select/fleet-select;
+                        arima = honest online fits, one shared forecast
+                        cache per counterfactual pool sweep)
+  --refit-every <k>     ARIMA refit cadence in slots (default from config)
+  --batch-fit           forecast: use the legacy full-history refit path
+                        (the reference the incremental fitter is tested
+                        against) instead of incremental fitting
 
 FLEET FLAGS:
   --jobs <n>            concurrent jobs in the fleet (default 16)
@@ -100,6 +107,27 @@ fn load_config(args: &Args) -> anyhow::Result<ExperimentConfig> {
         Some(path) => Ok(ExperimentConfig::from_file(std::path::Path::new(path))?),
         None => Ok(ExperimentConfig::default()),
     }
+}
+
+/// `--predictor` / `--refit-every`: how counterfactual episodes see the
+/// market. `fallback` is the command's historical default (kept so
+/// existing invocations reproduce bit-for-bit).
+fn predictor_arg(
+    args: &Args,
+    cfg: &ExperimentConfig,
+    fallback: PredictorKind,
+) -> anyhow::Result<PredictorKind> {
+    let mut arima = cfg.arima();
+    arima.refit_every = args.get_usize("refit-every", arima.refit_every)?.max(1);
+    Ok(match args.get("predictor") {
+        None => fallback,
+        Some("noisy") => fallback,
+        Some("oracle") => PredictorKind::Oracle,
+        Some("arima") => PredictorKind::Arima(arima),
+        Some(other) => {
+            anyhow::bail!("unknown predictor `{other}` (noisy|oracle|arima)")
+        }
+    })
 }
 
 fn parse_policy(spec: &str) -> anyhow::Result<PolicySpec> {
@@ -185,11 +213,11 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         gamma: 1.5,
     };
     let trace = TraceGenerator::new(cfg.market.clone()).generate(seed).slice_from(37);
-    let env = PolicyEnv {
-        predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(noise)),
-        trace: trace.clone(),
+    let env = PolicyEnv::new(
+        PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(noise)),
+        trace.clone(),
         seed,
-    };
+    );
     let mut policy = policy_spec.build(&env);
 
     let leader = Leader::new(
@@ -235,11 +263,12 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let trace = TraceGenerator::new(cfg.market.clone())
         .generate(seed)
         .slice_from(rng.index(300));
-    let env = PolicyEnv {
-        predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(noise)),
-        trace: trace.clone(),
-        seed,
-    };
+    let predictor = predictor_arg(
+        args,
+        &cfg,
+        PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(noise)),
+    )?;
+    let env = PolicyEnv::new(predictor, trace.clone(), seed);
     let mut policy = policy_spec.build(&env);
     let r = run_episode(&job, &trace, &cfg.models, policy.as_mut());
     let opt = solve_offline(&job, &trace, &cfg.models, 0.1);
@@ -382,11 +411,11 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
             .generate(seed ^ (k as u64).wrapping_mul(0x9E37))
             .slice_from(rng.index(400));
         opt_sum += solve_offline(&job, &trace, &cfg.models, 0.1).utility;
-        let env = PolicyEnv {
-            predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(noise)),
-            trace: trace.clone(),
-            seed: k as u64,
-        };
+        let env = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(noise)),
+            trace.clone(),
+            k as u64,
+        );
         for (i, s) in specs.iter().enumerate() {
             let mut p = s.build(&env);
             let r = run_episode(&job, &trace, &cfg.models, p.as_mut());
@@ -415,22 +444,31 @@ fn cmd_select(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", cfg.seed)?;
     let threads = args.get_usize("threads", 1)?.max(1);
     let specs = paper_pool();
+    let predictor = predictor_arg(args, &cfg, PredictorKind::Noisy(cfg.noise))?;
     let sel_cfg =
         SelectionConfig { k_jobs, seed, snapshot_every: (k_jobs / 10).max(1) };
     // The parallel path fans the per-job 112-policy counterfactual
     // evaluation across cores; its outcome is identical to sequential.
+    // Honest-ARIMA rounds additionally share one per-slot forecast
+    // cache across the whole pool (see sched::selector).
     let out = run_selection_parallel(
         &specs,
         &cfg.jobs,
         &cfg.models,
         &TraceGenerator::new(cfg.market.clone()),
-        |_| PredictorKind::Noisy(cfg.noise),
+        |_| predictor.clone(),
         &sel_cfg,
         threads,
     );
     println!("pool size          {}", specs.len());
     println!("jobs               {k_jobs} ({threads} thread(s))");
-    println!("noise              {}", cfg.noise.label());
+    match &predictor {
+        PredictorKind::Arima(a) => {
+            println!("predictor          arima (refit every {} slot(s))", a.refit_every)
+        }
+        PredictorKind::Oracle => println!("predictor          oracle (perfect foresight)"),
+        PredictorKind::Noisy(_) => println!("noise              {}", cfg.noise.label()),
+    }
     println!(
         "converged policy   #{} {}",
         out.converged_to + 1,
@@ -459,6 +497,7 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
     let n_regions = args.get_usize("regions", 2)?.max(1);
     let threads = args.get_usize("threads", available_threads())?.max(1);
     let specs = paper_pool();
+    let predictor = predictor_arg(args, &cfg, PredictorKind::Noisy(cfg.noise))?;
     let sel_cfg = SelectionConfig {
         k_jobs: rounds,
         seed,
@@ -478,7 +517,7 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
             &cfg.jobs,
             &cfg.models,
             &gen,
-            |_| PredictorKind::Noisy(cfg.noise),
+            |_| predictor.clone(),
             &sel_cfg,
             &mut evaluator,
         )
@@ -489,7 +528,13 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
         "rounds             {rounds} x ({} bg jobs + learner) x {n_regions} region(s), {threads} thread(s)",
         n_background
     );
-    println!("noise              {}", cfg.noise.label());
+    match &predictor {
+        PredictorKind::Arima(a) => {
+            println!("predictor          arima (refit every {} slot(s))", a.refit_every)
+        }
+        PredictorKind::Oracle => println!("predictor          oracle (perfect foresight)"),
+        PredictorKind::Noisy(_) => println!("noise              {}", cfg.noise.label()),
+    }
     println!();
     println!("contention-aware   ({fleet_secs:.1}s)");
     println!(
@@ -522,7 +567,7 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
                 &cfg.jobs,
                 &cfg.models,
                 &gen,
-                |_| PredictorKind::Noisy(cfg.noise),
+                |_| predictor.clone(),
                 &sel_cfg,
                 threads,
             )
@@ -588,10 +633,17 @@ fn cmd_forecast(args: &Args) -> anyhow::Result<()> {
     let cfg = load_config(args)?;
     let seed = args.get_u64("seed", cfg.seed)?;
     let horizon = args.get_usize("horizon", 1)?.max(1);
+    let refit_every =
+        args.get_usize("refit-every", cfg.forecast.refit_every)?.max(1);
     let trace = TraceGenerator::new(cfg.market.clone()).generate(seed);
     let split = trace.len() * 7 / 10;
 
-    let mut pred = ArimaPredictor::with_defaults();
+    let mut arima_cfg = cfg.arima();
+    arima_cfg.refit_every = refit_every;
+    // --batch-fit selects the legacy full-history refit path (the
+    // reference the incremental fitter is tested against).
+    arima_cfg.incremental = !args.get_bool("batch-fit");
+    let mut pred = ArimaPredictor::configured(arima_cfg);
     pred.seed_history(&trace.price[..split], &trace.avail_f64()[..split]);
     let mut p_true = Vec::new();
     let mut p_hat = Vec::new();
@@ -606,6 +658,11 @@ fn cmd_forecast(args: &Args) -> anyhow::Result<()> {
         pred.observe(t, trace.price_at(t), trace.avail_at(t));
     }
     println!("ARIMA{:?} horizon {horizon}", ArimaSpec::default());
+    let (pf, af) = pred.fit_counts();
+    println!(
+        "fits               {pf} price / {af} avail ({} path, refit every {refit_every})",
+        if arima_cfg.incremental { "incremental" } else { "batch" }
+    );
     println!(
         "price  MAPE {:.1}%  RMSE {:.4}  (persistence RMSE {:.4})",
         stats::mape(&p_true, &p_hat),
@@ -662,7 +719,7 @@ fn cmd_toy(args: &Args) -> anyhow::Result<()> {
         ),
     ];
     for (name, spec, pk) in strategies {
-        let env = PolicyEnv { predictor: pk, trace: trace.clone(), seed: 3 };
+        let env = PolicyEnv::new(pk, trace.clone(), 3);
         let mut p = spec.build(&env);
         let r = run_episode(&job, &trace, &models, p.as_mut());
         let dec = r

@@ -3,7 +3,8 @@
 //! as in Fig. 10. Policies are described by a [`PolicySpec`] and built
 //! per job (each gets a fresh predictor) from a [`PolicyEnv`].
 
-use crate::forecast::arima::ArimaPredictor;
+use crate::forecast::arima::{ArimaConfig, ArimaPredictor};
+use crate::forecast::cache::{MarketHistory, SharedForecaster};
 use crate::forecast::noise::{NoiseSpec, NoisyOracle};
 use crate::forecast::predictor::{OraclePredictor, Predictor};
 use crate::market::trace::SpotTrace;
@@ -22,20 +23,75 @@ pub enum PredictorKind {
     Oracle,
     /// Perfect foresight corrupted by a noise regime (Figs. 9–10).
     Noisy(NoiseSpec),
-    /// Honest ARIMA fitted online from observed history (Fig. 3 setting).
-    Arima,
+    /// Honest ARIMA fitted online from observed history (Fig. 3
+    /// setting), with its orders, refit cadence, and fitting path.
+    Arima(ArimaConfig),
+}
+
+impl PredictorKind {
+    /// Honest ARIMA with the default configuration.
+    pub fn arima() -> Self {
+        PredictorKind::Arima(ArimaConfig::default())
+    }
 }
 
 /// Per-job environment used to instantiate policies: the true trace the
-/// job will run on (for oracle-based predictors) and a seed.
+/// job will run on (for oracle-based predictors), a seed, optional
+/// pre-trace market history (seeds honest predictors), and an optional
+/// shared per-slot forecast cache serving every ARIMA policy in a pool
+/// sweep from one fit per slot.
 #[derive(Debug, Clone)]
 pub struct PolicyEnv {
     pub predictor: PredictorKind,
     pub trace: SpotTrace,
     pub seed: u64,
+    /// Market observations preceding slot 0 (honest predictors only).
+    pub history: Option<MarketHistory>,
+    /// Shared forecast cache over `trace`; when present and `predictor`
+    /// is ARIMA, built policies get cache handles instead of private
+    /// models (bit-identical forecasts, one fit per slot pool-wide).
+    pub forecasts: Option<SharedForecaster>,
 }
 
 impl PolicyEnv {
+    pub fn new(predictor: PredictorKind, trace: SpotTrace, seed: u64) -> Self {
+        PolicyEnv { predictor, trace, seed, history: None, forecasts: None }
+    }
+
+    /// Seed honest predictors with market history preceding the trace.
+    /// Order-independent with respect to
+    /// [`with_shared_forecasts`](PolicyEnv::with_shared_forecasts): an
+    /// already-attached cache is rebuilt so it sees the new history.
+    pub fn with_history(mut self, history: MarketHistory) -> Self {
+        self.history = Some(history);
+        if self.forecasts.is_some() {
+            self.forecasts = None;
+            self.share_forecasts();
+        }
+        self
+    }
+
+    /// [`share_forecasts`](PolicyEnv::share_forecasts), builder-style.
+    pub fn with_shared_forecasts(mut self) -> Self {
+        self.share_forecasts();
+        self
+    }
+
+    /// Attach a shared forecast cache over this env's trace. A no-op
+    /// for oracle/noisy predictors and when a cache is already attached.
+    pub fn share_forecasts(&mut self) {
+        if self.forecasts.is_some() {
+            return;
+        }
+        if let PredictorKind::Arima(cfg) = self.predictor {
+            self.forecasts = Some(SharedForecaster::with_history(
+                self.trace.clone(),
+                cfg,
+                self.history.clone(),
+            ));
+        }
+    }
+
     fn make_predictor(&self) -> Box<dyn Predictor> {
         match &self.predictor {
             PredictorKind::Oracle => {
@@ -44,7 +100,16 @@ impl PolicyEnv {
             PredictorKind::Noisy(spec) => {
                 Box::new(NoisyOracle::new(self.trace.clone(), *spec, self.seed))
             }
-            PredictorKind::Arima => Box::new(ArimaPredictor::with_defaults()),
+            PredictorKind::Arima(cfg) => {
+                if let Some(sf) = &self.forecasts {
+                    return Box::new(sf.handle());
+                }
+                let mut p = ArimaPredictor::configured(*cfg);
+                if let Some(h) = &self.history {
+                    p.seed_history(&h.price, &h.avail);
+                }
+                Box::new(p)
+            }
         }
     }
 }
@@ -87,6 +152,15 @@ impl PolicySpec {
 
     pub fn is_ahap(&self) -> bool {
         matches!(self, PolicySpec::Ahap { .. })
+    }
+
+    /// The prediction window this policy plans over (0 for
+    /// non-predictive policies) — sizes shared forecast caches.
+    pub fn omega(&self) -> usize {
+        match *self {
+            PolicySpec::Ahap { omega, .. } => omega,
+            _ => 0,
+        }
     }
 }
 
@@ -171,11 +245,11 @@ mod tests {
 
     #[test]
     fn every_spec_builds() {
-        let env = PolicyEnv {
-            predictor: PredictorKind::Noisy(NoiseSpec::mag_dep_uniform(0.1)),
-            trace: SpotTrace::new(vec![0.5; 4], vec![4; 4]),
-            seed: 1,
-        };
+        let env = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::mag_dep_uniform(0.1)),
+            SpotTrace::new(vec![0.5; 4], vec![4; 4]),
+            1,
+        );
         for s in paper_pool() {
             let p = s.build(&env);
             assert!(!p.name().is_empty());
@@ -192,5 +266,48 @@ mod tests {
         labels.sort();
         labels.dedup();
         assert_eq!(labels.len(), pool.len());
+    }
+
+    #[test]
+    fn share_forecasts_only_applies_to_arima() {
+        let trace = SpotTrace::new(vec![0.5; 8], vec![4; 8]);
+        let mut noisy = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::mag_dep_uniform(0.1)),
+            trace.clone(),
+            1,
+        );
+        noisy.share_forecasts();
+        assert!(noisy.forecasts.is_none());
+        let arima =
+            PolicyEnv::new(PredictorKind::arima(), trace, 1).with_shared_forecasts();
+        assert!(arima.forecasts.is_some());
+    }
+
+    #[test]
+    fn pool_omega_tops_out_at_five() {
+        assert_eq!(paper_pool().iter().map(|s| s.omega()).max(), Some(5));
+        assert_eq!(PolicySpec::Msu.omega(), 0);
+    }
+
+    #[test]
+    fn with_history_after_sharing_rebuilds_the_cache() {
+        // Builder order must not matter: attaching history after the
+        // shared cache rebuilds the cache so its handles are seeded.
+        // (`Predictor` is already in scope via `use super::*`.)
+        use crate::market::generator::TraceGenerator;
+        let full = TraceGenerator::calibrated().generate(3);
+        let hist = MarketHistory::from_trace(&full, 60);
+        let trace = full.slice_from(60);
+        let a = PolicyEnv::new(PredictorKind::arima(), trace.clone(), 1)
+            .with_history(hist.clone())
+            .with_shared_forecasts();
+        let b = PolicyEnv::new(PredictorKind::arima(), trace.clone(), 1)
+            .with_shared_forecasts()
+            .with_history(hist);
+        let mut ha = a.forecasts.as_ref().unwrap().handle();
+        let mut hb = b.forecasts.as_ref().unwrap().handle();
+        ha.observe(0, trace.price_at(0), trace.avail_at(0));
+        hb.observe(0, trace.price_at(0), trace.avail_at(0));
+        assert_eq!(ha.predict(4), hb.predict(4));
     }
 }

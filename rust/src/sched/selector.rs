@@ -276,11 +276,11 @@ pub fn run_selection_eval(
         let full = trace_gen.generate(trace_seed);
         let max_off = full.len().saturating_sub(2 * job.deadline).max(1);
         let trace = full.slice_from(rng.index(max_off));
-        let env = PolicyEnv {
-            predictor: predictor_at(k),
-            trace: trace.clone(),
-            seed: trace_seed ^ 0xABCD,
-        };
+        // For honest-ARIMA rounds, one shared per-slot forecast cache
+        // serves every candidate's counterfactual episode (bit-identical
+        // to per-policy predictors; a no-op for oracle/noisy rounds).
+        let env = PolicyEnv::new(predictor_at(k), trace.clone(), trace_seed ^ 0xABCD)
+            .with_shared_forecasts();
 
         // Counterfactual utilities for the whole pool.
         let u = eval.utilities(specs, &job, &trace, models, &env);
@@ -482,11 +482,11 @@ mod tests {
         let job = crate::sched::job::Job::paper_reference();
         let models = Models::paper_default();
         let trace = TraceGenerator::calibrated().generate(4).slice_from(25);
-        let env = PolicyEnv {
-            predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
-            trace: trace.clone(),
-            seed: 11,
-        };
+        let env = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace.clone(),
+            11,
+        );
         let via_eval = SingleJobEvaluator
             .utilities(&specs, &job, &trace, &models, &env);
         let inline: Vec<f64> = specs

@@ -93,6 +93,83 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Machine-readable bench output: collects [`BenchResult`]s and named
+/// baseline/current speedup pairs, then writes one JSON file (e.g.
+/// `BENCH_hotpaths.json`) so the perf trajectory is trackable across
+/// PRs without scraping stdout. Hand-rolled serialization — the crate
+/// is deliberately dependency-free.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    bench: String,
+    entries: Vec<String>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> Self {
+        JsonReport { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    /// Record one timed result under a section label.
+    pub fn result(&mut self, sec: &str, r: &BenchResult) {
+        self.entries.push(format!(
+            "{{\"kind\":\"bench\",\"section\":\"{}\",\"name\":\"{}\",\"iters\":{},\
+             \"mean_us\":{:.3},\"p50_us\":{:.3},\"p95_us\":{:.3}}}",
+            json_escape(sec),
+            json_escape(&r.name),
+            r.iters,
+            r.mean_us(),
+            r.p50_ns / 1e3,
+            r.p95_ns / 1e3,
+        ));
+    }
+
+    /// Record a baseline-vs-current pair and return the speedup factor.
+    pub fn speedup(&mut self, name: &str, baseline_us: f64, current_us: f64) -> f64 {
+        let factor = if current_us > 0.0 { baseline_us / current_us } else { f64::INFINITY };
+        // JSON has no inf/NaN literal — a degenerate measurement must
+        // not make the whole file unparseable.
+        let factor_json = if factor.is_finite() {
+            format!("{factor:.2}")
+        } else {
+            "null".to_string()
+        };
+        self.entries.push(format!(
+            "{{\"kind\":\"speedup\",\"name\":\"{}\",\"baseline_us\":{:.3},\
+             \"current_us\":{:.3},\"speedup\":{factor_json}}}",
+            json_escape(name),
+            baseline_us,
+            current_us,
+        ));
+        factor
+    }
+
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\n  \"bench\": \"{}\",\n  \"entries\": [\n    {}\n  ]\n}}\n",
+            json_escape(&self.bench),
+            self.entries.join(",\n    ")
+        )
+    }
+
+    /// Write the report, returning the path it landed at.
+    pub fn write(&self, path: &str) -> std::io::Result<String> {
+        std::fs::write(path, self.to_json())?;
+        Ok(path.to_string())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +199,21 @@ mod tests {
         let (v, secs) = time_once(|| 42);
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn json_report_is_well_formed() {
+        let mut rep = JsonReport::new("unit");
+        let r = bench("tiny \"quoted\"", 1, 5, || 1 + 1);
+        rep.result("sec", &r);
+        let f = rep.speedup("x", 100.0, 10.0);
+        assert!((f - 10.0).abs() < 1e-9);
+        let s = rep.to_json();
+        assert!(s.contains("\"bench\": \"unit\""));
+        assert!(s.contains("\\\"quoted\\\""));
+        assert!(s.contains("\"speedup\":10.00"));
+        // Balanced braces/brackets (cheap structural sanity).
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
     }
 }

@@ -55,11 +55,11 @@ fn full_run_completes_and_learns() {
     }
     let job = Job { workload: 12.0, deadline: 5, n_min: 1, n_max: 6, value: 18.0, gamma: 1.5 };
     let trace = SpotTrace::new(vec![0.4; 6], vec![4; 6]);
-    let env = PolicyEnv {
-        predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
-        trace: trace.clone(),
-        seed: 1,
-    };
+    let env = PolicyEnv::new(
+        PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+        trace.clone(),
+        1,
+    );
     let mut policy = PolicySpec::Ahap { omega: 2, v: 1, sigma: 0.7 }.build(&env);
     let mut trainer = make_trainer();
     let out = leader("learn").run(&job, &trace, policy.as_mut(), &mut trainer).unwrap();
@@ -91,11 +91,7 @@ fn preemption_triggers_checkpoint_restore() {
         vec![0.3, 0.3, 0.3, 0.3, 0.3, 0.3],
         vec![6, 6, 0, 0, 6, 6],
     );
-    let env = PolicyEnv {
-        predictor: PredictorKind::Oracle,
-        trace: trace.clone(),
-        seed: 2,
-    };
+    let env = PolicyEnv::new(PredictorKind::Oracle, trace.clone(), 2);
     // MSU rides all spot → guaranteed to hold spot when it vanishes.
     let mut policy = PolicySpec::Msu.build(&env);
     let mut trainer = make_trainer();
@@ -150,11 +146,7 @@ fn metrics_csvs_written() {
     }
     let job = Job { workload: 6.0, deadline: 3, n_min: 1, n_max: 4, value: 9.0, gamma: 1.5 };
     let trace = SpotTrace::new(vec![0.4; 4], vec![3; 4]);
-    let env = PolicyEnv {
-        predictor: PredictorKind::Oracle,
-        trace: trace.clone(),
-        seed: 3,
-    };
+    let env = PolicyEnv::new(PredictorKind::Oracle, trace.clone(), 3);
     let mut policy = PolicySpec::UniformProgress.build(&env);
     let mut trainer = make_trainer();
     let out = leader("csv").run(&job, &trace, policy.as_mut(), &mut trainer).unwrap();

@@ -64,13 +64,14 @@ fn one_job_fleet_reproduces_run_episode_for_every_pool_policy() {
         for predictor in [
             PredictorKind::Oracle,
             PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.2)),
+            // Honest ARIMA: the solo episode fits a private model per
+            // policy while the fleet engine serves its shared per-slot
+            // forecast cache — this equality is the cache's bit-identity
+            // guarantee, enforced across the whole pool.
+            PredictorKind::arima(),
         ] {
             let seed = 1000 + i as u64;
-            let env = PolicyEnv {
-                predictor: predictor.clone(),
-                trace: trace.clone(),
-                seed,
-            };
+            let env = PolicyEnv::new(predictor.clone(), trace.clone(), seed);
             let mut policy = spec.build(&env);
             let solo = run_episode(&job, &trace, &models, policy.as_mut());
 
@@ -331,11 +332,7 @@ fn contention_aware_selection_picks_a_different_higher_fleet_utility_policy() {
     let models = Models::paper_default();
     let job = Job::paper_reference();
     let trace = SpotTrace::new(vec![0.3; 24], vec![12; 24]);
-    let env = PolicyEnv {
-        predictor: PredictorKind::Oracle,
-        trace: trace.clone(),
-        seed: 0,
-    };
+    let env = PolicyEnv::new(PredictorKind::Oracle, trace.clone(), 0);
 
     let iso = SingleJobEvaluator.utilities(&pool, &job, &trace, &models, &env);
     let mut contended = FleetContendedEvaluator::new(vec![squatter(12)], 1)
@@ -508,4 +505,78 @@ fn fleet_aggregates_consistent_under_contention() {
     for jo in &r.jobs {
         assert!(jo.episode.decisions.len() <= 10);
     }
+}
+
+/// A contended multi-region fleet of honest-ARIMA jobs (mixed with
+/// other predictor kinds, staggered arrivals) must produce the same
+/// `FleetResult` whether the engine serves the shared forecast cache or
+/// builds private per-policy predictors.
+#[test]
+fn arima_fleet_shared_cache_is_bit_identical() {
+    let models = Models::paper_default();
+    let gen = TraceGenerator::calibrated();
+    let regions = RegionSet::new(vec![
+        Region { name: "a".into(), trace: gen.generate(41).slice_from(20) },
+        Region { name: "b".into(), trace: gen.generate(42).slice_from(35) },
+    ])
+    .with_migration(MigrationModel::new(2.0, 0.5));
+    let job = Job::paper_reference();
+    let mk = |policy, predictor, region: usize, arrival: usize, k: u64| {
+        FleetJobSpec::new(job, policy, predictor)
+            .with_seed(900 + k)
+            .in_region(region)
+            .arriving_at(arrival)
+    };
+    let specs = vec![
+        mk(PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 }, PredictorKind::arima(), 0, 0, 0),
+        mk(PolicySpec::Ahap { omega: 5, v: 2, sigma: 0.5 }, PredictorKind::arima(), 0, 0, 1),
+        mk(PolicySpec::Ahap { omega: 2, v: 1, sigma: 0.9 }, PredictorKind::arima(), 1, 3, 2),
+        mk(
+            PolicySpec::Ahap { omega: 4, v: 2, sigma: 0.6 },
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            1,
+            0,
+            3,
+        ),
+        mk(PolicySpec::Msu, PredictorKind::Oracle, 0, 2, 4),
+    ];
+    let cached = FleetEngine::new(models, regions.clone())
+        .with_migration_patience(2)
+        .run(&specs);
+    let private = FleetEngine::new(models, regions)
+        .with_migration_patience(2)
+        .without_shared_forecasts()
+        .run(&specs);
+    assert_eq!(cached, private);
+}
+
+/// Fleet-contended selection with an honest-ARIMA learner: the round's
+/// M counterfactual fleet runs share one forecast cache, and the
+/// utilities must be identical across thread counts and to the
+/// private-predictor evaluation.
+#[test]
+fn arima_fleet_counterfactuals_thread_and_cache_invariant() {
+    let specs = vec![
+        PolicySpec::OdOnly,
+        PolicySpec::Msu,
+        PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+        PolicySpec::Ahap { omega: 5, v: 1, sigma: 0.5 },
+        PolicySpec::Ahanp { sigma: 0.5 },
+    ];
+    let models = Models::paper_default();
+    let job = Job::paper_reference();
+    let trace = TraceGenerator::calibrated().generate(6).slice_from(45);
+    let env = PolicyEnv::new(PredictorKind::arima(), trace.clone(), 31);
+
+    let mut seq = FleetContendedEvaluator::synthetic(4, 2, 8);
+    let u_seq = seq.utilities(&specs, &job, &trace, &models, &env);
+
+    let mut par = FleetContendedEvaluator::synthetic(4, 2, 8).with_threads(4);
+    let u_par = par.utilities(&specs, &job, &trace, &models, &env);
+    assert_eq!(u_seq, u_par, "thread fan-out changed cached utilities");
+
+    let mut private = FleetContendedEvaluator::synthetic(4, 2, 8);
+    private.shared_forecasts = false;
+    let u_priv = private.utilities(&specs, &job, &trace, &models, &env);
+    assert_eq!(u_seq, u_priv, "shared cache changed fleet counterfactuals");
 }

@@ -1,0 +1,242 @@
+//! Property tests for the forecasting layer's two load-bearing claims:
+//!
+//! 1. **Incremental ≡ batch** — the sufficient-statistic fitter
+//!    ([`IncrementalArima`]) reproduces the batch [`fit`] coefficients
+//!    within 1e-9 across random series, specs, and lengths (including
+//!    every structural transition a growing series walks through).
+//! 2. **Cached ≡ private** — pool sweeps served by a shared per-slot
+//!    forecast cache reproduce per-policy-predictor `EpisodeResult`s
+//!    bit-for-bit, for any thread count.
+
+use spotfine::fleet::sweep::counterfactual_utilities;
+use spotfine::forecast::arima::{fit, ArimaConfig, ArimaPredictor, ArimaSpec};
+use spotfine::forecast::cache::MarketHistory;
+use spotfine::forecast::incremental::IncrementalArima;
+use spotfine::forecast::predictor::Predictor;
+use spotfine::market::generator::TraceGenerator;
+use spotfine::sched::job::{Job, JobGenerator};
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{paper_pool, PolicyEnv, PredictorKind};
+use spotfine::sched::selector::{run_selection, SelectionConfig};
+use spotfine::sched::simulate::run_episode;
+use spotfine::util::rng::Rng;
+
+const COEF_TOL: f64 = 1e-9;
+
+fn spec_grid() -> Vec<ArimaSpec> {
+    vec![
+        ArimaSpec::default(),
+        ArimaSpec { p: 2, d: 1, q: 1, seasonal_lag: None },
+        ArimaSpec { p: 1, d: 0, q: 0, seasonal_lag: None },
+        ArimaSpec { p: 0, d: 1, q: 1, seasonal_lag: None },
+        ArimaSpec { p: 3, d: 2, q: 2, seasonal_lag: Some(12) },
+        ArimaSpec { p: 5, d: 0, q: 3, seasonal_lag: Some(6) },
+    ]
+}
+
+fn assert_coefs_match(series: &[f64], spec: ArimaSpec, ctx: &str) {
+    let mut inc = IncrementalArima::new(spec, true);
+    for &x in series {
+        inc.observe(x);
+    }
+    let a = inc.fit();
+    let b = fit(series, spec);
+    let (ia, pa, ta, sa) = a.coefficients();
+    let (ib, pb, tb, sb) = b.coefficients();
+    assert!((ia - ib).abs() <= COEF_TOL, "{ctx}: intercept {ia} vs {ib}");
+    assert_eq!(pa.len(), pb.len(), "{ctx}: AR order");
+    assert_eq!(ta.len(), tb.len(), "{ctx}: MA order");
+    for (i, (x, y)) in pa.iter().zip(pb).enumerate() {
+        assert!((x - y).abs() <= COEF_TOL, "{ctx}: phi[{i}] {x} vs {y}");
+    }
+    for (i, (x, y)) in ta.iter().zip(tb).enumerate() {
+        assert!((x - y).abs() <= COEF_TOL, "{ctx}: theta[{i}] {x} vs {y}");
+    }
+    assert!((sa - sb).abs() <= COEF_TOL, "{ctx}: phi_s {sa} vs {sb}");
+    // Forecasts follow the coefficients (looser: the recursion compounds
+    // the ~1e-12 reassociation differences over the horizon).
+    for (i, (x, y)) in a.forecast(6).iter().zip(b.forecast(6)).enumerate() {
+        assert!((x - y).abs() <= 1e-6, "{ctx}: forecast[{i}] {x} vs {y}");
+    }
+}
+
+#[test]
+fn incremental_matches_batch_across_random_series_and_specs() {
+    for seed in 0..4u64 {
+        let mut rng = Rng::new(seed);
+        // A noisy AR(2) with drift — generic stationary-ish input.
+        let mut ar = vec![0.0f64, 0.1];
+        for _ in 0..360 {
+            let n = ar.len();
+            let v = 0.55 * ar[n - 1] - 0.2 * ar[n - 2]
+                + 0.1
+                + rng.normal_ms(0.0, 0.25);
+            ar.push(v);
+        }
+        let trace = TraceGenerator::calibrated().generate(seed);
+        for spec in spec_grid() {
+            for &len in &[5usize, 17, 40, 80, 200, 350] {
+                assert_coefs_match(&ar[..len], spec, &format!("ar seed {seed} len {len} {spec:?}"));
+                assert_coefs_match(
+                    &trace.price[..len],
+                    spec,
+                    &format!("price seed {seed} len {len} {spec:?}"),
+                );
+                assert_coefs_match(
+                    &trace.avail_f64()[..len],
+                    spec,
+                    &format!("avail seed {seed} len {len} {spec:?}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn incremental_predictor_tracks_batch_predictor_online() {
+    // The full Predictor interface, slot by slot: incremental and batch
+    // predictors see the same observations and must issue (numerically)
+    // the same clamped forecasts at every slot and refit cadence.
+    let trace = TraceGenerator::calibrated().generate(33);
+    for refit_every in [1usize, 4] {
+        let mut inc = ArimaPredictor::configured(ArimaConfig::default());
+        let mut batch = ArimaPredictor::configured(ArimaConfig {
+            incremental: false,
+            ..ArimaConfig::default()
+        });
+        inc.set_refit_every(refit_every);
+        batch.set_refit_every(refit_every);
+        inc.seed_history(&trace.price[..150], &trace.avail_f64()[..150]);
+        batch.seed_history(&trace.price[..150], &trace.avail_f64()[..150]);
+        for t in 150..260 {
+            inc.observe(t, trace.price[t], trace.avail[t]);
+            batch.observe(t, trace.price[t], trace.avail[t]);
+            let fi = inc.predict(5);
+            let fb = batch.predict(5);
+            for (x, y) in fi.price.iter().zip(&fb.price) {
+                assert!((x - y).abs() <= 1e-6, "slot {t}: price {x} vs {y}");
+            }
+            for (x, y) in fi.avail.iter().zip(&fb.avail) {
+                assert!((x - y).abs() <= 1e-6, "slot {t}: avail {x} vs {y}");
+            }
+        }
+        assert_eq!(inc.fit_counts(), batch.fit_counts());
+    }
+}
+
+/// Shared-cache pool sweeps must reproduce per-policy-predictor
+/// episodes bit-for-bit over the whole 112-policy paper pool.
+#[test]
+fn cached_pool_sweep_is_bit_identical_to_private_predictors() {
+    let models = Models::paper_default();
+    let job = Job::paper_reference();
+    let full = TraceGenerator::calibrated().generate(77);
+    for hist_len in [0usize, 120] {
+        let hist = MarketHistory::from_trace(&full, hist_len);
+        let trace = full.slice_from(hist_len);
+        let mut private_env =
+            PolicyEnv::new(PredictorKind::arima(), trace.clone(), 5);
+        let mut cached_env =
+            PolicyEnv::new(PredictorKind::arima(), trace.clone(), 5);
+        if hist_len > 0 {
+            private_env = private_env.with_history(hist.clone());
+            cached_env = cached_env.with_history(hist);
+        }
+        let cached_env = cached_env.with_shared_forecasts();
+        assert!(cached_env.forecasts.is_some());
+        for spec in paper_pool() {
+            let mut a = spec.build(&private_env);
+            let mut b = spec.build(&cached_env);
+            let ra = run_episode(&job, &trace, &models, a.as_mut());
+            let rb = run_episode(&job, &trace, &models, b.as_mut());
+            assert_eq!(ra, rb, "hist {hist_len}, {}", spec.label());
+        }
+        // The cache did the forecasting: one fit per slot, pool-wide.
+        let shared = cached_env.forecasts.as_ref().unwrap();
+        assert!(shared.slots_computed() <= job.deadline);
+        assert_eq!(shared.fits().0, shared.slots_computed() as u64);
+    }
+}
+
+#[test]
+fn cached_counterfactual_utilities_are_thread_invariant() {
+    let models = Models::paper_default();
+    let job = Job::paper_reference();
+    let trace = TraceGenerator::calibrated().generate(13).slice_from(50);
+    let env = PolicyEnv::new(PredictorKind::arima(), trace.clone(), 9)
+        .with_shared_forecasts();
+    let pool = paper_pool();
+    let seq = counterfactual_utilities(&pool, &job, &trace, &models, &env, 1);
+    let par = counterfactual_utilities(&pool, &job, &trace, &models, &env, 4);
+    assert_eq!(seq, par, "thread fan-out must not perturb cached sweeps");
+    // And both equal fully private evaluation.
+    let private_env = PolicyEnv::new(PredictorKind::arima(), trace.clone(), 9);
+    let private: Vec<f64> = pool
+        .iter()
+        .map(|s| {
+            let mut p = s.build(&private_env);
+            let r = run_episode(&job, &trace, &models, p.as_mut());
+            job.normalize_utility(r.utility, models.on_demand_price)
+        })
+        .collect();
+    assert_eq!(seq, private);
+}
+
+#[test]
+fn arima_selection_is_deterministic_with_shared_cache() {
+    // The selection loop auto-attaches a shared cache per round for
+    // honest-ARIMA predictors; two runs (and any thread fan-out, which
+    // routes through the same evaluator seam) must agree exactly.
+    let specs = vec![
+        spotfine::sched::pool::PolicySpec::OdOnly,
+        spotfine::sched::pool::PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+        spotfine::sched::pool::PolicySpec::Ahap { omega: 5, v: 2, sigma: 0.5 },
+        spotfine::sched::pool::PolicySpec::Ahanp { sigma: 0.5 },
+    ];
+    let jobs = JobGenerator::default();
+    let models = Models::paper_default();
+    let gen = TraceGenerator::calibrated();
+    let cfg = SelectionConfig { k_jobs: 12, seed: 4, snapshot_every: 0 };
+    let a = run_selection(&specs, &jobs, &models, &gen, |_| PredictorKind::arima(), &cfg);
+    let b = run_selection(&specs, &jobs, &models, &gen, |_| PredictorKind::arima(), &cfg);
+    assert_eq!(a.realized, b.realized);
+    assert_eq!(a.final_weights, b.final_weights);
+    let par = spotfine::fleet::run_selection_parallel(
+        &specs,
+        &jobs,
+        &models,
+        &gen,
+        |_| PredictorKind::arima(),
+        &cfg,
+        4,
+    );
+    assert_eq!(a.realized, par.realized);
+    assert_eq!(a.final_weights, par.final_weights);
+    assert_eq!(a.regret, par.regret);
+}
+
+#[test]
+fn refit_cadence_trades_fits_for_identical_shapes() {
+    // Coarser cadence must cut fits proportionally and keep forecasts
+    // finite/clamped (accuracy is the CLI `forecast` command's concern).
+    let trace = TraceGenerator::calibrated().generate(2);
+    let mut counts = Vec::new();
+    for refit in [1usize, 2, 8] {
+        let mut p = ArimaPredictor::configured(ArimaConfig {
+            refit_every: refit,
+            ..ArimaConfig::default()
+        });
+        p.seed_history(&trace.price[..100], &trace.avail_f64()[..100]);
+        for t in 100..180 {
+            p.observe(t, trace.price[t], trace.avail[t]);
+            let f = p.predict(4);
+            assert_eq!(f.price.len(), 4);
+            assert!(f.price.iter().all(|v| (0.01..=2.0).contains(v)));
+            assert!(f.avail.iter().all(|v| (0.0..=64.0).contains(v)));
+        }
+        counts.push(p.fit_counts().0);
+    }
+    assert_eq!(counts[0], 80);
+    assert_eq!(counts[1], 40);
+    assert_eq!(counts[2], 10);
+}

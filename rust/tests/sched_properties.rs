@@ -69,13 +69,13 @@ fn prop_episode_feasibility_and_accounting() {
             let trace = random_trace(rng, job.deadline + 4);
             let models = Models::paper_default();
             let spec = random_spec(rng);
-            let env = PolicyEnv {
-                predictor: PredictorKind::Noisy(NoiseSpec::mag_dep_uniform(
+            let env = PolicyEnv::new(
+                PredictorKind::Noisy(NoiseSpec::mag_dep_uniform(
                     rng.uniform(0.0, 1.0),
                 )),
-                trace: trace.clone(),
-                seed: rng.next_u64(),
-            };
+                trace.clone(),
+                rng.next_u64(),
+            );
             let mut p = spec.build(&env);
             let r = run_episode(&job, &trace, &models, p.as_mut());
 
@@ -179,11 +179,7 @@ fn prop_offline_dominates_online() {
             let trace = random_trace(rng, job.deadline + 2);
             let opt = solve_offline(&job, &trace, &models, 0.1).utility;
             let spec = random_spec(rng);
-            let env = PolicyEnv {
-                predictor: PredictorKind::Oracle,
-                trace: trace.clone(),
-                seed: rng.next_u64(),
-            };
+            let env = PolicyEnv::new(PredictorKind::Oracle, trace.clone(), rng.next_u64());
             let mut p = spec.build(&env);
             let r = run_episode(&job, &trace, &models, p.as_mut());
             prop_assert!(
@@ -266,11 +262,11 @@ fn prop_episode_deterministic() {
             let spec = random_spec(rng);
             let seed = rng.next_u64();
             let run = || {
-                let env = PolicyEnv {
-                    predictor: PredictorKind::Noisy(NoiseSpec::fixed_mag_heavy(0.3)),
-                    trace: trace.clone(),
+                let env = PolicyEnv::new(
+                    PredictorKind::Noisy(NoiseSpec::fixed_mag_heavy(0.3)),
+                    trace.clone(),
                     seed,
-                };
+                );
                 let mut p = spec.build(&env);
                 run_episode(&job, &trace, &models, p.as_mut())
             };

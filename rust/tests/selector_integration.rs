@@ -144,7 +144,7 @@ fn arima_predictor_is_usable_in_selection() {
         &jobs,
         &models,
         &gen,
-        |_| PredictorKind::Arima,
+        |_| PredictorKind::arima(),
         &SelectionConfig { k_jobs: 20, seed: 3, snapshot_every: 0 },
     );
     assert_eq!(out.final_weights.len(), 3);
