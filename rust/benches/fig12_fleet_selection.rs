@@ -88,6 +88,37 @@ fn main() {
         fleet_aware.regret.last().unwrap()
     );
 
+    // --- Counterfactual engine: delta vs full replay. -----------------
+    // One full-pool (112 candidates) contended round through both
+    // engines: bit-identical utilities, very different price tags.
+    section("counterfactual engine: delta vs full replay (112 candidates)");
+    let engine_pool = spotfine::sched::pool::paper_pool();
+    let mut engine_rng = Rng::new(seed ^ 0xD17A);
+    let engine_job = jobs.sample(&mut engine_rng);
+    let engine_trace = gen.generate(seed ^ 0xD17A).slice_from(60);
+    let engine_env = PolicyEnv::new(
+        PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+        engine_trace.clone(),
+        seed ^ 0xD17A,
+    );
+    let mut delta_ev = FleetContendedEvaluator::synthetic(8, 2, seed)
+        .with_threads(threads);
+    let mut full_ev = FleetContendedEvaluator::synthetic(8, 2, seed)
+        .with_threads(threads)
+        .with_full_replay();
+    let (u_delta, delta_secs) = time_once(|| {
+        delta_ev.utilities(&engine_pool, &engine_job, &engine_trace, &models, &engine_env)
+    });
+    let (u_full, full_secs) = time_once(|| {
+        full_ev.utilities(&engine_pool, &engine_job, &engine_trace, &models, &engine_env)
+    });
+    assert_eq!(u_delta, u_full, "delta replay must match full replay bit-for-bit");
+    println!(
+        "one 112-candidate round: delta {delta_secs:.3}s vs full {full_secs:.3}s \
+         ({:.1}x)",
+        full_secs / delta_secs.max(1e-9)
+    );
+
     // --- Judge both picks by held-out *fleet* utility. ----------------
     section("held-out contended evaluation");
     let mut judge = FleetContendedEvaluator::synthetic(8, 2, seed)

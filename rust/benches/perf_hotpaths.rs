@@ -7,12 +7,21 @@
 //!   baseline; an honest-ARIMA 112-policy forecast sweep served by the
 //!   shared per-slot cache ≥ 10× per-policy batch predictors.
 //!
+//!   Fleet-selection target: a 112-candidate contended selection round
+//!   through the delta-replay engine ≥ 5× the full `run_with_override`
+//!   fleet re-simulation baseline (bit-identical results, asserted).
+//!
 //! Every section is also recorded to `BENCH_hotpaths.json` (mean/p50/p95
 //! µs per bench plus named baseline-vs-current speedups) so the perf
-//! trajectory is tracked across PRs.
+//! trajectory is tracked across PRs. Pass `--baseline <path>` (CI points
+//! it at the committed repo-root `BENCH_hotpaths.json`) to diff this run
+//! against the recorded trajectory: per-bench ratios are printed, and
+//! the run fails if any baseline bench is missing from this run (perf
+//! coverage must never silently shrink).
 //!
 //! Plus the PJRT step time when artifacts are present (L2/L1 path).
 
+use spotfine::fleet::FleetContendedEvaluator;
 use spotfine::forecast::arima::{ArimaConfig, ArimaPredictor};
 use spotfine::forecast::cache::{MarketHistory, SharedForecaster};
 use spotfine::forecast::noise::NoiseSpec;
@@ -31,6 +40,11 @@ use spotfine::util::bench::{bench, section, JsonReport};
 use spotfine::util::rng::Rng;
 
 fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let baseline_path = argv
+        .iter()
+        .position(|a| a == "--baseline")
+        .and_then(|i| argv.get(i + 1).cloned());
     let mut report = JsonReport::new("perf_hotpaths");
     let models = Models::paper_default();
     let job = Job::paper_reference();
@@ -299,6 +313,84 @@ fn main() {
         "PERF TARGET MISSED: cached ARIMA episode sweep only {ep_speedup:.1}x over batch"
     );
 
+    section("fleet: 112-candidate selection round (delta vs full replay)");
+    // One contended selection round: the fleet is simulated live once
+    // with the incumbent, then every one of the 112 pool candidates is
+    // scored in the learner's slot while the committed background
+    // replays. The baseline re-steps all 48 background jobs through the
+    // whole fleet horizon per candidate (`run_with_override`); the delta
+    // engine compacts the background once and charges each candidate
+    // only for the slots where it diverges from the incumbent — in
+    // particular, background jobs with longer deadlines and staggered
+    // arrivals (the realistic churning-fleet shape) cost it nothing.
+    let sel_job = Job::paper_reference();
+    let sel_trace = TraceGenerator::calibrated().generate(31).slice_from(55);
+    let sel_env = PolicyEnv::new(
+        PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+        sel_trace.clone(),
+        17,
+    );
+    let roster = spotfine::fleet::sweep::fleet_roster();
+    let sel_bg: Vec<spotfine::fleet::FleetJobSpec> = (0..48)
+        .map(|k| {
+            let job = Job {
+                workload: 70.0 + 4.0 * (k % 8) as f64,
+                deadline: 10 + (k % 5) * 5,
+                n_min: 1,
+                n_max: 12,
+                value: 150.0,
+                gamma: 1.5,
+            };
+            spotfine::fleet::FleetJobSpec::new(
+                job,
+                roster[k % roster.len()],
+                PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            )
+            .with_seed(900 + k as u64)
+            .with_tier(spotfine::fleet::Tier::cycle(k))
+            .in_region(k % 6)
+            .arriving_at((k % 4) * 3)
+        })
+        .collect();
+    let mk_round = || FleetContendedEvaluator::new(sel_bg.clone(), 6);
+    {
+        // Correctness gate before timing: the two engines must agree
+        // bit-for-bit on the whole pool.
+        let mut delta = mk_round();
+        let mut full = mk_round().with_full_replay();
+        assert_eq!(
+            delta.utilities(&pool, &sel_job, &sel_trace, &models, &sel_env),
+            full.utilities(&pool, &sel_job, &sel_trace, &models, &sel_env),
+            "delta replay diverged from full replay"
+        );
+    }
+    let r_round_full = bench("selection round, full replay (48 bg jobs)", 1, 5, || {
+        let mut ev = mk_round().with_full_replay();
+        ev.utilities(&pool, &sel_job, &sel_trace, &models, &sel_env)
+            .iter()
+            .sum::<f64>()
+    });
+    println!("{}", r_round_full.line());
+    report.result("fleet", &r_round_full);
+    let r_round_delta = bench("selection round, delta replay (48 bg jobs)", 2, 10, || {
+        let mut ev = mk_round();
+        ev.utilities(&pool, &sel_job, &sel_trace, &models, &sel_env)
+            .iter()
+            .sum::<f64>()
+    });
+    println!("{}", r_round_delta.line());
+    report.result("fleet", &r_round_delta);
+    let round_speedup = report.speedup(
+        "fleet selection round (112 candidates)",
+        r_round_full.mean_us(),
+        r_round_delta.mean_us(),
+    );
+    println!("speedup: {round_speedup:.1}x (delta replay over full fleet replay)");
+    assert!(
+        round_speedup >= 5.0,
+        "PERF TARGET MISSED: delta replay only {round_speedup:.1}x over full fleet replay"
+    );
+
     section("L2/L1: PJRT train step (needs artifacts)");
     let dir = std::path::PathBuf::from("artifacts");
     if spotfine::runtime::artifact::ArtifactBundle::present(&dir) {
@@ -329,10 +421,38 @@ fn main() {
         Err(e) => eprintln!("\nfailed to write BENCH_hotpaths.json: {e}"),
     }
 
+    if let Some(path) = baseline_path {
+        section("baseline diff");
+        let base = spotfine::util::bench::load_baseline(&path)
+            .unwrap_or_else(|e| panic!("failed to load baseline {path}: {e}"));
+        let mut missing = Vec::new();
+        for e in &base {
+            match report.mean_of(&e.name) {
+                Some(cur) => println!(
+                    "{:<44} baseline {:>12.1} µs   current {:>12.1} µs   ({:+.0}%)",
+                    e.name,
+                    e.mean_us,
+                    cur,
+                    100.0 * (cur - e.mean_us) / e.mean_us.max(1e-9)
+                ),
+                None => missing.push(e.name.clone()),
+            }
+        }
+        // Ratios are informational (hardware varies; the absolute
+        // budgets are asserted above) — lost coverage is not.
+        assert!(
+            missing.is_empty(),
+            "BASELINE COVERAGE LOST: benches in {path} missing from this run: {missing:?}"
+        );
+        println!("baseline coverage ok: {} benches present", base.len());
+    }
+
     println!(
         "summary: greedy solve {:.1} µs/decision — the planner runs ~10⁶× \
          faster than the 30-min slot it schedules; incremental+shared ARIMA \
-         serves the 112-policy pool at {:.1}x the per-policy batch cost.",
-        greedy_us, layer_speedup,
+         serves the 112-policy pool at {:.1}x the per-policy batch cost; \
+         delta replay scores a 112-candidate contended selection round at \
+         {:.1}x the full-fleet-replay cost.",
+        greedy_us, layer_speedup, round_speedup,
     );
 }

@@ -295,7 +295,10 @@ impl FleetEngine {
     /// which is exactly what a private model sees, whereas a cache
     /// knows the region's full history — so caching there would break
     /// the cached-vs-private bit-identity.
-    fn policy_env(&self, s: &FleetJobSpec, region: usize, initial: bool) -> PolicyEnv {
+    ///
+    /// `pub(crate)` so [`crate::fleet::replay`] can mirror the live
+    /// learner's policy (re)builds exactly.
+    pub(crate) fn policy_env(&self, s: &FleetJobSpec, region: usize, initial: bool) -> PolicyEnv {
         let trace = self.regions.get(region).trace.slice_from(s.arrival);
         let forecasts = if initial && region == s.home_region {
             match (&self.forecasts, &s.predictor) {
@@ -316,7 +319,7 @@ impl FleetEngine {
     }
 
     /// Build (and reset) the live policy for a job spec.
-    fn build_policy(&self, s: &FleetJobSpec) -> Box<dyn Policy> {
+    pub(crate) fn build_policy(&self, s: &FleetJobSpec) -> Box<dyn Policy> {
         let env = self.policy_env(s, s.home_region, true);
         let mut policy = s.policy.build(&env);
         policy.reset();

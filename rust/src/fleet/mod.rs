@@ -12,6 +12,12 @@
 //!   record/replay API ([`engine::FleetEngine::run_recorded`] /
 //!   [`engine::FleetEngine::run_with_override`]) that makes one-job
 //!   counterfactuals cheap;
+//! - [`replay`] — the delta-replay counterfactual engine: a
+//!   [`replay::ReplayPlan`] compacts a recorded run once, then evaluates
+//!   each candidate override in time proportional to how much it
+//!   *differs* from the recording (clean-slot short-circuit + prefix
+//!   forking across candidates), bit-for-bit identical to
+//!   `run_with_override`;
 //! - [`select`] — fleet-aware policy selection: the EG learner's
 //!   counterfactuals evaluated *under contention*, each candidate
 //!   swapped into the fleet while the other jobs replay their committed
@@ -23,6 +29,7 @@
 pub mod capacity;
 pub mod engine;
 pub mod region;
+pub mod replay;
 pub mod select;
 pub mod sweep;
 
@@ -32,8 +39,9 @@ pub use engine::{
     JobOutcome,
 };
 pub use region::{MigrationModel, Region, RegionSet};
+pub use replay::ReplayPlan;
 pub use select::{run_fleet_selection, FleetContendedEvaluator};
 pub use sweep::{
-    available_threads, run_fleet_sweep, run_parallel, run_selection_parallel,
-    FleetScenario,
+    available_threads, run_fleet_sweep, run_parallel, run_parallel_with,
+    run_selection_parallel, FleetScenario,
 };

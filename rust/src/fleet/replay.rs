@@ -1,0 +1,1255 @@
+//! Delta-replay counterfactual engine: evaluate a candidate override of
+//! one fleet job in time proportional to how much the candidate
+//! *differs* from the recorded run — not fleet size × horizon.
+//!
+//! [`FleetEngine::run_with_override`] is the reference semantics: one
+//! live candidate, every other job replaying its committed trace, the
+//! arbiter re-deciding every grant. But a full override re-steps the
+//! whole fleet through the whole horizon for *every* candidate, even
+//! though the replayed jobs merely resubmit recorded requests. A
+//! selection round pays that M ≈ 112 times. [`ReplayPlan`] removes the
+//! redundancy in three layers, each exact:
+//!
+//! 1. **Background compaction** — one pass over the [`CommittedRun`]
+//!    precomputes, per slot and region, the recorded arbitration inputs
+//!    and outcomes (who asked for what, holding what, granted what) plus
+//!    a per-job post-slot state snapshot. Counterfactuals never re-step
+//!    replayed jobs again; they read the summary.
+//! 2. **Clean-slot short-circuit** — while the candidate's clamped
+//!    request equals the incumbent's recorded request, every arbitration
+//!    input in the fleet is identical to the recorded run's (requests
+//!    are frozen, holdings follow inductively), so the water-fill +
+//!    preemption cascade provably reproduces the recorded outcome: the
+//!    slot costs one `decide` and an O(regions) row copy. Divergence
+//!    materializes the candidate's state from the snapshots; from then
+//!    on only regions whose request set actually changed (the candidate,
+//!    displaced jobs, the incumbent's vacated seat) are re-arbitrated,
+//!    while untouched regions keep copying recorded rows.
+//! 3. **Prefix forking** — counterfactual fleet state is memoized in a
+//!    trie keyed by the candidate's post-divergence decision sequence.
+//!    The slot transition is a deterministic function of (state, want),
+//!    so candidates that diverge identically (OD-heavy variants, AHAP
+//!    variants sharing a commitment level until forecasts diverge) adopt
+//!    each other's per-slot states instead of re-simulating them. The
+//!    trie sits behind a mutex on the shared plan, so forks are reused
+//!    within and across [`crate::fleet::sweep::run_parallel`] workers —
+//!    and because adopted states are bit-identical to recomputed ones,
+//!    results are invariant to thread count and hit pattern.
+//!
+//! The contract, enforced by `tests/fleet_properties.rs` and
+//! `tests/fleet_integration.rs` across random fleets, the full
+//! 112-policy pool, migrations, preemption cascades, and thread counts:
+//! [`ReplayPlan::counterfactual`] returns a [`FleetResult`] **bit-for-bit
+//! identical** to `run_with_override`. Every accounting expression below
+//! mirrors the engine's slot loop exactly — same operations, same order
+//! — which is what makes the equality exact rather than approximate.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
+
+use crate::fleet::capacity::{arbitrate, SpotRequest, Tier};
+use crate::fleet::engine::{CommittedRun, FleetEngine, FleetJobSpec, FleetResult, JobOutcome};
+use crate::fleet::region::MigrationModel;
+use crate::market::market::MarketObs;
+use crate::sched::policy::{Allocation, Policy, SlotContext};
+use crate::sched::pool::PolicySpec;
+use crate::sched::simulate::{settle_episode, EpisodeResult};
+
+/// One job's numeric simulation state — the engine's internal per-job
+/// state minus the driver and the decision trace (decisions are kept
+/// separately so forked states stay O(1) per slot to snapshot).
+#[derive(Debug, Clone, PartialEq)]
+struct Cursor {
+    region: usize,
+    progress: f64,
+    prev_total: u32,
+    prev_avail: u32,
+    held: u32,
+    reconfigs: u32,
+    spot_slots: u32,
+    on_demand_slots: u32,
+    preemptions: u64,
+    cost: f64,
+    /// Consecutive starved slots (live candidate only; replayed jobs
+    /// migrate from their recorded region sequence instead).
+    starved: usize,
+    migrations: u32,
+    mu_pending: bool,
+    completion_slot: Option<usize>,
+    done: bool,
+}
+
+impl Cursor {
+    fn initial(region: usize) -> Cursor {
+        Cursor {
+            region,
+            progress: 0.0,
+            prev_total: 0,
+            prev_avail: 0,
+            held: 0,
+            reconfigs: 0,
+            spot_slots: 0,
+            on_demand_slots: 0,
+            preemptions: 0,
+            cost: 0.0,
+            starved: 0,
+            migrations: 0,
+            mu_pending: false,
+            completion_slot: None,
+            done: false,
+        }
+    }
+
+    /// Book a migration into `to`. Field-for-field this is both the
+    /// engine's replayed-migration booking (slot-entry) and its live
+    /// booking (decision-slot) — the two differ only in *when* they run,
+    /// and the addition order of the surrounding cost terms is the same
+    /// either way, so the totals are bit-identical.
+    fn book_migration(&mut self, to: usize, mig: &MigrationModel) {
+        self.cost += mig.cost;
+        self.migrations += 1;
+        self.held = 0;
+        self.mu_pending = true;
+        self.starved = 0;
+        self.region = to;
+    }
+
+    /// Phase-3 accounting for one slot, mirroring the engine's
+    /// expressions in the engine's order. Returns whether the job
+    /// completed this slot.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_phase3(
+        &mut self,
+        job: &crate::sched::job::Job,
+        models: &crate::sched::policy::Models,
+        mig: &MigrationModel,
+        want: Allocation,
+        obs: MarketObs,
+        spot: u32,
+        preempted: u32,
+        local_t: usize,
+    ) -> bool {
+        self.preemptions += preempted as u64;
+        self.held = spot;
+        let total = spot + want.on_demand;
+        let mut mu = models.reconfig.mu(self.prev_total, total);
+        if self.mu_pending {
+            mu *= mig.mu;
+            self.mu_pending = false;
+        }
+        self.progress += mu * models.throughput.h(total);
+        if total != self.prev_total {
+            self.reconfigs += 1;
+        }
+        self.spot_slots += spot;
+        self.on_demand_slots += want.on_demand;
+        let slot_cost = want.on_demand as f64 * obs.on_demand_price
+            + spot as f64 * obs.spot_price;
+        self.cost += slot_cost;
+        self.prev_total = total;
+        self.prev_avail = obs.avail;
+        if self.progress >= job.workload - 1e-9 {
+            self.completion_slot = Some(local_t + 1);
+            self.done = true;
+            self.held = 0;
+            return true;
+        }
+        false
+    }
+}
+
+/// One job's recorded arbitration input + outcome at one region-slot.
+#[derive(Debug, Clone, Copy)]
+struct MemberRec {
+    job: usize,
+    tier: Tier,
+    want_spot: u32,
+    held: u32,
+    granted: u32,
+    preempted: u32,
+}
+
+/// The recorded arbitration of one region at one slot (members in
+/// ascending job order, as the engine builds them).
+#[derive(Debug, Clone, Default)]
+struct RegionRow {
+    members: Vec<MemberRec>,
+}
+
+/// Candidate want key for the fork trie; `INACTIVE` marks slots where
+/// the candidate submits nothing (completed), after which the remaining
+/// transitions are want-independent and fully shared.
+type WantKey = (u32, u32);
+const INACTIVE: WantKey = (u32::MAX, u32::MAX);
+
+/// Post-slot counterfactual fleet state memoized in the fork trie: the
+/// complete numeric state plus the per-slot deltas an adopter needs to
+/// maintain decision traces and region rows without re-simulating.
+struct ForkState {
+    cand: Cursor,
+    cand_decision: Option<Allocation>,
+    /// The candidate live-migrated during this slot: adopters must
+    /// rebuild their own policy object against this region (the numeric
+    /// state is shared; the policy instance is per-candidate).
+    cand_migrated: Option<usize>,
+    dirty: Vec<(usize, Cursor)>,
+    /// Jobs that became dirty this slot (adopters materialize their
+    /// recorded decision prefix before applying `appended`).
+    newly_dirty: Vec<usize>,
+    /// Decisions appended to dirty jobs' traces this slot.
+    appended: Vec<(usize, Allocation)>,
+    /// Re-arbitrated regions' granted sums this slot, ascending by
+    /// region; regions absent here copy the recorded row.
+    rows: Vec<(usize, u32)>,
+}
+
+struct ForkNode {
+    state: Arc<ForkState>,
+    children: HashMap<WantKey, usize>,
+}
+
+#[derive(Default)]
+struct ForkCache {
+    /// Divergence roots keyed by (global slot, first divergent want).
+    roots: HashMap<(usize, WantKey), usize>,
+    nodes: Vec<ForkNode>,
+    hits: u64,
+    misses: u64,
+}
+
+/// A compacted recorded run, ready to evaluate candidate overrides of
+/// `live_job` in delta time. Build once per selection round (one cheap
+/// replay pass over the committed fleet), then call
+/// [`counterfactual`](ReplayPlan::counterfactual) per candidate — from
+/// any number of threads; the fork trie is shared behind a mutex.
+pub struct ReplayPlan<'a> {
+    engine: &'a FleetEngine,
+    specs: &'a [FleetJobSpec],
+    committed: &'a CommittedRun,
+    live_job: usize,
+    horizon: usize,
+    n_regions: usize,
+    /// `rows[t][r]` — recorded arbitration of region `r` at slot `t`.
+    rows: Vec<Vec<RegionRow>>,
+    /// `snaps[j][local_t]` — job `j`'s state after its local slot
+    /// `local_t` (replay booking order; the learner's entry additionally
+    /// carries the live starvation counter, reconstructed from the
+    /// recorded series, so a diverging candidate inherits it exactly).
+    snaps: Vec<Vec<Cursor>>,
+    use_forks: bool,
+    forks: Mutex<ForkCache>,
+}
+
+impl<'a> ReplayPlan<'a> {
+    /// Compact `committed` (produced by [`FleetEngine::run_recorded`] on
+    /// exactly these `specs`) for candidate overrides of `live_job`.
+    pub fn new(
+        engine: &'a FleetEngine,
+        specs: &'a [FleetJobSpec],
+        committed: &'a CommittedRun,
+        live_job: usize,
+    ) -> Self {
+        assert_eq!(specs.len(), committed.traces.len(), "one trace per job");
+        assert_eq!(specs.len(), committed.result.jobs.len());
+        assert!(live_job < specs.len(), "live_job out of range");
+        let n = specs.len();
+        let horizon = committed.result.slots;
+        let n_regions = engine.regions.len();
+        let models = &engine.models;
+        let mig = engine.regions.migration;
+
+        let mut cursors: Vec<Cursor> =
+            specs.iter().map(|s| Cursor::initial(s.home_region)).collect();
+        let mut snaps: Vec<Vec<Cursor>> = vec![Vec::new(); n];
+        let mut rows: Vec<Vec<RegionRow>> = Vec::with_capacity(horizon);
+        let mut pending: Vec<Option<(Allocation, MarketObs)>> = vec![None; n];
+        let mut spot_grant = vec![0u32; n];
+        let mut preempted = vec![0u32; n];
+
+        for t in 0..horizon {
+            // Phase 1 — replay every job's committed choice.
+            for j in 0..n {
+                pending[j] = None;
+                let s = &specs[j];
+                let c = &mut cursors[j];
+                if c.done || t < s.arrival {
+                    continue;
+                }
+                let local_t = t - s.arrival;
+                if local_t >= s.job.deadline {
+                    c.done = true;
+                    continue;
+                }
+                let tr = &committed.traces[j];
+                if local_t < tr.regions.len() {
+                    let region_now = tr.regions[local_t];
+                    if region_now != c.region {
+                        c.book_migration(region_now, &mig);
+                    }
+                }
+                let obs = engine.regions.observe(
+                    c.region,
+                    t,
+                    local_t,
+                    models.on_demand_price,
+                );
+                let want = if local_t < tr.wants.len() {
+                    tr.wants[local_t]
+                } else {
+                    Allocation::idle()
+                };
+                pending[j] = Some((want, obs));
+            }
+
+            // Phase 2 — record every region's arbitration.
+            let mut row: Vec<RegionRow> = Vec::with_capacity(n_regions);
+            for r in 0..n_regions {
+                let avail = engine.regions.avail(r, t);
+                let requests: Vec<SpotRequest> = (0..n)
+                    .filter(|&j| pending[j].is_some() && cursors[j].region == r)
+                    .map(|j| SpotRequest {
+                        job: j,
+                        tier: specs[j].tier,
+                        want: pending[j].as_ref().unwrap().0.spot,
+                        held: cursors[j].held,
+                    })
+                    .collect();
+                let grants = arbitrate(avail, &requests);
+                let mut members = Vec::with_capacity(requests.len());
+                let mut granted_sum = 0u32;
+                for (req, g) in requests.iter().zip(&grants) {
+                    spot_grant[g.job] = g.granted;
+                    preempted[g.job] = g.preempted;
+                    granted_sum += g.granted;
+                    members.push(MemberRec {
+                        job: req.job,
+                        tier: req.tier,
+                        want_spot: req.want,
+                        held: req.held,
+                        granted: g.granted,
+                        preempted: g.preempted,
+                    });
+                }
+                debug_assert_eq!(
+                    granted_sum, committed.result.region_granted[r][t],
+                    "compaction diverged from the recorded run (region {r}, slot {t})"
+                );
+                row.push(RegionRow { members });
+            }
+            rows.push(row);
+
+            // Phase 3 — accounting + snapshots.
+            for j in 0..n {
+                let Some((want, obs)) = pending[j].take() else {
+                    continue;
+                };
+                let s = &specs[j];
+                let local_t = t - s.arrival;
+                let c = &mut cursors[j];
+                let completed = c.apply_phase3(
+                    &s.job,
+                    models,
+                    &mig,
+                    want,
+                    obs,
+                    spot_grant[j],
+                    preempted[j],
+                    local_t,
+                );
+                // The recorded learner ran *live*: reconstruct its
+                // starvation counter so a diverging candidate inherits
+                // the exact state a live learner would carry. (The
+                // counter's reset-on-migration lands in the next slot's
+                // booking — same position the cost lands, and nothing
+                // reads it in between.)
+                if !completed && j == live_job {
+                    let total = spot_grant[j] + want.on_demand;
+                    if (want.spot > 0 && spot_grant[j] == 0)
+                        || (total == 0 && obs.avail < s.job.n_min)
+                    {
+                        c.starved += 1;
+                    } else {
+                        c.starved = 0;
+                    }
+                }
+                snaps[j].push(c.clone());
+            }
+        }
+
+        for (j, jo) in committed.result.jobs.iter().enumerate() {
+            debug_assert_eq!(
+                snaps[j].len(),
+                jo.episode.decisions.len(),
+                "job {j}: snapshot count != recorded slots run"
+            );
+        }
+
+        ReplayPlan {
+            engine,
+            specs,
+            committed,
+            live_job,
+            horizon,
+            n_regions,
+            rows,
+            snaps,
+            use_forks: true,
+            forks: Mutex::new(ForkCache::default()),
+        }
+    }
+
+    /// Disable the prefix-fork trie (layers 1–2 only). Useful to isolate
+    /// the layers in tests and benches; results are identical either way.
+    pub fn with_forks(mut self, on: bool) -> Self {
+        self.use_forks = on;
+        self
+    }
+
+    /// `(hits, misses)` of the fork trie so far.
+    pub fn fork_stats(&self) -> (u64, u64) {
+        let c = self.forks.lock().unwrap();
+        (c.hits, c.misses)
+    }
+
+    /// The recorded result with the learner relabeled as `policy` — what
+    /// `run_with_override` returns when the candidate's every clamped
+    /// request matches the incumbent's (identical requests arbitrate
+    /// identically, slot by slot, by induction over holdings).
+    fn recorded_with_label(&self, policy: &PolicySpec) -> FleetResult {
+        let mut out = self.committed.result.clone();
+        out.jobs[self.live_job].label = policy.label();
+        out
+    }
+
+    fn push_recorded_row(&self, out: &mut [Vec<u32>], t: usize) {
+        for (r, col) in out.iter_mut().enumerate() {
+            col.push(self.committed.result.region_granted[r][t]);
+        }
+    }
+
+    /// Rebuild the candidate's policy after a migration, exactly as the
+    /// engine rebuilds a live job's (private predictors, local clock).
+    fn rebuild_policy(&self, swapped: &FleetJobSpec, region: usize) -> Box<dyn Policy> {
+        let env = self.engine.policy_env(swapped, region, false);
+        let mut p = swapped.policy.build(&env);
+        p.reset();
+        p
+    }
+
+    /// Evaluate one candidate override. Bit-for-bit identical to
+    /// `self.engine.run_with_override(specs, traces, live_job, policy)`.
+    pub fn counterfactual(&self, policy: PolicySpec) -> FleetResult {
+        let lr = self.live_job;
+        let lspec = &self.specs[lr];
+        let ltrace = &self.committed.traces[lr];
+        let models = &self.engine.models;
+        let regions = &self.engine.regions;
+        let mig = regions.migration;
+        let mut swapped = lspec.clone();
+        swapped.policy = policy;
+        let mut cand_policy = self.engine.build_policy(&swapped);
+
+        let mut sync = true;
+        let mut cand = Cursor::initial(lspec.home_region);
+        let mut cand_decisions: Vec<Allocation> = Vec::new();
+        let mut dirty: BTreeMap<usize, Cursor> = BTreeMap::new();
+        let mut bg_decisions: BTreeMap<usize, Vec<Allocation>> = BTreeMap::new();
+        let mut granted_out: Vec<Vec<u32>> =
+            (0..self.n_regions).map(|_| Vec::with_capacity(self.horizon)).collect();
+        let mut node: Option<usize> = None;
+
+        for t in 0..self.horizon {
+            // --- Candidate phase 1 -----------------------------------
+            let mut cand_pending: Option<(Allocation, MarketObs)> = None;
+            if sync {
+                if t < lspec.arrival {
+                    self.push_recorded_row(&mut granted_out, t);
+                    continue;
+                }
+                let lt = t - lspec.arrival;
+                if lt >= ltrace.wants.len() {
+                    // The recorded learner is done and nothing diverged:
+                    // the counterfactual *is* the recorded run.
+                    return self.recorded_with_label(&policy);
+                }
+                let region = ltrace.regions[lt];
+                let obs =
+                    regions.observe(region, t, lt, models.on_demand_price);
+                let prev = if lt == 0 {
+                    Cursor::initial(lspec.home_region)
+                } else {
+                    self.snaps[lr][lt - 1].clone()
+                };
+                let ctx = SlotContext {
+                    t: lt,
+                    obs,
+                    progress: prev.progress,
+                    prev_total: prev.prev_total,
+                    prev_avail: prev.prev_avail,
+                    job: &lspec.job,
+                    models,
+                };
+                let want =
+                    cand_policy.decide(&ctx).clamp_to_job(&lspec.job, obs.avail);
+                if want == ltrace.wants[lt] {
+                    // Clean slot: every arbitration input equals the
+                    // recorded run's, so the outcome does too — O(1).
+                    self.push_recorded_row(&mut granted_out, t);
+                    // Mirror the live learner's post-migration replan.
+                    if lt + 1 < ltrace.regions.len()
+                        && ltrace.regions[lt + 1] != region
+                    {
+                        cand_policy =
+                            self.rebuild_policy(&swapped, ltrace.regions[lt + 1]);
+                    }
+                    continue;
+                }
+                // First divergent slot: materialize the candidate from
+                // the snapshots (booking the slot-entry migration the
+                // snapshot hasn't applied yet) and fall through.
+                sync = false;
+                cand = prev;
+                if lt > 0 && region != cand.region {
+                    cand.book_migration(region, &mig);
+                }
+                cand_decisions = self.committed.result.jobs[lr]
+                    .episode
+                    .decisions[..lt]
+                    .to_vec();
+                cand_pending = Some((want, obs));
+            } else if !cand.done && t >= lspec.arrival {
+                let lt = t - lspec.arrival;
+                if lt >= lspec.job.deadline {
+                    cand.done = true;
+                } else {
+                    let obs = regions.observe(
+                        cand.region,
+                        t,
+                        lt,
+                        models.on_demand_price,
+                    );
+                    let ctx = SlotContext {
+                        t: lt,
+                        obs,
+                        progress: cand.progress,
+                        prev_total: cand.prev_total,
+                        prev_avail: cand.prev_avail,
+                        job: &lspec.job,
+                        models,
+                    };
+                    let want = cand_policy
+                        .decide(&ctx)
+                        .clamp_to_job(&lspec.job, obs.avail);
+                    cand_pending = Some((want, obs));
+                }
+            }
+
+            // --- Fork adoption ---------------------------------------
+            let key: WantKey = match &cand_pending {
+                Some((w, _)) => (w.on_demand, w.spot),
+                None => INACTIVE,
+            };
+            if self.use_forks {
+                let adopted = {
+                    let mut cache = self.forks.lock().unwrap();
+                    let child = match node {
+                        Some(nid) => cache.nodes[nid].children.get(&key).copied(),
+                        None => cache.roots.get(&(t, key)).copied(),
+                    };
+                    if child.is_some() {
+                        cache.hits += 1;
+                    }
+                    child.map(|cid| (cid, cache.nodes[cid].state.clone()))
+                };
+                if let Some((cid, st)) = adopted {
+                    self.adopt(
+                        &st,
+                        t,
+                        &mut cand,
+                        &mut dirty,
+                        &mut bg_decisions,
+                        &mut cand_decisions,
+                        &mut granted_out,
+                    );
+                    if let Some(r) = st.cand_migrated {
+                        cand_policy = self.rebuild_policy(&swapped, r);
+                    }
+                    node = Some(cid);
+                    continue;
+                }
+            }
+
+            // --- Simulate the slot locally ---------------------------
+            let (state, cand_migrated) = self.step_diverged(
+                t,
+                &mut cand,
+                cand_pending,
+                &mut dirty,
+                &mut bg_decisions,
+                &mut cand_decisions,
+                &mut granted_out,
+            );
+            if let Some(r) = cand_migrated {
+                cand_policy = self.rebuild_policy(&swapped, r);
+            }
+            if self.use_forks {
+                node = Some(self.insert_fork(node, t, key, state));
+            }
+        }
+
+        if sync {
+            // Never diverged through the whole horizon.
+            return self.recorded_with_label(&policy);
+        }
+
+        // --- Assembly (mirrors the engine's settlement) --------------
+        let mut jobs: Vec<JobOutcome> = Vec::with_capacity(self.specs.len());
+        for (j, s) in self.specs.iter().enumerate() {
+            if j == lr {
+                let decisions = std::mem::take(&mut cand_decisions);
+                jobs.push(settle_outcome(
+                    s,
+                    models,
+                    &cand,
+                    decisions,
+                    policy.label(),
+                ));
+            } else if let Some(c) = dirty.get(&j) {
+                let decisions = bg_decisions.remove(&j).unwrap();
+                jobs.push(settle_outcome(s, models, c, decisions, s.policy.label()));
+            } else {
+                jobs.push(self.committed.result.jobs[j].clone());
+            }
+        }
+
+        let region_avail = self.committed.result.region_avail.clone();
+        let n = jobs.len().max(1) as f64;
+        let total_utility = jobs.iter().map(|j| j.episode.utility).sum();
+        let total_value = jobs.iter().map(|j| j.episode.value).sum();
+        let total_cost = jobs.iter().map(|j| j.episode.cost).sum();
+        let on_time_rate =
+            jobs.iter().filter(|j| j.episode.on_time).count() as f64 / n;
+        let total_preemptions =
+            jobs.iter().map(|j| j.episode.preemptions).sum();
+        let total_migrations = jobs.iter().map(|j| j.migrations).sum();
+        let region_utilization = (0..self.n_regions)
+            .map(|r| {
+                let mut used = 0u64;
+                let mut cap = 0u64;
+                for (g, a) in granted_out[r].iter().zip(&region_avail[r]) {
+                    if *a > 0 {
+                        used += *g as u64;
+                        cap += *a as u64;
+                    }
+                }
+                if cap == 0 {
+                    0.0
+                } else {
+                    used as f64 / cap as f64
+                }
+            })
+            .collect();
+
+        FleetResult {
+            jobs,
+            slots: self.horizon,
+            total_utility,
+            total_value,
+            total_cost,
+            on_time_rate,
+            total_preemptions,
+            total_migrations,
+            region_utilization,
+            region_granted: granted_out,
+            region_avail,
+        }
+    }
+
+    /// Apply a memoized fork state: replace the numeric state wholesale,
+    /// extend the decision traces with this slot's deltas, and emit the
+    /// slot's region rows.
+    #[allow(clippy::too_many_arguments)]
+    fn adopt(
+        &self,
+        st: &ForkState,
+        t: usize,
+        cand: &mut Cursor,
+        dirty: &mut BTreeMap<usize, Cursor>,
+        bg_decisions: &mut BTreeMap<usize, Vec<Allocation>>,
+        cand_decisions: &mut Vec<Allocation>,
+        granted_out: &mut [Vec<u32>],
+    ) {
+        *cand = st.cand.clone();
+        *dirty = st.dirty.iter().cloned().collect();
+        for &j in &st.newly_dirty {
+            let lt = t - self.specs[j].arrival;
+            bg_decisions.insert(
+                j,
+                self.committed.result.jobs[j].episode.decisions[..lt].to_vec(),
+            );
+        }
+        for (j, d) in &st.appended {
+            bg_decisions.get_mut(j).unwrap().push(*d);
+        }
+        if let Some(d) = st.cand_decision {
+            cand_decisions.push(d);
+        }
+        let mut over = st.rows.iter().peekable();
+        for (r, col) in granted_out.iter_mut().enumerate() {
+            match over.peek() {
+                Some(&&(rr, g)) if rr == r => {
+                    col.push(g);
+                    over.next();
+                }
+                _ => col.push(self.committed.result.region_granted[r][t]),
+            }
+        }
+    }
+
+    /// Insert the state computed for `(parent, key)`, returning its node
+    /// id. If another worker raced us to the same transition its state
+    /// is bit-identical by construction, so either `Arc` serves.
+    fn insert_fork(
+        &self,
+        parent: Option<usize>,
+        t: usize,
+        key: WantKey,
+        state: Arc<ForkState>,
+    ) -> usize {
+        let mut cache = self.forks.lock().unwrap();
+        let existing = match parent {
+            Some(p) => cache.nodes[p].children.get(&key).copied(),
+            None => cache.roots.get(&(t, key)).copied(),
+        };
+        if let Some(id) = existing {
+            return id;
+        }
+        cache.misses += 1;
+        let id = cache.nodes.len();
+        cache.nodes.push(ForkNode { state, children: HashMap::new() });
+        match parent {
+            Some(p) => {
+                cache.nodes[p].children.insert(key, id);
+            }
+            None => {
+                cache.roots.insert((t, key), id);
+            }
+        }
+        id
+    }
+
+    /// Simulate one post-divergence slot: replay dirty jobs' committed
+    /// choices, re-arbitrate only the regions whose request set differs
+    /// from the recorded run, copy every other region's recorded row,
+    /// and account exactly as the engine's phase 3. Returns the fork
+    /// state for the trie plus the candidate's live-migration target.
+    #[allow(clippy::too_many_arguments)]
+    fn step_diverged(
+        &self,
+        t: usize,
+        cand: &mut Cursor,
+        cand_pending: Option<(Allocation, MarketObs)>,
+        dirty: &mut BTreeMap<usize, Cursor>,
+        bg_decisions: &mut BTreeMap<usize, Vec<Allocation>>,
+        cand_decisions: &mut Vec<Allocation>,
+        granted_out: &mut [Vec<u32>],
+    ) -> (Arc<ForkState>, Option<usize>) {
+        let lr = self.live_job;
+        let models = &self.engine.models;
+        let regions = &self.engine.regions;
+        let mig = regions.migration;
+
+        // Phase 1 — dirty background jobs replay their committed choice.
+        let mut pend: Vec<(usize, Allocation, MarketObs, usize)> = Vec::new();
+        for (&j, c) in dirty.iter_mut() {
+            let s = &self.specs[j];
+            if c.done || t < s.arrival {
+                continue;
+            }
+            let lt = t - s.arrival;
+            if lt >= s.job.deadline {
+                c.done = true;
+                continue;
+            }
+            let tr = &self.committed.traces[j];
+            if lt < tr.regions.len() {
+                let region_now = tr.regions[lt];
+                if region_now != c.region {
+                    c.book_migration(region_now, &mig);
+                }
+            }
+            let obs =
+                regions.observe(c.region, t, lt, models.on_demand_price);
+            let want = if lt < tr.wants.len() {
+                tr.wants[lt]
+            } else {
+                Allocation::idle()
+            };
+            pend.push((j, want, obs, c.region));
+        }
+
+        // A region's arbitration differs from the recorded run's exactly
+        // when its request set does: the candidate or a dirty job sits
+        // there now, or the recorded learner / a dirty job sat there in
+        // the recorded run (their recorded entry is vacated or stale).
+        let mut affected = vec![false; self.n_regions];
+        if cand_pending.is_some() {
+            affected[cand.region] = true;
+        }
+        for &(_, _, _, r) in &pend {
+            affected[r] = true;
+        }
+        for r in 0..self.n_regions {
+            if !affected[r]
+                && self.rows[t][r]
+                    .members
+                    .iter()
+                    .any(|m| m.job == lr || dirty.contains_key(&m.job))
+            {
+                affected[r] = true;
+            }
+        }
+
+        // Phase 2 — arbitrate affected regions; copy the rest.
+        let mut grants_of: HashMap<usize, (u32, u32)> = HashMap::new();
+        let mut newly: Vec<(usize, Allocation, MarketObs, u32, u32)> = Vec::new();
+        let mut fork_rows: Vec<(usize, u32)> = Vec::new();
+        for r in 0..self.n_regions {
+            if !affected[r] {
+                granted_out[r].push(self.committed.result.region_granted[r][t]);
+                continue;
+            }
+            let avail = regions.avail(r, t);
+            // Merge (ascending job id): recorded still-synced members,
+            // dirty jobs homed here now, and the candidate.
+            let mut extras: Vec<SpotRequest> = Vec::new();
+            for &(j, want, _, reg) in &pend {
+                if reg == r {
+                    extras.push(SpotRequest {
+                        job: j,
+                        tier: self.specs[j].tier,
+                        want: want.spot,
+                        held: dirty[&j].held,
+                    });
+                }
+            }
+            if let Some((w, _)) = &cand_pending {
+                if cand.region == r {
+                    extras.push(SpotRequest {
+                        job: lr,
+                        tier: self.specs[lr].tier,
+                        want: w.spot,
+                        held: cand.held,
+                    });
+                }
+            }
+            extras.sort_by_key(|q| q.job);
+            let mut requests: Vec<SpotRequest> = Vec::new();
+            let mut rec_out: Vec<Option<(u32, u32)>> = Vec::new();
+            let mut ei = 0;
+            for m in &self.rows[t][r].members {
+                if m.job == lr || dirty.contains_key(&m.job) {
+                    continue;
+                }
+                while ei < extras.len() && extras[ei].job < m.job {
+                    requests.push(extras[ei]);
+                    rec_out.push(None);
+                    ei += 1;
+                }
+                requests.push(SpotRequest {
+                    job: m.job,
+                    tier: m.tier,
+                    want: m.want_spot,
+                    held: m.held,
+                });
+                rec_out.push(Some((m.granted, m.preempted)));
+            }
+            while ei < extras.len() {
+                requests.push(extras[ei]);
+                rec_out.push(None);
+                ei += 1;
+            }
+
+            let grants = arbitrate(avail, &requests);
+            let mut granted_sum = 0u32;
+            for g in &grants {
+                granted_sum += g.granted;
+            }
+            granted_out[r].push(granted_sum);
+            fork_rows.push((r, granted_sum));
+
+            for (g, rec) in grants.iter().zip(&rec_out) {
+                match rec {
+                    None => {
+                        // candidate or already-dirty job
+                        grants_of.insert(g.job, (g.granted, g.preempted));
+                    }
+                    Some((rg, rp)) => {
+                        if g.granted == *rg && g.preempted == *rp {
+                            continue; // outcome unchanged: stays synced
+                        }
+                        // Newly displaced: materialize from snapshots.
+                        let s = &self.specs[g.job];
+                        let lt = t - s.arrival;
+                        let mut c = if lt == 0 {
+                            Cursor::initial(s.home_region)
+                        } else {
+                            self.snaps[g.job][lt - 1].clone()
+                        };
+                        let tr = &self.committed.traces[g.job];
+                        if lt > 0
+                            && lt < tr.regions.len()
+                            && tr.regions[lt] != c.region
+                        {
+                            c.book_migration(tr.regions[lt], &mig);
+                        }
+                        debug_assert_eq!(c.region, r);
+                        let want = if lt < tr.wants.len() {
+                            tr.wants[lt]
+                        } else {
+                            Allocation::idle()
+                        };
+                        let obs = regions.observe(
+                            r,
+                            t,
+                            lt,
+                            models.on_demand_price,
+                        );
+                        newly.push((g.job, want, obs, g.granted, g.preempted));
+                        dirty.insert(g.job, c);
+                        bg_decisions.insert(
+                            g.job,
+                            self.committed.result.jobs[g.job].episode.decisions
+                                [..lt]
+                                .to_vec(),
+                        );
+                    }
+                }
+            }
+        }
+
+        // Phase 3 — candidate accounting (with the engine's live
+        // starvation/migration logic), then dirty-job accounting.
+        let mut cand_migrated = None;
+        let mut cand_decision = None;
+        if let Some((want, obs)) = cand_pending {
+            let (sp, pe) = grants_of[&lr];
+            let lt = t - self.specs[lr].arrival;
+            let completed = cand.apply_phase3(
+                &self.specs[lr].job,
+                models,
+                &mig,
+                want,
+                obs,
+                sp,
+                pe,
+                lt,
+            );
+            let d = Allocation::new(want.on_demand, sp);
+            cand_decisions.push(d);
+            cand_decision = Some(d);
+            if !completed {
+                let total = sp + want.on_demand;
+                if (want.spot > 0 && sp == 0)
+                    || (total == 0 && obs.avail < self.specs[lr].job.n_min)
+                {
+                    cand.starved += 1;
+                } else {
+                    cand.starved = 0;
+                }
+                if self.engine.migration_patience > 0
+                    && self.n_regions > 1
+                    && cand.starved >= self.engine.migration_patience
+                {
+                    let best = regions.best_region(t);
+                    if best != cand.region
+                        && regions.avail(best, t) > obs.avail
+                    {
+                        cand.book_migration(best, &mig);
+                        cand_migrated = Some(best);
+                    }
+                }
+            }
+        }
+
+        let mut appended: Vec<(usize, Allocation)> = Vec::new();
+        for (j, want, obs, _) in pend {
+            let (sp, pe) = grants_of[&j];
+            let c = dirty.get_mut(&j).unwrap();
+            let lt = t - self.specs[j].arrival;
+            c.apply_phase3(&self.specs[j].job, models, &mig, want, obs, sp, pe, lt);
+            let d = Allocation::new(want.on_demand, sp);
+            bg_decisions.get_mut(&j).unwrap().push(d);
+            appended.push((j, d));
+        }
+        let mut newly_dirty_ids = Vec::with_capacity(newly.len());
+        for (j, want, obs, sp, pe) in newly {
+            let c = dirty.get_mut(&j).unwrap();
+            let lt = t - self.specs[j].arrival;
+            c.apply_phase3(&self.specs[j].job, models, &mig, want, obs, sp, pe, lt);
+            let d = Allocation::new(want.on_demand, sp);
+            bg_decisions.get_mut(&j).unwrap().push(d);
+            appended.push((j, d));
+            newly_dirty_ids.push(j);
+        }
+
+        let state = Arc::new(ForkState {
+            cand: cand.clone(),
+            cand_decision,
+            cand_migrated,
+            dirty: dirty.iter().map(|(&j, c)| (j, c.clone())).collect(),
+            newly_dirty: newly_dirty_ids,
+            appended,
+            rows: fork_rows,
+        });
+        (state, cand_migrated)
+    }
+}
+
+/// Settle one job from its final cursor — the engine's end-of-horizon
+/// settlement, expression for expression.
+fn settle_outcome(
+    s: &FleetJobSpec,
+    models: &crate::sched::policy::Models,
+    st: &Cursor,
+    decisions: Vec<Allocation>,
+    label: String,
+) -> JobOutcome {
+    let slots_run = decisions.len();
+    let progress_at_deadline = st.progress.min(s.job.workload);
+    let (value, total_cost, completion) = settle_episode(
+        &s.job,
+        models,
+        st.progress,
+        slots_run,
+        st.cost,
+        st.completion_slot,
+    );
+    JobOutcome {
+        label,
+        tier: s.tier,
+        home_region: s.home_region,
+        final_region: st.region,
+        migrations: st.migrations,
+        episode: EpisodeResult {
+            utility: value - total_cost,
+            value,
+            cost: total_cost,
+            completion_slot: completion,
+            on_time: completion <= s.job.deadline,
+            progress_at_deadline,
+            decisions,
+            spot_slots: st.spot_slots,
+            on_demand_slots: st.on_demand_slots,
+            preemptions: st.preemptions,
+            reconfigs: st.reconfigs,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::region::{MigrationModel, Region, RegionSet};
+    use crate::forecast::noise::NoiseSpec;
+    use crate::market::generator::TraceGenerator;
+    use crate::market::trace::SpotTrace;
+    use crate::sched::job::Job;
+    use crate::sched::policy::Models;
+    use crate::sched::pool::PredictorKind;
+
+    fn job() -> Job {
+        Job { workload: 80.0, deadline: 10, n_min: 1, n_max: 12, value: 120.0, gamma: 1.5 }
+    }
+
+    fn flat_trace(price: f64, avail: u32, slots: usize) -> SpotTrace {
+        SpotTrace::new(vec![price; slots], vec![avail; slots])
+    }
+
+    fn contended_fleet() -> (FleetEngine, Vec<FleetJobSpec>) {
+        let engine = FleetEngine::new(
+            Models::paper_default(),
+            RegionSet::single(flat_trace(0.3, 6, 24)),
+        );
+        let specs = vec![
+            FleetJobSpec::new(job(), PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::High),
+            FleetJobSpec::new(job(), PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::Low),
+        ];
+        (engine, specs)
+    }
+
+    #[test]
+    fn incumbent_candidate_reproduces_the_recorded_run() {
+        let (engine, specs) = contended_fleet();
+        let rec = engine.run_recorded(&specs);
+        for live in 0..specs.len() {
+            let plan = ReplayPlan::new(&engine, &specs, &rec, live);
+            let got = plan.counterfactual(specs[live].policy);
+            let want = engine.run_with_override(
+                &specs,
+                &rec.traces,
+                live,
+                specs[live].policy,
+            );
+            assert_eq!(got, want, "identity broke for live job {live}");
+            assert_eq!(got, rec.result);
+            // The clean path never touches the trie.
+            assert_eq!(plan.fork_stats(), (0, 0));
+        }
+    }
+
+    #[test]
+    fn diverging_candidate_matches_run_with_override() {
+        // Swapping the high-tier MSU for OD-Only frees the region: the
+        // replayed low-tier job's grants, preemptions, and progress all
+        // change, and the delta path must track every bit of it.
+        let (engine, specs) = contended_fleet();
+        let rec = engine.run_recorded(&specs);
+        let plan = ReplayPlan::new(&engine, &specs, &rec, 0);
+        for cand in [
+            PolicySpec::OdOnly,
+            PolicySpec::UniformProgress,
+            PolicySpec::Ahanp { sigma: 0.5 },
+            PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+        ] {
+            let want = engine.run_with_override(&specs, &rec.traces, 0, cand);
+            assert_eq!(
+                plan.counterfactual(cand),
+                want,
+                "delta != full for {}",
+                cand.label()
+            );
+            assert_ne!(want, rec.result, "candidate should actually diverge");
+        }
+    }
+
+    #[test]
+    fn delta_matches_override_across_recorded_and_live_migrations() {
+        // Background job 0 migrates in the recorded run (dead home
+        // region); candidates in job 1's slot may migrate live. Both
+        // paths must reproduce run_with_override exactly.
+        let j = job();
+        let dead = flat_trace(0.5, 0, 16);
+        let rich = flat_trace(0.4, 12, 16);
+        let regions = RegionSet::new(vec![
+            Region { name: "dead".into(), trace: dead },
+            Region { name: "rich".into(), trace: rich },
+        ])
+        .with_migration(MigrationModel::new(3.0, 0.5));
+        let engine = FleetEngine::new(Models::paper_default(), regions)
+            .with_migration_patience(2);
+        let specs = vec![
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle),
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle),
+        ];
+        let rec = engine.run_recorded(&specs);
+        assert!(rec.result.jobs[0].migrations >= 1, "scenario lost its migration");
+        let plan = ReplayPlan::new(&engine, &specs, &rec, 1);
+        for cand in [
+            PolicySpec::Msu,
+            PolicySpec::OdOnly,
+            PolicySpec::UniformProgress,
+            PolicySpec::Ahap { omega: 2, v: 1, sigma: 0.5 },
+        ] {
+            let want = engine.run_with_override(&specs, &rec.traces, 1, cand);
+            assert_eq!(
+                plan.counterfactual(cand),
+                want,
+                "migration case: delta != full for {}",
+                cand.label()
+            );
+        }
+    }
+
+    #[test]
+    fn noisy_predictor_candidates_match_override() {
+        // Stateful predictors (RNG streams) exercise the in-sync decide
+        // path: the candidate's policy must see exactly the observation
+        // sequence a live learner would.
+        let trace = TraceGenerator::calibrated().generate(19).slice_from(45);
+        let engine =
+            FleetEngine::new(Models::paper_default(), RegionSet::single(trace));
+        let specs = vec![
+            FleetJobSpec::new(job(), PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::High),
+            FleetJobSpec::new(
+                job(),
+                PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+                PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.2)),
+            )
+            .with_seed(41)
+            .with_tier(Tier::Low),
+        ];
+        let rec = engine.run_recorded(&specs);
+        let plan = ReplayPlan::new(&engine, &specs, &rec, 1);
+        for cand in [
+            PolicySpec::Ahap { omega: 5, v: 2, sigma: 0.9 },
+            PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+            PolicySpec::Ahanp { sigma: 0.3 },
+        ] {
+            let want = engine.run_with_override(&specs, &rec.traces, 1, cand);
+            assert_eq!(plan.counterfactual(cand), want, "{}", cand.label());
+        }
+    }
+
+    #[test]
+    fn forks_are_shared_between_identical_divergence_paths() {
+        let (engine, specs) = contended_fleet();
+        let rec = engine.run_recorded(&specs);
+        let plan = ReplayPlan::new(&engine, &specs, &rec, 0);
+        let first = plan.counterfactual(PolicySpec::OdOnly);
+        let (h0, m0) = plan.fork_stats();
+        assert!(m0 > 0, "a diverging candidate must populate the trie");
+        // Same candidate again: the whole post-divergence path is a hit.
+        let second = plan.counterfactual(PolicySpec::OdOnly);
+        let (h1, m1) = plan.fork_stats();
+        assert_eq!(first, second);
+        assert_eq!(m1, m0, "no new nodes on a fully shared path");
+        assert!(h1 > h0, "second run should adopt the memoized states");
+        // And forks change nothing but the cost.
+        let no_forks =
+            ReplayPlan::new(&engine, &specs, &rec, 0).with_forks(false);
+        assert_eq!(no_forks.counterfactual(PolicySpec::OdOnly), first);
+    }
+
+    #[test]
+    fn staggered_arrivals_and_three_regions_match_override() {
+        let gen = TraceGenerator::calibrated();
+        let regions = RegionSet::new(vec![
+            Region { name: "a".into(), trace: gen.generate(61).slice_from(20) },
+            Region { name: "b".into(), trace: gen.generate(62).slice_from(30) },
+            Region { name: "c".into(), trace: gen.generate(63).slice_from(40) },
+        ])
+        .with_migration(MigrationModel::new(2.0, 0.5));
+        let engine = FleetEngine::new(Models::paper_default(), regions)
+            .with_migration_patience(2);
+        let mk = |p, r: usize, a: usize, tier| {
+            FleetJobSpec::new(job(), p, PredictorKind::Oracle)
+                .in_region(r)
+                .arriving_at(a)
+                .with_tier(tier)
+        };
+        let specs = vec![
+            mk(PolicySpec::Msu, 0, 0, Tier::High),
+            mk(PolicySpec::UniformProgress, 1, 2, Tier::Normal),
+            mk(PolicySpec::Msu, 2, 0, Tier::Low),
+            mk(PolicySpec::Ahanp { sigma: 0.5 }, 0, 3, Tier::Low),
+        ];
+        let rec = engine.run_recorded(&specs);
+        for live in 0..specs.len() {
+            let plan = ReplayPlan::new(&engine, &specs, &rec, live);
+            for cand in [PolicySpec::OdOnly, PolicySpec::Msu, PolicySpec::UniformProgress] {
+                let want =
+                    engine.run_with_override(&specs, &rec.traces, live, cand);
+                assert_eq!(
+                    plan.counterfactual(cand),
+                    want,
+                    "live {live}, cand {}",
+                    cand.label()
+                );
+            }
+        }
+    }
+}

@@ -8,8 +8,13 @@
 //! simulates the fleet **once** with the incumbent policy in the
 //! learner's slot ([`FleetEngine::run_recorded`]), then swaps each
 //! candidate into that slot while every other job replays its committed
-//! choices ([`FleetEngine::run_with_override`]), fanning the M
-//! counterfactual fleet runs across threads with
+//! choices — by default through the delta-replay engine
+//! ([`crate::fleet::replay::ReplayPlan`]), which compacts the recorded
+//! background once and charges each candidate only for the slots where
+//! it actually diverges from the incumbent (full
+//! [`FleetEngine::run_with_override`] re-simulation remains available as
+//! the bit-identical reference path) — fanning the M counterfactual
+//! evaluations across threads with
 //! [`crate::fleet::sweep::run_parallel`]. The EG learner itself — the
 //! job stream, weights, regret accounting — is untouched: both
 //! evaluators plug into the same
@@ -25,13 +30,14 @@
 use crate::fleet::capacity::Tier;
 use crate::fleet::engine::{FleetEngine, FleetJobSpec};
 use crate::fleet::region::{MigrationModel, Region, RegionSet};
+use crate::fleet::replay::ReplayPlan;
 use crate::fleet::sweep::{fleet_roster, run_parallel};
 use crate::forecast::noise::NoiseSpec;
 use crate::market::generator::TraceGenerator;
 use crate::market::trace::SpotTrace;
 use crate::sched::job::{Job, JobGenerator};
 use crate::sched::policy::Models;
-use crate::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use crate::sched::pool::{dedupe_specs, PolicyEnv, PolicySpec, PredictorKind};
 use crate::sched::selector::{
     run_selection_eval, EpisodeEvaluator, SelectionConfig, SelectionOutcome,
 };
@@ -68,6 +74,17 @@ pub struct FleetContendedEvaluator {
     /// counterfactual fleet runs when the learner uses honest ARIMA
     /// predictions (bit-identical results; off = per-candidate fits).
     pub shared_forecasts: bool,
+    /// Evaluate counterfactuals with the delta-replay engine
+    /// ([`ReplayPlan`]) instead of full `run_with_override` fleet
+    /// re-simulations. Both paths return bit-identical `FleetResult`s
+    /// (enforced in `tests/fleet_properties.rs`); delta is the default
+    /// because a 112-candidate round costs a fraction of M full replays.
+    pub delta_replay: bool,
+    /// Collapse duplicate candidate specs (clamped parameter grids can
+    /// collide) and share one counterfactual across them. Utilities are
+    /// deterministic, so duplicates would score identically anyway —
+    /// the EG trajectory is unchanged (guarded in tests).
+    pub dedupe: bool,
     /// Candidate run in the learner's slot during the recorded run:
     /// starts at index 0, then tracks each round's best candidate
     /// (lowest index on ties).
@@ -94,6 +111,8 @@ impl FleetContendedEvaluator {
             learner_tier: Tier::Normal,
             threads: 1,
             shared_forecasts: true,
+            delta_replay: true,
+            dedupe: true,
             incumbent: 0,
         }
     }
@@ -145,6 +164,21 @@ impl FleetContendedEvaluator {
 
     pub fn with_migration_patience(mut self, patience: usize) -> Self {
         self.migration_patience = patience;
+        self
+    }
+
+    /// Evaluate every counterfactual with full `run_with_override` fleet
+    /// re-simulations — the reference path delta replay is tested
+    /// against (and the baseline the `perf_hotpaths` selection-round
+    /// bench measures it over).
+    pub fn with_full_replay(mut self) -> Self {
+        self.delta_replay = false;
+        self
+    }
+
+    /// Toggle candidate deduplication (on by default).
+    pub fn with_dedupe(mut self, on: bool) -> Self {
+        self.dedupe = on;
         self
     }
 
@@ -208,15 +242,30 @@ impl EpisodeEvaluator for FleetContendedEvaluator {
             arrival: 0,
         });
 
-        // One live fleet simulation, then M−1 replayed counterfactuals:
-        // overriding with the incumbent itself reproduces the recorded
-        // run bit-for-bit (the identity enforced in engine and
-        // integration tests), so its utility is read straight off the
-        // recorded result instead of re-simulating.
+        // One live fleet simulation, then counterfactuals for every
+        // *distinct* candidate: overriding with the incumbent itself
+        // reproduces the recorded run bit-for-bit (the identity enforced
+        // in engine and integration tests), so its utility is read
+        // straight off the recorded result; duplicate specs (clamped
+        // parameters can collide) share one evaluation; and each
+        // remaining candidate is scored by the delta-replay engine,
+        // which compacts the recorded background once and then pays only
+        // for how much the candidate diverges from it.
         let committed = engine.run_recorded(&all);
-        let u: Vec<f64> = run_parallel(specs, self.threads, |i, cand| {
-            let utility = if i == incumbent {
+        let (uniq, back) = if self.dedupe {
+            dedupe_specs(specs)
+        } else {
+            (specs.to_vec(), (0..specs.len()).collect())
+        };
+        let incumbent_u = back[incumbent];
+        let plan = self
+            .delta_replay
+            .then(|| ReplayPlan::new(&engine, &all, &committed, learner_idx));
+        let uu: Vec<f64> = run_parallel(&uniq, self.threads, |i, cand| {
+            let utility = if i == incumbent_u {
                 committed.result.jobs[learner_idx].episode.utility
+            } else if let Some(plan) = &plan {
+                plan.counterfactual(*cand).jobs[learner_idx].episode.utility
             } else {
                 engine
                     .run_with_override(
@@ -231,6 +280,7 @@ impl EpisodeEvaluator for FleetContendedEvaluator {
             };
             job.normalize_utility(utility, models.on_demand_price)
         });
+        let u: Vec<f64> = back.iter().map(|&i| uu[i]).collect();
         self.incumbent = argmax_total(&u);
         u
     }
@@ -314,6 +364,52 @@ mod tests {
         assert_eq!(ua.len(), specs.len());
         assert!(ua.iter().all(|u| (0.0..=1.0).contains(u)));
         assert_eq!(a.incumbent(), b.incumbent());
+    }
+
+    #[test]
+    fn delta_and_full_replay_utilities_are_bit_identical() {
+        let specs = small_pool();
+        let models = Models::paper_default();
+        let gen = TraceGenerator::calibrated();
+        let job = Job::paper_reference();
+        let trace = gen.generate(14).slice_from(35);
+        let env = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace.clone(),
+            23,
+        );
+        let mut delta = FleetContendedEvaluator::synthetic(6, 2, 9);
+        let mut full = FleetContendedEvaluator::synthetic(6, 2, 9).with_full_replay();
+        let ud = delta.utilities(&specs, &job, &trace, &models, &env);
+        let uf = full.utilities(&specs, &job, &trace, &models, &env);
+        assert_eq!(ud, uf);
+        assert_eq!(delta.incumbent(), full.incumbent());
+    }
+
+    #[test]
+    fn duplicate_candidates_share_their_counterfactual() {
+        // A pool with collisions (as clamped parameter grids produce):
+        // dedupe must hand duplicates the identical utility and leave
+        // the argmax on the first occurrence, exactly as evaluating
+        // every copy would.
+        let mut specs = small_pool();
+        specs.push(PolicySpec::Msu); // duplicate of index 1
+        specs.push(PolicySpec::Ahanp { sigma: 0.5 }); // duplicate of index 3
+        let models = Models::paper_default();
+        let gen = TraceGenerator::calibrated();
+        let job = Job::paper_reference();
+        let trace = gen.generate(4).slice_from(25);
+        let env = PolicyEnv::new(PredictorKind::Oracle, trace.clone(), 3);
+
+        let mut deduped = FleetContendedEvaluator::synthetic(4, 2, 7);
+        let mut plain =
+            FleetContendedEvaluator::synthetic(4, 2, 7).with_dedupe(false);
+        let ud = deduped.utilities(&specs, &job, &trace, &models, &env);
+        let up = plain.utilities(&specs, &job, &trace, &models, &env);
+        assert_eq!(ud, up, "dedupe changed the utility vector");
+        assert_eq!(ud[1], ud[4]);
+        assert_eq!(ud[3], ud[5]);
+        assert_eq!(deduped.incumbent(), plain.incumbent());
     }
 
     #[test]

@@ -21,7 +21,9 @@ use crate::market::generator::{GeneratorConfig, TraceGenerator};
 use crate::market::trace::SpotTrace;
 use crate::sched::job::{Job, JobGenerator};
 use crate::sched::policy::Models;
-use crate::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use crate::sched::pool::{
+    dedupe_specs, PolicyEnv, PolicySpec, PolicyWorkspace, PredictorKind,
+};
 use crate::sched::selector::{
     run_selection_with, SelectionConfig, SelectionOutcome,
 };
@@ -43,25 +45,51 @@ where
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
+    let threads = threads.max(1).min(items.len().max(1));
+    let mut states = vec![(); threads];
+    run_parallel_with(items, &mut states, |_, i, it| f(i, it))
+}
+
+/// [`run_parallel`] with one mutable worker state per thread
+/// (`states.len()` = worker count): each spawned worker owns exactly one
+/// `&mut S` for its whole lifetime, so callers can keep scratch buffers
+/// or warm policy instances (see
+/// [`crate::sched::pool::PolicyWorkspace`]) alive across the items a
+/// worker processes — and, by holding the state vector across calls,
+/// across episodes too. Results come back in input order and must not
+/// depend on which worker computed them (states are caches, not inputs);
+/// every caller here upholds that, which is what keeps parallel runs
+/// bit-identical to sequential ones.
+pub fn run_parallel_with<T, S, R, F>(items: &[T], states: &mut [S], f: F) -> Vec<R>
+where
+    T: Sync,
+    S: Send,
+    R: Send,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
     let n = items.len();
     if n == 0 {
         return Vec::new();
     }
-    let threads = threads.max(1).min(n);
-    if threads == 1 {
-        return items.iter().enumerate().map(|(i, it)| f(i, it)).collect();
+    assert!(!states.is_empty(), "need at least one worker state");
+    if states.len() == 1 || n == 1 {
+        let st = &mut states[0];
+        return items.iter().enumerate().map(|(i, it)| f(st, i, it)).collect();
     }
 
     let cursor = AtomicUsize::new(0);
     let done: Mutex<Vec<(usize, R)>> = Mutex::new(Vec::with_capacity(n));
     std::thread::scope(|scope| {
-        for _ in 0..threads {
-            scope.spawn(|| loop {
+        let cursor = &cursor;
+        let done = &done;
+        let f = &f;
+        for st in states.iter_mut() {
+            scope.spawn(move || loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
-                let r = f(i, &items[i]);
+                let r = f(st, i, &items[i]);
                 done.lock().unwrap().push((i, r));
             });
         }
@@ -83,17 +111,42 @@ pub fn counterfactual_utilities(
     env: &PolicyEnv,
     threads: usize,
 ) -> Vec<f64> {
-    run_parallel(specs, threads, |_, spec| {
-        let mut policy = spec.build(env);
-        let r = run_episode(job, trace, models, policy.as_mut());
+    let threads = threads.max(1).min(specs.len().max(1));
+    let mut workspaces: Vec<PolicyWorkspace> =
+        (0..threads).map(|_| PolicyWorkspace::new()).collect();
+    counterfactual_utilities_in(specs, job, trace, models, env, &mut workspaces, 0)
+}
+
+/// [`counterfactual_utilities`] against caller-owned per-worker
+/// [`PolicyWorkspace`]s: duplicate specs are collapsed up front (the
+/// utility is a deterministic function of the spec, so duplicates share
+/// one episode), and each worker re-targets its cached AHAP instance
+/// per candidate instead of rebuilding policy + predictor 112 times a
+/// round. `epoch` must change per round so stale predictors are dropped.
+/// Bit-identical to per-spec fresh builds, for any worker count.
+pub fn counterfactual_utilities_in(
+    specs: &[PolicySpec],
+    job: &Job,
+    trace: &SpotTrace,
+    models: &Models,
+    env: &PolicyEnv,
+    workspaces: &mut [PolicyWorkspace],
+    epoch: u64,
+) -> Vec<f64> {
+    let (uniq, back) = dedupe_specs(specs);
+    let uu = run_parallel_with(&uniq, workspaces, |ws, _, spec| {
+        let policy = ws.policy_for(spec, env, epoch);
+        let r = run_episode(job, trace, models, policy);
         job.normalize_utility(r.utility, models.on_demand_price)
-    })
+    });
+    back.into_iter().map(|i| uu[i]).collect()
 }
 
 /// Algorithm 2 with the per-job counterfactual pool evaluation (112
-/// episodes per job) fanned across `threads` cores. Produces exactly the
-/// same [`SelectionOutcome`] as [`crate::sched::selector::run_selection`]
-/// — only faster.
+/// episodes per job) fanned across `threads` cores, worker policy
+/// instances reused across rounds. Produces exactly the same
+/// [`SelectionOutcome`] as [`crate::sched::selector::run_selection`] —
+/// only faster.
 pub fn run_selection_parallel(
     specs: &[PolicySpec],
     jobs: &JobGenerator,
@@ -103,6 +156,10 @@ pub fn run_selection_parallel(
     cfg: &SelectionConfig,
     threads: usize,
 ) -> SelectionOutcome {
+    let workers = threads.max(1).min(specs.len().max(1));
+    let mut workspaces: Vec<PolicyWorkspace> =
+        (0..workers).map(|_| PolicyWorkspace::new()).collect();
+    let mut epoch = 0u64;
     run_selection_with(
         specs,
         jobs,
@@ -111,7 +168,16 @@ pub fn run_selection_parallel(
         predictor_at,
         cfg,
         |specs, job, trace, models, env| {
-            counterfactual_utilities(specs, job, trace, models, env, threads)
+            epoch += 1;
+            counterfactual_utilities_in(
+                specs,
+                job,
+                trace,
+                models,
+                env,
+                &mut workspaces,
+                epoch,
+            )
         },
     )
 }
@@ -245,6 +311,64 @@ mod tests {
         assert!(run_parallel(&empty, 8, |_, &x| x).is_empty());
         let one = [5u32];
         assert_eq!(run_parallel(&one, 64, |_, &x| x * 2), vec![10]);
+    }
+
+    #[test]
+    fn run_parallel_with_reuses_one_state_per_worker() {
+        // Each worker state counts the items it processed; the counts
+        // must partition the input (every item handled exactly once)
+        // while results stay in input order.
+        let items: Vec<usize> = (0..50).collect();
+        let mut states = vec![0usize; 4];
+        let out = run_parallel_with(&items, &mut states, |st, i, &x| {
+            *st += 1;
+            i + x
+        });
+        assert_eq!(out, (0..50).map(|i| 2 * i).collect::<Vec<_>>());
+        assert_eq!(states.iter().sum::<usize>(), 50);
+        // Sequential (one state) processes everything on that state.
+        let mut solo = vec![0usize];
+        let seq = run_parallel_with(&items, &mut solo, |st, i, &x| {
+            *st += 1;
+            i + x
+        });
+        assert_eq!(seq, out);
+        assert_eq!(solo[0], 50);
+    }
+
+    #[test]
+    fn workspace_counterfactuals_match_fresh_build_episodes() {
+        // The amortized path (dedupe + per-worker AHAP reuse) must be
+        // bit-identical to per-spec fresh builds — including duplicates.
+        let specs = vec![
+            PolicySpec::Ahap { omega: 4, v: 2, sigma: 0.7 },
+            PolicySpec::OdOnly,
+            PolicySpec::Ahap { omega: 2, v: 1, sigma: 0.3 },
+            PolicySpec::Ahap { omega: 4, v: 2, sigma: 0.7 }, // duplicate
+            PolicySpec::Ahanp { sigma: 0.5 },
+        ];
+        let job = Job::paper_reference();
+        let models = Models::paper_default();
+        let trace = TraceGenerator::calibrated().generate(11).slice_from(35);
+        let env = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace.clone(),
+            5,
+        );
+        let fresh: Vec<f64> = specs
+            .iter()
+            .map(|s| {
+                let mut p = s.build(&env);
+                let r = run_episode(&job, &trace, &models, p.as_mut());
+                job.normalize_utility(r.utility, models.on_demand_price)
+            })
+            .collect();
+        for threads in [1usize, 3] {
+            let got =
+                counterfactual_utilities(&specs, &job, &trace, &models, &env, threads);
+            assert_eq!(got, fresh, "diverged at {threads} workers");
+        }
+        assert_eq!(fresh[0], fresh[3], "duplicates must share the utility");
     }
 
     #[test]

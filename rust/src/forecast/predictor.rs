@@ -26,7 +26,12 @@ impl Forecast {
 /// A forecaster of the spot market. Implementations may keep history;
 /// `observe` is called once per slot with the realized values before any
 /// `predict` calls for later slots.
-pub trait Predictor {
+///
+/// `Send` so warm predictor instances (inside policies) can live in
+/// per-worker sweep workspaces that the caller keeps across rounds —
+/// every implementor is plain data (the shared-cache handle holds an
+/// `Arc<Mutex<..>>`).
+pub trait Predictor: Send {
     /// Record the realized (price, avail) of slot `t`.
     fn observe(&mut self, t: usize, price: f64, avail: u32);
 

@@ -90,6 +90,10 @@ FLEET-SELECT FLAGS:
   --fleet-jobs <n>      committed background jobs contending (default 8)
   --regions <n>         regional spot markets (default 2)
   --skip-isolated       don't run the isolated-learner comparison
+  --full-replay         score candidates with full counterfactual fleet
+                        re-simulations instead of the delta-replay
+                        engine (bit-identical results, much slower —
+                        the reference path)
 ";
 
 fn main() -> ExitCode {
@@ -507,10 +511,15 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
 
     // Contention-aware: each round's 112 counterfactuals are fleet runs
     // in which the candidate replaces the learner's slot while the
-    // committed background replays.
+    // committed background replays — via the delta-replay engine unless
+    // --full-replay asks for the reference re-simulation path.
+    let full_replay = args.get_bool("full-replay");
     let mut evaluator =
         FleetContendedEvaluator::synthetic(n_background, n_regions, seed)
             .with_threads(threads);
+    if full_replay {
+        evaluator = evaluator.with_full_replay();
+    }
     let (fleet_out, fleet_secs) = spotfine::util::bench::time_once(|| {
         run_fleet_selection(
             &specs,
@@ -527,6 +536,10 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
     println!(
         "rounds             {rounds} x ({} bg jobs + learner) x {n_regions} region(s), {threads} thread(s)",
         n_background
+    );
+    println!(
+        "counterfactuals    {}",
+        if full_replay { "full fleet replay (reference)" } else { "delta replay" }
     );
     match &predictor {
         PredictorKind::Arima(a) => {

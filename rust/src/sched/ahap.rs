@@ -68,6 +68,24 @@ impl Ahap {
         self
     }
 
+    /// Re-target this instance to another pool candidate's
+    /// hyperparameters while keeping the predictor: restores the
+    /// freshly-built configuration (Greedy solver, no committed plans).
+    /// Combined with the episode-start `reset()` (which also resets the
+    /// predictor — exact by the `Predictor` contract), the result is
+    /// bit-identical to a fresh `Ahap::new` around the same predictor,
+    /// which is what lets pool sweeps reuse one instance per worker
+    /// instead of rebuilding predictor + policy per candidate.
+    pub fn reconfigure(&mut self, omega: usize, v: usize, sigma: f64) {
+        assert!(v >= 1 && v <= omega + 1, "need 1 ≤ v ≤ ω+1");
+        assert!(sigma > 0.0);
+        self.omega = omega;
+        self.v = v;
+        self.sigma = sigma;
+        self.solver = SolverKind::Greedy;
+        self.plans.clear();
+    }
+
     /// Receding Horizon Control: re-plan every slot, execute only the
     /// first step — CHC with commitment v = 1. The paper rejects RHC as
     /// "sensitive to prediction errors" (§IV-A); the `ablation_chc`
@@ -356,5 +374,27 @@ mod tests {
     fn invalid_commitment_rejected() {
         let tr = SpotTrace::new(vec![0.1], vec![1]);
         Ahap::new(2, 4, 0.5, oracle(&tr)); // v > ω+1
+    }
+
+    #[test]
+    fn reconfigure_plus_reset_equals_fresh_build() {
+        // Decisions after reconfigure+reset must reproduce a fresh
+        // instance's bit-for-bit, even when the first configuration left
+        // committed plans behind.
+        let tr = SpotTrace::new(vec![0.2, 0.6, 0.3, 0.5, 0.4, 0.3], vec![8; 6]);
+        let j = job();
+        let m = models();
+        let mut reused = Ahap::new(5, 3, 0.9, oracle(&tr));
+        let _ = reused.decide(&ctx(0, 0.2, 8, 0.0, &j, &m));
+        let _ = reused.decide(&ctx(1, 0.6, 8, 6.0, &j, &m));
+        reused.reconfigure(2, 1, 0.5);
+        reused.reset();
+
+        let mut fresh = Ahap::new(2, 1, 0.5, oracle(&tr));
+        for t in 0..4 {
+            let c = ctx(t, tr.price_at(t), tr.avail_at(t), 4.0 * t as f64, &j, &m);
+            assert_eq!(reused.decide(&c), fresh.decide(&c), "slot {t}");
+        }
+        assert_eq!(reused.name(), fresh.name());
     }
 }

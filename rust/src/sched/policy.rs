@@ -119,7 +119,10 @@ impl SlotContext<'_> {
 
 /// A per-slot allocation policy. `reset` is called at the start of every
 /// episode so one policy instance can be reused across jobs.
-pub trait Policy {
+///
+/// `Send` so built policies can live in per-worker sweep workspaces
+/// owned by the calling thread (see `sched::pool::PolicyWorkspace`).
+pub trait Policy: Send {
     fn reset(&mut self);
     fn decide(&mut self, ctx: &SlotContext) -> Allocation;
     fn name(&self) -> String;

@@ -3,6 +3,8 @@
 //! as in Fig. 10. Policies are described by a [`PolicySpec`] and built
 //! per job (each gets a fresh predictor) from a [`PolicyEnv`].
 
+use std::collections::HashMap;
+
 use crate::forecast::arima::{ArimaConfig, ArimaPredictor};
 use crate::forecast::cache::{MarketHistory, SharedForecaster};
 use crate::forecast::noise::{NoiseSpec, NoisyOracle};
@@ -162,6 +164,99 @@ impl PolicySpec {
             _ => 0,
         }
     }
+
+    /// Hashable identity key (f64 parameters by bit pattern). Two specs
+    /// with equal keys build byte-identical policies, which is what
+    /// [`dedupe_specs`] relies on. Deliberately *not* the display label:
+    /// labels round σ to one decimal, so distinct specs could collide.
+    pub fn dedupe_key(&self) -> (u8, usize, usize, u64) {
+        match *self {
+            PolicySpec::Ahap { omega, v, sigma } => (0, omega, v, sigma.to_bits()),
+            PolicySpec::Ahanp { sigma } => (1, 0, 0, sigma.to_bits()),
+            PolicySpec::OdOnly => (2, 0, 0, 0),
+            PolicySpec::Msu => (3, 0, 0, 0),
+            PolicySpec::UniformProgress => (4, 0, 0, 0),
+        }
+    }
+}
+
+/// Collapse duplicate specs (clamped parameter grids can collide on the
+/// same point): returns the distinct specs in first-occurrence order
+/// plus, per input spec, the index of its representative — so expensive
+/// per-candidate work (counterfactual fleet runs, episodes) is paid once
+/// per distinct candidate and the utility shared across duplicates.
+/// Utilities are deterministic functions of the spec, so the expanded
+/// vector is bit-identical to evaluating every copy.
+pub fn dedupe_specs(specs: &[PolicySpec]) -> (Vec<PolicySpec>, Vec<usize>) {
+    let mut uniq = Vec::with_capacity(specs.len());
+    let mut back = Vec::with_capacity(specs.len());
+    let mut seen: HashMap<(u8, usize, usize, u64), usize> = HashMap::new();
+    for s in specs {
+        let idx = *seen.entry(s.dedupe_key()).or_insert_with(|| {
+            uniq.push(*s);
+            uniq.len() - 1
+        });
+        back.push(idx);
+    }
+    (uniq, back)
+}
+
+/// Per-worker scratch for pool sweeps: keeps one [`Ahap`] instance — and
+/// crucially its predictor, the expensive part of [`PolicySpec::build`]
+/// (trace clone + noise tables, or a seeded ARIMA) — alive across every
+/// AHAP candidate a worker evaluates, re-targeting it per spec instead
+/// of rebuilding. 105 of the paper pool's 112 candidates hit this path,
+/// so a round's predictor constructions drop from pool-size to
+/// worker-count (ROADMAP PR 3 follow-up (a)).
+///
+/// Served policies are bit-identical to fresh `spec.build(env)`
+/// instances: [`Ahap::reconfigure`] restores the built configuration and
+/// the episode-start `reset()` restores predictor state exactly (seeded
+/// history survives, per-episode state does not — the `Predictor`
+/// contract). `epoch` invalidates the cached predictor when the
+/// environment changes between selection rounds.
+#[derive(Default)]
+pub struct PolicyWorkspace {
+    epoch: Option<u64>,
+    ahap: Option<Ahap>,
+    other: Option<Box<dyn Policy>>,
+}
+
+impl PolicyWorkspace {
+    pub fn new() -> Self {
+        PolicyWorkspace::default()
+    }
+
+    /// A policy equivalent to `spec.build(env)`, reusing this worker's
+    /// cached AHAP instance when possible. `epoch` must change whenever
+    /// `env` does (one selection round = one epoch).
+    pub fn policy_for(
+        &mut self,
+        spec: &PolicySpec,
+        env: &PolicyEnv,
+        epoch: u64,
+    ) -> &mut dyn Policy {
+        if self.epoch != Some(epoch) {
+            self.ahap = None;
+            self.epoch = Some(epoch);
+        }
+        match *spec {
+            PolicySpec::Ahap { omega, v, sigma } => {
+                match self.ahap.as_mut() {
+                    Some(a) => a.reconfigure(omega, v, sigma),
+                    None => {
+                        self.ahap =
+                            Some(Ahap::new(omega, v, sigma, env.make_predictor()));
+                    }
+                }
+                self.ahap.as_mut().unwrap()
+            }
+            _ => {
+                self.other = Some(spec.build(env));
+                self.other.as_mut().unwrap().as_mut()
+            }
+        }
+    }
 }
 
 /// The 105 AHAP policies of the paper's pool.
@@ -281,6 +376,69 @@ mod tests {
         let arima =
             PolicyEnv::new(PredictorKind::arima(), trace, 1).with_shared_forecasts();
         assert!(arima.forecasts.is_some());
+    }
+
+    #[test]
+    fn dedupe_collapses_exact_duplicates_only() {
+        let specs = vec![
+            PolicySpec::Msu,
+            PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+            PolicySpec::Msu,
+            // label-colliding but distinct σ: must NOT collapse
+            PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.70000001 },
+            PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+        ];
+        let (uniq, back) = dedupe_specs(&specs);
+        assert_eq!(uniq.len(), 3);
+        assert_eq!(back, vec![0, 1, 0, 2, 1]);
+        // first-occurrence order preserved
+        assert_eq!(uniq[0], PolicySpec::Msu);
+        // a duplicate-free pool passes through untouched
+        let (u2, b2) = dedupe_specs(&paper_pool());
+        assert_eq!(u2.len(), 112);
+        assert_eq!(b2, (0..112).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn workspace_policies_match_fresh_builds_bit_for_bit() {
+        use crate::market::generator::TraceGenerator;
+        use crate::sched::job::Job;
+        use crate::sched::policy::Models;
+        use crate::sched::simulate::run_episode;
+        let job = Job::paper_reference();
+        let models = Models::paper_default();
+        let trace = TraceGenerator::calibrated().generate(7).slice_from(30);
+        let env = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.2)),
+            trace.clone(),
+            13,
+        );
+        let specs = [
+            PolicySpec::Ahap { omega: 5, v: 3, sigma: 0.9 },
+            PolicySpec::Ahap { omega: 1, v: 1, sigma: 0.3 },
+            PolicySpec::Msu,
+            PolicySpec::Ahap { omega: 3, v: 2, sigma: 0.5 },
+            PolicySpec::Ahanp { sigma: 0.7 },
+        ];
+        let mut ws = PolicyWorkspace::new();
+        for s in &specs {
+            let via_ws = run_episode(&job, &trace, &models, ws.policy_for(s, &env, 0));
+            let mut fresh = s.build(&env);
+            let direct = run_episode(&job, &trace, &models, fresh.as_mut());
+            assert_eq!(via_ws, direct, "workspace diverged for {}", s.label());
+        }
+        // A new epoch (new env) must rebuild the cached predictor.
+        let env2 = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.2)),
+            TraceGenerator::calibrated().generate(8).slice_from(40),
+            14,
+        );
+        let s = PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 };
+        let via_ws =
+            run_episode(&job, &env2.trace, &models, ws.policy_for(&s, &env2, 1));
+        let mut fresh = s.build(&env2);
+        let direct = run_episode(&job, &env2.trace, &models, fresh.as_mut());
+        assert_eq!(via_ws, direct, "stale predictor survived an epoch change");
     }
 
     #[test]

@@ -102,6 +102,8 @@ pub fn section(title: &str) {
 pub struct JsonReport {
     bench: String,
     entries: Vec<String>,
+    /// `(name, mean_us)` of every recorded bench, for baseline diffs.
+    results: Vec<(String, f64)>,
 }
 
 fn json_escape(s: &str) -> String {
@@ -118,11 +120,24 @@ fn json_escape(s: &str) -> String {
 
 impl JsonReport {
     pub fn new(bench: &str) -> Self {
-        JsonReport { bench: bench.to_string(), entries: Vec::new() }
+        JsonReport {
+            bench: bench.to_string(),
+            entries: Vec::new(),
+            results: Vec::new(),
+        }
+    }
+
+    /// Mean µs of an already-recorded bench, by exact name.
+    pub fn mean_of(&self, name: &str) -> Option<f64> {
+        self.results
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|&(_, mean)| mean)
     }
 
     /// Record one timed result under a section label.
     pub fn result(&mut self, sec: &str, r: &BenchResult) {
+        self.results.push((r.name.clone(), r.mean_us()));
         self.entries.push(format!(
             "{{\"kind\":\"bench\",\"section\":\"{}\",\"name\":\"{}\",\"iters\":{},\
              \"mean_us\":{:.3},\"p50_us\":{:.3},\"p95_us\":{:.3}}}",
@@ -170,6 +185,64 @@ impl JsonReport {
     }
 }
 
+/// One bench from a previously-written report file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineEntry {
+    pub name: String,
+    pub mean_us: f64,
+}
+
+/// Load the bench entries of a committed `BENCH_hotpaths.json`-style
+/// baseline. Line-oriented parse of [`JsonReport`]'s own output (one
+/// entry per line) — dependency-free on purpose; lines it does not
+/// recognize (speedups, annotations) are skipped.
+pub fn load_baseline(path: &str) -> std::io::Result<Vec<BaselineEntry>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if !line.contains("\"kind\":\"bench\"") {
+            continue;
+        }
+        if let (Some(name), Some(mean_us)) =
+            (json_str_field(line, "name"), json_num_field(line, "mean_us"))
+        {
+            out.push(BaselineEntry { name, mean_us });
+        }
+    }
+    Ok(out)
+}
+
+fn json_str_field(line: &str, key: &str) -> Option<String> {
+    let pat = format!("\"{key}\":\"");
+    let start = line.find(&pat)? + pat.len();
+    let mut out = String::new();
+    let mut chars = line[start..].chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '\\' => {
+                if let Some(n) = chars.next() {
+                    out.push(n);
+                }
+            }
+            '"' => return Some(out),
+            c => out.push(c),
+        }
+    }
+    None
+}
+
+fn json_num_field(line: &str, key: &str) -> Option<f64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let num: String = line[start..]
+        .chars()
+        .take_while(|c| {
+            c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E')
+        })
+        .collect();
+    num.parse().ok()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,6 +272,27 @@ mod tests {
         let (v, secs) = time_once(|| 42);
         assert_eq!(v, 42);
         assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn baseline_roundtrips_through_the_writer() {
+        let mut rep = JsonReport::new("unit");
+        let a = bench("alpha \"bench\"", 1, 3, || 1 + 1);
+        let b = bench("beta", 1, 3, || 2 + 2);
+        rep.result("s", &a);
+        rep.result("s", &b);
+        rep.speedup("ignored", 10.0, 1.0);
+        let dir = std::env::temp_dir()
+            .join(format!("spotfine_baseline_test_{}.json", std::process::id()));
+        let path = dir.to_str().unwrap();
+        rep.write(path).unwrap();
+        let base = load_baseline(path).unwrap();
+        assert_eq!(base.len(), 2);
+        assert_eq!(base[0].name, "alpha \"bench\"");
+        assert!((base[0].mean_us - rep.mean_of("alpha \"bench\"").unwrap()).abs() < 1e-2);
+        assert_eq!(base[1].name, "beta");
+        assert!(rep.mean_of("nope").is_none());
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use spotfine::fleet::{
     arbitrate, run_fleet_selection, run_fleet_sweep, run_selection_parallel,
     FleetContendedEvaluator, FleetEngine, FleetJobSpec, FleetScenario,
-    MigrationModel, Region, RegionSet, SpotRequest, Tier,
+    MigrationModel, Region, RegionSet, ReplayPlan, SpotRequest, Tier,
 };
 use spotfine::forecast::noise::NoiseSpec;
 use spotfine::market::generator::{GeneratorConfig, TraceGenerator};
@@ -485,6 +485,135 @@ fn override_identity_holds_for_a_policy_spread() {
             policy.label()
         );
     }
+}
+
+/// The delta-replay acceptance criterion at pool scale: across the
+/// entire 112-policy pool (plus baselines), a `ReplayPlan`
+/// counterfactual reproduces the full `run_with_override` fleet
+/// re-simulation bit-for-bit — including the migration-heavy scenario —
+/// and the selection-round wrapper agrees across engines and thread
+/// counts.
+#[test]
+fn delta_replay_matches_full_replay_across_the_paper_pool() {
+    let models = Models::paper_default();
+    let gen = TraceGenerator::calibrated();
+    let regions = RegionSet::new(vec![
+        Region { name: "a".into(), trace: gen.generate(71).slice_from(25) },
+        Region { name: "b".into(), trace: gen.generate(72).slice_from(35) },
+    ])
+    .with_migration(MigrationModel::new(2.0, 0.5));
+    let engine =
+        FleetEngine::new(models, regions).with_migration_patience(2);
+    let job = Job::paper_reference();
+    let mut specs = vec![
+        squatter(8),
+        FleetJobSpec::new(job, PolicySpec::UniformProgress, PredictorKind::Oracle)
+            .in_region(1)
+            .with_tier(Tier::Normal),
+        FleetJobSpec::new(
+            job,
+            PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.2)),
+        )
+        .with_seed(510)
+        .arriving_at(2)
+        .with_tier(Tier::Low),
+    ];
+    let learner = specs.len();
+    specs.push(
+        FleetJobSpec::new(
+            job,
+            PolicySpec::Msu,
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+        )
+        .with_seed(511)
+        .with_tier(Tier::Low),
+    );
+    let committed = engine.run_recorded(&specs);
+    let plan = ReplayPlan::new(&engine, &specs, &committed, learner);
+
+    let mut pool = paper_pool();
+    pool.push(PolicySpec::OdOnly);
+    pool.push(PolicySpec::Msu);
+    pool.push(PolicySpec::UniformProgress);
+    for cand in &pool {
+        let full =
+            engine.run_with_override(&specs, &committed.traces, learner, *cand);
+        assert_eq!(
+            plan.counterfactual(*cand),
+            full,
+            "delta != full for {}",
+            cand.label()
+        );
+    }
+    let (hits, misses) = plan.fork_stats();
+    assert!(
+        hits > 0 && misses > 0,
+        "a 115-candidate pool should both populate and reuse the fork trie \
+         (hits {hits}, misses {misses})"
+    );
+}
+
+/// The same contract through the selection-round evaluator, across
+/// thread counts: delta and full utilities are identical vectors.
+#[test]
+fn delta_selection_round_utilities_match_full_replay_across_threads() {
+    let pool = paper_pool();
+    let models = Models::paper_default();
+    let job = Job::paper_reference();
+    let trace = TraceGenerator::calibrated().generate(29).slice_from(40);
+    let env = PolicyEnv::new(
+        PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+        trace.clone(),
+        19,
+    );
+    let mut reference =
+        FleetContendedEvaluator::synthetic(8, 2, 13).with_full_replay();
+    let want = reference.utilities(&pool, &job, &trace, &models, &env);
+    for threads in [1usize, 4] {
+        let mut ev =
+            FleetContendedEvaluator::synthetic(8, 2, 13).with_threads(threads);
+        let got = ev.utilities(&pool, &job, &trace, &models, &env);
+        assert_eq!(got, want, "delta diverged from full at {threads} threads");
+        assert_eq!(ev.incumbent(), reference.incumbent());
+    }
+}
+
+/// Candidate dedupe must leave the learner's trajectory untouched: on a
+/// pool with exact duplicates, the deduping parallel path reproduces the
+/// non-deduping sequential `run_selection` bit-for-bit — EG weights,
+/// regret, and the argmax included.
+#[test]
+fn candidate_dedupe_leaves_selection_trajectory_unchanged() {
+    let specs = vec![
+        PolicySpec::OdOnly,
+        PolicySpec::Msu,
+        PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+        PolicySpec::Msu, // duplicate (clamped grids can collide)
+        PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 }, // duplicate
+        PolicySpec::Ahanp { sigma: 0.5 },
+    ];
+    let jobs = JobGenerator::default();
+    let models = Models::paper_default();
+    let gen = TraceGenerator::calibrated();
+    let cfg = SelectionConfig { k_jobs: 25, seed: 17, snapshot_every: 5 };
+    let noise = |_: usize| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1));
+
+    // run_selection's SingleJobEvaluator scores every copy individually.
+    let plain = run_selection(&specs, &jobs, &models, &gen, noise, &cfg);
+    // The parallel path dedupes before fanning episodes.
+    let deduped =
+        run_selection_parallel(&specs, &jobs, &models, &gen, noise, &cfg, 4);
+    assert_eq!(plain.final_weights, deduped.final_weights);
+    assert_eq!(plain.realized, deduped.realized);
+    assert_eq!(plain.expected, deduped.expected);
+    assert_eq!(plain.regret, deduped.regret);
+    assert_eq!(plain.snapshots, deduped.snapshots);
+    assert_eq!(plain.converged_to, deduped.converged_to);
+    assert_eq!(plain.best_fixed, deduped.best_fixed);
+    // duplicates carry identical weight mass throughout
+    assert_eq!(deduped.final_weights[1], deduped.final_weights[3]);
+    assert_eq!(deduped.final_weights[2], deduped.final_weights[4]);
 }
 
 /// Aggregate bookkeeping sanity on a contended multi-region fleet.

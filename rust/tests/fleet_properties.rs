@@ -1,11 +1,22 @@
 //! Property tests for the whole scheduling stack's capacity layer: the
 //! shared-capacity arbiter's contract, probed over randomized request
-//! mixes with `util::prop`. These are the invariants the fleet engine —
-//! and therefore the fleet-aware policy selector's counterfactuals —
-//! silently rely on every slot.
+//! mixes with `util::prop` — plus the delta-replay engine's contract,
+//! probed over randomized fleets: `fleet::replay::ReplayPlan` must
+//! reproduce `FleetEngine::run_with_override` **bit-for-bit** for every
+//! candidate, across regions, staggered arrivals, migration patience
+//! settings, predictor kinds, fork settings, and thread counts. These
+//! are the invariants the fleet engine — and therefore the fleet-aware
+//! policy selector's counterfactuals — silently rely on every slot.
 
-use spotfine::fleet::{arbitrate, SpotRequest, Tier};
+use spotfine::fleet::{
+    arbitrate, FleetContendedEvaluator, FleetScenario, ReplayPlan, SpotRequest,
+    Tier,
+};
+use spotfine::market::generator::TraceGenerator;
 use spotfine::prop_assert;
+use spotfine::sched::job::Job;
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{paper_pool, PolicyEnv, PolicySpec, PredictorKind};
 use spotfine::util::prop::{check, PropConfig};
 use spotfine::util::rng::Rng;
 
@@ -162,6 +173,124 @@ fn prop_higher_tier_never_receives_less_than_identical_lower_tier() {
                 hi.preempted,
                 lo.preempted
             );
+            Ok(())
+        },
+    );
+}
+
+/// A few baselines plus random draws from the paper pool — a candidate
+/// mix that exercises clean prefixes, early divergence, and live
+/// migration in the learner's slot.
+fn random_candidates(rng: &mut Rng, n: usize) -> Vec<PolicySpec> {
+    let pool = paper_pool();
+    let mut out = vec![PolicySpec::OdOnly, PolicySpec::Msu];
+    for _ in 0..n {
+        out.push(pool[rng.index(pool.len())]);
+    }
+    out
+}
+
+/// The delta-replay contract: over random fleets (size, regions,
+/// stagger, migration patience, predictor kinds, seeds), every candidate
+/// override evaluated through `ReplayPlan` — forks on and off — equals
+/// the full `run_with_override` re-simulation bit-for-bit, for any
+/// choice of live job.
+#[test]
+fn prop_delta_replay_is_bit_identical_to_full_replay() {
+    check(
+        "delta replay ≡ run_with_override",
+        PropConfig { cases: 18, seed: 0xDE17A },
+        |rng: &mut Rng| {
+            let n_jobs = rng.int_range(1, 6) as usize;
+            let n_regions = rng.int_range(1, 3) as usize;
+            let mut sc = FleetScenario::new(n_jobs, n_regions, rng.next_u64());
+            sc.stagger = rng.int_range(0, 3) as usize;
+            sc.migration_patience = rng.int_range(0, 3) as usize;
+            let (engine, mut specs) = sc.build();
+            // Mix in honest-ARIMA jobs: the replay path must serve the
+            // engine's shared forecast caches exactly like the full one.
+            for s in specs.iter_mut() {
+                if rng.bool(0.2) {
+                    s.predictor = PredictorKind::arima();
+                }
+            }
+            let committed = engine.run_recorded(&specs);
+            let live = rng.index(specs.len());
+            let plan = ReplayPlan::new(&engine, &specs, &committed, live);
+            let plan_noforks =
+                ReplayPlan::new(&engine, &specs, &committed, live).with_forks(false);
+            for cand in random_candidates(rng, 3) {
+                let full =
+                    engine.run_with_override(&specs, &committed.traces, live, cand);
+                let d = plan.counterfactual(cand);
+                prop_assert!(
+                    d == full,
+                    "delta != full for {} (live job {live}, {n_jobs} jobs, \
+                     {n_regions} regions, stagger {}, patience {})",
+                    cand.label(),
+                    sc.stagger,
+                    sc.migration_patience
+                );
+                let d2 = plan_noforks.counterfactual(cand);
+                prop_assert!(
+                    d2 == full,
+                    "fork-free delta != full for {} (live job {live})",
+                    cand.label()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The selection-round wrapper on top of the same contract: delta and
+/// full evaluators agree on whole utility vectors, for any thread count
+/// (fork adoption order must never leak into results).
+#[test]
+fn prop_delta_selection_round_is_thread_and_engine_invariant() {
+    check(
+        "delta selection round invariance",
+        PropConfig { cases: 8, seed: 0x5E1EC7 },
+        |rng: &mut Rng| {
+            let pool = {
+                let mut p = random_candidates(rng, 3);
+                // force a duplicate so dedupe is exercised under threads
+                let dup = p[rng.index(p.len())];
+                p.push(dup);
+                p
+            };
+            let n_bg = rng.int_range(1, 6) as usize;
+            let n_regions = rng.int_range(1, 3) as usize;
+            let fleet_seed = rng.next_u64();
+            let models = Models::paper_default();
+            let job = Job::paper_reference();
+            let trace = TraceGenerator::calibrated()
+                .generate(rng.next_u64())
+                .slice_from(rng.index(80));
+            let env = PolicyEnv::new(
+                PredictorKind::Oracle,
+                trace.clone(),
+                rng.next_u64(),
+            );
+            let mut reference =
+                FleetContendedEvaluator::synthetic(n_bg, n_regions, fleet_seed)
+                    .with_full_replay()
+                    .with_dedupe(false);
+            let want = reference.utilities(&pool, &job, &trace, &models, &env);
+            for threads in [1usize, 2 + rng.index(3)] {
+                let mut ev =
+                    FleetContendedEvaluator::synthetic(n_bg, n_regions, fleet_seed)
+                        .with_threads(threads);
+                let got = ev.utilities(&pool, &job, &trace, &models, &env);
+                prop_assert!(
+                    got == want,
+                    "delta round diverged at {threads} threads: {got:?} vs {want:?}"
+                );
+                prop_assert!(
+                    ev.incumbent() == reference.incumbent(),
+                    "incumbent diverged at {threads} threads"
+                );
+            }
             Ok(())
         },
     );
