@@ -21,7 +21,7 @@
 //!
 //! Plus the PJRT step time when artifacts are present (L2/L1 path).
 
-use spotfine::fleet::FleetContendedEvaluator;
+use spotfine::fleet::{FleetContendedEvaluator, MigrationMode};
 use spotfine::forecast::arima::{ArimaConfig, ArimaPredictor};
 use spotfine::forecast::cache::{MarketHistory, SharedForecaster};
 use spotfine::forecast::noise::NoiseSpec;
@@ -62,6 +62,7 @@ fn main() {
         avail: &avail,
         n_prev: 4,
         terminal_kind: TerminalKind::Exact,
+        migration: None,
     };
     let r = bench("greedy solver (ω=5 window)", 100, 2000, || {
         solve_greedy(&prob).utility
@@ -390,6 +391,36 @@ fn main() {
         round_speedup >= 5.0,
         "PERF TARGET MISSED: delta replay only {round_speedup:.1}x over full fleet replay"
     );
+
+    section("fleet: region-aware (policy-driven) migration round");
+    // The same contended round under `--migration policy`: region-aware
+    // AHAP candidates additionally price every candidate region's
+    // forecast window per slot and may emit migration intents (which
+    // join the delta engine's fork key). Gate on bit-identity with the
+    // full-replay engine first — the fig13_migration bench covers the
+    // utility claim; this records the migration path's perf trajectory.
+    let mk_policy_round = || {
+        FleetContendedEvaluator::new(sel_bg.clone(), 6)
+            .with_migration_mode(MigrationMode::Policy)
+    };
+    {
+        let mut delta = mk_policy_round();
+        let mut full = mk_policy_round().with_full_replay();
+        assert_eq!(
+            delta.utilities(&pool, &sel_job, &sel_trace, &models, &sel_env),
+            full.utilities(&pool, &sel_job, &sel_trace, &models, &sel_env),
+            "policy-migration delta replay diverged from full replay"
+        );
+    }
+    let r_round_policy =
+        bench("selection round, delta replay, policy migration", 2, 10, || {
+            let mut ev = mk_policy_round();
+            ev.utilities(&pool, &sel_job, &sel_trace, &models, &sel_env)
+                .iter()
+                .sum::<f64>()
+        });
+    println!("{}", r_round_policy.line());
+    report.result("fleet", &r_round_policy);
 
     section("L2/L1: PJRT train step (needs artifacts)");
     let dir = std::path::PathBuf::from("artifacts");

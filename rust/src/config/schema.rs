@@ -7,6 +7,7 @@ use std::path::Path;
 use crate::config::toml::parse;
 #[allow(unused_imports)]
 use crate::config::toml::Value;
+use crate::fleet::region::MigrationMode;
 use crate::forecast::arima::ArimaConfig;
 use crate::forecast::noise::{NoiseKind, NoiseMagnitude, NoiseSpec};
 use crate::market::generator::GeneratorConfig;
@@ -41,6 +42,24 @@ impl Default for ForecastSettings {
     }
 }
 
+/// Fleet-level knobs (`[fleet]` in TOML).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetSettings {
+    /// `"starvation"` (reactive reflex, the historical default) or
+    /// `"policy"` (region-aware policies emit predictive migration
+    /// intents from the CHC subproblem).
+    pub migration: MigrationMode,
+    /// Expected Poisson arrivals per slot of churned background jobs
+    /// (0 = fixed fleet).
+    pub churn: f64,
+}
+
+impl Default for FleetSettings {
+    fn default() -> Self {
+        FleetSettings { migration: MigrationMode::Starvation, churn: 0.0 }
+    }
+}
+
 /// Top-level experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -49,6 +68,7 @@ pub struct ExperimentConfig {
     pub models: Models,
     pub noise: NoiseSpec,
     pub forecast: ForecastSettings,
+    pub fleet: FleetSettings,
     pub selection_jobs: usize,
     pub seed: u64,
     /// Directory where benches/figures write CSVs.
@@ -65,6 +85,7 @@ impl Default for ExperimentConfig {
             models: Models::paper_default(),
             noise: NoiseSpec::fixed_mag_uniform(0.1),
             forecast: ForecastSettings::default(),
+            fleet: FleetSettings::default(),
             selection_jobs: 1000,
             seed: 7,
             results_dir: "results".to_string(),
@@ -196,6 +217,23 @@ impl ExperimentConfig {
         cfg.forecast.refit_every = refit as usize;
         cfg.forecast.max_horizon = max_h as usize;
 
+        // [fleet]
+        if let Some(v) = doc.get("fleet.migration") {
+            let s = v.as_str().ok_or_else(|| {
+                ConfigError::Invalid("`fleet.migration` must be a string".into())
+            })?;
+            cfg.fleet.migration = match s {
+                "starvation" => MigrationMode::Starvation,
+                "policy" => MigrationMode::Policy,
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown fleet.migration `{other}` (starvation|policy)"
+                    )))
+                }
+            };
+        }
+        read_opt!(doc, "fleet.churn", as_float, cfg.fleet.churn);
+
         // [run]
         let mut k = cfg.selection_jobs as i64;
         read_opt!(doc, "run.selection_jobs", as_int, k);
@@ -277,6 +315,9 @@ impl ExperimentConfig {
         }
         if self.forecast.refit_every == 0 || self.forecast.max_horizon == 0 {
             return e("forecast.refit_every and max_horizon must be ≥ 1");
+        }
+        if !(self.fleet.churn >= 0.0 && self.fleet.churn.is_finite()) {
+            return e("fleet.churn must be finite and ≥ 0");
         }
         if self.selection_jobs == 0 {
             return e("run.selection_jobs must be positive");
@@ -365,6 +406,25 @@ mod tests {
     fn wrong_types_rejected() {
         assert!(ExperimentConfig::from_toml_str("[market]\nslots = \"many\"\n").is_err());
         assert!(ExperimentConfig::from_toml_str("[noise]\nlevel = \"high\"\n").is_err());
+    }
+
+    #[test]
+    fn fleet_section_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[fleet]\nmigration = \"policy\"\nchurn = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.fleet.migration, MigrationMode::Policy);
+        assert!((cfg.fleet.churn - 0.5).abs() < 1e-12);
+        // Defaults: the historical reactive reflex, no churn.
+        let d = ExperimentConfig::from_toml_str("").unwrap();
+        assert_eq!(d.fleet.migration, MigrationMode::Starvation);
+        assert_eq!(d.fleet.churn, 0.0);
+        assert!(ExperimentConfig::from_toml_str(
+            "[fleet]\nmigration = \"teleport\"\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_str("[fleet]\nchurn = -0.1\n").is_err());
     }
 
     #[test]

@@ -14,10 +14,15 @@
 //! [`crate::sched::simulate::settle_episode`].
 
 use crate::fleet::capacity::{arbitrate, SpotRequest, Tier};
-use crate::fleet::region::RegionSet;
-use crate::forecast::cache::ForecastCachePool;
+use crate::fleet::region::{MigrationMode, MigrationModel, RegionSet};
+use crate::forecast::arima::{ArimaConfig, ArimaPredictor};
+use crate::forecast::cache::{ForecastCachePool, RegionForecasts, SharedForecaster};
+use crate::forecast::predictor::{Forecast, Predictor};
 use crate::sched::job::Job;
-use crate::sched::policy::{Allocation, Models, Policy, SlotContext};
+use crate::sched::policy::{
+    Allocation, Models, Policy, RegionDecision, RegionSnapshot, RegionView,
+    SlotContext,
+};
 use crate::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
 use crate::sched::simulate::{settle_episode, EpisodeResult};
 
@@ -173,6 +178,10 @@ struct JobState<'a> {
     migrations: u32,
     /// Apply the migration μ to the next slot's progress.
     migration_mu_pending: bool,
+    /// Policy-emitted migration intent for this slot (Policy mode,
+    /// region-aware live policies only), validated and booked in
+    /// phase 3.
+    intent: Option<usize>,
     /// 1-based local completion slot, if the job finished in-horizon.
     completion_slot: Option<usize>,
     /// No longer simulated (completed or horizon exhausted).
@@ -181,14 +190,36 @@ struct JobState<'a> {
     pending: Option<(Allocation, crate::market::market::MarketObs)>,
 }
 
+impl JobState<'_> {
+    /// Book a migration into `to` — one body for the intent path, the
+    /// starvation reflex, and replayed recorded moves (the engine-side
+    /// twin of the replay `Cursor`'s booking; keeping a single copy is
+    /// what the delta ≡ full bit-identity silently depends on). The
+    /// starved reset is a no-op for replay drivers, which never read it.
+    fn book_migration(&mut self, to: usize, mig: &MigrationModel) {
+        self.region = to;
+        self.cost += mig.cost;
+        self.migrations += 1;
+        self.held_spot = 0;
+        self.migration_mu_pending = true;
+        self.starved = 0;
+    }
+}
+
 /// The multi-job, multi-region simulator.
 #[derive(Debug, Clone)]
 pub struct FleetEngine {
     pub models: Models,
     pub regions: RegionSet,
     /// Consecutive fully-starved slots before a job migrates to a
-    /// better region; 0 disables migration entirely.
+    /// better region; 0 disables the starvation reflex entirely.
     pub migration_patience: usize,
+    /// How migration decisions are made: the starvation reflex only
+    /// (the historical behavior, bit-for-bit), or policy-emitted intents
+    /// as the primary path — region-aware policies plan `(region,
+    /// allocation)` jointly from per-region forecasts; the reflex stays
+    /// the fallback for policies that are not region-aware.
+    pub migration_mode: MigrationMode,
     /// Shared per-(region, arrival) forecast caches for honest-ARIMA
     /// jobs: one fit per slot serves every such job — and, crucially,
     /// every counterfactual replay of a selection round, since engine
@@ -203,12 +234,18 @@ impl FleetEngine {
             models,
             regions,
             migration_patience: 2,
+            migration_mode: MigrationMode::default(),
             forecasts: Some(ForecastCachePool::new()),
         }
     }
 
     pub fn with_migration_patience(mut self, patience: usize) -> Self {
         self.migration_patience = patience;
+        self
+    }
+
+    pub fn with_migration_mode(mut self, mode: MigrationMode) -> Self {
+        self.migration_mode = mode;
         self
     }
 
@@ -287,43 +324,216 @@ impl FleetEngine {
     /// The policy environment for a job running in `region`: the
     /// region's trace from the job's arrival onward (the same view
     /// `run_episode` gets, so oracle/noisy predictors index local slots
-    /// correctly), plus — for honest-ARIMA jobs on their *initial*
-    /// build — the shared forecast cache for that trace slice.
-    /// Mid-episode rebuilds (migrations, including a later return to
-    /// the home region) always get private predictors: a policy
-    /// rebuilt at slot t has only its own subsequent observations,
-    /// which is exactly what a private model sees, whereas a cache
-    /// knows the region's full history — so caching there would break
-    /// the cached-vs-private bit-identity.
+    /// correctly). `rebuild` is false for the job's initial build, true
+    /// for a mid-episode rebuild (a migration) — the rebuild *slot* is
+    /// deliberately not a parameter: shared forecasters self-align on
+    /// the slots the rebuilt policy observes.
+    ///
+    /// Honest-ARIMA forecasting differs by migration mode:
+    ///
+    /// - **Starvation** (historical, bit-compatible): only the initial
+    ///   home-region build gets the shared forecast cache; migration
+    ///   rebuilds replan *cold* with private predictors — a policy
+    ///   rebuilt at slot t has only its own subsequent observations.
+    /// - **Policy** (region-aware): every build — initial or rebuild,
+    ///   any region — is served by the cross-region cache set
+    ///   ([`RegionForecasts`] over the engine's pool), so a migrated job
+    ///   replans *warm* against the destination's full observed history
+    ///   from the same fits its candidate snapshots were served from.
+    ///   When the pool is disabled (the private reference path), the
+    ///   rebuild gets a fresh forecaster over the same slice — every
+    ///   served value is a pure function of `(trace, cfg, slot)`, so
+    ///   pooled and fresh are bit-identical.
     ///
     /// `pub(crate)` so [`crate::fleet::replay`] can mirror the live
     /// learner's policy (re)builds exactly.
-    pub(crate) fn policy_env(&self, s: &FleetJobSpec, region: usize, initial: bool) -> PolicyEnv {
+    pub(crate) fn policy_env(
+        &self,
+        s: &FleetJobSpec,
+        region: usize,
+        rebuild: bool,
+    ) -> PolicyEnv {
         let trace = self.regions.get(region).trace.slice_from(s.arrival);
-        let forecasts = if initial && region == s.home_region {
-            match (&self.forecasts, &s.predictor) {
-                (Some(pool), PredictorKind::Arima(cfg)) => Some(pool.for_slice(
-                    region,
-                    s.arrival,
-                    *cfg,
-                    || trace.clone(),
-                )),
-                _ => None,
+        let mut forecasts = None;
+        if let PredictorKind::Arima(cfg) = &s.predictor {
+            if !rebuild {
+                if region == s.home_region {
+                    if let Some(pool) = &self.forecasts {
+                        forecasts = Some(pool.for_slice(
+                            region,
+                            s.arrival,
+                            *cfg,
+                            || trace.clone(),
+                        ));
+                    }
+                }
+            } else if self.migration_mode == MigrationMode::Policy {
+                // Warm replan: the rebuilt policy reads the
+                // destination's full observed history through a
+                // slot-advancing forecaster — the pooled one when the
+                // pool is on, an identically-behaving fresh one
+                // otherwise (its values are a pure function of
+                // `(trace, cfg, slot)`, so pooled and fresh agree
+                // bit-for-bit at every refit cadence).
+                forecasts = Some(match &self.forecasts {
+                    Some(pool) => RegionForecasts::new(pool, *cfg)
+                        .forecaster(region, s.arrival, || trace.clone()),
+                    None => SharedForecaster::new(trace.clone(), *cfg),
+                });
             }
-        } else {
-            None
-        };
+            // Starvation-mode rebuilds: private, cold (historical).
+        }
         let mut env = PolicyEnv::new(s.predictor.clone(), trace, s.seed);
         env.forecasts = forecasts;
         env
     }
 
-    /// Build (and reset) the live policy for a job spec.
-    pub(crate) fn build_policy(&self, s: &FleetJobSpec) -> Box<dyn Policy> {
-        let env = self.policy_env(s, s.home_region, true);
+    /// Build (and reset) a policy for a job spec against `region` —
+    /// the single construction path behind initial builds and both
+    /// migration-rebuild sites (starvation reflex and policy intents).
+    fn policy_for(
+        &self,
+        s: &FleetJobSpec,
+        region: usize,
+        rebuild: bool,
+    ) -> Box<dyn Policy> {
+        let env = self.policy_env(s, region, rebuild);
         let mut policy = s.policy.build(&env);
         policy.reset();
         policy
+    }
+
+    /// Build (and reset) the live policy for a job spec.
+    pub(crate) fn build_policy(&self, s: &FleetJobSpec) -> Box<dyn Policy> {
+        self.policy_for(s, s.home_region, false)
+    }
+
+    /// Rebuild a job's policy against `region` after a migration (cold
+    /// in Starvation mode, warm in Policy mode — see
+    /// [`policy_env`](FleetEngine::policy_env)). Shared with
+    /// [`crate::fleet::replay`].
+    pub(crate) fn rebuild_policy(
+        &self,
+        s: &FleetJobSpec,
+        region: usize,
+    ) -> Box<dyn Policy> {
+        self.policy_for(s, region, true)
+    }
+
+    /// Validate a policy-emitted migration intent: only honored in
+    /// Policy mode, toward a real *other* region, only when the
+    /// migration cost is finite (an unpayable model disables migration),
+    /// and never at the job's final decision slot — a move books at the
+    /// end of the slot and takes effect at the next one, so there it
+    /// could never run and its charge would be pure loss.
+    pub(crate) fn validate_intent(
+        &self,
+        intent: Option<usize>,
+        current: usize,
+        s: &FleetJobSpec,
+        local_t: usize,
+    ) -> Option<usize> {
+        intent.filter(|&r| {
+            self.migration_mode == MigrationMode::Policy
+                && r < self.regions.len()
+                && r != current
+                && self.regions.migration.cost.is_finite()
+                && local_t + 1 < s.job.deadline
+        })
+    }
+
+    /// The candidate-region forecast a region-aware policy sees:
+    /// honest-ARIMA jobs read the shared cross-region cache (or a
+    /// bit-identical private fit on the reference path); oracle and
+    /// noisy jobs read the true trace — cross-region *scouting* is
+    /// forecast-driven, while noise stays confined to the job's own
+    /// market predictor.
+    fn candidate_forecast(
+        &self,
+        s: &FleetJobSpec,
+        region: usize,
+        t: usize,
+        local_t: usize,
+        h: usize,
+    ) -> Forecast {
+        if h == 0 {
+            return Forecast { price: Vec::new(), avail: Vec::new() };
+        }
+        match &s.predictor {
+            PredictorKind::Arima(cfg) => {
+                self.arima_region_forecast(region, s.arrival, *cfg, local_t, h)
+            }
+            PredictorKind::Oracle | PredictorKind::Noisy(_) => {
+                let mut price = Vec::with_capacity(h);
+                let mut avail = Vec::with_capacity(h);
+                for i in 0..h {
+                    price.push(self.regions.price(region, t + 1 + i));
+                    avail.push(self.regions.avail(region, t + 1 + i) as f64);
+                }
+                Forecast { price, avail }
+            }
+        }
+    }
+
+    /// Honest forecast of `region`'s market issued at local slot
+    /// `local_t` — from the shared cross-region cache when the pool is
+    /// on, from a private predictor replaying the same observe/predict
+    /// sequence otherwise. The private replay predicts every slot (as
+    /// the cache's advance loop does), so the refit cadence — and with
+    /// it the fitted model — matches the cache bit-for-bit at any
+    /// `refit_every`.
+    fn arima_region_forecast(
+        &self,
+        region: usize,
+        arrival: usize,
+        cfg: ArimaConfig,
+        local_t: usize,
+        h: usize,
+    ) -> Forecast {
+        let make_trace = || self.regions.get(region).trace.slice_from(arrival);
+        match &self.forecasts {
+            Some(pool) => RegionForecasts::new(pool, cfg)
+                .forecast(region, arrival, local_t, h, make_trace),
+            None => {
+                let tr = make_trace();
+                let mut p = ArimaPredictor::configured(cfg);
+                let mut fc = Forecast { price: Vec::new(), avail: Vec::new() };
+                for tt in 0..=local_t {
+                    p.observe(tt, tr.price_at(tt), tr.avail_at(tt));
+                    fc = p.predict(h);
+                }
+                fc
+            }
+        }
+    }
+
+    /// Snapshots of every region except `current` for a region-aware
+    /// policy's slot view: each candidate's observed market this slot
+    /// plus an ω-step forecast (ω = the policy's prediction window).
+    /// A pure function of `(engine, spec, current, t)` — which is what
+    /// lets [`crate::fleet::replay`] rebuild the exact view a live
+    /// learner saw.
+    pub(crate) fn region_snapshots(
+        &self,
+        s: &FleetJobSpec,
+        current: usize,
+        t: usize,
+        local_t: usize,
+    ) -> Vec<RegionSnapshot> {
+        let h = s.policy.omega();
+        (0..self.regions.len())
+            .filter(|&r| r != current)
+            .map(|r| RegionSnapshot {
+                region: r,
+                obs: self.regions.observe(
+                    r,
+                    t,
+                    local_t,
+                    self.models.on_demand_price,
+                ),
+                forecast: self.candidate_forecast(s, r, t, local_t, h),
+            })
+            .collect()
     }
 
     fn live_drivers(&self, specs: &[FleetJobSpec]) -> Vec<JobDriver<'static>> {
@@ -385,6 +595,7 @@ impl FleetEngine {
                     starved: 0,
                     migrations: 0,
                     migration_mu_pending: false,
+                    intent: None,
                     completion_slot: None,
                     done: false,
                     pending: None,
@@ -408,6 +619,7 @@ impl FleetEngine {
             for (j, s) in specs.iter().enumerate() {
                 let st = &mut states[j];
                 st.pending = None;
+                st.intent = None;
                 if st.done || t < s.arrival {
                     continue;
                 }
@@ -426,11 +638,7 @@ impl FleetEngine {
                             // decision slot and the replay at the
                             // arrival slot — invisible in the totals,
                             // identical at arbitration time.
-                            st.cost += self.regions.migration.cost;
-                            st.migrations += 1;
-                            st.held_spot = 0;
-                            st.migration_mu_pending = true;
-                            st.region = region_now;
+                            st.book_migration(region_now, &self.regions.migration);
                         }
                     }
                 }
@@ -440,7 +648,8 @@ impl FleetEngine {
                     local_t,
                     self.models.on_demand_price,
                 );
-                let want = match &mut st.driver {
+                let region_now = st.region;
+                let (want, intent) = match &mut st.driver {
                     JobDriver::Live(policy) => {
                         let ctx = SlotContext {
                             t: local_t,
@@ -451,7 +660,43 @@ impl FleetEngine {
                             job: &s.job,
                             models: &self.models,
                         };
-                        policy.decide(&ctx).clamp_to_job(&s.job, obs.avail)
+                        // Region-aware policies in Policy mode see the
+                        // whole region set and may emit a migration
+                        // intent; everyone else decides on the single
+                        // market exactly as before. An unpayable
+                        // migration model skips the view outright —
+                        // decide_region with no viable move is exactly
+                        // decide (also mirrored in fleet::replay).
+                        let decision = if self.migration_mode
+                            == MigrationMode::Policy
+                            && n_regions > 1
+                            && self.regions.migration.cost.is_finite()
+                            && policy.region_aware()
+                        {
+                            let snaps = self.region_snapshots(
+                                s, region_now, t, local_t,
+                            );
+                            let view = RegionView {
+                                current: region_now,
+                                candidates: &snaps,
+                                migration: self.regions.migration.terms(),
+                            };
+                            policy.decide_region(&ctx, &view)
+                        } else {
+                            RegionDecision {
+                                alloc: policy.decide(&ctx),
+                                migrate_to: None,
+                            }
+                        };
+                        (
+                            decision.alloc.clamp_to_job(&s.job, obs.avail),
+                            self.validate_intent(
+                                decision.migrate_to,
+                                region_now,
+                                s,
+                                local_t,
+                            ),
+                        )
                     }
                     // Recorded wants are post-clamp against the same
                     // job and the same observation (regions replay, so
@@ -462,14 +707,16 @@ impl FleetEngine {
                     // choice is to buy nothing: it idles out the
                     // horizon and settles like any live job that did.
                     JobDriver::Replay(tr) => {
-                        if local_t < tr.wants.len() {
+                        let w = if local_t < tr.wants.len() {
                             tr.wants[local_t]
                         } else {
                             Allocation::idle()
-                        }
+                        };
+                        (w, None)
                     }
                 };
                 st.pending = Some((want, obs));
+                st.intent = intent;
             }
 
             // Phase 2 — per-region shared-capacity arbitration.
@@ -540,9 +787,9 @@ impl FleetEngine {
                     continue;
                 }
 
-                // Starvation-triggered migration — live jobs only: a
-                // replayed job's migrations come from its recorded
-                // region sequence, applied at slot entry above.
+                // Migration — live jobs only: a replayed job's
+                // migrations come from its recorded region sequence,
+                // applied at slot entry above.
                 if matches!(st.driver, JobDriver::Replay(_)) {
                     continue;
                 }
@@ -550,9 +797,10 @@ impl FleetEngine {
                 // arbiter granted none (contention), or the policy
                 // idled because the region cannot even support N^min
                 // (spot-first policies like MSU idle rather than run
-                // below the floor). After `patience` such slots, flee
-                // to the observably best region if it is strictly
-                // better.
+                // below the floor). The counter is maintained in every
+                // mode (so state snapshots agree across modes), but the
+                // reflex below only *acts* for non-region-aware
+                // policies.
                 if (want.spot > 0 && spot == 0)
                     || (total == 0 && obs.avail < s.job.n_min)
                 {
@@ -560,31 +808,38 @@ impl FleetEngine {
                 } else {
                     st.starved = 0;
                 }
-                if self.migration_patience > 0
+                // A region-aware policy in Policy mode owns its moves:
+                // its validated intent is booked here, and the
+                // starvation reflex never overrides its plan.
+                let suppress_reflex = self.migration_mode
+                    == MigrationMode::Policy
+                    && matches!(&st.driver, JobDriver::Live(p) if p.region_aware());
+                if let Some(best) = st.intent.take() {
+                    // Replan against the destination market, aligned to
+                    // the local slot clock. In Policy mode the rebuilt
+                    // policy plans *warm*: its predictor is served the
+                    // destination's full observed history by the
+                    // cross-region forecast cache.
+                    st.book_migration(best, &self.regions.migration);
+                    st.driver =
+                        JobDriver::Live(self.rebuild_policy(s, best));
+                } else if !suppress_reflex
+                    && self.migration_patience > 0
                     && n_regions > 1
                     && st.starved >= self.migration_patience
                 {
+                    // The starvation reflex: after `patience` starved
+                    // slots, flee to the observably best region if it is
+                    // strictly better. (In Starvation mode the rebuilt
+                    // policy replans cold — a migration is a disruption
+                    // — preserving the historical trajectories exactly.)
                     let best = self.regions.best_region(t);
                     if best != st.region
                         && self.regions.avail(best, t) > obs.avail
                     {
-                        st.region = best;
-                        st.cost += self.regions.migration.cost;
-                        st.migrations += 1;
-                        st.held_spot = 0;
-                        st.migration_mu_pending = true;
-                        st.starved = 0;
-                        // Replan against the destination market: the
-                        // policy (and its predictor) were built on the
-                        // home region's trace and would otherwise keep
-                        // forecasting the market the job just left.
-                        // Rebuilding drops accumulated planner state —
-                        // a migration is a disruption; the job replans
-                        // cold, aligned to its local slot clock.
-                        let env = self.policy_env(s, best, false);
-                        let mut policy = s.policy.build(&env);
-                        policy.reset();
-                        st.driver = JobDriver::Live(policy);
+                        st.book_migration(best, &self.regions.migration);
+                        st.driver =
+                            JobDriver::Live(self.rebuild_policy(s, best));
                     }
                 }
             }
@@ -677,7 +932,7 @@ impl FleetEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fleet::region::{MigrationModel, Region};
+    use crate::fleet::region::{MigrationMode, MigrationModel, Region};
     use crate::market::trace::SpotTrace;
     use crate::sched::simulate::run_episode;
 
@@ -781,6 +1036,119 @@ mod tests {
         let r = engine.run(&[spec]);
         assert_eq!(r.jobs[0].migrations, 0);
         assert_eq!(r.jobs[0].final_region, 0);
+    }
+
+    /// The capacity-shift scenario: the home region's spot collapses at
+    /// `shift` while another region's fills in (a provider rebalancing
+    /// capacity — the correlated regional shift).
+    fn shifting_regions(shift: usize, slots: usize) -> RegionSet {
+        crate::fleet::region::capacity_shift_fixture(shift, slots)
+    }
+
+    #[test]
+    fn policy_mode_with_unpayable_migration_matches_todays_trajectories() {
+        // The acceptance degeneracy: patience 0 + Policy mode + infinite
+        // migration cost must reproduce the historical (Starvation-mode)
+        // run bit-for-bit — region-aware AHAP never emits an intent it
+        // cannot pay for, and nothing else differs.
+        let j = job();
+        let regions = || shifting_regions(6, 16);
+        let specs = vec![
+            FleetJobSpec::new(
+                j,
+                PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+                PredictorKind::Oracle,
+            ),
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle)
+                .in_region(1),
+        ];
+        let today = FleetEngine::new(Models::paper_default(), regions())
+            .with_migration_patience(0)
+            .run(&specs);
+        let policy_driven = FleetEngine::new(
+            Models::paper_default(),
+            regions().with_migration(MigrationModel::unpayable()),
+        )
+        .with_migration_patience(0)
+        .with_migration_mode(MigrationMode::Policy)
+        .run(&specs);
+        assert_eq!(policy_driven, today);
+        assert_eq!(policy_driven.total_migrations, 0);
+    }
+
+    #[test]
+    fn policy_mode_migrates_predictively_and_beats_the_reflex() {
+        // Region 0 drains at slot 6, region 1 fills — the reactive
+        // reflex can only move *after* starving there, while region-aware
+        // AHAP prices region 1's forecast window and moves on its own.
+        let j = Job {
+            workload: 120.0,
+            deadline: 16,
+            n_min: 1,
+            n_max: 12,
+            value: 200.0,
+            gamma: 1.5,
+        };
+        let spec = FleetJobSpec::new(
+            j,
+            PolicySpec::Ahap { omega: 5, v: 1, sigma: 0.7 },
+            PredictorKind::Oracle,
+        );
+        let reactive = FleetEngine::new(Models::paper_default(), shifting_regions(6, 16))
+            .with_migration_patience(2)
+            .run(&[spec.clone()]);
+        let predictive = FleetEngine::new(Models::paper_default(), shifting_regions(6, 16))
+            .with_migration_patience(2)
+            .with_migration_mode(MigrationMode::Policy)
+            .run(&[spec]);
+        assert!(
+            predictive.jobs[0].migrations >= 1,
+            "region-aware AHAP never moved: {:?}",
+            predictive.jobs[0]
+        );
+        assert_eq!(predictive.jobs[0].final_region, 1);
+        assert!(
+            predictive.jobs[0].episode.utility > reactive.jobs[0].episode.utility,
+            "predictive {} should beat reactive {}",
+            predictive.jobs[0].episode.utility,
+            reactive.jobs[0].episode.utility
+        );
+    }
+
+    #[test]
+    fn policy_mode_single_region_is_the_trivial_special_case() {
+        // One region → empty candidate list → decide_region degenerates
+        // to decide: the 1-job fleet still equals run_episode exactly.
+        let j = job();
+        let models = Models::paper_default();
+        let trace = flat_trace(0.4, 8, 12);
+        let spec = FleetJobSpec::new(
+            j,
+            PolicySpec::Ahap { omega: 3, v: 2, sigma: 0.5 },
+            PredictorKind::Oracle,
+        );
+        let fleet = engine_single(trace.clone())
+            .with_migration_mode(MigrationMode::Policy)
+            .run(&[spec]);
+        let env = PolicyEnv::new(PredictorKind::Oracle, trace.clone(), 0);
+        let mut p =
+            PolicySpec::Ahap { omega: 3, v: 2, sigma: 0.5 }.build(&env);
+        let solo = run_episode(&j, &trace, &models, p.as_mut());
+        assert_eq!(fleet.jobs[0].episode, solo);
+    }
+
+    #[test]
+    fn starvation_reflex_still_drives_non_region_aware_policies_in_policy_mode() {
+        // MSU is not region-aware: in Policy mode it keeps the reflex —
+        // starving in the drained region, it still flees.
+        let j = job();
+        let spec = FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle);
+        let r = FleetEngine::new(Models::paper_default(), shifting_regions(0, 16))
+            .with_migration_patience(2)
+            .with_migration_mode(MigrationMode::Policy)
+            .run(&[spec]);
+        assert!(r.jobs[0].migrations >= 1);
+        assert_eq!(r.jobs[0].final_region, 1);
     }
 
     #[test]

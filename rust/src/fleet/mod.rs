@@ -38,7 +38,7 @@ pub use engine::{
     CommittedRun, CommittedTrace, FleetEngine, FleetJobSpec, FleetResult,
     JobOutcome,
 };
-pub use region::{MigrationModel, Region, RegionSet};
+pub use region::{MigrationMode, MigrationModel, Region, RegionSet};
 pub use replay::ReplayPlan;
 pub use select::{run_fleet_selection, FleetContendedEvaluator};
 pub use sweep::{

@@ -7,6 +7,23 @@
 use crate::market::generator::TraceGenerator;
 use crate::market::market::MarketObs;
 use crate::market::trace::SpotTrace;
+use crate::sched::policy::MigrationTerms;
+use crate::util::stats::argmax_total;
+
+/// How jobs move between regions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MigrationMode {
+    /// The historical reflex: a job that starves past the engine's
+    /// patience flees to the observably best region. Reactive — it fires
+    /// only *after* capacity has already collapsed.
+    #[default]
+    Starvation,
+    /// Region-aware policies emit their own migration intents from the
+    /// CHC subproblem (Eq. 10 with the migration term), judged on
+    /// *forecasts* of every region — predictive. The starvation reflex
+    /// remains the fallback for policies that are not region-aware.
+    Policy,
+}
 
 /// One regional spot market: a name and its price/availability trace.
 /// Availability is the *shared* regional capacity — all jobs homed in the
@@ -40,6 +57,20 @@ impl MigrationModel {
     /// Free, instant migration (useful in tests).
     pub fn free() -> Self {
         MigrationModel { cost: 0.0, mu: 1.0 }
+    }
+
+    /// A migration that can never pay for itself: region-aware policies
+    /// treat an infinite cost as "migration disabled", which is the
+    /// degenerate case that reproduces single-market trajectories
+    /// bit-for-bit.
+    pub fn unpayable() -> Self {
+        MigrationModel { cost: f64::INFINITY, mu: 1.0 }
+    }
+
+    /// The scheduling layer's view of this model (what region-aware
+    /// policies fold into the CHC subproblem).
+    pub fn terms(&self) -> MigrationTerms {
+        MigrationTerms { cost: self.cost, mu: self.mu }
     }
 }
 
@@ -139,17 +170,61 @@ impl RegionSet {
     /// Best region to flee to at global slot `t`, judged only on the
     /// currently observable state (no future information): maximum spot
     /// availability, ties broken by lower spot price, then lower index.
+    ///
+    /// Total and deterministic via [`argmax_total`]: only regions at the
+    /// maximum availability compete on price, a NaN price is ranked
+    /// below every real price (instead of winning or losing ties by
+    /// comparison-order accident), and remaining ties go to the lowest
+    /// index.
     pub fn best_region(&self, t: usize) -> usize {
-        let mut best = 0usize;
-        for r in 1..self.len() {
-            let (a, p) = (self.avail(r, t), self.price(r, t));
-            let (ba, bp) = (self.avail(best, t), self.price(best, t));
-            if a > ba || (a == ba && p < bp) {
-                best = r;
-            }
-        }
-        best
+        let max_avail = (0..self.len())
+            .map(|r| self.avail(r, t))
+            .max()
+            .unwrap_or(0);
+        let scores: Vec<f64> = (0..self.len())
+            .map(|r| {
+                if self.avail(r, t) != max_avail {
+                    return f64::NEG_INFINITY;
+                }
+                let p = self.price(r, t);
+                // Eligible but price-incomparable (NaN) or infinitely
+                // expensive (+∞): rank below every real price but stay
+                // strictly above the ineligibility sentinel — folding
+                // to −∞ would silently drop a max-availability region
+                // from contention.
+                if p.is_nan() {
+                    f64::MIN
+                } else {
+                    (-p).max(f64::MIN)
+                }
+            })
+            .collect();
+        argmax_total(&scores)
     }
+}
+
+/// Shared unit-test fixture (engine + replay tests): a correlated
+/// capacity shift at `shift` — region 0 ("draining", 0.30) goes 12 → 0
+/// spot while region 1 ("filling", 0.35) goes 1 → 12, under a (1.0, 0.5)
+/// migration model. This is the canonical predictive-migration scenario;
+/// `benches/fig13_migration.rs` keeps its own richer 3-region, jittered
+/// variant for the acceptance gate.
+#[cfg(test)]
+pub(crate) fn capacity_shift_fixture(shift: usize, slots: usize) -> RegionSet {
+    let step = |hi: u32, lo: u32| -> Vec<u32> {
+        (0..slots).map(|t| if t < shift { hi } else { lo }).collect()
+    };
+    RegionSet::new(vec![
+        Region {
+            name: "draining".into(),
+            trace: SpotTrace::new(vec![0.3; slots], step(12, 0)),
+        },
+        Region {
+            name: "filling".into(),
+            trace: SpotTrace::new(vec![0.35; slots], step(1, 12)),
+        },
+    ])
+    .with_migration(MigrationModel::new(1.0, 0.5))
 }
 
 #[cfg(test)]
@@ -186,6 +261,54 @@ mod tests {
         assert_eq!(rs.best_region(0), 1);
         // slot 1: region 1 has 8 vs 0 → wins on availability.
         assert_eq!(rs.best_region(1), 1);
+    }
+
+    #[test]
+    fn best_region_is_total_and_deterministic() {
+        // Exact availability + price ties break to the lowest index.
+        let tied = RegionSet::new(vec![
+            Region { name: "a".into(), trace: SpotTrace::new(vec![0.5], vec![4]) },
+            Region { name: "b".into(), trace: SpotTrace::new(vec![0.5], vec![4]) },
+            Region { name: "c".into(), trace: SpotTrace::new(vec![0.5], vec![4]) },
+        ]);
+        assert_eq!(tied.best_region(0), 0);
+        // A NaN price never beats a real price on the availability tie…
+        let nan_vs_real = RegionSet::new(vec![
+            Region { name: "nan".into(), trace: SpotTrace::new(vec![f64::NAN], vec![4]) },
+            Region { name: "real".into(), trace: SpotTrace::new(vec![0.9], vec![4]) },
+        ]);
+        assert_eq!(nan_vs_real.best_region(0), 1);
+        // …but a NaN-priced region still wins on strictly higher
+        // availability (it must not be dropped from contention).
+        let nan_high = RegionSet::new(vec![
+            Region { name: "real".into(), trace: SpotTrace::new(vec![0.1], vec![2]) },
+            Region { name: "nan".into(), trace: SpotTrace::new(vec![f64::NAN], vec![8]) },
+        ]);
+        assert_eq!(nan_high.best_region(0), 1);
+        // All-NaN at the max availability: lowest index, no panic.
+        let all_nan = RegionSet::new(vec![
+            Region { name: "a".into(), trace: SpotTrace::new(vec![f64::NAN], vec![4]) },
+            Region { name: "b".into(), trace: SpotTrace::new(vec![f64::NAN], vec![4]) },
+        ]);
+        assert_eq!(all_nan.best_region(0), 0);
+        // A +∞ price must not demote a max-availability region to the
+        // ineligibility sentinel: availability still dominates price.
+        let inf_high = RegionSet::new(vec![
+            Region { name: "cheap".into(), trace: SpotTrace::new(vec![0.5], vec![2]) },
+            Region {
+                name: "inf".into(),
+                trace: SpotTrace::new(vec![f64::INFINITY], vec![8]),
+            },
+        ]);
+        assert_eq!(inf_high.best_region(0), 1);
+    }
+
+    #[test]
+    fn unpayable_migration_terms_are_infinite() {
+        let m = MigrationModel::unpayable();
+        assert!(!m.terms().cost.is_finite());
+        let t = MigrationModel::new(2.0, 0.5).terms();
+        assert_eq!((t.cost, t.mu), (2.0, 0.5));
     }
 
     #[test]

@@ -20,14 +20,24 @@
 //!    input in the fleet is identical to the recorded run's (requests
 //!    are frozen, holdings follow inductively), so the water-fill +
 //!    preemption cascade provably reproduces the recorded outcome: the
-//!    slot costs one `decide` and an O(regions) row copy. Divergence
+//!    slot costs one `decide` and an O(regions) row copy. Under
+//!    policy-driven migration ([`MigrationMode::Policy`]) a clean slot
+//!    additionally requires the candidate's post-slot *move* to match
+//!    the recorded one — migration is part of the slot transition, and
+//!    with region-aware policies it depends on the candidate's intent,
+//!    not just on shared state. Divergence
 //!    materializes the candidate's state from the snapshots; from then
 //!    on only regions whose request set actually changed (the candidate,
 //!    displaced jobs, the incumbent's vacated seat) are re-arbitrated,
 //!    while untouched regions keep copying recorded rows.
 //! 3. **Prefix forking** — counterfactual fleet state is memoized in a
-//!    trie keyed by the candidate's post-divergence decision sequence.
-//!    The slot transition is a deterministic function of (state, want),
+//!    trie keyed by the candidate's post-divergence decision sequence
+//!    (the clamped request *and* the slot's validated migration intent),
+//!    with roots additionally partitioned by the candidate's
+//!    reflex-suppression class (region-aware candidates own their moves
+//!    in Policy mode, so their transitions differ from reflex-driven
+//!    ones even on identical sequences). Within a class the slot
+//!    transition is a deterministic function of (state, want, intent),
 //!    so candidates that diverge identically (OD-heavy variants, AHAP
 //!    variants sharing a commitment level until forecasts diverge) adopt
 //!    each other's per-slot states instead of re-simulating them. The
@@ -49,9 +59,11 @@ use std::sync::{Arc, Mutex};
 
 use crate::fleet::capacity::{arbitrate, SpotRequest, Tier};
 use crate::fleet::engine::{CommittedRun, FleetEngine, FleetJobSpec, FleetResult, JobOutcome};
-use crate::fleet::region::MigrationModel;
+use crate::fleet::region::{MigrationMode, MigrationModel};
 use crate::market::market::MarketObs;
-use crate::sched::policy::{Allocation, Policy, SlotContext};
+use crate::sched::policy::{
+    Allocation, Policy, RegionDecision, RegionView, SlotContext,
+};
 use crate::sched::pool::PolicySpec;
 use crate::sched::simulate::{settle_episode, EpisodeResult};
 
@@ -176,11 +188,20 @@ struct RegionRow {
     members: Vec<MemberRec>,
 }
 
-/// Candidate want key for the fork trie; `INACTIVE` marks slots where
-/// the candidate submits nothing (completed), after which the remaining
-/// transitions are want-independent and fully shared.
-type WantKey = (u32, u32);
-const INACTIVE: WantKey = (u32::MAX, u32::MAX);
+/// Candidate want key for the fork trie: the clamped request plus the
+/// candidate's validated migration intent for the slot (0 = none,
+/// `r + 1` = move to region `r`). The intent joins the key because a
+/// post-slot region change is part of the slot transition — two
+/// candidates submitting the same request but moving differently reach
+/// different fleet states. `INACTIVE` marks slots where the candidate
+/// submits nothing (completed), after which the remaining transitions
+/// are want-independent and fully shared.
+type WantKey = (u32, u32, u32);
+const INACTIVE: WantKey = (u32::MAX, u32::MAX, u32::MAX);
+
+fn intent_key(intent: Option<usize>) -> u32 {
+    intent.map(|r| r as u32 + 1).unwrap_or(0)
+}
 
 /// Post-slot counterfactual fleet state memoized in the fork trie: the
 /// complete numeric state plus the per-slot deltas an adopter needs to
@@ -210,8 +231,17 @@ struct ForkNode {
 
 #[derive(Default)]
 struct ForkCache {
-    /// Divergence roots keyed by (global slot, first divergent want).
-    roots: HashMap<(usize, WantKey), usize>,
+    /// Divergence roots keyed by (global slot, first divergent want,
+    /// reflex-suppression class). The third component partitions the
+    /// trie: in Policy mode the post-slot transition depends on whether
+    /// the candidate's policy is region-aware (its starvation reflex is
+    /// suppressed), and that bit is constant per candidate — so keying
+    /// it at the root keeps every subtree's transition a pure function
+    /// of (state, want, intent). Without it, a region-aware and a
+    /// non-aware candidate submitting identical post-divergence
+    /// sequences would adopt each other's states and silently apply (or
+    /// skip) a reflex migration the full replay would not.
+    roots: HashMap<(usize, WantKey, bool), usize>,
     nodes: Vec<ForkNode>,
     hits: u64,
     misses: u64,
@@ -427,13 +457,85 @@ impl<'a> ReplayPlan<'a> {
         }
     }
 
-    /// Rebuild the candidate's policy after a migration, exactly as the
-    /// engine rebuilds a live job's (private predictors, local clock).
-    fn rebuild_policy(&self, swapped: &FleetJobSpec, region: usize) -> Box<dyn Policy> {
-        let env = self.engine.policy_env(swapped, region, false);
-        let mut p = swapped.policy.build(&env);
-        p.reset();
-        p
+    /// One live decide in the learner's slot, mirroring the engine's
+    /// phase 1 exactly — including the Policy-mode region view for
+    /// region-aware candidates. Returns the clamped request and the
+    /// validated migration intent.
+    #[allow(clippy::too_many_arguments)]
+    fn decide_live(
+        &self,
+        policy: &mut dyn Policy,
+        swapped: &FleetJobSpec,
+        region: usize,
+        t: usize,
+        lt: usize,
+        obs: MarketObs,
+        prev: &Cursor,
+    ) -> (Allocation, Option<usize>) {
+        let models = &self.engine.models;
+        let ctx = SlotContext {
+            t: lt,
+            obs,
+            progress: prev.progress,
+            prev_total: prev.prev_total,
+            prev_avail: prev.prev_avail,
+            job: &swapped.job,
+            models,
+        };
+        let decision = if self.engine.migration_mode == MigrationMode::Policy
+            && self.n_regions > 1
+            && self.engine.regions.migration.cost.is_finite()
+            && policy.region_aware()
+        {
+            let snaps = self.engine.region_snapshots(swapped, region, t, lt);
+            let view = RegionView {
+                current: region,
+                candidates: &snaps,
+                migration: self.engine.regions.migration.terms(),
+            };
+            policy.decide_region(&ctx, &view)
+        } else {
+            RegionDecision { alloc: policy.decide(&ctx), migrate_to: None }
+        };
+        (
+            decision.alloc.clamp_to_job(&swapped.job, obs.avail),
+            self.engine.validate_intent(decision.migrate_to, region, swapped, lt),
+        )
+    }
+
+    /// The migration the candidate books after a slot, as a pure
+    /// function of its post-slot state — the engine's phase-3 decision
+    /// (intent primary, starvation reflex fallback). Used to extend the
+    /// clean-slot check in Policy mode: a slot is only clean if the
+    /// candidate's request *and* its post-slot region change both match
+    /// the recording (the incumbent's move may have come from a
+    /// different policy's intent, or from the reflex).
+    fn live_move_after(
+        &self,
+        after: &Cursor,
+        t: usize,
+        region: usize,
+        obs_avail: u32,
+        suppress_reflex: bool,
+        intent: Option<usize>,
+    ) -> Option<usize> {
+        if after.done {
+            return None;
+        }
+        if intent.is_some() {
+            return intent;
+        }
+        if !suppress_reflex
+            && self.engine.migration_patience > 0
+            && self.n_regions > 1
+            && after.starved >= self.engine.migration_patience
+        {
+            let best = self.engine.regions.best_region(t);
+            if best != region && self.engine.regions.avail(best, t) > obs_avail {
+                return Some(best);
+            }
+        }
+        None
     }
 
     /// Evaluate one candidate override. Bit-for-bit identical to
@@ -448,6 +550,10 @@ impl<'a> ReplayPlan<'a> {
         let mut swapped = lspec.clone();
         swapped.policy = policy;
         let mut cand_policy = self.engine.build_policy(&swapped);
+        let policy_mode = self.engine.migration_mode == MigrationMode::Policy;
+        // Region-aware candidates own their moves in Policy mode — the
+        // starvation reflex never fires for them (engine phase 3).
+        let suppress_reflex = policy_mode && cand_policy.region_aware();
 
         let mut sync = true;
         let mut cand = Cursor::initial(lspec.home_region);
@@ -461,6 +567,7 @@ impl<'a> ReplayPlan<'a> {
         for t in 0..self.horizon {
             // --- Candidate phase 1 -----------------------------------
             let mut cand_pending: Option<(Allocation, MarketObs)> = None;
+            let mut cand_intent: Option<usize> = None;
             if sync {
                 if t < lspec.arrival {
                     self.push_recorded_row(&mut granted_out, t);
@@ -480,27 +587,57 @@ impl<'a> ReplayPlan<'a> {
                 } else {
                     self.snaps[lr][lt - 1].clone()
                 };
-                let ctx = SlotContext {
-                    t: lt,
+                let (want, intent) = self.decide_live(
+                    cand_policy.as_mut(),
+                    &swapped,
+                    region,
+                    t,
+                    lt,
                     obs,
-                    progress: prev.progress,
-                    prev_total: prev.prev_total,
-                    prev_avail: prev.prev_avail,
-                    job: &lspec.job,
-                    models,
+                    &prev,
+                );
+                // The recorded learner's post-slot region change (its
+                // migration, whatever drove it). A move booked at the
+                // learner's *last* recorded slot never shows up in
+                // `regions` — the job is done at the next slot entry —
+                // but it was charged (cost, migration count), so
+                // `final_region` is the authority there: a candidate
+                // that would not make that move must diverge, or it
+                // would inherit the booking via the recorded result.
+                let rec_move = if lt + 1 < ltrace.regions.len() {
+                    let next = ltrace.regions[lt + 1];
+                    (next != region).then_some(next)
+                } else {
+                    let last = self.committed.result.jobs[lr].final_region;
+                    (last != region).then_some(last)
                 };
-                let want =
-                    cand_policy.decide(&ctx).clamp_to_job(&lspec.job, obs.avail);
-                if want == ltrace.wants[lt] {
+                // Clean requires matching requests — and, in Policy
+                // mode, a matching post-slot move: migration is part of
+                // the slot transition and now depends on the policy
+                // (its intent, or whether the reflex drives it), not
+                // just on shared state. With matching wants the
+                // candidate's post-slot state equals the snapshot, so
+                // its move is a pure function of that state + intent.
+                let clean = want == ltrace.wants[lt]
+                    && (!policy_mode
+                        || self.live_move_after(
+                            &self.snaps[lr][lt],
+                            t,
+                            region,
+                            obs.avail,
+                            suppress_reflex,
+                            intent,
+                        ) == rec_move);
+                if clean {
                     // Clean slot: every arbitration input equals the
                     // recorded run's, so the outcome does too — O(1).
                     self.push_recorded_row(&mut granted_out, t);
-                    // Mirror the live learner's post-migration replan.
-                    if lt + 1 < ltrace.regions.len()
-                        && ltrace.regions[lt + 1] != region
-                    {
-                        cand_policy =
-                            self.rebuild_policy(&swapped, ltrace.regions[lt + 1]);
+                    // Mirror the live learner's post-migration replan
+                    // (the engine's shared rebuild path: cold private
+                    // predictors in Starvation mode, warm cross-region
+                    // cache handles in Policy mode).
+                    if let Some(to) = rec_move {
+                        cand_policy = self.engine.rebuild_policy(&swapped, to);
                     }
                     continue;
                 }
@@ -517,6 +654,7 @@ impl<'a> ReplayPlan<'a> {
                     .decisions[..lt]
                     .to_vec();
                 cand_pending = Some((want, obs));
+                cand_intent = intent;
             } else if !cand.done && t >= lspec.arrival {
                 let lt = t - lspec.arrival;
                 if lt >= lspec.job.deadline {
@@ -528,25 +666,24 @@ impl<'a> ReplayPlan<'a> {
                         lt,
                         models.on_demand_price,
                     );
-                    let ctx = SlotContext {
-                        t: lt,
+                    let region_now = cand.region;
+                    let (want, intent) = self.decide_live(
+                        cand_policy.as_mut(),
+                        &swapped,
+                        region_now,
+                        t,
+                        lt,
                         obs,
-                        progress: cand.progress,
-                        prev_total: cand.prev_total,
-                        prev_avail: cand.prev_avail,
-                        job: &lspec.job,
-                        models,
-                    };
-                    let want = cand_policy
-                        .decide(&ctx)
-                        .clamp_to_job(&lspec.job, obs.avail);
+                        &cand,
+                    );
                     cand_pending = Some((want, obs));
+                    cand_intent = intent;
                 }
             }
 
             // --- Fork adoption ---------------------------------------
             let key: WantKey = match &cand_pending {
-                Some((w, _)) => (w.on_demand, w.spot),
+                Some((w, _)) => (w.on_demand, w.spot, intent_key(cand_intent)),
                 None => INACTIVE,
             };
             if self.use_forks {
@@ -554,7 +691,10 @@ impl<'a> ReplayPlan<'a> {
                     let mut cache = self.forks.lock().unwrap();
                     let child = match node {
                         Some(nid) => cache.nodes[nid].children.get(&key).copied(),
-                        None => cache.roots.get(&(t, key)).copied(),
+                        None => cache
+                            .roots
+                            .get(&(t, key, suppress_reflex))
+                            .copied(),
                     };
                     if child.is_some() {
                         cache.hits += 1;
@@ -572,7 +712,7 @@ impl<'a> ReplayPlan<'a> {
                         &mut granted_out,
                     );
                     if let Some(r) = st.cand_migrated {
-                        cand_policy = self.rebuild_policy(&swapped, r);
+                        cand_policy = self.engine.rebuild_policy(&swapped, r);
                     }
                     node = Some(cid);
                     continue;
@@ -584,16 +724,19 @@ impl<'a> ReplayPlan<'a> {
                 t,
                 &mut cand,
                 cand_pending,
+                cand_intent,
+                suppress_reflex,
                 &mut dirty,
                 &mut bg_decisions,
                 &mut cand_decisions,
                 &mut granted_out,
             );
             if let Some(r) = cand_migrated {
-                cand_policy = self.rebuild_policy(&swapped, r);
+                cand_policy = self.engine.rebuild_policy(&swapped, r);
             }
             if self.use_forks {
-                node = Some(self.insert_fork(node, t, key, state));
+                node =
+                    Some(self.insert_fork(node, t, key, suppress_reflex, state));
             }
         }
 
@@ -714,12 +857,13 @@ impl<'a> ReplayPlan<'a> {
         parent: Option<usize>,
         t: usize,
         key: WantKey,
+        suppress_reflex: bool,
         state: Arc<ForkState>,
     ) -> usize {
         let mut cache = self.forks.lock().unwrap();
         let existing = match parent {
             Some(p) => cache.nodes[p].children.get(&key).copied(),
-            None => cache.roots.get(&(t, key)).copied(),
+            None => cache.roots.get(&(t, key, suppress_reflex)).copied(),
         };
         if let Some(id) = existing {
             return id;
@@ -732,7 +876,7 @@ impl<'a> ReplayPlan<'a> {
                 cache.nodes[p].children.insert(key, id);
             }
             None => {
-                cache.roots.insert((t, key), id);
+                cache.roots.insert((t, key, suppress_reflex), id);
             }
         }
         id
@@ -741,14 +885,19 @@ impl<'a> ReplayPlan<'a> {
     /// Simulate one post-divergence slot: replay dirty jobs' committed
     /// choices, re-arbitrate only the regions whose request set differs
     /// from the recorded run, copy every other region's recorded row,
-    /// and account exactly as the engine's phase 3. Returns the fork
-    /// state for the trie plus the candidate's live-migration target.
+    /// and account exactly as the engine's phase 3 (the candidate's
+    /// validated migration intent booked first, the starvation reflex as
+    /// the fallback unless suppressed for a region-aware candidate).
+    /// Returns the fork state for the trie plus the candidate's
+    /// live-migration target.
     #[allow(clippy::too_many_arguments)]
     fn step_diverged(
         &self,
         t: usize,
         cand: &mut Cursor,
         cand_pending: Option<(Allocation, MarketObs)>,
+        cand_intent: Option<usize>,
+        suppress_reflex: bool,
         dirty: &mut BTreeMap<usize, Cursor>,
         bg_decisions: &mut BTreeMap<usize, Vec<Allocation>>,
         cand_decisions: &mut Vec<Allocation>,
@@ -957,7 +1106,13 @@ impl<'a> ReplayPlan<'a> {
                 } else {
                     cand.starved = 0;
                 }
-                if self.engine.migration_patience > 0
+                if let Some(best) = cand_intent {
+                    // Policy-emitted move (already validated at decide
+                    // time) — booked exactly like the engine's phase 3.
+                    cand.book_migration(best, &mig);
+                    cand_migrated = Some(best);
+                } else if !suppress_reflex
+                    && self.engine.migration_patience > 0
                     && self.n_regions > 1
                     && cand.starved >= self.engine.migration_patience
                 {
@@ -1050,7 +1205,7 @@ fn settle_outcome(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::fleet::region::{MigrationModel, Region, RegionSet};
+    use crate::fleet::region::{MigrationMode, MigrationModel, Region, RegionSet};
     use crate::forecast::noise::NoiseSpec;
     use crate::market::generator::TraceGenerator;
     use crate::market::trace::SpotTrace;
@@ -1212,6 +1367,93 @@ mod tests {
         let no_forks =
             ReplayPlan::new(&engine, &specs, &rec, 0).with_forks(false);
         assert_eq!(no_forks.counterfactual(PolicySpec::OdOnly), first);
+    }
+
+    /// Capacity shifting between regions mid-horizon (the predictive-
+    /// migration scenario): region 0 drains at slot 6, region 1 fills.
+    fn shifting_engine(mode: MigrationMode) -> FleetEngine {
+        let regions = crate::fleet::region::capacity_shift_fixture(6, 16);
+        FleetEngine::new(Models::paper_default(), regions)
+            .with_migration_patience(2)
+            .with_migration_mode(mode)
+    }
+
+    #[test]
+    fn policy_mode_candidates_match_override_including_intent_migrations() {
+        // Policy-driven migration in the learner's slot: region-aware
+        // candidates emit intents (which join the fork key), non-aware
+        // ones keep the reflex — every one must reproduce
+        // run_with_override bit-for-bit, and the incumbent identity must
+        // still collapse to the recorded result.
+        let engine = shifting_engine(MigrationMode::Policy);
+        let big = Job {
+            workload: 120.0,
+            deadline: 16,
+            n_min: 1,
+            n_max: 12,
+            value: 200.0,
+            gamma: 1.5,
+        };
+        let incumbent = PolicySpec::Ahap { omega: 5, v: 1, sigma: 0.7 };
+        let specs = vec![
+            FleetJobSpec::new(big, incumbent, PredictorKind::Oracle),
+            FleetJobSpec::new(job(), PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::Low),
+        ];
+        let rec = engine.run_recorded(&specs);
+        assert!(
+            rec.result.jobs[0].migrations >= 1,
+            "scenario lost its predictive migration: {:?}",
+            rec.result.jobs[0]
+        );
+        let plan = ReplayPlan::new(&engine, &specs, &rec, 0);
+        assert_eq!(plan.counterfactual(incumbent), rec.result);
+        for cand in [
+            PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.5 },
+            PolicySpec::Ahap { omega: 1, v: 1, sigma: 0.9 },
+            PolicySpec::Msu,
+            PolicySpec::OdOnly,
+            PolicySpec::Ahanp { sigma: 0.5 },
+        ] {
+            let want = engine.run_with_override(&specs, &rec.traces, 0, cand);
+            assert_eq!(
+                plan.counterfactual(cand),
+                want,
+                "policy-mode delta != full for {}",
+                cand.label()
+            );
+        }
+    }
+
+    #[test]
+    fn policy_mode_move_mismatch_breaks_the_clean_slot() {
+        // Incumbent MSU starves in the draining region and migrates by
+        // reflex; an AHAP candidate may submit the *same requests* early
+        // on yet move at a different slot (or not at all) — the clean
+        // check must compare moves, not just wants, or the counterfactual
+        // would silently keep the recorded region sequence.
+        let engine = shifting_engine(MigrationMode::Policy);
+        let specs = vec![
+            FleetJobSpec::new(job(), PolicySpec::Msu, PredictorKind::Oracle),
+            FleetJobSpec::new(job(), PolicySpec::Msu, PredictorKind::Oracle)
+                .in_region(1)
+                .with_tier(Tier::Low),
+        ];
+        let rec = engine.run_recorded(&specs);
+        let plan = ReplayPlan::new(&engine, &specs, &rec, 0);
+        for cand in [
+            PolicySpec::Ahap { omega: 5, v: 1, sigma: 0.7 },
+            PolicySpec::Ahap { omega: 2, v: 2, sigma: 0.3 },
+            PolicySpec::UniformProgress,
+        ] {
+            let want = engine.run_with_override(&specs, &rec.traces, 0, cand);
+            assert_eq!(
+                plan.counterfactual(cand),
+                want,
+                "move-mismatch case: delta != full for {}",
+                cand.label()
+            );
+        }
     }
 
     #[test]

@@ -29,7 +29,7 @@
 
 use crate::fleet::capacity::Tier;
 use crate::fleet::engine::{FleetEngine, FleetJobSpec};
-use crate::fleet::region::{MigrationModel, Region, RegionSet};
+use crate::fleet::region::{MigrationMode, MigrationModel, Region, RegionSet};
 use crate::fleet::replay::ReplayPlan;
 use crate::fleet::sweep::{fleet_roster, run_parallel};
 use crate::forecast::noise::NoiseSpec;
@@ -66,6 +66,10 @@ pub struct FleetContendedEvaluator {
     pub region_gen: TraceGenerator,
     pub migration: MigrationModel,
     pub migration_patience: usize,
+    /// Reactive (starvation) or predictive (policy-intent) migration in
+    /// the evaluation fleet — region-aware candidates plan their own
+    /// moves under [`MigrationMode::Policy`].
+    pub migration_mode: MigrationMode,
     /// Priority tier of the learner's job.
     pub learner_tier: Tier,
     /// Threads for fanning the per-round counterfactual fleet runs.
@@ -108,6 +112,7 @@ impl FleetContendedEvaluator {
             region_gen: TraceGenerator::calibrated(),
             migration: MigrationModel::default(),
             migration_patience: 2,
+            migration_mode: MigrationMode::default(),
             learner_tier: Tier::Normal,
             threads: 1,
             shared_forecasts: true,
@@ -167,6 +172,11 @@ impl FleetContendedEvaluator {
         self
     }
 
+    pub fn with_migration_mode(mut self, mode: MigrationMode) -> Self {
+        self.migration_mode = mode;
+        self
+    }
+
     /// Evaluate every counterfactual with full `run_with_override` fleet
     /// re-simulations — the reference path delta replay is tested
     /// against (and the baseline the `perf_hotpaths` selection-round
@@ -210,7 +220,8 @@ impl FleetContendedEvaluator {
             *models,
             RegionSet::new(regions).with_migration(self.migration),
         )
-        .with_migration_patience(self.migration_patience);
+        .with_migration_patience(self.migration_patience)
+        .with_migration_mode(self.migration_mode);
         if self.shared_forecasts {
             engine
         } else {
@@ -380,6 +391,35 @@ mod tests {
         );
         let mut delta = FleetContendedEvaluator::synthetic(6, 2, 9);
         let mut full = FleetContendedEvaluator::synthetic(6, 2, 9).with_full_replay();
+        let ud = delta.utilities(&specs, &job, &trace, &models, &env);
+        let uf = full.utilities(&specs, &job, &trace, &models, &env);
+        assert_eq!(ud, uf);
+        assert_eq!(delta.incumbent(), full.incumbent());
+    }
+
+    #[test]
+    fn policy_mode_delta_and_full_replay_agree() {
+        // The delta/full bit-identity must survive policy-driven
+        // migration: region-aware candidates emit intents inside the
+        // counterfactuals, and both engines must score them identically.
+        let mut specs = small_pool();
+        specs.push(PolicySpec::Ahap { omega: 4, v: 2, sigma: 0.7 });
+        specs.push(PolicySpec::Ahap { omega: 2, v: 1, sigma: 0.9 });
+        let models = Models::paper_default();
+        let gen = TraceGenerator::calibrated();
+        let job = Job::paper_reference();
+        let trace = gen.generate(18).slice_from(30);
+        let env = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace.clone(),
+            41,
+        );
+        let mut delta = FleetContendedEvaluator::synthetic(5, 3, 15)
+            .with_migration_mode(MigrationMode::Policy)
+            .with_threads(3);
+        let mut full = FleetContendedEvaluator::synthetic(5, 3, 15)
+            .with_migration_mode(MigrationMode::Policy)
+            .with_full_replay();
         let ud = delta.utilities(&specs, &job, &trace, &models, &env);
         let uf = full.utilities(&specs, &job, &trace, &models, &env);
         assert_eq!(ud, uf);

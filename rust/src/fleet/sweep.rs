@@ -15,7 +15,7 @@ use std::sync::Mutex;
 
 use crate::fleet::capacity::Tier;
 use crate::fleet::engine::{FleetEngine, FleetJobSpec, FleetResult};
-use crate::fleet::region::{MigrationModel, RegionSet};
+use crate::fleet::region::{MigrationMode, MigrationModel, RegionSet};
 use crate::forecast::noise::NoiseSpec;
 use crate::market::generator::{GeneratorConfig, TraceGenerator};
 use crate::market::trace::SpotTrace;
@@ -196,9 +196,20 @@ pub struct FleetScenario {
     pub noise: NoiseSpec,
     pub migration: MigrationModel,
     pub migration_patience: usize,
+    /// Reactive (starvation reflex) or predictive (policy intents)
+    /// migration — see [`MigrationMode`].
+    pub migration_mode: MigrationMode,
     /// Arrival spacing: job k arrives at `(k % 4) * stagger` (0 = all at
     /// slot 0).
     pub stagger: usize,
+    /// Background churn: expected Poisson *arrivals per slot* of extra
+    /// jobs over the base fleet's horizon (0 = the historical fixed
+    /// fleet). Churn jobs depart naturally — at completion or at their
+    /// (randomly sampled) deadline — so the committed background the
+    /// fleet contends with is genuinely non-stationary. Sampled once at
+    /// build time from a dedicated seed stream, so results are
+    /// deterministic and identical across thread counts.
+    pub churn: f64,
 }
 
 impl FleetScenario {
@@ -215,7 +226,9 @@ impl FleetScenario {
             noise: NoiseSpec::fixed_mag_uniform(0.1),
             migration: MigrationModel::default(),
             migration_patience: 2,
+            migration_mode: MigrationMode::default(),
             stagger: 0,
+            churn: 0.0,
         }
     }
 
@@ -224,25 +237,39 @@ impl FleetScenario {
         self
     }
 
+    pub fn with_migration_mode(mut self, mode: MigrationMode) -> Self {
+        self.migration_mode = mode;
+        self
+    }
+
+    /// Enable background churn at `rate` expected arrivals per slot.
+    pub fn with_churn(mut self, rate: f64) -> Self {
+        assert!(rate >= 0.0 && rate.is_finite(), "churn rate must be finite and ≥ 0");
+        self.churn = rate;
+        self
+    }
+
     /// Materialize the engine and job roster. Policies are drawn
     /// round-robin from [`fleet_roster`]; tiers and home regions cycle.
     ///
-    /// The scenario seed fans out into three domain-separated streams —
-    /// region traces, job sampling, and per-job predictor noise — so no
-    /// two of them ever consume the same PRNG sequence (a shared stream
-    /// would correlate a job's forecast errors with the very market it
-    /// runs on and bias sweep statistics).
+    /// The scenario seed fans out into domain-separated streams —
+    /// region traces, job sampling, per-job predictor noise, and churn
+    /// arrivals — so no two of them ever consume the same PRNG sequence
+    /// (a shared stream would correlate a job's forecast errors with the
+    /// very market it runs on and bias sweep statistics).
     pub fn build(&self) -> (FleetEngine, Vec<FleetJobSpec>) {
         const JOBS_STREAM: u64 = 0x9E37_79B9_7F4A_7C15;
         const NOISE_STREAM: u64 = 0xD1B5_4A32_D192_ED03;
+        const CHURN_STREAM: u64 = 0xC0DE_C0DE_5EED_51DE;
         let gen = TraceGenerator::new(self.market.clone());
         let regions = RegionSet::generated(self.n_regions, &gen, self.seed)
             .with_migration(self.migration);
         let engine = FleetEngine::new(self.models, regions)
-            .with_migration_patience(self.migration_patience);
+            .with_migration_patience(self.migration_patience)
+            .with_migration_mode(self.migration_mode);
         let roster = fleet_roster();
         let mut rng = Rng::new(self.seed ^ JOBS_STREAM);
-        let specs = (0..self.n_jobs)
+        let mut specs: Vec<FleetJobSpec> = (0..self.n_jobs)
             .map(|k| {
                 let job = self.jobs.sample(&mut rng);
                 FleetJobSpec {
@@ -258,6 +285,38 @@ impl FleetScenario {
                 }
             })
             .collect();
+
+        // Seeded Poisson churn: extra background jobs arriving over the
+        // base fleet's horizon (and departing at completion/deadline).
+        // Sampled here, single-threaded, from its own domain-separated
+        // stream — the resulting spec list is a pure function of the
+        // scenario, so sweeps stay bit-identical across thread counts.
+        if self.churn > 0.0 {
+            let horizon = specs
+                .iter()
+                .map(|s| s.arrival + s.job.deadline)
+                .max()
+                .unwrap_or(0);
+            let mut crng = Rng::new(self.seed ^ CHURN_STREAM);
+            let mut k = self.n_jobs;
+            for slot in 0..horizon {
+                for _ in 0..crng.poisson(self.churn) {
+                    let job = self.jobs.sample(&mut crng);
+                    specs.push(FleetJobSpec {
+                        job,
+                        policy: roster[k % roster.len()],
+                        predictor: PredictorKind::Noisy(self.noise),
+                        seed: self.seed
+                            ^ CHURN_STREAM
+                            ^ (k as u64 + 1).wrapping_mul(0x9E37_79B9),
+                        tier: Tier::cycle(k),
+                        home_region: k % self.n_regions,
+                        arrival: slot,
+                    });
+                    k += 1;
+                }
+            }
+        }
         (engine, specs)
     }
 
@@ -375,6 +434,47 @@ mod tests {
     fn scenario_is_deterministic() {
         let sc = FleetScenario::new(6, 2, 11).with_stagger(3);
         assert_eq!(sc.run(), sc.run());
+    }
+
+    #[test]
+    fn churn_adds_staggered_background_jobs_deterministically() {
+        let churned = FleetScenario::new(4, 2, 19).with_churn(0.6);
+        let (_, specs_a) = churned.build();
+        let (_, specs_b) = churned.build();
+        assert_eq!(specs_a.len(), specs_b.len(), "churn sampling must be seeded");
+        let (_, base_specs) = FleetScenario::new(4, 2, 19).build();
+        assert!(
+            specs_a.len() > base_specs.len(),
+            "rate 0.6 over a ≥10-slot horizon should add jobs ({} vs {})",
+            specs_a.len(),
+            base_specs.len()
+        );
+        // Base jobs are untouched (churn extends, never perturbs) and
+        // churn arrivals land strictly inside the base horizon.
+        let horizon = base_specs
+            .iter()
+            .map(|s| s.arrival + s.job.deadline)
+            .max()
+            .unwrap();
+        for (a, b) in specs_a.iter().zip(&base_specs) {
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.policy.label(), b.policy.label());
+        }
+        for s in &specs_a[base_specs.len()..] {
+            assert!(s.arrival < horizon);
+        }
+        // The churned fleet itself runs deterministically — and
+        // identically across thread counts via the sweep engine.
+        assert_eq!(churned.run(), churned.run());
+        let scenarios = vec![churned.clone(), FleetScenario::new(3, 2, 7).with_churn(1.0)];
+        assert_eq!(run_fleet_sweep(&scenarios, 1), run_fleet_sweep(&scenarios, 4));
+    }
+
+    #[test]
+    fn zero_churn_is_the_historical_fleet() {
+        let a = FleetScenario::new(5, 2, 13).with_stagger(2);
+        let b = a.clone().with_churn(0.0);
+        assert_eq!(a.run(), b.run());
     }
 
     #[test]

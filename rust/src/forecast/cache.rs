@@ -129,6 +129,17 @@ impl SharedForecaster {
         self.0.inner.lock().unwrap().pred.fit_counts()
     }
 
+    /// The clamped forecast issued at slot `t` (after observing trace
+    /// slots `0..=t` on top of the seeded history), truncated to `h`
+    /// steps — the cache's slot-indexed read API. This is what the fleet
+    /// engine's cross-region [`RegionForecasts`] view serves candidate
+    /// regions' forecasts from, without minting a predictor handle per
+    /// query. Bit-identical to a private predictor that observed the
+    /// same slots (the cache contract).
+    pub fn forecast_issued_at(&self, t: usize, h: usize) -> Forecast {
+        self.forecast_at(t, h)
+    }
+
     /// The clamped forecast issued at slot `t`, truncated to `h` steps.
     /// Advances the backing predictor slot-by-slot on demand; every
     /// value is a pure function of `(trace, cfg, history, t)`, so the
@@ -249,6 +260,63 @@ impl fmt::Debug for ForecastCachePool {
     }
 }
 
+/// Cross-region forecast view over a [`ForecastCachePool`]: per-region
+/// price/availability forecasts under one [`ArimaConfig`], all served
+/// from the pool's shared per-slot caches. This is the planning layer's
+/// window into *other* regions' markets — region-aware policies price
+/// candidate regions from it, and migrated jobs re-plan against the
+/// destination's full observed history instead of a cold private model
+/// (the same fits the destination's own pool sweep already pays for, so
+/// a migration adds no fitting work).
+///
+/// Keying is the pool's `(region, arrival, config)`: a job arriving at
+/// slot `a` sees every region through the same local slot clock, so one
+/// cache per region serves its home forecasts, its candidate snapshots,
+/// and any later migration — which is what makes cross-region replans
+/// warm and bit-reproducible.
+pub struct RegionForecasts<'a> {
+    pool: &'a ForecastCachePool,
+    cfg: ArimaConfig,
+}
+
+impl<'a> RegionForecasts<'a> {
+    pub fn new(pool: &'a ForecastCachePool, cfg: ArimaConfig) -> Self {
+        RegionForecasts { pool, cfg }
+    }
+
+    /// The `h`-step forecast for `region`'s market issued at local slot
+    /// `t` of the slice starting at `arrival` (building the region's
+    /// cache from `make_trace` on first use).
+    pub fn forecast(
+        &self,
+        region: usize,
+        arrival: usize,
+        t: usize,
+        h: usize,
+        make_trace: impl FnOnce() -> SpotTrace,
+    ) -> Forecast {
+        self.forecaster(region, arrival, make_trace)
+            .forecast_issued_at(t, h)
+    }
+
+    /// The shared forecaster backing `region`'s slice — what a migrated
+    /// job's rebuilt policy attaches to so it plans warm.
+    pub fn forecaster(
+        &self,
+        region: usize,
+        arrival: usize,
+        make_trace: impl FnOnce() -> SpotTrace,
+    ) -> SharedForecaster {
+        self.pool.for_slice(region, arrival, self.cfg, make_trace)
+    }
+}
+
+impl fmt::Debug for RegionForecasts<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "RegionForecasts(caches={})", self.pool.caches())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -341,6 +409,47 @@ mod tests {
         for (t, want) in first.iter().enumerate() {
             h.observe(t, tr.price_at(t), tr.avail_at(t));
             assert_eq!(h.predict(4), *want);
+        }
+    }
+
+    #[test]
+    fn region_forecasts_match_private_predictors_per_region() {
+        // The cross-region view must serve, for every region, exactly
+        // what a private predictor observing that region's slice would
+        // — including the prefix-truncation identity for shorter
+        // horizons — while paying one fit per slot per region.
+        let gen = TraceGenerator::calibrated();
+        let traces = [gen.generate(21).slice_from(10), gen.generate(22).slice_from(25)];
+        let cfg = ArimaConfig::default();
+        let pool = ForecastCachePool::new();
+        let view = RegionForecasts::new(&pool, cfg);
+        for (r, tr) in traces.iter().enumerate() {
+            let mut private = ArimaPredictor::configured(cfg);
+            for t in 0..12 {
+                private.observe(t, tr.price_at(t), tr.avail_at(t));
+                let want = private.predict(5);
+                let got = view.forecast(r, 0, t, 5, || tr.clone());
+                assert_eq!(got, want, "region {r} slot {t}");
+                let short = view.forecast(r, 0, t, 2, || tr.clone());
+                assert_eq!(short.price, want.price[..2].to_vec());
+            }
+        }
+        assert_eq!(pool.caches(), 2);
+        // A migrated job's warm replan: seeding a private predictor with
+        // the slice's history up to the rebuild slot and observing on is
+        // bit-identical to the region cache (observe ≡ seed_history).
+        let tr = &traces[1];
+        let rebuild_at = 7usize;
+        let hist = MarketHistory::from_trace(tr, rebuild_at);
+        let mut seeded = ArimaPredictor::configured(cfg);
+        seeded.seed_history(&hist.price, &hist.avail);
+        for t in rebuild_at..12 {
+            seeded.observe(t, tr.price_at(t), tr.avail_at(t));
+            assert_eq!(
+                seeded.predict(4),
+                view.forecast(1, 0, t, 4, || unreachable!("cache exists")),
+                "warm replan diverged at slot {t}"
+            );
         }
     }
 

@@ -12,7 +12,9 @@ pub mod noise;
 pub mod predictor;
 
 pub use arima::{ArimaConfig, ArimaPredictor, ArimaSpec};
-pub use cache::{ForecastCachePool, MarketHistory, SharedForecaster};
+pub use cache::{
+    ForecastCachePool, MarketHistory, RegionForecasts, SharedForecaster,
+};
 pub use incremental::IncrementalArima;
 pub use noise::{NoiseKind, NoiseMagnitude, NoiseSpec, NoisyOracle};
 pub use predictor::{Forecast, Predictor};

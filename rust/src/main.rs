@@ -23,7 +23,7 @@ use spotfine::coordinator::leader::{Leader, LeaderConfig};
 use spotfine::fleet::{
     available_threads, run_fleet_selection, run_fleet_sweep,
     run_selection_parallel, FleetContendedEvaluator, FleetScenario,
-    MigrationModel,
+    MigrationMode, MigrationModel,
 };
 use spotfine::forecast::arima::{ArimaPredictor, ArimaSpec};
 use spotfine::forecast::noise::NoiseSpec;
@@ -81,14 +81,21 @@ FLEET FLAGS:
   --regions <n>         regional spot markets (default 3)
   --sweeps <n>          independent seeded fleets to run (default 1)
   --stagger <slots>     arrival spacing between job cohorts (default 2)
-  --patience <slots>    starved slots before migration, 0=never (default 2)
+  --patience <slots>    starved slots before reflex migration, 0=never
+                        (default 2)
   --migration-cost <$>  flat cost charged per region move (default 2.0)
+  --migration <mode>    starvation (reactive reflex, default) | policy
+                        (region-aware policies fold the migration term
+                        into the CHC subproblem and move predictively)
+  --churn <rate>        expected Poisson background-job arrivals per slot
+                        (default 0 = fixed fleet)
   --per-job             print the per-job outcome table
 
 FLEET-SELECT FLAGS:
   --jobs <n>            selection rounds K (default 60)
   --fleet-jobs <n>      committed background jobs contending (default 8)
   --regions <n>         regional spot markets (default 2)
+  --migration <mode>    starvation | policy, as for fleet
   --skip-isolated       don't run the isolated-learner comparison
   --full-replay         score candidates with full counterfactual fleet
                         re-simulations instead of the delta-replay
@@ -130,6 +137,22 @@ fn predictor_arg(
         Some("arima") => PredictorKind::Arima(arima),
         Some(other) => {
             anyhow::bail!("unknown predictor `{other}` (noisy|oracle|arima)")
+        }
+    })
+}
+
+/// `--migration starvation|policy`, defaulting to the config's
+/// `[fleet] migration` (itself defaulting to the historical reflex).
+fn migration_mode_arg(
+    args: &Args,
+    cfg: &ExperimentConfig,
+) -> anyhow::Result<MigrationMode> {
+    Ok(match args.get("migration") {
+        None => cfg.fleet.migration,
+        Some("starvation") => MigrationMode::Starvation,
+        Some("policy") => MigrationMode::Policy,
+        Some(other) => {
+            anyhow::bail!("unknown migration mode `{other}` (starvation|policy)")
         }
     })
 }
@@ -307,6 +330,11 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let threads = args.get_usize("threads", available_threads())?;
     let patience = args.get_usize("patience", 2)?;
     let migration_cost = args.get_f64("migration-cost", 2.0)?;
+    let migration_mode = migration_mode_arg(args, &cfg)?;
+    let churn = args.get_f64("churn", cfg.fleet.churn)?;
+    if !(churn >= 0.0 && churn.is_finite()) {
+        anyhow::bail!("--churn must be finite and ≥ 0");
+    }
     let stagger = args.get_usize("stagger", 2)?;
 
     let scenarios: Vec<FleetScenario> = (0..sweeps)
@@ -318,7 +346,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             sc.noise = cfg.noise;
             sc.migration = MigrationModel::new(migration_cost, 0.5);
             sc.migration_patience = patience;
+            sc.migration_mode = migration_mode;
             sc.stagger = stagger;
+            sc.churn = churn;
             sc
         })
         .collect();
@@ -328,6 +358,18 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
 
     println!(
         "fleet: {n_jobs} jobs x {n_regions} regions x {sweeps} sweep(s), {threads} thread(s), {secs:.2}s"
+    );
+    println!(
+        "migration: {} (patience {patience}){}",
+        match migration_mode {
+            MigrationMode::Starvation => "starvation reflex",
+            MigrationMode::Policy => "policy-driven (region-aware planning)",
+        },
+        if churn > 0.0 {
+            format!(", churn {churn} arrivals/slot")
+        } else {
+            String::new()
+        }
     );
     let mut t = Table::new(&[
         "sweep",
@@ -514,9 +556,11 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
     // committed background replays — via the delta-replay engine unless
     // --full-replay asks for the reference re-simulation path.
     let full_replay = args.get_bool("full-replay");
+    let migration_mode = migration_mode_arg(args, &cfg)?;
     let mut evaluator =
         FleetContendedEvaluator::synthetic(n_background, n_regions, seed)
-            .with_threads(threads);
+            .with_threads(threads)
+            .with_migration_mode(migration_mode);
     if full_replay {
         evaluator = evaluator.with_full_replay();
     }
@@ -540,6 +584,13 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
     println!(
         "counterfactuals    {}",
         if full_replay { "full fleet replay (reference)" } else { "delta replay" }
+    );
+    println!(
+        "migration          {}",
+        match migration_mode {
+            MigrationMode::Starvation => "starvation reflex",
+            MigrationMode::Policy => "policy-driven (region-aware planning)",
+        }
     );
     match &predictor {
         PredictorKind::Arima(a) => {

@@ -19,8 +19,12 @@
 use std::collections::VecDeque;
 
 use crate::forecast::predictor::Predictor;
-use crate::sched::horizon::{solve_dp, solve_greedy, HorizonProblem, TerminalKind};
-use crate::sched::policy::{Allocation, Policy, SlotContext};
+use crate::sched::horizon::{
+    solve_dp, solve_greedy, HorizonProblem, HorizonSolution, TerminalKind,
+};
+use crate::sched::policy::{
+    Allocation, Policy, RegionDecision, RegionView, SlotContext,
+};
 
 /// Which Eq. 10 solver AHAP uses when behind schedule.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -127,13 +131,41 @@ impl Ahap {
     }
 }
 
-impl Policy for Ahap {
-    fn reset(&mut self) {
-        self.plans.clear();
-        self.predictor.reset();
+impl Ahap {
+    /// Eq. 10 solved with the configured solver — the single dispatch
+    /// point both the home window and candidate-region windows go
+    /// through, so every window is priced by the same solver.
+    fn solve_window(
+        &self,
+        ctx: &SlotContext,
+        prob: &HorizonProblem,
+    ) -> HorizonSolution {
+        match self.solver {
+            // Under harsh reconfiguration overhead the greedy's
+            // μ-deflation heuristic misprices capacity badly (it
+            // assumes every slot reconfigures); the DP models μ
+            // against the running count exactly and naturally plans
+            // *stable* allocations, so switch to it automatically.
+            SolverKind::Greedy if ctx.models.reconfig.mu_up < 0.7 => {
+                solve_dp(prob, 0.25)
+            }
+            SolverKind::Greedy => solve_greedy(prob),
+            SolverKind::Dp { grid_step } => solve_dp(prob, grid_step),
+        }
     }
 
-    fn decide(&mut self, ctx: &SlotContext) -> Allocation {
+    /// One slot of Algorithm 1 against the job's own (home) market.
+    /// Returns the executed allocation plus the forecast window it
+    /// planned over — `(prices, avail, window length, solved stay
+    /// utility)` — so the region-aware path can price candidate regions
+    /// against the same window without consuming any extra predictor
+    /// state or re-solving the home subproblem. The stay utility is
+    /// `Some` only when the behind-schedule branch actually solved
+    /// Eq. 10 (the threshold branch never prices the window).
+    fn decide_home(
+        &mut self,
+        ctx: &SlotContext,
+    ) -> (Allocation, Vec<f64>, Vec<f64>, usize, Option<f64>) {
         // Line 3: observe this slot, forecast ω steps ahead.
         self.predictor
             .observe(ctx.t, ctx.obs.spot_price, ctx.obs.avail);
@@ -161,6 +193,7 @@ impl Policy for Ahap {
         let z_exp = ctx.job.expected_progress(end);
 
         // Lines 5–13: pick the plan for [t, t+ω].
+        let mut stay_utility = None;
         let plan = if ctx.progress >= z_exp {
             self.threshold_plan(ctx, &prices, &avail_f)
         } else {
@@ -177,24 +210,12 @@ impl Policy for Ahap {
                 // Mid-horizon windows must not see the blocky
                 // termination cost (phantom-slot exploitation); a window
                 // reaching the deadline prices termination exactly.
-                terminal_kind: if ctx.t + win >= ctx.job.deadline {
-                    TerminalKind::Exact
-                } else {
-                    TerminalKind::LinearCost
-                },
+                terminal_kind: terminal_kind_for(ctx, win),
+                migration: None,
             };
-            match self.solver {
-                // Under harsh reconfiguration overhead the greedy's
-                // μ-deflation heuristic misprices capacity badly (it
-                // assumes every slot reconfigures); the DP models μ
-                // against the running count exactly and naturally plans
-                // *stable* allocations, so switch to it automatically.
-                SolverKind::Greedy if ctx.models.reconfig.mu_up < 0.7 => {
-                    solve_dp(&prob, 0.25).alloc
-                }
-                SolverKind::Greedy => solve_greedy(&prob).alloc,
-                SolverKind::Dp { grid_step } => solve_dp(&prob, grid_step).alloc,
-            }
+            let sol = self.solve_window(ctx, &prob);
+            stay_utility = Some(sol.utility);
+            sol.alloc
         };
 
         // Commit: keep the last v plans, average their slot-t entries
@@ -220,7 +241,146 @@ impl Policy for Ahap {
             (sum_o + n_used / 2) / n_used,
             (sum_s + n_used / 2) / n_used,
         );
-        a.clamp_to_job(ctx.job, ctx.obs.avail)
+        (a.clamp_to_job(ctx.job, ctx.obs.avail), prices, avail_f, win, stay_utility)
+    }
+
+    /// The migration decision (the new term in Eq. 10): solve the CHC
+    /// subproblem once for the home window and once per candidate region
+    /// — the candidate's window carrying the migration term, which
+    /// charges the flat move cost and the cold-restart μ on its first
+    /// slot — and emit an intent only when some candidate's committed
+    /// window is strictly worth more than staying. With an infinite
+    /// migration cost (or no candidates) this is a no-op, which is what
+    /// keeps region-aware AHAP bit-identical to the single-market
+    /// trajectory in that degenerate case.
+    ///
+    /// (The engine executes a move at the *next* slot; pricing the
+    /// candidate window as starting now is the standard CHC one-slot
+    /// approximation — the migration μ charges the cold restart either
+    /// way, and the comparison only has to rank regions, not predict
+    /// the transition exactly.)
+    #[allow(clippy::too_many_arguments)]
+    fn plan_migration(
+        &self,
+        ctx: &SlotContext,
+        view: &RegionView,
+        home_prices: &[f64],
+        home_avail_f: &[f64],
+        win: usize,
+        stay_utility: Option<f64>,
+    ) -> Option<usize> {
+        if view.candidates.is_empty() || !view.migration.cost.is_finite() {
+            return None;
+        }
+        // Reuse the Eq. 10 solve decide_home already paid for when
+        // behind schedule; the threshold (ahead) branch never priced
+        // the window, so solve it here.
+        let u_stay = match stay_utility {
+            Some(u) => u,
+            None => {
+                let home_avail: Vec<u32> = home_avail_f
+                    .iter()
+                    .map(|a| a.round().max(0.0) as u32)
+                    .collect();
+                let stay = HorizonProblem {
+                    job: ctx.job,
+                    models: ctx.models,
+                    start_slot: ctx.t,
+                    z0: ctx.progress,
+                    prices: home_prices,
+                    avail: &home_avail,
+                    n_prev: ctx.prev_total,
+                    terminal_kind: terminal_kind_for(ctx, win),
+                    migration: None,
+                };
+                self.solve_window(ctx, &stay).utility
+            }
+        };
+
+        let mut best: Option<(usize, f64)> = None;
+        for snap in view.candidates {
+            if snap.region == view.current {
+                continue;
+            }
+            // Candidate window: its observed slot + its forecast,
+            // truncated to the home window length (the planning horizon
+            // is the policy's ω either way).
+            let w = win.min(snap.forecast.horizon() + 1);
+            let mut prices = Vec::with_capacity(w);
+            let mut avail = Vec::with_capacity(w);
+            prices.push(snap.obs.spot_price);
+            avail.push(snap.obs.avail);
+            for i in 0..w.saturating_sub(1) {
+                prices.push(snap.forecast.price[i]);
+                avail.push(snap.forecast.avail[i].round().max(0.0) as u32);
+            }
+            let prob = HorizonProblem {
+                job: ctx.job,
+                models: ctx.models,
+                start_slot: ctx.t,
+                z0: ctx.progress,
+                prices: &prices,
+                avail: &avail,
+                n_prev: ctx.prev_total,
+                terminal_kind: terminal_kind_for(ctx, w),
+                migration: Some(view.migration),
+            };
+            let u = self.solve_window(ctx, &prob).utility;
+            // Strictly-greater keeps ties on the earlier region index.
+            let improves = match best {
+                Some((_, ub)) => u > ub,
+                None => true,
+            };
+            if improves {
+                best = Some((snap.region, u));
+            }
+        }
+        match best {
+            Some((r, u)) if u > u_stay => Some(r),
+            _ => None,
+        }
+    }
+}
+
+/// Mid-horizon windows must not see the blocky termination cost; a
+/// window reaching the deadline prices termination exactly (see
+/// [`TerminalKind`]).
+fn terminal_kind_for(ctx: &SlotContext, win: usize) -> TerminalKind {
+    if ctx.t + win >= ctx.job.deadline {
+        TerminalKind::Exact
+    } else {
+        TerminalKind::LinearCost
+    }
+}
+
+impl Policy for Ahap {
+    fn reset(&mut self) {
+        self.plans.clear();
+        self.predictor.reset();
+    }
+
+    fn decide(&mut self, ctx: &SlotContext) -> Allocation {
+        self.decide_home(ctx).0
+    }
+
+    /// Algorithm 1 with the migration term: the home decision is
+    /// computed exactly as [`decide`](Ahap::decide) (same predictor
+    /// calls, same committed plans), then candidate regions' windows are
+    /// priced against it — so when no migration fires, the trajectory is
+    /// bit-for-bit the single-market one.
+    fn decide_region(
+        &mut self,
+        ctx: &SlotContext,
+        view: &RegionView,
+    ) -> RegionDecision {
+        let (alloc, prices, avail_f, win, u_stay) = self.decide_home(ctx);
+        let migrate_to =
+            self.plan_migration(ctx, view, &prices, &avail_f, win, u_stay);
+        RegionDecision { alloc, migrate_to }
+    }
+
+    fn region_aware(&self) -> bool {
+        true
     }
 
     fn name(&self) -> String {
@@ -231,11 +391,11 @@ impl Policy for Ahap {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::forecast::predictor::OraclePredictor;
+    use crate::forecast::predictor::{Forecast, OraclePredictor};
     use crate::market::market::MarketObs;
     use crate::market::trace::SpotTrace;
     use crate::sched::job::Job;
-    use crate::sched::policy::Models;
+    use crate::sched::policy::{MigrationTerms, Models, RegionSnapshot};
     use crate::sched::throughput::{ReconfigModel, ThroughputModel};
 
     fn models() -> Models {
@@ -374,6 +534,113 @@ mod tests {
     fn invalid_commitment_rejected() {
         let tr = SpotTrace::new(vec![0.1], vec![1]);
         Ahap::new(2, 4, 0.5, oracle(&tr)); // v > ω+1
+    }
+
+    fn snapshot(region: usize, price: f64, avail: u32, h: usize) -> RegionSnapshot {
+        RegionSnapshot {
+            region,
+            obs: MarketObs { t: 0, spot_price: price, avail, on_demand_price: 1.0 },
+            forecast: Forecast {
+                price: vec![price; h],
+                avail: vec![avail as f64; h],
+            },
+        }
+    }
+
+    #[test]
+    fn region_decision_matches_decide_when_migration_impossible() {
+        // Infinite migration cost and an empty candidate list must both
+        // leave decide_region == decide with no intent (the degeneracy
+        // the fleet's bit-compat criteria rest on).
+        let tr = SpotTrace::new(vec![0.4; 8], vec![8; 8]);
+        let j = job();
+        let m = models();
+        let c = ctx(1, 0.4, 8, 0.0, &j, &m);
+        let snaps = vec![snapshot(1, 0.05, 12, 5)];
+        for (candidates, cost) in [
+            (&snaps[..], f64::INFINITY), // unpayable move
+            (&[][..], 0.0),              // nowhere to go
+        ] {
+            let mut a = Ahap::new(2, 1, 0.5, oracle(&tr));
+            let mut b = Ahap::new(2, 1, 0.5, oracle(&tr));
+            assert!(a.region_aware());
+            let view = RegionView {
+                current: 0,
+                candidates,
+                migration: MigrationTerms { cost, mu: 0.5 },
+            };
+            let d = a.decide_region(&c, &view);
+            assert_eq!(d.migrate_to, None);
+            assert_eq!(d.alloc, b.decide(&c));
+        }
+    }
+
+    #[test]
+    fn region_decision_flees_a_dead_home_market() {
+        // Home region: no spot at all (on-demand only). Candidate:
+        // plentiful cheap spot. A behind-schedule AHAP must emit the
+        // intent — the candidate window is worth strictly more even
+        // after the migration charge.
+        let tr = SpotTrace::new(vec![0.9; 8], vec![0; 8]);
+        let j = Job { workload: 60.0, deadline: 8, ..job() };
+        let m = models();
+        let mut p = Ahap::new(3, 1, 0.5, oracle(&tr));
+        let snaps = vec![snapshot(1, 0.2, 12, 3)];
+        let view = RegionView {
+            current: 0,
+            candidates: &snaps,
+            migration: MigrationTerms { cost: 1.0, mu: 0.5 },
+        };
+        let d = p.decide_region(&ctx(0, 0.9, 0, 0.0, &j, &m), &view);
+        assert_eq!(d.migrate_to, Some(1), "alloc was {:?}", d.alloc);
+    }
+
+    #[test]
+    fn region_decision_stays_when_home_is_best() {
+        // Home has cheap plentiful spot; the candidate is strictly worse
+        // — no intent, and the allocation is the plain decide one.
+        let tr = SpotTrace::new(vec![0.2; 8], vec![12; 8]);
+        let j = Job { workload: 60.0, deadline: 8, ..job() };
+        let m = models();
+        let mut p = Ahap::new(3, 1, 0.5, oracle(&tr));
+        let mut q = Ahap::new(3, 1, 0.5, oracle(&tr));
+        let snaps = vec![snapshot(1, 0.8, 2, 3)];
+        let view = RegionView {
+            current: 0,
+            candidates: &snaps,
+            migration: MigrationTerms { cost: 1.0, mu: 0.5 },
+        };
+        let c = ctx(0, 0.2, 12, 0.0, &j, &m);
+        let d = p.decide_region(&c, &view);
+        assert_eq!(d.migrate_to, None);
+        assert_eq!(d.alloc, q.decide(&c));
+    }
+
+    #[test]
+    fn free_migration_tracks_the_argmax_region() {
+        // With a free move (cost 0, μ 1) the comparison degenerates to
+        // "which region's window solves best" — a strictly better
+        // candidate always wins, ties stay home.
+        let tr = SpotTrace::new(vec![0.5; 8], vec![6; 8]);
+        let j = Job { workload: 60.0, deadline: 8, ..job() };
+        let m = models();
+        let free = MigrationTerms { cost: 0.0, mu: 1.0 };
+        let better = vec![snapshot(2, 0.2, 12, 3)];
+        let mut p = Ahap::new(3, 1, 0.5, oracle(&tr));
+        let d = p.decide_region(
+            &ctx(0, 0.5, 6, 0.0, &j, &m),
+            &RegionView { current: 0, candidates: &better, migration: free },
+        );
+        assert_eq!(d.migrate_to, Some(2));
+        // An identical twin region solves to exactly the same utility:
+        // strictly-greater comparison keeps the job home.
+        let twin = vec![snapshot(1, 0.5, 6, 3)];
+        let mut p = Ahap::new(3, 1, 0.5, oracle(&tr));
+        let d = p.decide_region(
+            &ctx(0, 0.5, 6, 0.0, &j, &m),
+            &RegionView { current: 0, candidates: &twin, migration: free },
+        );
+        assert_eq!(d.migrate_to, None);
     }
 
     #[test]

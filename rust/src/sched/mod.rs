@@ -17,5 +17,8 @@ pub mod simulate;
 pub mod throughput;
 
 pub use job::{Job, JobGenerator};
-pub use policy::{Allocation, Models, Policy, SlotContext};
+pub use policy::{
+    Allocation, MigrationTerms, Models, Policy, RegionDecision,
+    RegionSnapshot, RegionView, SlotContext,
+};
 pub use simulate::{run_episode, EpisodeResult};

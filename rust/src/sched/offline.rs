@@ -29,6 +29,7 @@ pub fn solve_offline(
         avail: &avail,
         n_prev: 0,
         terminal_kind: TerminalKind::Exact,
+        migration: None,
     };
     let sol = solve_dp(&prob, grid_step);
     // Report the model-true utility of the extracted plan (the DP value

@@ -1,7 +1,16 @@
 //! The policy abstraction: per-slot allocation decisions given the
 //! online observable state. AHAP, AHANP, and the baselines all implement
 //! [`Policy`]; the episode simulator drives them slot by slot.
+//!
+//! Policies running inside a multi-region fleet may additionally be
+//! handed a [`RegionView`] — the current region plus candidate regions'
+//! observed state and forecasts, and the migration price — through
+//! [`Policy::decide_region`]. Region-aware policies (AHAP) fold the
+//! migration term into their CHC subproblem and emit a migration
+//! *intent*; the default implementation ignores the view entirely, so
+//! every existing policy keeps its single-market behavior bit-for-bit.
 
+use crate::forecast::predictor::Forecast;
 use crate::market::market::MarketObs;
 use crate::sched::job::Job;
 use crate::sched::throughput::{ReconfigModel, ThroughputModel};
@@ -117,6 +126,56 @@ impl SlotContext<'_> {
     }
 }
 
+/// What a region move costs a planner: the flat monetary charge and the
+/// effective-computation fraction of the arrival slot (the pool restarts
+/// cold). Mirrors the fleet layer's migration model; defined here so the
+/// scheduling layer can price moves without depending on `fleet`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MigrationTerms {
+    /// Monetary cost charged at the move.
+    pub cost: f64,
+    /// μ applied to the first slot in the destination region, in [0, 1].
+    pub mu: f64,
+}
+
+/// One candidate region as a region-aware policy sees it at a slot: the
+/// region's *observed* state this slot plus a forecast of the slots
+/// ahead (served by the fleet's shared cross-region forecast caches for
+/// honest-ARIMA jobs, true trace values otherwise).
+#[derive(Debug, Clone)]
+pub struct RegionSnapshot {
+    pub region: usize,
+    /// The candidate region's market at the current slot.
+    pub obs: MarketObs,
+    /// Forecast of the candidate's next slots (entry `i` → slot `t+1+i`).
+    pub forecast: Forecast,
+}
+
+/// The region-aware slot view handed to [`Policy::decide_region`]: where
+/// the job currently runs, what the other regions look like, and what a
+/// move costs. Single-region fleets hand over an empty candidate list,
+/// which makes the region-aware path a trivial no-op.
+#[derive(Debug, Clone, Copy)]
+pub struct RegionView<'a> {
+    /// Region the job currently occupies.
+    pub current: usize,
+    /// Snapshots of the *other* regions (never includes `current`).
+    pub candidates: &'a [RegionSnapshot],
+    /// Price of moving (the fleet's migration model).
+    pub migration: MigrationTerms,
+}
+
+/// A region-aware slot decision: the allocation to execute *in the
+/// current region* this slot, plus an optional migration intent the
+/// engine books at the end of the slot (the job enters the target region
+/// at the next slot, paying the migration model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegionDecision {
+    pub alloc: Allocation,
+    /// Region to move to after this slot, if the policy wants to.
+    pub migrate_to: Option<usize>,
+}
+
 /// A per-slot allocation policy. `reset` is called at the start of every
 /// episode so one policy instance can be reused across jobs.
 ///
@@ -125,6 +184,28 @@ impl SlotContext<'_> {
 pub trait Policy: Send {
     fn reset(&mut self);
     fn decide(&mut self, ctx: &SlotContext) -> Allocation;
+
+    /// Region-aware decision: the fleet engine calls this (instead of
+    /// [`decide`](Policy::decide)) when policy-driven migration is
+    /// enabled. The default delegates to `decide` and never migrates, so
+    /// non-region-aware policies are untouched bit-for-bit.
+    fn decide_region(
+        &mut self,
+        ctx: &SlotContext,
+        view: &RegionView,
+    ) -> RegionDecision {
+        let _ = view;
+        RegionDecision { alloc: self.decide(ctx), migrate_to: None }
+    }
+
+    /// Whether this policy emits its own migration intents via
+    /// [`decide_region`](Policy::decide_region). The engine's
+    /// starvation-patience reflex stays the fallback only for policies
+    /// that return `false` here.
+    fn region_aware(&self) -> bool {
+        false
+    }
+
     fn name(&self) -> String;
 }
 
@@ -169,6 +250,48 @@ mod tests {
         let a = Allocation::new(0, 16).clamp_to_job(&job(), 16);
         assert_eq!(a.total(), 12);
         assert_eq!(a.spot, 12);
+    }
+
+    #[test]
+    fn default_decide_region_delegates_and_never_migrates() {
+        // A minimal non-region-aware policy: the default decide_region
+        // must return exactly `decide`'s allocation with no intent.
+        struct Fixed;
+        impl Policy for Fixed {
+            fn reset(&mut self) {}
+            fn decide(&mut self, _ctx: &SlotContext) -> Allocation {
+                Allocation::new(1, 2)
+            }
+            fn name(&self) -> String {
+                "fixed".into()
+            }
+        }
+        let j = job();
+        let m = Models::paper_default();
+        let ctx = SlotContext {
+            t: 0,
+            obs: MarketObs { t: 0, spot_price: 0.5, avail: 4, on_demand_price: 1.0 },
+            progress: 0.0,
+            prev_total: 0,
+            prev_avail: 0,
+            job: &j,
+            models: &m,
+        };
+        let snaps = vec![RegionSnapshot {
+            region: 1,
+            obs: MarketObs { t: 0, spot_price: 0.1, avail: 12, on_demand_price: 1.0 },
+            forecast: Forecast { price: vec![0.1], avail: vec![12.0] },
+        }];
+        let view = RegionView {
+            current: 0,
+            candidates: &snaps,
+            migration: MigrationTerms { cost: 0.0, mu: 1.0 },
+        };
+        let mut p = Fixed;
+        assert!(!p.region_aware());
+        let d = p.decide_region(&ctx, &view);
+        assert_eq!(d.alloc, p.decide(&ctx));
+        assert_eq!(d.migrate_to, None);
     }
 
     #[test]

@@ -92,6 +92,39 @@ impl Rng {
         xm / u.powf(1.0 / alpha)
     }
 
+    /// Poisson with mean `lambda` — exact for *any* finite mean, O(λ)
+    /// draws. Knuth's product-of-uniforms method underflows once
+    /// `exp(-λ)` rounds to zero (λ ≳ 745), so large means are sampled
+    /// as a sum of independent small-mean chunks (Poisson is additive
+    /// in its mean). Returns 0 for `lambda <= 0`.
+    pub fn poisson(&mut self, lambda: f64) -> u32 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        const CHUNK: f64 = 16.0;
+        let mut total = 0u32;
+        let mut rem = lambda;
+        while rem > CHUNK {
+            total = total.saturating_add(self.poisson_knuth(CHUNK));
+            rem -= CHUNK;
+        }
+        total.saturating_add(self.poisson_knuth(rem))
+    }
+
+    /// Knuth's method, valid for small `lambda` (callers chunk).
+    fn poisson_knuth(&mut self, lambda: f64) -> u32 {
+        let l = (-lambda).exp();
+        let mut k = 0u32;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l || k >= 10_000 {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
     /// Exponential with rate `lambda`.
     pub fn exp(&mut self, lambda: f64) -> f64 {
         let mut u = self.f64();
@@ -196,6 +229,25 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn poisson_mean_and_edge_cases() {
+        let mut r = Rng::new(29);
+        let n = 50_000;
+        let lambda = 1.5;
+        let m: f64 =
+            (0..n).map(|_| r.poisson(lambda) as f64).sum::<f64>() / n as f64;
+        assert!((m - lambda).abs() < 0.05, "mean={m}");
+        assert_eq!(r.poisson(0.0), 0);
+        assert_eq!(r.poisson(-1.0), 0);
+        // Large means must not underflow Knuth's exp(-λ): the chunked
+        // sampler keeps the mean right where the naive method would cap
+        // out near ~744.
+        let n = 2_000;
+        let big: f64 =
+            (0..n).map(|_| r.poisson(1000.0) as f64).sum::<f64>() / n as f64;
+        assert!((big - 1000.0).abs() < 5.0, "mean={big}");
     }
 
     #[test]

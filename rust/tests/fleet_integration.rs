@@ -7,7 +7,8 @@
 use spotfine::fleet::{
     arbitrate, run_fleet_selection, run_fleet_sweep, run_selection_parallel,
     FleetContendedEvaluator, FleetEngine, FleetJobSpec, FleetScenario,
-    MigrationModel, Region, RegionSet, ReplayPlan, SpotRequest, Tier,
+    MigrationMode, MigrationModel, Region, RegionSet, ReplayPlan, SpotRequest,
+    Tier,
 };
 use spotfine::forecast::noise::NoiseSpec;
 use spotfine::market::generator::{GeneratorConfig, TraceGenerator};
@@ -89,6 +90,126 @@ fn one_job_fleet_reproduces_run_episode_for_every_pool_policy() {
             );
         }
     }
+}
+
+/// The acceptance degeneracy at pool scale: region-aware planning with
+/// an **unpayable** migration (infinite cost) must reproduce today's
+/// single-region trajectories bit-for-bit for the entire 112-policy
+/// pool — even with other regions visibly better. AHAP's decide_region
+/// computes the home decision exactly as decide (same predictor calls,
+/// same committed plans) and never emits an intent it cannot pay for;
+/// every other policy takes the default decide_region path.
+#[test]
+fn policy_mode_with_infinite_migration_cost_reproduces_run_episode_pool_wide() {
+    let job = Job::paper_reference();
+    let models = Models::paper_default();
+    let gen = TraceGenerator::calibrated();
+    let home = gen.generate(17).slice_from(60);
+    // A strictly richer second region — tempting, but unpayable.
+    let rich = SpotTrace::new(
+        vec![0.05; home.len()],
+        vec![16; home.len()],
+    );
+    let regions = RegionSet::new(vec![
+        Region { name: "home".into(), trace: home.clone() },
+        Region { name: "rich".into(), trace: rich },
+    ])
+    .with_migration(MigrationModel::unpayable());
+
+    let mut specs = paper_pool();
+    specs.push(PolicySpec::OdOnly);
+    specs.push(PolicySpec::Msu);
+    specs.push(PolicySpec::UniformProgress);
+
+    for (i, spec) in specs.iter().enumerate() {
+        for predictor in [
+            PredictorKind::Oracle,
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.2)),
+            PredictorKind::arima(),
+        ] {
+            let seed = 4000 + i as u64;
+            let env = PolicyEnv::new(predictor.clone(), home.clone(), seed);
+            let mut policy = spec.build(&env);
+            let solo = run_episode(&job, &home, &models, policy.as_mut());
+
+            let fleet_spec =
+                FleetJobSpec::new(job, *spec, predictor).with_seed(seed);
+            let fleet = FleetEngine::new(models, regions.clone())
+                .with_migration_patience(0)
+                .with_migration_mode(MigrationMode::Policy)
+                .run(&[fleet_spec]);
+            assert_eq!(
+                fleet.jobs[0].episode,
+                solo,
+                "policy-mode fleet != episode for {}",
+                spec.label()
+            );
+            assert_eq!(fleet.jobs[0].migrations, 0);
+        }
+    }
+}
+
+/// The other degeneracy: free migration + oracle forecasts ⇒ the
+/// region-aware planner always sits in the argmax-utility region. With
+/// one region strictly dominant throughout (cheaper, deeper), AHAP must
+/// move there at the very first decision and never come back.
+#[test]
+fn free_migration_with_oracle_forecasts_sits_in_the_argmax_region() {
+    let models = Models::paper_default();
+    let slots = 20;
+    let poor = SpotTrace::new(vec![0.6; slots], vec![2; slots]);
+    let rich = SpotTrace::new(vec![0.2; slots], vec![12; slots]);
+    let regions = RegionSet::new(vec![
+        Region { name: "poor".into(), trace: poor },
+        Region { name: "rich".into(), trace: rich },
+    ])
+    .with_migration(MigrationModel::free());
+    let job = Job {
+        workload: 100.0,
+        deadline: 14,
+        n_min: 1,
+        n_max: 12,
+        value: 160.0,
+        gamma: 1.5,
+    };
+    let engine = FleetEngine::new(models, regions)
+        .with_migration_patience(0) // intents only — no reflex
+        .with_migration_mode(MigrationMode::Policy);
+    let spec = FleetJobSpec::new(
+        job,
+        PolicySpec::Ahap { omega: 4, v: 1, sigma: 0.7 },
+        PredictorKind::Oracle,
+    );
+    let rec = engine.run_recorded(&[spec]);
+    let outcome = &rec.result.jobs[0];
+    assert_eq!(outcome.migrations, 1, "exactly one move: {outcome:?}");
+    assert_eq!(outcome.final_region, 1);
+    let trace = &rec.traces[0];
+    // Slot 0 is spent in the (dominated) home region — the intent is
+    // booked at the end of the first decision — and every slot after
+    // that sits in the argmax-utility region.
+    assert_eq!(trace.regions[0], 0);
+    assert!(
+        trace.regions[1..].iter().all(|&r| r == 1),
+        "planner left the argmax region: {:?}",
+        trace.regions
+    );
+}
+
+/// Churned fleets stay inside the engine's invariants and the sweep
+/// determinism guarantee (the churn smoke test).
+#[test]
+fn churned_fleet_smoke() {
+    let sc = FleetScenario::new(6, 2, 31).with_stagger(2).with_churn(0.8);
+    let r = sc.run();
+    assert!(r.jobs.len() > 6, "churn should add background jobs");
+    for (granted, avail) in r.region_granted.iter().zip(&r.region_avail) {
+        for (g, a) in granted.iter().zip(avail) {
+            assert!(g <= a);
+        }
+    }
+    let r2 = sc.run();
+    assert_eq!(r, r2);
 }
 
 /// Capacity conservation under random contention: for every region and

@@ -9,8 +9,8 @@
 //! policy selector's counterfactuals — silently rely on every slot.
 
 use spotfine::fleet::{
-    arbitrate, FleetContendedEvaluator, FleetScenario, ReplayPlan, SpotRequest,
-    Tier,
+    arbitrate, FleetContendedEvaluator, FleetScenario, MigrationMode,
+    ReplayPlan, SpotRequest, Tier,
 };
 use spotfine::market::generator::TraceGenerator;
 use spotfine::prop_assert;
@@ -191,7 +191,8 @@ fn random_candidates(rng: &mut Rng, n: usize) -> Vec<PolicySpec> {
 }
 
 /// The delta-replay contract: over random fleets (size, regions,
-/// stagger, migration patience, predictor kinds, seeds), every candidate
+/// stagger, migration patience, migration *mode* — policy-driven
+/// intents included — churn, predictor kinds, seeds), every candidate
 /// override evaluated through `ReplayPlan` — forks on and off — equals
 /// the full `run_with_override` re-simulation bit-for-bit, for any
 /// choice of live job.
@@ -206,6 +207,12 @@ fn prop_delta_replay_is_bit_identical_to_full_replay() {
             let mut sc = FleetScenario::new(n_jobs, n_regions, rng.next_u64());
             sc.stagger = rng.int_range(0, 3) as usize;
             sc.migration_patience = rng.int_range(0, 3) as usize;
+            if rng.bool(0.5) {
+                sc.migration_mode = MigrationMode::Policy;
+            }
+            if rng.bool(0.3) {
+                sc.churn = 0.4;
+            }
             let (engine, mut specs) = sc.build();
             // Mix in honest-ARIMA jobs: the replay path must serve the
             // engine's shared forecast caches exactly like the full one.
@@ -226,10 +233,13 @@ fn prop_delta_replay_is_bit_identical_to_full_replay() {
                 prop_assert!(
                     d == full,
                     "delta != full for {} (live job {live}, {n_jobs} jobs, \
-                     {n_regions} regions, stagger {}, patience {})",
+                     {n_regions} regions, stagger {}, patience {}, \
+                     mode {:?}, churn {})",
                     cand.label(),
                     sc.stagger,
-                    sc.migration_patience
+                    sc.migration_patience,
+                    sc.migration_mode,
+                    sc.churn
                 );
                 let d2 = plan_noforks.counterfactual(cand);
                 prop_assert!(
@@ -272,14 +282,21 @@ fn prop_delta_selection_round_is_thread_and_engine_invariant() {
                 trace.clone(),
                 rng.next_u64(),
             );
+            let mode = if rng.bool(0.5) {
+                MigrationMode::Policy
+            } else {
+                MigrationMode::Starvation
+            };
             let mut reference =
                 FleetContendedEvaluator::synthetic(n_bg, n_regions, fleet_seed)
+                    .with_migration_mode(mode)
                     .with_full_replay()
                     .with_dedupe(false);
             let want = reference.utilities(&pool, &job, &trace, &models, &env);
             for threads in [1usize, 2 + rng.index(3)] {
                 let mut ev =
                     FleetContendedEvaluator::synthetic(n_bg, n_regions, fleet_seed)
+                        .with_migration_mode(mode)
                         .with_threads(threads);
                 let got = ev.utilities(&pool, &job, &trace, &models, &env);
                 prop_assert!(

@@ -152,6 +152,7 @@ fn prop_greedy_matches_dp_on_linear_model() {
                 avail: &avail,
                 n_prev: 0,
                 terminal_kind: TerminalKind::Exact,
+                migration: None,
             };
             let g = solve_greedy(&prob);
             let d = solve_dp(&prob, 0.25);
