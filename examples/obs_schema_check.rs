@@ -1,0 +1,63 @@
+//! Validate a JSONL trace written by `--trace` against the obs event
+//! schema — the CI gate that keeps the emitted format and the documented
+//! schema from drifting apart.
+//!
+//!     cargo run --release --example obs_schema_check -- trace.jsonl
+//!
+//! Every line must parse as JSON and carry exactly the fields its
+//! `kind` declares (extra or missing fields fail). Prints per-kind line
+//! counts on success; exits nonzero naming the first offending line
+//! otherwise.
+
+use std::collections::BTreeMap;
+use std::process::ExitCode;
+
+use spotfine::obs::schema::validate_line;
+
+fn main() -> ExitCode {
+    let Some(path) = std::env::args().nth(1) else {
+        eprintln!("usage: obs_schema_check <trace.jsonl>");
+        return ExitCode::FAILURE;
+    };
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: cannot read {path}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let mut counts: BTreeMap<&'static str, usize> = BTreeMap::new();
+    let mut total = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match validate_line(line) {
+            Ok(kind) => {
+                *counts.entry(kind).or_insert(0) += 1;
+                total += 1;
+            }
+            Err(e) => {
+                eprintln!("{path}:{}: schema violation: {e}", i + 1);
+                eprintln!("  {line}");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    if total == 0 {
+        eprintln!("error: {path} contains no events");
+        return ExitCode::FAILURE;
+    }
+
+    println!("{path}: {total} event(s), all valid");
+    for (kind, n) in &counts {
+        println!("  {kind:<16} {n}");
+    }
+    // A complete trace ends with exactly one summary line.
+    if counts.get("summary") != Some(&1) {
+        eprintln!("error: expected exactly one summary event");
+        return ExitCode::FAILURE;
+    }
+    ExitCode::SUCCESS
+}

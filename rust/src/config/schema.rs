@@ -60,6 +60,16 @@ impl Default for FleetSettings {
     }
 }
 
+/// Observability knobs (`[obs]` in TOML). CLI flags (`--trace`,
+/// `--obs-summary`) override these when both are given.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ObsSettings {
+    /// JSONL trace destination; `None` leaves the recorder disabled.
+    pub trace: Option<String>,
+    /// Print the aggregated obs summary table after the run.
+    pub summary: bool,
+}
+
 /// Top-level experiment configuration.
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -69,6 +79,7 @@ pub struct ExperimentConfig {
     pub noise: NoiseSpec,
     pub forecast: ForecastSettings,
     pub fleet: FleetSettings,
+    pub obs: ObsSettings,
     pub selection_jobs: usize,
     pub seed: u64,
     /// Directory where benches/figures write CSVs.
@@ -86,6 +97,7 @@ impl Default for ExperimentConfig {
             noise: NoiseSpec::fixed_mag_uniform(0.1),
             forecast: ForecastSettings::default(),
             fleet: FleetSettings::default(),
+            obs: ObsSettings::default(),
             selection_jobs: 1000,
             seed: 7,
             results_dir: "results".to_string(),
@@ -233,6 +245,19 @@ impl ExperimentConfig {
             };
         }
         read_opt!(doc, "fleet.churn", as_float, cfg.fleet.churn);
+
+        // [obs]
+        if let Some(v) = doc.get("obs.trace") {
+            let s = v.as_str().ok_or_else(|| {
+                ConfigError::Invalid("`obs.trace` must be a string path".into())
+            })?;
+            cfg.obs.trace = Some(s.to_string());
+        }
+        if let Some(v) = doc.get("obs.summary") {
+            cfg.obs.summary = v.as_bool().ok_or_else(|| {
+                ConfigError::Invalid("`obs.summary` must be a boolean".into())
+            })?;
+        }
 
         // [run]
         let mut k = cfg.selection_jobs as i64;
@@ -425,6 +450,23 @@ mod tests {
         )
         .is_err());
         assert!(ExperimentConfig::from_toml_str("[fleet]\nchurn = -0.1\n").is_err());
+    }
+
+    #[test]
+    fn obs_section_parses_and_defaults_off() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[obs]\ntrace = \"out/trace.jsonl\"\nsummary = true\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.obs.trace.as_deref(), Some("out/trace.jsonl"));
+        assert!(cfg.obs.summary);
+        // Default: tracing disabled, no summary — the zero-overhead path.
+        let d = ExperimentConfig::from_toml_str("").unwrap();
+        assert_eq!(d.obs, ObsSettings::default());
+        assert!(d.obs.trace.is_none());
+        assert!(!d.obs.summary);
+        assert!(ExperimentConfig::from_toml_str("[obs]\ntrace = 7\n").is_err());
+        assert!(ExperimentConfig::from_toml_str("[obs]\nsummary = \"yes\"\n").is_err());
     }
 
     #[test]

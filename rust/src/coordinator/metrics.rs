@@ -1,9 +1,14 @@
 //! Run metrics: per-slot records plus aggregate counters, exportable to
 //! CSV for the figures and EXPERIMENTS.md.
+//!
+//! Export goes through the shared [`crate::obs::sink`] typed-row writer
+//! so every CSV the crate emits uses one formatting/quoting path; the
+//! column set and per-column precision here are unchanged — they are a
+//! byte-compatibility contract with existing figure scripts.
 
 use std::path::Path;
 
-use crate::util::csvio::CsvWriter;
+use crate::obs::sink::{write_csv, Cell};
 
 /// One slot's record in the coordinated run.
 #[derive(Debug, Clone, PartialEq)]
@@ -65,41 +70,47 @@ impl Metrics {
         Some(head.iter().map(|(_, l)| l).sum::<f32>() / head.len() as f32)
     }
 
-    /// Write the per-slot table to CSV.
+    /// Write the per-slot table to CSV (columns and precision are a
+    /// stability contract — do not change them).
     pub fn write_slots_csv(&self, path: &Path) -> std::io::Result<()> {
-        let mut w = CsvWriter::create(
+        let rows: Vec<Vec<Cell>> = self
+            .slots
+            .iter()
+            .map(|r| {
+                vec![
+                    Cell::UInt(r.slot as u64),
+                    Cell::F64(r.spot_price, 4),
+                    Cell::UInt(r.avail as u64),
+                    Cell::UInt(r.on_demand as u64),
+                    Cell::UInt(r.spot as u64),
+                    Cell::F64(r.mu, 3),
+                    Cell::F64(r.progress, 2),
+                    Cell::F64(r.cost, 4),
+                    Cell::F32(r.mean_loss, 4),
+                    Cell::UInt(r.steps as u64),
+                    Cell::UInt(r.preemptions as u64),
+                ]
+            })
+            .collect();
+        write_csv(
             path,
             &[
                 "slot", "spot_price", "avail", "on_demand", "spot", "mu",
                 "progress", "cost", "mean_loss", "steps", "preemptions",
             ],
+            &rows,
         )?;
-        for r in &self.slots {
-            w.row(&[
-                r.slot.to_string(),
-                format!("{:.4}", r.spot_price),
-                r.avail.to_string(),
-                r.on_demand.to_string(),
-                r.spot.to_string(),
-                format!("{:.3}", r.mu),
-                format!("{:.2}", r.progress),
-                format!("{:.4}", r.cost),
-                format!("{:.4}", r.mean_loss),
-                r.steps.to_string(),
-                r.preemptions.to_string(),
-            ]);
-        }
-        w.finish()?;
         Ok(())
     }
 
     /// Write the loss curve to CSV.
     pub fn write_loss_csv(&self, path: &Path) -> std::io::Result<()> {
-        let mut w = CsvWriter::create(path, &["step", "loss"])?;
-        for (s, l) in &self.losses {
-            w.row(&[s.to_string(), format!("{l:.6}")]);
-        }
-        w.finish()?;
+        let rows: Vec<Vec<Cell>> = self
+            .losses
+            .iter()
+            .map(|&(s, l)| vec![Cell::Int(s as i64), Cell::F32(l, 6)])
+            .collect();
+        write_csv(path, &["step", "loss"], &rows)?;
         Ok(())
     }
 }
@@ -156,6 +167,40 @@ mod tests {
         let s = std::fs::read_to_string(dir.join("slots.csv")).unwrap();
         assert!(s.starts_with("slot,"));
         assert_eq!(s.lines().count(), 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn csv_columns_match_the_legacy_format_exactly() {
+        // Routing through the shared obs sink must reproduce the
+        // historical hand-formatted rows byte for byte.
+        let mut m = Metrics::new();
+        m.record_slot(SlotRecord {
+            slot: 3,
+            spot_price: 0.12345,
+            avail: 7,
+            on_demand: 2,
+            spot: 5,
+            mu: 0.8,
+            progress: 12.3456,
+            cost: 1.98765,
+            mean_loss: 2.71828,
+            steps: 9,
+            preemptions: 1,
+        });
+        m.record_loss(-1, 0.333_333);
+        let dir = std::env::temp_dir()
+            .join(format!("spotfine_metrics_fmt_{}", std::process::id()));
+        m.write_slots_csv(&dir.join("slots.csv")).unwrap();
+        m.write_loss_csv(&dir.join("loss.csv")).unwrap();
+        let slots = std::fs::read_to_string(dir.join("slots.csv")).unwrap();
+        let expect = format!(
+            "3,{:.4},7,2,5,{:.3},{:.2},{:.4},{:.4},9,1",
+            0.12345, 0.8, 12.3456, 1.98765, 2.71828f32
+        );
+        assert_eq!(slots.lines().nth(1).unwrap(), expect);
+        let loss = std::fs::read_to_string(dir.join("loss.csv")).unwrap();
+        assert_eq!(loss.lines().nth(1).unwrap(), format!("-1,{:.6}", 0.333_333f32));
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -18,6 +18,7 @@ use crate::fleet::region::{MigrationMode, MigrationModel, RegionSet};
 use crate::forecast::arima::{ArimaConfig, ArimaPredictor};
 use crate::forecast::cache::{ForecastCachePool, RegionForecasts, SharedForecaster};
 use crate::forecast::predictor::{Forecast, Predictor};
+use crate::obs::{Counter, Event, MigrationPhase, Recorder};
 use crate::sched::job::Job;
 use crate::sched::policy::{
     Allocation, Models, Policy, RegionDecision, RegionSnapshot, RegionView,
@@ -226,6 +227,9 @@ pub struct FleetEngine {
     /// clones share the pool. `None` = private per-policy fits (the
     /// reference path; results are bit-identical either way).
     forecasts: Option<ForecastCachePool>,
+    /// Tracing handle — disabled (a no-op) by default. A traced run
+    /// produces a bit-identical [`FleetResult`]; see [`crate::obs`].
+    obs: Recorder,
 }
 
 impl FleetEngine {
@@ -236,7 +240,23 @@ impl FleetEngine {
             migration_patience: 2,
             migration_mode: MigrationMode::default(),
             forecasts: Some(ForecastCachePool::new()),
+            obs: Recorder::disabled(),
         }
+    }
+
+    /// Attach a tracing recorder (see [`crate::obs`]). [`run`] and
+    /// [`run_recorded`] emit arbitration, preemption, migration-intent,
+    /// and forecast-cache events into it; [`run_with_override`] never
+    /// traces (a selection round replays many counterfactuals in
+    /// parallel — tracing them would be both noisy and, merged into one
+    /// stream, schedule-dependent).
+    ///
+    /// [`run`]: FleetEngine::run
+    /// [`run_recorded`]: FleetEngine::run_recorded
+    /// [`run_with_override`]: FleetEngine::run_with_override
+    pub fn with_recorder(mut self, obs: Recorder) -> Self {
+        self.obs = obs;
+        self
     }
 
     pub fn with_migration_patience(mut self, patience: usize) -> Self {
@@ -260,7 +280,10 @@ impl FleetEngine {
     /// exhausts its deadline horizon (post-deadline termination is
     /// settled analytically, exactly as in `run_episode`).
     pub fn run(&self, specs: &[FleetJobSpec]) -> FleetResult {
-        self.run_inner(specs, self.live_drivers(specs), false).0
+        let result =
+            self.run_inner(specs, self.live_drivers(specs), false, &self.obs).0;
+        self.emit_forecast_stats();
+        result
     }
 
     /// [`FleetEngine::run`], additionally recording every job's
@@ -271,8 +294,29 @@ impl FleetEngine {
     /// [`run_with_override`]: FleetEngine::run_with_override
     pub fn run_recorded(&self, specs: &[FleetJobSpec]) -> CommittedRun {
         let (result, traces) =
-            self.run_inner(specs, self.live_drivers(specs), true);
+            self.run_inner(specs, self.live_drivers(specs), true, &self.obs);
+        self.emit_forecast_stats();
         CommittedRun { result, traces }
+    }
+
+    /// Emit the shared forecast-cache statistics as one
+    /// `forecast_cache` event (traced full runs only; a no-op when the
+    /// recorder is disabled or the pool is off).
+    fn emit_forecast_stats(&self) {
+        if !self.obs.is_enabled() {
+            return;
+        }
+        let Some(pool) = &self.forecasts else { return };
+        let s = pool.stats();
+        self.obs.emit(|| Event::ForecastCache {
+            round: self.obs.round(),
+            caches: s.caches,
+            slots: s.slots,
+            hits: s.hits,
+            misses: s.misses,
+            fits_price: s.fits_price,
+            fits_avail: s.fits_avail,
+        });
     }
 
     /// Re-run the fleet with job `live_job`'s policy swapped for
@@ -318,7 +362,11 @@ impl FleetEngine {
             .collect();
         let mut all = specs.to_vec();
         all[live_job] = swapped;
-        self.run_inner(&all, drivers, false).0
+        // Overridden runs deliberately bypass the recorder: a selection
+        // round replays many of them in parallel, and tracing them would
+        // make the merged stream (and the disabled-path cost of every
+        // counterfactual) depend on the round's schedule.
+        self.run_inner(&all, drivers, false, &Recorder::disabled()).0
     }
 
     /// The policy environment for a job running in `region`: the
@@ -442,6 +490,31 @@ impl FleetEngine {
         })
     }
 
+    /// Why an emitted intent failed [`validate_intent`]: the first
+    /// failing condition, in validation order. Trace diagnostics only —
+    /// never consulted on the simulation path.
+    ///
+    /// [`validate_intent`]: FleetEngine::validate_intent
+    fn intent_reject_reason(
+        &self,
+        to: usize,
+        current: usize,
+        s: &FleetJobSpec,
+        local_t: usize,
+    ) -> &'static str {
+        if self.migration_mode != MigrationMode::Policy {
+            "not_policy_mode"
+        } else if to >= self.regions.len() {
+            "out_of_range"
+        } else if to == current {
+            "same_region"
+        } else if !self.regions.migration.cost.is_finite() {
+            "unpayable"
+        } else {
+            "last_decision_slot"
+        }
+    }
+
     /// The candidate-region forecast a region-aware policy sees:
     /// honest-ARIMA jobs read the shared cross-region cache (or a
     /// bit-identical private fit on the reference path); oracle and
@@ -558,6 +631,7 @@ impl FleetEngine {
         specs: &[FleetJobSpec],
         drivers: Vec<JobDriver<'a>>,
         record: bool,
+        rec: &Recorder,
     ) -> (FleetResult, Vec<CommittedTrace>) {
         assert_eq!(specs.len(), drivers.len());
         for s in specs {
@@ -688,15 +762,49 @@ impl FleetEngine {
                                 migrate_to: None,
                             }
                         };
-                        (
-                            decision.alloc.clamp_to_job(&s.job, obs.avail),
-                            self.validate_intent(
-                                decision.migrate_to,
-                                region_now,
-                                s,
-                                local_t,
-                            ),
-                        )
+                        let validated = self.validate_intent(
+                            decision.migrate_to,
+                            region_now,
+                            s,
+                            local_t,
+                        );
+                        if let Some(to) = decision.migrate_to {
+                            rec.add(Counter::IntentsEmitted, 1);
+                            rec.emit(|| Event::Migration {
+                                round: rec.round(),
+                                slot: t,
+                                job: j,
+                                from: region_now,
+                                to,
+                                phase: MigrationPhase::Emitted,
+                                reason: None,
+                            });
+                            if validated.is_some() {
+                                rec.emit(|| Event::Migration {
+                                    round: rec.round(),
+                                    slot: t,
+                                    job: j,
+                                    from: region_now,
+                                    to,
+                                    phase: MigrationPhase::Validated,
+                                    reason: None,
+                                });
+                            } else {
+                                rec.add(Counter::IntentsRejected, 1);
+                                rec.emit(|| Event::Migration {
+                                    round: rec.round(),
+                                    slot: t,
+                                    job: j,
+                                    from: region_now,
+                                    to,
+                                    phase: MigrationPhase::Rejected,
+                                    reason: Some(self.intent_reject_reason(
+                                        to, region_now, s, local_t,
+                                    )),
+                                });
+                            }
+                        }
+                        (decision.alloc.clamp_to_job(&s.job, obs.avail), validated)
                     }
                     // Recorded wants are post-clamp against the same
                     // job and the same observation (regions replay, so
@@ -742,6 +850,35 @@ impl FleetEngine {
                     spot_grant[g.job] = g.granted;
                     preempted[g.job] = g.preempted;
                     granted_sum += g.granted;
+                }
+                // Trace the arbitration outcome (one branch when off).
+                if rec.is_enabled() && !members.is_empty() {
+                    rec.add(Counter::Arbitrations, 1);
+                    let requested: u32 = requests.iter().map(|q| q.want).sum();
+                    let preempted_jobs =
+                        grants.iter().filter(|g| g.preempted > 0).count();
+                    rec.emit(|| Event::Arbitration {
+                        round: rec.round(),
+                        slot: t,
+                        region: r,
+                        avail,
+                        requested,
+                        granted: granted_sum,
+                        contenders: members.len(),
+                        preempted_jobs,
+                    });
+                    for g in &grants {
+                        if g.preempted > 0 {
+                            rec.add(Counter::Preemptions, 1);
+                            rec.emit(|| Event::Preemption {
+                                round: rec.round(),
+                                slot: t,
+                                region: r,
+                                job: g.job,
+                                lost: g.preempted,
+                            });
+                        }
+                    }
                 }
                 region_granted[r].push(granted_sum);
                 region_avail[r].push(avail);
@@ -820,7 +957,18 @@ impl FleetEngine {
                     // policy plans *warm*: its predictor is served the
                     // destination's full observed history by the
                     // cross-region forecast cache.
+                    let from = st.region;
                     st.book_migration(best, &self.regions.migration);
+                    rec.add(Counter::MigrationsBooked, 1);
+                    rec.emit(|| Event::Migration {
+                        round: rec.round(),
+                        slot: t,
+                        job: j,
+                        from,
+                        to: best,
+                        phase: MigrationPhase::Booked,
+                        reason: Some("intent"),
+                    });
                     st.driver =
                         JobDriver::Live(self.rebuild_policy(s, best));
                 } else if !suppress_reflex
@@ -837,7 +985,18 @@ impl FleetEngine {
                     if best != st.region
                         && self.regions.avail(best, t) > obs.avail
                     {
+                        let from = st.region;
                         st.book_migration(best, &self.regions.migration);
+                        rec.add(Counter::MigrationsBooked, 1);
+                        rec.emit(|| Event::Migration {
+                            round: rec.round(),
+                            slot: t,
+                            job: j,
+                            from,
+                            to: best,
+                            phase: MigrationPhase::Booked,
+                            reason: Some("reflex"),
+                        });
                         st.driver =
                             JobDriver::Live(self.rebuild_policy(s, best));
                     }
@@ -1269,6 +1428,63 @@ mod tests {
             counter.jobs[1].episode.spot_slots,
             rec.result.jobs[1].episode.spot_slots
         );
+    }
+
+    #[test]
+    fn traced_run_is_bit_identical_and_narrates_the_contention() {
+        let j = job();
+        let trace = flat_trace(0.3, 6, 24);
+        let specs = vec![
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::High),
+            FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle)
+                .with_tier(Tier::Low),
+        ];
+        let plain = engine_single(trace.clone()).run(&specs);
+        let rec = crate::obs::Recorder::enabled();
+        let traced =
+            engine_single(trace).with_recorder(rec.clone()).run(&specs);
+        assert_eq!(traced, plain, "tracing must not perturb the run");
+        let log = rec.finish().unwrap();
+        let has = |kind: &str| {
+            log.lines
+                .iter()
+                .any(|l| l.starts_with(&format!("{{\"kind\":\"{kind}\"")))
+        };
+        assert!(has("arbitration"));
+        assert!(has("forecast_cache"));
+        assert!(has("summary"));
+        let counters: std::collections::HashMap<_, _> =
+            log.counters.iter().copied().collect();
+        assert!(counters["arbitrations"] > 0);
+    }
+
+    #[test]
+    fn traced_migration_books_with_a_reason() {
+        let j = job();
+        let dead = flat_trace(0.5, 0, 16);
+        let rich = flat_trace(0.4, 12, 16);
+        let regions = RegionSet::new(vec![
+            Region { name: "dead".into(), trace: dead },
+            Region { name: "rich".into(), trace: rich },
+        ])
+        .with_migration(MigrationModel::new(3.0, 0.5));
+        let rec = crate::obs::Recorder::enabled();
+        let engine = FleetEngine::new(Models::paper_default(), regions)
+            .with_migration_patience(2)
+            .with_recorder(rec.clone());
+        let spec = FleetJobSpec::new(j, PolicySpec::Msu, PredictorKind::Oracle);
+        let r = engine.run(&[spec]);
+        assert!(r.jobs[0].migrations >= 1);
+        let log = rec.finish().unwrap();
+        assert!(log.lines.iter().any(|l| {
+            l.contains("\"kind\":\"migration\"")
+                && l.contains("\"phase\":\"booked\"")
+                && l.contains("\"reason\":\"reflex\"")
+        }));
+        let counters: std::collections::HashMap<_, _> =
+            log.counters.iter().copied().collect();
+        assert_eq!(counters["migrations_booked"] as u32, r.total_migrations);
     }
 
     #[test]

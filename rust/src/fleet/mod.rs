@@ -39,9 +39,11 @@ pub use engine::{
     JobOutcome,
 };
 pub use region::{MigrationMode, MigrationModel, Region, RegionSet};
-pub use replay::ReplayPlan;
-pub use select::{run_fleet_selection, FleetContendedEvaluator};
+pub use replay::{ReplayPlan, ReplayStats};
+pub use select::{
+    run_fleet_selection, run_fleet_selection_observed, FleetContendedEvaluator,
+};
 pub use sweep::{
     available_threads, run_fleet_sweep, run_parallel, run_parallel_with,
-    run_selection_parallel, FleetScenario,
+    run_selection_parallel, run_selection_parallel_observed, FleetScenario,
 };

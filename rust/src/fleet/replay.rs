@@ -67,6 +67,24 @@ use crate::sched::policy::{
 use crate::sched::pool::PolicySpec;
 use crate::sched::simulate::{settle_episode, EpisodeResult};
 
+/// How much of one counterfactual each replay tier serviced — the
+/// payload of the obs `replay` event. Counting is always on (plain
+/// increments in branches the loop takes anyway), so the stats cannot
+/// perturb the result: [`ReplayPlan::counterfactual_stats`] returns the
+/// same `FleetResult` bits as [`ReplayPlan::counterfactual`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ReplayStats {
+    /// Slots proven identical to the recording (O(1) short-circuit),
+    /// including pre-arrival slots and fully-clean early exits.
+    pub clean_slots: usize,
+    /// Post-divergence slots simulated locally.
+    pub replayed_slots: usize,
+    /// Post-divergence slots adopted from the shared fork trie.
+    pub adopted_slots: usize,
+    /// First divergent global slot (`None` = never diverged).
+    pub diverged_at: Option<usize>,
+}
+
 /// One job's numeric simulation state — the engine's internal per-job
 /// state minus the driver and the decision trace (decisions are kept
 /// separately so forked states stay O(1) per slot to snapshot).
@@ -541,6 +559,24 @@ impl<'a> ReplayPlan<'a> {
     /// Evaluate one candidate override. Bit-for-bit identical to
     /// `self.engine.run_with_override(specs, traces, live_job, policy)`.
     pub fn counterfactual(&self, policy: PolicySpec) -> FleetResult {
+        self.counterfactual_stats(policy).0
+    }
+
+    /// [`counterfactual`], additionally reporting how each replay tier
+    /// serviced the horizon (the obs `replay` event's payload). The
+    /// stats are plain counts of branches the loop takes anyway, so the
+    /// returned [`FleetResult`] is the same, bit for bit.
+    ///
+    /// [`counterfactual`]: ReplayPlan::counterfactual
+    pub fn counterfactual_stats(
+        &self,
+        policy: PolicySpec,
+    ) -> (FleetResult, ReplayStats) {
+        let all_clean = ReplayStats {
+            clean_slots: self.horizon,
+            ..ReplayStats::default()
+        };
+        let mut stats = ReplayStats::default();
         let lr = self.live_job;
         let lspec = &self.specs[lr];
         let ltrace = &self.committed.traces[lr];
@@ -570,6 +606,7 @@ impl<'a> ReplayPlan<'a> {
             let mut cand_intent: Option<usize> = None;
             if sync {
                 if t < lspec.arrival {
+                    stats.clean_slots += 1;
                     self.push_recorded_row(&mut granted_out, t);
                     continue;
                 }
@@ -577,7 +614,7 @@ impl<'a> ReplayPlan<'a> {
                 if lt >= ltrace.wants.len() {
                     // The recorded learner is done and nothing diverged:
                     // the counterfactual *is* the recorded run.
-                    return self.recorded_with_label(&policy);
+                    return (self.recorded_with_label(&policy), all_clean);
                 }
                 let region = ltrace.regions[lt];
                 let obs =
@@ -631,6 +668,7 @@ impl<'a> ReplayPlan<'a> {
                 if clean {
                     // Clean slot: every arbitration input equals the
                     // recorded run's, so the outcome does too — O(1).
+                    stats.clean_slots += 1;
                     self.push_recorded_row(&mut granted_out, t);
                     // Mirror the live learner's post-migration replan
                     // (the engine's shared rebuild path: cold private
@@ -645,6 +683,7 @@ impl<'a> ReplayPlan<'a> {
                 // the snapshots (booking the slot-entry migration the
                 // snapshot hasn't applied yet) and fall through.
                 sync = false;
+                stats.diverged_at = Some(t);
                 cand = prev;
                 if lt > 0 && region != cand.region {
                     cand.book_migration(region, &mig);
@@ -702,6 +741,7 @@ impl<'a> ReplayPlan<'a> {
                     child.map(|cid| (cid, cache.nodes[cid].state.clone()))
                 };
                 if let Some((cid, st)) = adopted {
+                    stats.adopted_slots += 1;
                     self.adopt(
                         &st,
                         t,
@@ -720,6 +760,7 @@ impl<'a> ReplayPlan<'a> {
             }
 
             // --- Simulate the slot locally ---------------------------
+            stats.replayed_slots += 1;
             let (state, cand_migrated) = self.step_diverged(
                 t,
                 &mut cand,
@@ -742,7 +783,7 @@ impl<'a> ReplayPlan<'a> {
 
         if sync {
             // Never diverged through the whole horizon.
-            return self.recorded_with_label(&policy);
+            return (self.recorded_with_label(&policy), all_clean);
         }
 
         // --- Assembly (mirrors the engine's settlement) --------------
@@ -793,19 +834,22 @@ impl<'a> ReplayPlan<'a> {
             })
             .collect();
 
-        FleetResult {
-            jobs,
-            slots: self.horizon,
-            total_utility,
-            total_value,
-            total_cost,
-            on_time_rate,
-            total_preemptions,
-            total_migrations,
-            region_utilization,
-            region_granted: granted_out,
-            region_avail,
-        }
+        (
+            FleetResult {
+                jobs,
+                slots: self.horizon,
+                total_utility,
+                total_value,
+                total_cost,
+                on_time_rate,
+                total_preemptions,
+                total_migrations,
+                region_utilization,
+                region_granted: granted_out,
+                region_avail,
+            },
+            stats,
+        )
     }
 
     /// Apply a memoized fork state: replace the numeric state wholesale,
@@ -1253,6 +1297,30 @@ mod tests {
             // The clean path never touches the trie.
             assert_eq!(plan.fork_stats(), (0, 0));
         }
+    }
+
+    #[test]
+    fn replay_stats_partition_the_horizon_without_perturbing_results() {
+        let (engine, specs) = contended_fleet();
+        let rec = engine.run_recorded(&specs);
+        let plan = ReplayPlan::new(&engine, &specs, &rec, 0);
+        // Identity candidate: never diverges — all clean.
+        let (same, st) = plan.counterfactual_stats(specs[0].policy);
+        assert_eq!(same, rec.result);
+        assert_eq!(st.clean_slots, rec.result.slots);
+        assert_eq!(st.replayed_slots + st.adopted_slots, 0);
+        assert_eq!(st.diverged_at, None);
+        // Diverging candidate: tiers partition the horizon exactly, and
+        // the result matches the plain counterfactual bit for bit.
+        let (got, st) = plan.counterfactual_stats(PolicySpec::OdOnly);
+        assert_eq!(got, plan.counterfactual(PolicySpec::OdOnly));
+        assert_eq!(
+            st.clean_slots + st.replayed_slots + st.adopted_slots,
+            rec.result.slots
+        );
+        let div = st.diverged_at.expect("OD-Only must diverge from MSU");
+        assert_eq!(st.clean_slots, div);
+        assert!(st.replayed_slots > 0);
     }
 
     #[test]

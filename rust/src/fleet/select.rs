@@ -35,11 +35,13 @@ use crate::fleet::sweep::{fleet_roster, run_parallel};
 use crate::forecast::noise::NoiseSpec;
 use crate::market::generator::TraceGenerator;
 use crate::market::trace::SpotTrace;
+use crate::obs::{Counter, Event, Recorder};
 use crate::sched::job::{Job, JobGenerator};
 use crate::sched::policy::Models;
 use crate::sched::pool::{dedupe_specs, PolicyEnv, PolicySpec, PredictorKind};
 use crate::sched::selector::{
-    run_selection_eval, EpisodeEvaluator, SelectionConfig, SelectionOutcome,
+    run_selection_eval, run_selection_eval_observed, EpisodeEvaluator,
+    SelectionConfig, SelectionOutcome,
 };
 use crate::util::rng::Rng;
 use crate::util::stats::argmax_total;
@@ -93,6 +95,9 @@ pub struct FleetContendedEvaluator {
     /// starts at index 0, then tracks each round's best candidate
     /// (lowest index on ties).
     incumbent: usize,
+    /// Tracing handle, threaded into each round's fleet engine and the
+    /// per-candidate replay verdicts. Disabled by default.
+    obs: Recorder,
 }
 
 impl FleetContendedEvaluator {
@@ -119,6 +124,7 @@ impl FleetContendedEvaluator {
             delta_replay: true,
             dedupe: true,
             incumbent: 0,
+            obs: Recorder::disabled(),
         }
     }
 
@@ -192,6 +198,16 @@ impl FleetContendedEvaluator {
         self
     }
 
+    /// Attach a tracing recorder: each round's recorded fleet run emits
+    /// arbitration/preemption/migration events, and every distinct
+    /// candidate's delta replay emits a `replay` verdict (how many slots
+    /// were clean, replayed, or adopted from the fork trie). Utilities
+    /// are unchanged bit-for-bit — the recorder only reads results.
+    pub fn with_recorder(mut self, obs: Recorder) -> Self {
+        self.obs = obs;
+        self
+    }
+
     /// Index of the candidate currently run in the learner's slot
     /// during recorded runs.
     pub fn incumbent(&self) -> usize {
@@ -221,7 +237,8 @@ impl FleetContendedEvaluator {
             RegionSet::new(regions).with_migration(self.migration),
         )
         .with_migration_patience(self.migration_patience)
-        .with_migration_mode(self.migration_mode);
+        .with_migration_mode(self.migration_mode)
+        .with_recorder(self.obs.clone());
         if self.shared_forecasts {
             engine
         } else {
@@ -272,11 +289,32 @@ impl EpisodeEvaluator for FleetContendedEvaluator {
         let plan = self
             .delta_replay
             .then(|| ReplayPlan::new(&engine, &all, &committed, learner_idx));
+        let obs = &self.obs;
         let uu: Vec<f64> = run_parallel(&uniq, self.threads, |i, cand| {
             let utility = if i == incumbent_u {
                 committed.result.jobs[learner_idx].episode.utility
             } else if let Some(plan) = &plan {
-                plan.counterfactual(*cand).jobs[learner_idx].episode.utility
+                if obs.is_enabled() {
+                    // Replay verdict per distinct candidate: events are
+                    // keyed by `i`, which exactly one worker owns, so
+                    // the merged trace is thread-count invariant.
+                    let (r, st) = plan.counterfactual_stats(*cand);
+                    obs.add(Counter::CleanSlots, st.clean_slots as u64);
+                    obs.add(Counter::ReplayedSlots, st.replayed_slots as u64);
+                    obs.add(Counter::AdoptedSlots, st.adopted_slots as u64);
+                    obs.emit(|| Event::Replay {
+                        round: obs.round(),
+                        candidate: i,
+                        label: cand.label(),
+                        clean_slots: st.clean_slots,
+                        replayed_slots: st.replayed_slots,
+                        adopted_slots: st.adopted_slots,
+                        diverged_at: st.diverged_at,
+                    });
+                    r.jobs[learner_idx].episode.utility
+                } else {
+                    plan.counterfactual(*cand).jobs[learner_idx].episode.utility
+                }
             } else {
                 engine
                     .run_with_override(
@@ -291,6 +329,16 @@ impl EpisodeEvaluator for FleetContendedEvaluator {
             };
             job.normalize_utility(utility, models.on_demand_price)
         });
+        if let Some(plan) = &plan {
+            if self.obs.is_enabled() {
+                let (hits, misses) = plan.fork_stats();
+                self.obs.emit(|| Event::ReplayCache {
+                    round: self.obs.round(),
+                    hits,
+                    misses,
+                });
+            }
+        }
         let u: Vec<f64> = back.iter().map(|&i| uu[i]).collect();
         self.incumbent = argmax_total(&u);
         u
@@ -312,6 +360,38 @@ pub fn run_fleet_selection(
     evaluator: &mut FleetContendedEvaluator,
 ) -> SelectionOutcome {
     run_selection_eval(specs, jobs, models, trace_gen, predictor_at, cfg, evaluator)
+}
+
+/// [`run_fleet_selection`] with a live [`Recorder`]: the selection loop
+/// writes the per-round ledger through `obs`, and the evaluator's replay
+/// verdicts, arbitration, and migration events land in the same log.
+///
+/// The recorder is cloned onto the evaluator (replacing any recorder it
+/// already carries), so callers only wire one handle. Tracing never
+/// perturbs the outcome: the trajectory stays bit-identical to
+/// [`run_fleet_selection`] for the same inputs.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_selection_observed(
+    specs: &[PolicySpec],
+    jobs: &JobGenerator,
+    models: &Models,
+    trace_gen: &TraceGenerator,
+    predictor_at: impl FnMut(usize) -> PredictorKind,
+    cfg: &SelectionConfig,
+    evaluator: &mut FleetContendedEvaluator,
+    obs: &Recorder,
+) -> SelectionOutcome {
+    evaluator.obs = obs.clone();
+    run_selection_eval_observed(
+        specs,
+        jobs,
+        models,
+        trace_gen,
+        predictor_at,
+        cfg,
+        evaluator,
+        obs,
+    )
 }
 
 #[cfg(test)]
@@ -450,6 +530,40 @@ mod tests {
         assert_eq!(ud[1], ud[4]);
         assert_eq!(ud[3], ud[5]);
         assert_eq!(deduped.incumbent(), plain.incumbent());
+    }
+
+    #[test]
+    fn traced_utilities_are_bit_identical_and_emit_replay_verdicts() {
+        // A live recorder on the evaluator must not move a single bit of
+        // the utility vector, and the trace must carry one replay verdict
+        // per distinct non-incumbent candidate plus the fork-cache line.
+        let specs = small_pool();
+        let models = Models::paper_default();
+        let gen = TraceGenerator::calibrated();
+        let job = Job::paper_reference();
+        let trace = gen.generate(14).slice_from(35);
+        let env = PolicyEnv::new(
+            PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+            trace.clone(),
+            23,
+        );
+        let mut plain = FleetContendedEvaluator::synthetic(6, 2, 9);
+        let obs = Recorder::enabled();
+        let mut traced =
+            FleetContendedEvaluator::synthetic(6, 2, 9).with_recorder(obs.clone());
+        let up = plain.utilities(&specs, &job, &trace, &models, &env);
+        let ut = traced.utilities(&specs, &job, &trace, &models, &env);
+        assert_eq!(up, ut, "tracing perturbed the utility vector");
+        assert_eq!(plain.incumbent(), traced.incumbent());
+
+        let log = obs.finish().expect("enabled recorder yields a log");
+        let kinds = log.kind_counts();
+        let replays =
+            kinds.iter().find(|(k, _)| k == "replay").map(|(_, n)| *n);
+        // The incumbent short-circuits, every other distinct candidate
+        // gets a verdict.
+        assert_eq!(replays, Some(specs.len() - 1));
+        assert!(kinds.iter().any(|(k, _)| *k == "replay_cache"));
     }
 
     #[test]

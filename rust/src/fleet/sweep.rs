@@ -19,13 +19,15 @@ use crate::fleet::region::{MigrationMode, MigrationModel, RegionSet};
 use crate::forecast::noise::NoiseSpec;
 use crate::market::generator::{GeneratorConfig, TraceGenerator};
 use crate::market::trace::SpotTrace;
+use crate::obs::Recorder;
 use crate::sched::job::{Job, JobGenerator};
 use crate::sched::policy::Models;
 use crate::sched::pool::{
     dedupe_specs, PolicyEnv, PolicySpec, PolicyWorkspace, PredictorKind,
 };
 use crate::sched::selector::{
-    run_selection_with, SelectionConfig, SelectionOutcome,
+    run_selection_eval_observed, run_selection_with, SelectionConfig,
+    SelectionOutcome,
 };
 use crate::sched::simulate::run_episode;
 use crate::util::rng::Rng;
@@ -182,6 +184,45 @@ pub fn run_selection_parallel(
     )
 }
 
+/// [`run_selection_parallel`] with a live [`Recorder`]: identical
+/// trajectory (the per-round ledger is written from values the loop
+/// already computes), plus ledger + counter events in the log.
+#[allow(clippy::too_many_arguments)]
+pub fn run_selection_parallel_observed(
+    specs: &[PolicySpec],
+    jobs: &JobGenerator,
+    models: &Models,
+    trace_gen: &TraceGenerator,
+    predictor_at: impl FnMut(usize) -> PredictorKind,
+    cfg: &SelectionConfig,
+    threads: usize,
+    obs: &Recorder,
+) -> SelectionOutcome {
+    let workers = threads.max(1).min(specs.len().max(1));
+    let mut workspaces: Vec<PolicyWorkspace> =
+        (0..workers).map(|_| PolicyWorkspace::new()).collect();
+    let mut epoch = 0u64;
+    let mut eval = |specs: &[PolicySpec],
+                    job: &Job,
+                    trace: &SpotTrace,
+                    models: &Models,
+                    env: &PolicyEnv| {
+        epoch += 1;
+        counterfactual_utilities_in(
+            specs,
+            job,
+            trace,
+            models,
+            env,
+            &mut workspaces,
+            epoch,
+        )
+    };
+    run_selection_eval_observed(
+        specs, jobs, models, trace_gen, predictor_at, cfg, &mut eval, obs,
+    )
+}
+
 /// A self-contained fleet experiment: how many jobs across how many
 /// regions, under which market/job/noise calibration. The unit of work
 /// for [`run_fleet_sweep`].
@@ -324,6 +365,16 @@ impl FleetScenario {
     pub fn run(&self) -> FleetResult {
         let (engine, specs) = self.build();
         engine.run(&specs)
+    }
+
+    /// Build and run with a live [`Recorder`] attached: the engine
+    /// narrates arbitration, preemption, and migration into `obs` while
+    /// producing the exact same [`FleetResult`] as [`FleetScenario::run`]
+    /// (tracing never perturbs the simulation — see
+    /// [`crate::obs::recorder`]).
+    pub fn run_traced(&self, obs: &Recorder) -> FleetResult {
+        let (engine, specs) = self.build();
+        engine.with_recorder(obs.clone()).run(&specs)
     }
 }
 

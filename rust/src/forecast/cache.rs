@@ -57,6 +57,33 @@ struct CacheInner {
     /// (after observing slots `0..=t` on top of the seeded history).
     slots: Vec<Forecast>,
     horizon: usize,
+    /// Reads served from an already-memoized slot / reads that had to
+    /// advance the predictor first. Plain counters under the cache's
+    /// existing lock — always on, surfaced through the obs
+    /// `forecast_cache` event.
+    hits: u64,
+    misses: u64,
+    /// Horizon-overrun rebuilds (see [`SharedForecaster::forecast_at`]).
+    rebuilds: u64,
+}
+
+/// Aggregate forecast-cache statistics, per cache or summed over a
+/// [`ForecastCachePool`] — the payload of the obs `forecast_cache`
+/// event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Distinct caches (1 for a single forecaster).
+    pub caches: usize,
+    /// Slots with a memoized forecast.
+    pub slots: usize,
+    /// Reads served without advancing the predictor.
+    pub hits: u64,
+    /// Reads that advanced (or rebuilt) the predictor.
+    pub misses: u64,
+    /// Price-model fits performed.
+    pub fits_price: u64,
+    /// Availability-model fits performed.
+    pub fits_avail: u64,
 }
 
 struct ForecastCache {
@@ -109,6 +136,9 @@ impl SharedForecaster {
                 pred,
                 slots: Vec::new(),
                 horizon: cfg.max_horizon.max(1),
+                hits: 0,
+                misses: 0,
+                rebuilds: 0,
             }),
         }))
     }
@@ -127,6 +157,25 @@ impl SharedForecaster {
     /// for a pool sweep this stays O(slots), not O(slots × policies).
     pub fn fits(&self) -> (u64, u64) {
         self.0.inner.lock().unwrap().pred.fit_counts()
+    }
+
+    /// This cache's statistics snapshot (`caches` = 1).
+    pub fn cache_stats(&self) -> PoolStats {
+        let g = self.0.inner.lock().unwrap();
+        let (fits_price, fits_avail) = g.pred.fit_counts();
+        PoolStats {
+            caches: 1,
+            slots: g.slots.len(),
+            hits: g.hits,
+            misses: g.misses,
+            fits_price,
+            fits_avail,
+        }
+    }
+
+    /// Horizon-overrun rebuilds performed so far.
+    pub fn rebuilds(&self) -> u64 {
+        self.0.inner.lock().unwrap().rebuilds
     }
 
     /// The clamped forecast issued at slot `t` (after observing trace
@@ -154,12 +203,18 @@ impl SharedForecaster {
             // forecasts) and rare — size `cfg.max_horizon` to the pool's
             // max ω to avoid it entirely.
             g.horizon = h;
+            g.rebuilds += 1;
             let upto = g.slots.len();
             g.pred = fresh_predictor(c.cfg, &c.history);
             g.slots.clear();
             for _ in 0..upto {
                 advance(&mut g, c);
             }
+        }
+        if g.slots.len() > t {
+            g.hits += 1;
+        } else {
+            g.misses += 1;
         }
         while g.slots.len() <= t {
             advance(&mut g, c);
@@ -251,6 +306,23 @@ impl ForecastCachePool {
     /// Number of distinct caches built so far.
     pub fn caches(&self) -> usize {
         self.inner.lock().unwrap().len()
+    }
+
+    /// Pool-wide statistics: every member cache's snapshot, summed.
+    pub fn stats(&self) -> PoolStats {
+        let caches: Vec<SharedForecaster> =
+            self.inner.lock().unwrap().values().cloned().collect();
+        let mut total = PoolStats::default();
+        for c in &caches {
+            let s = c.cache_stats();
+            total.caches += 1;
+            total.slots += s.slots;
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.fits_price += s.fits_price;
+            total.fits_avail += s.fits_avail;
+        }
+        total
     }
 }
 
@@ -451,6 +523,29 @@ mod tests {
                 "warm replan diverged at slot {t}"
             );
         }
+    }
+
+    #[test]
+    fn stats_count_hits_misses_and_fits() {
+        let tr = trace();
+        let cfg = ArimaConfig::default();
+        let pool = ForecastCachePool::new();
+        let view = RegionForecasts::new(&pool, cfg);
+        // First read of each slot is a miss (predictor advanced)...
+        for t in 0..6 {
+            let _ = view.forecast(0, 0, t, 3, || tr.clone());
+        }
+        // ...re-reads are hits.
+        for t in 0..6 {
+            let _ = view.forecast(0, 0, t, 3, || unreachable!());
+        }
+        let s = pool.stats();
+        assert_eq!(s.caches, 1);
+        assert_eq!(s.slots, 6);
+        assert_eq!(s.misses, 6);
+        assert_eq!(s.hits, 6);
+        assert_eq!(s.fits_price, 6);
+        assert!(s.fits_avail >= 1);
     }
 
     #[test]

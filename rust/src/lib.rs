@@ -16,6 +16,8 @@
 //!   plus the thread-scoped parallel sweep engine;
 //! - [`market`] / [`forecast`] — the spot-market substrate and the
 //!   ARIMA + noise-regime prediction substrate;
+//! - [`obs`] — the zero-overhead-when-off tracing + metrics layer:
+//!   typed events, deterministic cross-thread merge, run summaries;
 //! - [`runtime`] / [`train`] / [`coordinator`] — the execution substrate:
 //!   a PJRT client running the AOT-compiled JAX+Pallas LoRA train-step
 //!   (built once by `python/compile/aot.py`, never on the request path),
@@ -31,6 +33,7 @@ pub mod coordinator;
 pub mod fleet;
 pub mod forecast;
 pub mod market;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod train;

@@ -21,9 +21,9 @@ use spotfine::cli::args::Args;
 use spotfine::config::schema::ExperimentConfig;
 use spotfine::coordinator::leader::{Leader, LeaderConfig};
 use spotfine::fleet::{
-    available_threads, run_fleet_selection, run_fleet_sweep,
-    run_selection_parallel, FleetContendedEvaluator, FleetScenario,
-    MigrationMode, MigrationModel,
+    available_threads, run_fleet_selection_observed, run_fleet_sweep,
+    run_selection_parallel, run_selection_parallel_observed,
+    FleetContendedEvaluator, FleetScenario, MigrationMode, MigrationModel,
 };
 use spotfine::forecast::arima::{ArimaPredictor, ArimaSpec};
 use spotfine::forecast::noise::NoiseSpec;
@@ -31,6 +31,7 @@ use spotfine::forecast::predictor::Predictor;
 use spotfine::market::analyze::analyze;
 use spotfine::market::generator::TraceGenerator;
 use spotfine::market::trace::SpotTrace;
+use spotfine::obs::Recorder;
 use spotfine::runtime::artifact::ArtifactBundle;
 use spotfine::runtime::client::RuntimeClient;
 use spotfine::runtime::executable::TrainStepExec;
@@ -101,6 +102,17 @@ FLEET-SELECT FLAGS:
                         re-simulations instead of the delta-replay
                         engine (bit-identical results, much slower —
                         the reference path)
+
+OBSERVABILITY FLAGS (fleet / select / fleet-select):
+  --trace <path.jsonl>  record typed scheduler events — arbitration,
+                        preemptions, migration intent phases, replay
+                        verdicts, forecast-cache stats, solver timings,
+                        and the per-round selection ledger — as JSONL
+                        (fleet: with --sweeps > 1 only sweep 1 is traced)
+  --obs-summary         print the aggregated event/counter summary table
+  --obs-csv <path.csv>  write that summary as metric,value CSV
+  Defaults come from the config's [obs] block; tracing off is the
+  zero-overhead path (results are bit-identical either way).
 ";
 
 fn main() -> ExitCode {
@@ -139,6 +151,60 @@ fn predictor_arg(
             anyhow::bail!("unknown predictor `{other}` (noisy|oracle|arima)")
         }
     })
+}
+
+/// The observability surface shared by `fleet`, `select`, and
+/// `fleet-select`: `--trace` / `--obs-summary` / `--obs-csv`, with the
+/// config's `[obs]` block as the default. When nothing is requested the
+/// recorder stays statically disabled — the zero-overhead path.
+struct ObsCli {
+    trace: Option<PathBuf>,
+    summary: bool,
+    csv: Option<PathBuf>,
+}
+
+impl ObsCli {
+    fn from_args(args: &Args, cfg: &ExperimentConfig) -> ObsCli {
+        ObsCli {
+            trace: args
+                .get("trace")
+                .map(String::from)
+                .or_else(|| cfg.obs.trace.clone())
+                .map(PathBuf::from),
+            summary: args.get_bool("obs-summary") || cfg.obs.summary,
+            csv: args.get("obs-csv").map(PathBuf::from),
+        }
+    }
+
+    fn recorder(&self) -> Recorder {
+        if self.trace.is_some() || self.summary || self.csv.is_some() {
+            Recorder::enabled()
+        } else {
+            Recorder::disabled()
+        }
+    }
+
+    /// Drain the recorder into whatever outputs were requested. Status
+    /// lines go to stderr; only the summary table (a result) is stdout.
+    fn emit(&self, obs: &Recorder) -> anyhow::Result<()> {
+        let Some(log) = obs.finish() else { return Ok(()) };
+        if let Some(path) = &self.trace {
+            let path = log.write_jsonl(path)?;
+            eprintln!(
+                "wrote {} trace event(s) to {}",
+                log.events,
+                path.display()
+            );
+        }
+        if let Some(path) = &self.csv {
+            let path = log.write_summary_csv(path)?;
+            eprintln!("wrote obs summary to {}", path.display());
+        }
+        if self.summary {
+            log.summary_table().print();
+        }
+        Ok(())
+    }
 }
 
 /// `--migration starvation|policy`, defaulting to the config's
@@ -275,7 +341,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         let dir = PathBuf::from(dir);
         out.metrics.write_slots_csv(&dir.join("slots.csv"))?;
         out.metrics.write_loss_csv(&dir.join("loss.csv"))?;
-        println!("wrote {}/slots.csv and loss.csv", dir.display());
+        eprintln!("wrote {}/slots.csv and loss.csv", dir.display());
     }
     Ok(())
 }
@@ -353,13 +419,24 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         })
         .collect();
 
-    let (results, secs) =
-        spotfine::util::bench::time_once(|| run_fleet_sweep(&scenarios, threads));
+    let obs = ObsCli::from_args(args, &cfg);
+    let rec = obs.recorder();
+    let (results, secs) = spotfine::util::bench::time_once(|| {
+        if rec.is_enabled() {
+            // Trace the first sweep (bit-identical to the untraced run);
+            // the rest go through the parallel sweep as usual.
+            let mut out = vec![scenarios[0].run_traced(&rec)];
+            out.extend(run_fleet_sweep(&scenarios[1..], threads));
+            out
+        } else {
+            run_fleet_sweep(&scenarios, threads)
+        }
+    });
 
-    println!(
+    eprintln!(
         "fleet: {n_jobs} jobs x {n_regions} regions x {sweeps} sweep(s), {threads} thread(s), {secs:.2}s"
     );
-    println!(
+    eprintln!(
         "migration: {} (patience {patience}){}",
         match migration_mode {
             MigrationMode::Starvation => "starvation reflex",
@@ -431,6 +508,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             jt.print();
         }
     }
+    obs.emit(&rec)?;
     Ok(())
 }
 
@@ -496,8 +574,12 @@ fn cmd_select(args: &Args) -> anyhow::Result<()> {
     // The parallel path fans the per-job 112-policy counterfactual
     // evaluation across cores; its outcome is identical to sequential.
     // Honest-ARIMA rounds additionally share one per-slot forecast
-    // cache across the whole pool (see sched::selector).
-    let out = run_selection_parallel(
+    // cache across the whole pool (see sched::selector). A live
+    // recorder adds the per-round selection ledger without moving a bit
+    // of the trajectory.
+    let obs = ObsCli::from_args(args, &cfg);
+    let rec = obs.recorder();
+    let out = run_selection_parallel_observed(
         &specs,
         &cfg.jobs,
         &cfg.models,
@@ -505,15 +587,16 @@ fn cmd_select(args: &Args) -> anyhow::Result<()> {
         |_| predictor.clone(),
         &sel_cfg,
         threads,
+        &rec,
     );
-    println!("pool size          {}", specs.len());
-    println!("jobs               {k_jobs} ({threads} thread(s))");
+    eprintln!("pool size          {}", specs.len());
+    eprintln!("jobs               {k_jobs} ({threads} thread(s))");
     match &predictor {
         PredictorKind::Arima(a) => {
-            println!("predictor          arima (refit every {} slot(s))", a.refit_every)
+            eprintln!("predictor          arima (refit every {} slot(s))", a.refit_every)
         }
-        PredictorKind::Oracle => println!("predictor          oracle (perfect foresight)"),
-        PredictorKind::Noisy(_) => println!("noise              {}", cfg.noise.label()),
+        PredictorKind::Oracle => eprintln!("predictor          oracle (perfect foresight)"),
+        PredictorKind::Noisy(_) => eprintln!("noise              {}", cfg.noise.label()),
     }
     println!(
         "converged policy   #{} {}",
@@ -532,6 +615,7 @@ fn cmd_select(args: &Args) -> anyhow::Result<()> {
         out.regret_bound()
     );
     println!("mean realized u    {:.4}", stats::mean(&out.realized));
+    obs.emit(&rec)?;
     Ok(())
 }
 
@@ -564,8 +648,10 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
     if full_replay {
         evaluator = evaluator.with_full_replay();
     }
+    let obs = ObsCli::from_args(args, &cfg);
+    let rec = obs.recorder();
     let (fleet_out, fleet_secs) = spotfine::util::bench::time_once(|| {
-        run_fleet_selection(
+        run_fleet_selection_observed(
             &specs,
             &cfg.jobs,
             &cfg.models,
@@ -573,19 +659,20 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
             |_| predictor.clone(),
             &sel_cfg,
             &mut evaluator,
+            &rec,
         )
     });
 
-    println!("pool size          {}", specs.len());
-    println!(
+    eprintln!("pool size          {}", specs.len());
+    eprintln!(
         "rounds             {rounds} x ({} bg jobs + learner) x {n_regions} region(s), {threads} thread(s)",
         n_background
     );
-    println!(
+    eprintln!(
         "counterfactuals    {}",
         if full_replay { "full fleet replay (reference)" } else { "delta replay" }
     );
-    println!(
+    eprintln!(
         "migration          {}",
         match migration_mode {
             MigrationMode::Starvation => "starvation reflex",
@@ -594,13 +681,13 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
     );
     match &predictor {
         PredictorKind::Arima(a) => {
-            println!("predictor          arima (refit every {} slot(s))", a.refit_every)
+            eprintln!("predictor          arima (refit every {} slot(s))", a.refit_every)
         }
-        PredictorKind::Oracle => println!("predictor          oracle (perfect foresight)"),
-        PredictorKind::Noisy(_) => println!("noise              {}", cfg.noise.label()),
+        PredictorKind::Oracle => eprintln!("predictor          oracle (perfect foresight)"),
+        PredictorKind::Noisy(_) => eprintln!("noise              {}", cfg.noise.label()),
     }
-    println!();
-    println!("contention-aware   ({fleet_secs:.1}s)");
+    eprintln!("contention-aware pass: {fleet_secs:.1}s");
+    println!("contention-aware");
     println!(
         "  converged policy #{} {}",
         fleet_out.converged_to + 1,
@@ -636,8 +723,9 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
                 threads,
             )
         });
+        eprintln!("isolated pass: {iso_secs:.1}s");
         println!();
-        println!("isolated           ({iso_secs:.1}s)");
+        println!("isolated");
         println!(
             "  converged policy #{} {}",
             iso_out.converged_to + 1,
@@ -663,6 +751,7 @@ fn cmd_fleet_select(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
+    obs.emit(&rec)?;
     Ok(())
 }
 
@@ -688,7 +777,7 @@ fn cmd_trace(args: &Args) -> anyhow::Result<()> {
     println!("autocorr (price)   {:.3}", s.price_autocorr1);
     if let Some(out) = args.get("out") {
         std::fs::write(out, trace.to_csv_string())?;
-        println!("wrote {out}");
+        eprintln!("wrote {out}");
     }
     Ok(())
 }

@@ -1,0 +1,518 @@
+//! The typed event taxonomy and its JSONL serialization.
+//!
+//! Every event carries the selection `round` it was emitted under (0 for
+//! standalone fleet runs) plus enough keys — slot, region, job, candidate
+//! — for [`crate::obs::Recorder`] to merge per-thread buffers into one
+//! deterministic stream. Serialization is hand-rolled (the crate is
+//! dependency-free); floats print at 6 decimals, absent optionals as
+//! `null`. The schema is validated by [`crate::obs::schema`] and golden
+//! -tested in `tests/obs_properties.rs`.
+
+/// Lifecycle phase of a migration intent as it moves through the engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MigrationPhase {
+    /// The policy emitted an intent this slot (pre-validation).
+    Emitted,
+    /// The intent passed [`validate_intent`] and is pending booking.
+    ///
+    /// [`validate_intent`]: crate::fleet::engine::FleetEngine
+    Validated,
+    /// The intent was filtered out, with the first failing reason.
+    Rejected,
+    /// A migration was booked at end of slot (intent or reflex).
+    Booked,
+}
+
+impl MigrationPhase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MigrationPhase::Emitted => "emitted",
+            MigrationPhase::Validated => "validated",
+            MigrationPhase::Rejected => "rejected",
+            MigrationPhase::Booked => "booked",
+        }
+    }
+
+    fn rank(&self) -> u32 {
+        match self {
+            MigrationPhase::Emitted => 0,
+            MigrationPhase::Validated => 1,
+            MigrationPhase::Rejected => 2,
+            MigrationPhase::Booked => 3,
+        }
+    }
+}
+
+/// One structured observation. Engine events key on (slot, region, job);
+/// selection-round events key on the candidate index or the round alone.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// One region's arbitration outcome at one slot.
+    Arbitration {
+        round: u32,
+        slot: usize,
+        region: usize,
+        avail: u32,
+        requested: u32,
+        granted: u32,
+        contenders: usize,
+        preempted_jobs: usize,
+    },
+    /// One job losing held spot instances in a preemption cascade.
+    Preemption {
+        round: u32,
+        slot: usize,
+        region: usize,
+        job: usize,
+        lost: u32,
+    },
+    /// A migration intent's lifecycle, or a booked move (intent/reflex).
+    Migration {
+        round: u32,
+        slot: usize,
+        job: usize,
+        from: usize,
+        to: usize,
+        phase: MigrationPhase,
+        reason: Option<&'static str>,
+    },
+    /// One delta-replay counterfactual's verdict for a candidate.
+    Replay {
+        round: u32,
+        candidate: usize,
+        label: String,
+        clean_slots: usize,
+        replayed_slots: usize,
+        adopted_slots: usize,
+        diverged_at: Option<usize>,
+    },
+    /// Fork-trie hit/miss totals after one selection round.
+    ReplayCache { round: u32, hits: u64, misses: u64 },
+    /// Shared forecast-cache statistics after a run.
+    ForecastCache {
+        round: u32,
+        caches: usize,
+        slots: usize,
+        hits: u64,
+        misses: u64,
+        fits_price: u64,
+        fits_avail: u64,
+    },
+    /// The per-round selection ledger: pre-update policy weights, the
+    /// round's counterfactual utilities, the arm the learner pulled, and
+    /// the running regret vs the best fixed policy in hindsight.
+    Ledger {
+        round: u32,
+        chosen: usize,
+        label: String,
+        expected: f64,
+        cum_regret: f64,
+        best_fixed: usize,
+        weights: Vec<f64>,
+        utilities: Vec<f64>,
+    },
+    /// Solver timing aggregate for the whole run (wall-clock: excluded
+    /// from determinism comparisons; bucket edges in
+    /// [`crate::obs::timing::BUCKETS_US`]).
+    Solver {
+        windows: u64,
+        greedy_calls: u64,
+        greedy_total_us: u64,
+        greedy_hist_us: Vec<u64>,
+        dp_calls: u64,
+        dp_total_us: u64,
+        dp_hist_us: Vec<u64>,
+    },
+    /// End-of-run counter snapshot (always the last line of a trace).
+    Summary {
+        events: u64,
+        dropped: u64,
+        counters: Vec<(&'static str, u64)>,
+    },
+}
+
+/// Deterministic merge key: events sort by `(round, k0, k1, k2, rank)`
+/// and, within a key, by per-thread emission order. Engine events use
+/// (slot, region, job); per-round events sort after them via `u32::MAX`
+/// sentinels; run-level aggregates (solver, summary) sort last.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct EventKey {
+    pub round: u32,
+    pub k0: u32,
+    pub k1: u32,
+    pub k2: u32,
+    pub rank: u32,
+}
+
+const END: u32 = u32::MAX;
+
+impl Event {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::Arbitration { .. } => "arbitration",
+            Event::Preemption { .. } => "preemption",
+            Event::Migration { .. } => "migration",
+            Event::Replay { .. } => "replay",
+            Event::ReplayCache { .. } => "replay_cache",
+            Event::ForecastCache { .. } => "forecast_cache",
+            Event::Ledger { .. } => "ledger",
+            Event::Solver { .. } => "solver",
+            Event::Summary { .. } => "summary",
+        }
+    }
+
+    /// The merge key (see [`EventKey`]).
+    pub fn key(&self) -> EventKey {
+        let k = |round, k0, k1, k2, rank| EventKey { round, k0, k1, k2, rank };
+        match self {
+            Event::Arbitration { round, slot, region, .. } => {
+                k(*round, *slot as u32, *region as u32, END, 0)
+            }
+            Event::Preemption { round, slot, region, job, .. } => {
+                k(*round, *slot as u32, *region as u32, *job as u32, 1)
+            }
+            Event::Migration { round, slot, job, phase, .. } => {
+                k(*round, *slot as u32, *job as u32, phase.rank(), 2)
+            }
+            Event::Replay { round, candidate, .. } => {
+                k(*round, END, *candidate as u32, END, 6)
+            }
+            Event::ReplayCache { round, .. } => k(*round, END, END, END, 7),
+            Event::ForecastCache { round, .. } => k(*round, END, END, END, 8),
+            Event::Ledger { round, .. } => k(*round, END, END, END, 9),
+            Event::Solver { .. } => k(END, END, END, END, 10),
+            Event::Summary { .. } => k(END, END, END, END, 11),
+        }
+    }
+
+    /// One JSONL line (no trailing newline).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(96);
+        s.push_str("{\"kind\":\"");
+        s.push_str(self.kind());
+        s.push('"');
+        match self {
+            Event::Arbitration {
+                round,
+                slot,
+                region,
+                avail,
+                requested,
+                granted,
+                contenders,
+                preempted_jobs,
+            } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "slot", *slot as u64);
+                num(&mut s, "region", *region as u64);
+                num(&mut s, "avail", *avail as u64);
+                num(&mut s, "requested", *requested as u64);
+                num(&mut s, "granted", *granted as u64);
+                num(&mut s, "contenders", *contenders as u64);
+                num(&mut s, "preempted_jobs", *preempted_jobs as u64);
+            }
+            Event::Preemption { round, slot, region, job, lost } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "slot", *slot as u64);
+                num(&mut s, "region", *region as u64);
+                num(&mut s, "job", *job as u64);
+                num(&mut s, "lost", *lost as u64);
+            }
+            Event::Migration { round, slot, job, from, to, phase, reason } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "slot", *slot as u64);
+                num(&mut s, "job", *job as u64);
+                num(&mut s, "from", *from as u64);
+                num(&mut s, "to", *to as u64);
+                str_field(&mut s, "phase", phase.as_str());
+                opt_str(&mut s, "reason", *reason);
+            }
+            Event::Replay {
+                round,
+                candidate,
+                label,
+                clean_slots,
+                replayed_slots,
+                adopted_slots,
+                diverged_at,
+            } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "candidate", *candidate as u64);
+                str_field(&mut s, "label", label);
+                num(&mut s, "clean_slots", *clean_slots as u64);
+                num(&mut s, "replayed_slots", *replayed_slots as u64);
+                num(&mut s, "adopted_slots", *adopted_slots as u64);
+                opt_num(&mut s, "diverged_at", diverged_at.map(|t| t as u64));
+            }
+            Event::ReplayCache { round, hits, misses } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "hits", *hits);
+                num(&mut s, "misses", *misses);
+            }
+            Event::ForecastCache {
+                round,
+                caches,
+                slots,
+                hits,
+                misses,
+                fits_price,
+                fits_avail,
+            } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "caches", *caches as u64);
+                num(&mut s, "slots", *slots as u64);
+                num(&mut s, "hits", *hits);
+                num(&mut s, "misses", *misses);
+                num(&mut s, "fits_price", *fits_price);
+                num(&mut s, "fits_avail", *fits_avail);
+            }
+            Event::Ledger {
+                round,
+                chosen,
+                label,
+                expected,
+                cum_regret,
+                best_fixed,
+                weights,
+                utilities,
+            } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "chosen", *chosen as u64);
+                str_field(&mut s, "label", label);
+                f64_field(&mut s, "expected", *expected);
+                f64_field(&mut s, "cum_regret", *cum_regret);
+                num(&mut s, "best_fixed", *best_fixed as u64);
+                f64_array(&mut s, "weights", weights);
+                f64_array(&mut s, "utilities", utilities);
+            }
+            Event::Solver {
+                windows,
+                greedy_calls,
+                greedy_total_us,
+                greedy_hist_us,
+                dp_calls,
+                dp_total_us,
+                dp_hist_us,
+            } => {
+                num(&mut s, "windows", *windows);
+                num(&mut s, "greedy_calls", *greedy_calls);
+                num(&mut s, "greedy_total_us", *greedy_total_us);
+                u64_array(&mut s, "greedy_hist_us", greedy_hist_us);
+                num(&mut s, "dp_calls", *dp_calls);
+                num(&mut s, "dp_total_us", *dp_total_us);
+                u64_array(&mut s, "dp_hist_us", dp_hist_us);
+            }
+            Event::Summary { events, dropped, counters } => {
+                num(&mut s, "events", *events);
+                num(&mut s, "dropped", *dropped);
+                s.push_str(",\"counters\":{");
+                for (i, (name, v)) in counters.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    s.push('"');
+                    s.push_str(name);
+                    s.push_str("\":");
+                    s.push_str(&v.to_string());
+                }
+                s.push('}');
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// JSON string escaping for labels (policy names are ASCII today, but
+/// the writer must stay correct for anything).
+pub fn json_escape(raw: &str) -> String {
+    let mut out = String::with_capacity(raw.len());
+    for c in raw.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn num(s: &mut String, key: &str, v: u64) {
+    s.push_str(",\"");
+    s.push_str(key);
+    s.push_str("\":");
+    s.push_str(&v.to_string());
+}
+
+fn opt_num(s: &mut String, key: &str, v: Option<u64>) {
+    s.push_str(",\"");
+    s.push_str(key);
+    s.push_str("\":");
+    match v {
+        Some(v) => s.push_str(&v.to_string()),
+        None => s.push_str("null"),
+    }
+}
+
+fn f64_field(s: &mut String, key: &str, v: f64) {
+    s.push_str(",\"");
+    s.push_str(key);
+    s.push_str("\":");
+    // JSON has no inf/NaN literal.
+    if v.is_finite() {
+        s.push_str(&format!("{v:.6}"));
+    } else {
+        s.push_str("null");
+    }
+}
+
+fn str_field(s: &mut String, key: &str, v: &str) {
+    s.push_str(",\"");
+    s.push_str(key);
+    s.push_str("\":\"");
+    s.push_str(&json_escape(v));
+    s.push('"');
+}
+
+fn opt_str(s: &mut String, key: &str, v: Option<&str>) {
+    match v {
+        Some(v) => str_field(s, key, v),
+        None => {
+            s.push_str(",\"");
+            s.push_str(key);
+            s.push_str("\":null");
+        }
+    }
+}
+
+fn f64_array(s: &mut String, key: &str, vs: &[f64]) {
+    s.push_str(",\"");
+    s.push_str(key);
+    s.push_str("\":[");
+    for (i, v) in vs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        if v.is_finite() {
+            s.push_str(&format!("{v:.6}"));
+        } else {
+            s.push_str("null");
+        }
+    }
+    s.push(']');
+}
+
+fn u64_array(s: &mut String, key: &str, vs: &[u64]) {
+    s.push_str(",\"");
+    s.push_str(key);
+    s.push_str("\":[");
+    for (i, v) in vs.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&v.to_string());
+    }
+    s.push(']');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_order_engine_before_round_aggregates() {
+        let arb = Event::Arbitration {
+            round: 1,
+            slot: 3,
+            region: 0,
+            avail: 6,
+            requested: 9,
+            granted: 6,
+            contenders: 2,
+            preempted_jobs: 0,
+        };
+        let led = Event::Ledger {
+            round: 1,
+            chosen: 0,
+            label: "x".into(),
+            expected: 0.0,
+            cum_regret: 0.0,
+            best_fixed: 0,
+            weights: vec![],
+            utilities: vec![],
+        };
+        let sum = Event::Summary { events: 0, dropped: 0, counters: vec![] };
+        assert!(arb.key() < led.key());
+        assert!(led.key() < sum.key());
+        // A later round's engine events sort after this round's ledger.
+        let arb2 = Event::Arbitration {
+            round: 2,
+            slot: 0,
+            region: 0,
+            avail: 0,
+            requested: 0,
+            granted: 0,
+            contenders: 0,
+            preempted_jobs: 0,
+        };
+        assert!(led.key() < arb2.key());
+    }
+
+    #[test]
+    fn migration_phases_order_by_lifecycle() {
+        let mk = |phase| Event::Migration {
+            round: 0,
+            slot: 2,
+            job: 1,
+            from: 0,
+            to: 1,
+            phase,
+            reason: None,
+        };
+        assert!(mk(MigrationPhase::Emitted).key() < mk(MigrationPhase::Validated).key());
+        assert!(mk(MigrationPhase::Validated).key() < mk(MigrationPhase::Rejected).key());
+        assert!(mk(MigrationPhase::Rejected).key() < mk(MigrationPhase::Booked).key());
+    }
+
+    #[test]
+    fn serialization_is_one_json_object_per_event() {
+        let e = Event::Migration {
+            round: 4,
+            slot: 7,
+            job: 2,
+            from: 0,
+            to: 1,
+            phase: MigrationPhase::Rejected,
+            reason: Some("unpayable"),
+        };
+        let line = e.to_json();
+        assert!(line.starts_with("{\"kind\":\"migration\""));
+        assert!(line.contains("\"phase\":\"rejected\""));
+        assert!(line.contains("\"reason\":\"unpayable\""));
+        assert!(!line.contains('\n'));
+        let none = Event::Replay {
+            round: 0,
+            candidate: 3,
+            label: "AHAP(ω=3,v=1,σ=0.7)".into(),
+            clean_slots: 10,
+            replayed_slots: 0,
+            adopted_slots: 0,
+            diverged_at: None,
+        };
+        assert!(none.to_json().contains("\"diverged_at\":null"));
+    }
+
+    #[test]
+    fn escaping_handles_quotes_newlines_and_controls() {
+        assert_eq!(json_escape("a\"b"), "a\\\"b");
+        assert_eq!(json_escape("a\\b"), "a\\\\b");
+        assert_eq!(json_escape("a\nb\tc"), "a\\nb\\tc");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+}

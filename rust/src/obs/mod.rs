@@ -1,0 +1,36 @@
+//! Observability: a zero-overhead-when-off tracing + metrics layer for
+//! the fleet scheduler.
+//!
+//! The core handle is the [`Recorder`] — `Option`-like and statically
+//! disabled by default, so every instrumented hot path (per-slot
+//! arbitration, migration intents, delta-replay verdicts, the
+//! forecast cache, Eq. 10 solver calls) pays one branch and never
+//! constructs an event unless a trace was requested. Enabled recorders
+//! buffer typed [`Event`]s in per-thread rings and merge them
+//! deterministically by `(round, slot/region/job key, kind)` at
+//! [`Recorder::finish`], so the merged JSONL stream — like the
+//! `FleetResult`s it narrates — is invariant to thread count, and a
+//! traced run stays bit-identical to an untraced one (property-tested
+//! in `tests/obs_properties.rs`, overhead-bounded in the
+//! `perf_hotpaths` bench).
+//!
+//! Layout:
+//! - [`event`]: the typed event taxonomy, merge keys, JSON encoding.
+//! - [`recorder`]: the handle, run counters, the deterministic merge.
+//! - [`timing`]: the refcounted global solver-timing hook.
+//! - [`summary`]: [`RunLog`] — JSONL/CSV export and the summary table.
+//! - [`sink`]: the shared typed-row CSV writer (also used by
+//!   `coordinator::metrics`).
+//! - [`schema`]: trace-line validation (golden tests, CI, the
+//!   `obs_schema_check` example).
+
+pub mod event;
+pub mod recorder;
+pub mod schema;
+pub mod sink;
+pub mod summary;
+pub mod timing;
+
+pub use event::{json_escape, Event, EventKey, MigrationPhase};
+pub use recorder::{Counter, Recorder};
+pub use summary::RunLog;

@@ -1,0 +1,350 @@
+//! The [`Recorder`] handle: `Option`-like, disabled by default (one
+//! branch per emission site), per-thread ring-buffered collection, and
+//! a deterministic end-of-run merge.
+//!
+//! Determinism contract: every event carries a total-order merge key
+//! ([`crate::obs::EventKey`]) and, at the emission sites instrumented in
+//! this crate, *same-key* events are only ever produced by one thread
+//! (engine runs are single-threaded; replay verdicts key on the
+//! candidate index each worker owns). The merge sorts by (key, per-
+//! thread sequence, serialized line), so the merged stream — like the
+//! `FleetResult`s it narrates — is invariant to thread count and
+//! scheduling. Solver/summary lines are wall-clock aggregates appended
+//! after the sorted stream.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::ThreadId;
+
+use crate::obs::summary::RunLog;
+use crate::obs::{timing, Event};
+
+/// Monotone run counters, aggregated into the trace's `summary` line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    Arbitrations,
+    Preemptions,
+    IntentsEmitted,
+    IntentsRejected,
+    MigrationsBooked,
+    CleanSlots,
+    ReplayedSlots,
+    AdoptedSlots,
+    Rounds,
+}
+
+impl Counter {
+    pub const COUNT: usize = 9;
+
+    pub const ALL: [Counter; Counter::COUNT] = [
+        Counter::Arbitrations,
+        Counter::Preemptions,
+        Counter::IntentsEmitted,
+        Counter::IntentsRejected,
+        Counter::MigrationsBooked,
+        Counter::CleanSlots,
+        Counter::ReplayedSlots,
+        Counter::AdoptedSlots,
+        Counter::Rounds,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Counter::Arbitrations => "arbitrations",
+            Counter::Preemptions => "preemptions",
+            Counter::IntentsEmitted => "intents_emitted",
+            Counter::IntentsRejected => "intents_rejected",
+            Counter::MigrationsBooked => "migrations_booked",
+            Counter::CleanSlots => "clean_slots",
+            Counter::ReplayedSlots => "replayed_slots",
+            Counter::AdoptedSlots => "adopted_slots",
+            Counter::Rounds => "rounds",
+        }
+    }
+
+    fn index(&self) -> usize {
+        match self {
+            Counter::Arbitrations => 0,
+            Counter::Preemptions => 1,
+            Counter::IntentsEmitted => 2,
+            Counter::IntentsRejected => 3,
+            Counter::MigrationsBooked => 4,
+            Counter::CleanSlots => 5,
+            Counter::ReplayedSlots => 6,
+            Counter::AdoptedSlots => 7,
+            Counter::Rounds => 8,
+        }
+    }
+}
+
+/// Per-thread event buffer: a fixed-capacity ring. Overflow drops the
+/// *oldest* events (the tail of a run matters most for debugging) and
+/// counts them, so a truncated trace is detectable from its summary.
+struct Shard {
+    seq: u64,
+    dropped: u64,
+    ring: VecDeque<(Event, u64)>,
+}
+
+struct Inner {
+    cap: usize,
+    round: AtomicU32,
+    counters: [AtomicU64; Counter::COUNT],
+    shards: Mutex<HashMap<ThreadId, Shard>>,
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        timing::release();
+    }
+}
+
+/// Default per-thread ring capacity.
+const DEFAULT_CAP: usize = 1 << 16;
+
+/// A cheap, cloneable tracing handle. [`Recorder::disabled`] (also the
+/// `Default`) is a `None` — every emission site costs one branch and
+/// never constructs its event. [`Recorder::enabled`] buffers events
+/// per thread and merges them deterministically in
+/// [`Recorder::finish`].
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for Recorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Recorder")
+            .field("enabled", &self.inner.is_some())
+            .finish()
+    }
+}
+
+impl Recorder {
+    /// The statically-off recorder (the default everywhere).
+    pub fn disabled() -> Recorder {
+        Recorder { inner: None }
+    }
+
+    /// An enabled recorder with the default ring capacity. Also turns
+    /// on the global solver-timing hook for its lifetime.
+    pub fn enabled() -> Recorder {
+        Recorder::with_capacity(DEFAULT_CAP)
+    }
+
+    /// An enabled recorder with a custom per-thread ring capacity.
+    pub fn with_capacity(cap: usize) -> Recorder {
+        assert!(cap > 0);
+        timing::acquire();
+        Recorder {
+            inner: Some(Arc::new(Inner {
+                cap,
+                round: AtomicU32::new(0),
+                counters: Default::default(),
+                shards: Mutex::new(HashMap::new()),
+            })),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Emit one event. The closure only runs when enabled, so call
+    /// sites pay nothing to *construct* events on the disabled path.
+    #[inline]
+    pub fn emit(&self, f: impl FnOnce() -> Event) {
+        if let Some(inner) = &self.inner {
+            let ev = f();
+            let mut shards = inner.shards.lock().unwrap();
+            let shard =
+                shards.entry(std::thread::current().id()).or_insert_with(|| {
+                    Shard { seq: 0, dropped: 0, ring: VecDeque::new() }
+                });
+            if shard.ring.len() >= inner.cap {
+                shard.ring.pop_front();
+                shard.dropped += 1;
+            }
+            let seq = shard.seq;
+            shard.seq += 1;
+            shard.ring.push_back((ev, seq));
+        }
+    }
+
+    /// Bump a run counter (no-op when disabled).
+    #[inline]
+    pub fn add(&self, c: Counter, n: u64) {
+        if let Some(inner) = &self.inner {
+            inner.counters[c.index()].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Set the ambient selection-round context stamped into events via
+    /// [`Recorder::round`]. The round leads the merge key, so events
+    /// from different rounds never interleave.
+    pub fn set_round(&self, k: u32) {
+        if let Some(inner) = &self.inner {
+            inner.round.store(k, Ordering::Relaxed);
+        }
+    }
+
+    /// The current ambient round (0 when disabled or never set).
+    #[inline]
+    pub fn round(&self) -> u32 {
+        match &self.inner {
+            Some(inner) => inner.round.load(Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    /// Drain every thread's buffer into one deterministically-merged
+    /// [`RunLog`], appending the solver-timing and counter-summary
+    /// lines. Returns `None` for a disabled recorder. Call once, at the
+    /// end of the run (emissions after `finish` start a fresh log).
+    pub fn finish(&self) -> Option<RunLog> {
+        let inner = self.inner.as_ref()?;
+        let mut recs: Vec<(crate::obs::EventKey, u64, String)> = Vec::new();
+        let mut dropped = 0u64;
+        {
+            let mut shards = inner.shards.lock().unwrap();
+            for shard in shards.values_mut() {
+                dropped += shard.dropped;
+                shard.dropped = 0;
+                for (ev, seq) in shard.ring.drain(..) {
+                    recs.push((ev.key(), seq, ev.to_json()));
+                }
+            }
+        }
+        // Same-key events never span threads at this crate's emission
+        // sites, so (key, seq) is already total there; the line itself
+        // is the final tiebreak, making the order a pure function of
+        // the event multiset (shard iteration order cannot leak in).
+        recs.sort_by(|a, b| {
+            (a.0, a.1).cmp(&(b.0, b.1)).then_with(|| a.2.cmp(&b.2))
+        });
+        let events = recs.len() as u64;
+        let mut lines: Vec<String> =
+            recs.into_iter().map(|(_, _, line)| line).collect();
+        let solver = timing::drain();
+        lines.push(solver.to_json());
+        let counters: Vec<(&'static str, u64)> = Counter::ALL
+            .iter()
+            .map(|c| {
+                (c.name(), inner.counters[c.index()].load(Ordering::Relaxed))
+            })
+            .collect();
+        let summary = Event::Summary { events, dropped, counters: counters.clone() };
+        lines.push(summary.to_json());
+        Some(RunLog { lines, events, dropped, counters })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_never_constructs_events() {
+        let r = Recorder::disabled();
+        assert!(!r.is_enabled());
+        let mut ran = false;
+        r.emit(|| {
+            ran = true;
+            Event::ReplayCache { round: 0, hits: 0, misses: 0 }
+        });
+        assert!(!ran, "the event closure must not run when disabled");
+        assert!(r.finish().is_none());
+        assert_eq!(r.round(), 0);
+    }
+
+    #[test]
+    fn merge_is_sorted_by_key_not_emission_order() {
+        let r = Recorder::enabled();
+        r.set_round(1);
+        let arb = |slot, region| Event::Arbitration {
+            round: 1,
+            slot,
+            region,
+            avail: 4,
+            requested: 4,
+            granted: 4,
+            contenders: 1,
+            preempted_jobs: 0,
+        };
+        // Emit out of order; the log must come back (slot, region)-sorted.
+        r.emit(|| arb(5, 1));
+        r.emit(|| arb(2, 0));
+        r.emit(|| arb(2, 1));
+        r.add(Counter::Arbitrations, 3);
+        let log = r.finish().unwrap();
+        let events: Vec<&String> = log
+            .lines
+            .iter()
+            .filter(|l| l.contains("\"kind\":\"arbitration\""))
+            .collect();
+        assert_eq!(events.len(), 3);
+        assert!(events[0].contains("\"slot\":2") && events[0].contains("\"region\":0"));
+        assert!(events[1].contains("\"slot\":2") && events[1].contains("\"region\":1"));
+        assert!(events[2].contains("\"slot\":5"));
+        // Solver + summary close the log.
+        let n = log.lines.len();
+        assert!(log.lines[n - 2].contains("\"kind\":\"solver\""));
+        assert!(log.lines[n - 1].contains("\"kind\":\"summary\""));
+        assert!(log.lines[n - 1].contains("\"arbitrations\":3"));
+        assert_eq!(log.events, 3);
+        assert_eq!(log.dropped, 0);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let r = Recorder::with_capacity(2);
+        for slot in 0..5 {
+            r.emit(|| Event::Preemption {
+                round: 0,
+                slot,
+                region: 0,
+                job: 0,
+                lost: 1,
+            });
+        }
+        let log = r.finish().unwrap();
+        assert_eq!(log.events, 2);
+        assert_eq!(log.dropped, 3);
+        // The survivors are the *latest* emissions.
+        assert!(log.lines[0].contains("\"slot\":3"));
+        assert!(log.lines[1].contains("\"slot\":4"));
+        assert!(log.lines.last().unwrap().contains("\"dropped\":3"));
+    }
+
+    #[test]
+    fn cross_thread_merge_is_thread_count_invariant() {
+        // Each "candidate" event is keyed by its index; emitting them
+        // from many threads or one must merge identically.
+        let emit_all = |r: &Recorder, threads: usize| {
+            let items: Vec<usize> = (0..16).collect();
+            crate::fleet::sweep::run_parallel(&items, threads, |_, &i| {
+                r.emit(|| Event::Replay {
+                    round: 0,
+                    candidate: i,
+                    label: format!("cand{i}"),
+                    clean_slots: i,
+                    replayed_slots: 0,
+                    adopted_slots: 0,
+                    diverged_at: None,
+                });
+            });
+        };
+        let a = Recorder::enabled();
+        emit_all(&a, 1);
+        let b = Recorder::enabled();
+        emit_all(&b, 4);
+        let strip = |log: RunLog| -> Vec<String> {
+            log.lines
+                .into_iter()
+                .filter(|l| !l.contains("\"kind\":\"solver\""))
+                .collect()
+        };
+        assert_eq!(strip(a.finish().unwrap()), strip(b.finish().unwrap()));
+    }
+}

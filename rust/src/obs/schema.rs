@@ -1,0 +1,473 @@
+//! Trace-schema validation: a minimal JSON parser (the crate is
+//! dependency-free) plus the per-kind field contract every JSONL line
+//! must satisfy. Shared by the golden test in
+//! `tests/obs_properties.rs`, the `obs_schema_check` example binary,
+//! and the CI trace smoke — one definition of "valid trace line".
+
+use std::collections::BTreeMap;
+
+/// A parsed JSON value (enough of JSON for trace lines).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+/// Expected type of one schema field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FieldType {
+    Num,
+    /// Number or `null` (absent optionals serialize as null).
+    OptNum,
+    Str,
+    /// String or `null`.
+    OptStr,
+    /// Array of numbers (or nulls, for non-finite floats).
+    NumArr,
+    /// Object with numeric values (the summary's counter map).
+    NumObj,
+}
+
+/// The field contract of every event kind: `(kind, [(field, type)])`.
+/// Field *sets* must match exactly — extra or missing fields fail —
+/// which is what the golden schema test pins across PRs.
+pub const SCHEMA: &[(&str, &[(&str, FieldType)])] = &[
+    (
+        "arbitration",
+        &[
+            ("round", FieldType::Num),
+            ("slot", FieldType::Num),
+            ("region", FieldType::Num),
+            ("avail", FieldType::Num),
+            ("requested", FieldType::Num),
+            ("granted", FieldType::Num),
+            ("contenders", FieldType::Num),
+            ("preempted_jobs", FieldType::Num),
+        ],
+    ),
+    (
+        "preemption",
+        &[
+            ("round", FieldType::Num),
+            ("slot", FieldType::Num),
+            ("region", FieldType::Num),
+            ("job", FieldType::Num),
+            ("lost", FieldType::Num),
+        ],
+    ),
+    (
+        "migration",
+        &[
+            ("round", FieldType::Num),
+            ("slot", FieldType::Num),
+            ("job", FieldType::Num),
+            ("from", FieldType::Num),
+            ("to", FieldType::Num),
+            ("phase", FieldType::Str),
+            ("reason", FieldType::OptStr),
+        ],
+    ),
+    (
+        "replay",
+        &[
+            ("round", FieldType::Num),
+            ("candidate", FieldType::Num),
+            ("label", FieldType::Str),
+            ("clean_slots", FieldType::Num),
+            ("replayed_slots", FieldType::Num),
+            ("adopted_slots", FieldType::Num),
+            ("diverged_at", FieldType::OptNum),
+        ],
+    ),
+    (
+        "replay_cache",
+        &[
+            ("round", FieldType::Num),
+            ("hits", FieldType::Num),
+            ("misses", FieldType::Num),
+        ],
+    ),
+    (
+        "forecast_cache",
+        &[
+            ("round", FieldType::Num),
+            ("caches", FieldType::Num),
+            ("slots", FieldType::Num),
+            ("hits", FieldType::Num),
+            ("misses", FieldType::Num),
+            ("fits_price", FieldType::Num),
+            ("fits_avail", FieldType::Num),
+        ],
+    ),
+    (
+        "ledger",
+        &[
+            ("round", FieldType::Num),
+            ("chosen", FieldType::Num),
+            ("label", FieldType::Str),
+            ("expected", FieldType::OptNum),
+            ("cum_regret", FieldType::OptNum),
+            ("best_fixed", FieldType::Num),
+            ("weights", FieldType::NumArr),
+            ("utilities", FieldType::NumArr),
+        ],
+    ),
+    (
+        "solver",
+        &[
+            ("windows", FieldType::Num),
+            ("greedy_calls", FieldType::Num),
+            ("greedy_total_us", FieldType::Num),
+            ("greedy_hist_us", FieldType::NumArr),
+            ("dp_calls", FieldType::Num),
+            ("dp_total_us", FieldType::Num),
+            ("dp_hist_us", FieldType::NumArr),
+        ],
+    ),
+    (
+        "summary",
+        &[
+            ("events", FieldType::Num),
+            ("dropped", FieldType::Num),
+            ("counters", FieldType::NumObj),
+        ],
+    ),
+];
+
+/// Validate one trace line. Returns the event kind on success, or a
+/// description of the first violation.
+pub fn validate_line(line: &str) -> Result<&'static str, String> {
+    let v = parse(line).map_err(|e| format!("not valid JSON: {e}"))?;
+    let Json::Obj(obj) = v else {
+        return Err("line is not a JSON object".to_string());
+    };
+    let Some(Json::Str(kind)) = obj.get("kind") else {
+        return Err("missing string field \"kind\"".to_string());
+    };
+    let Some((kind_name, fields)) =
+        SCHEMA.iter().find(|(k, _)| k == kind).copied()
+    else {
+        return Err(format!("unknown kind \"{kind}\""));
+    };
+    for (name, ty) in fields {
+        let Some(val) = obj.get(*name) else {
+            return Err(format!("{kind}: missing field \"{name}\""));
+        };
+        let ok = match ty {
+            FieldType::Num => matches!(val, Json::Num(_)),
+            FieldType::OptNum => matches!(val, Json::Num(_) | Json::Null),
+            FieldType::Str => matches!(val, Json::Str(_)),
+            FieldType::OptStr => matches!(val, Json::Str(_) | Json::Null),
+            FieldType::NumArr => match val {
+                Json::Arr(items) => items
+                    .iter()
+                    .all(|i| matches!(i, Json::Num(_) | Json::Null)),
+                _ => false,
+            },
+            FieldType::NumObj => match val {
+                Json::Obj(m) => {
+                    m.values().all(|v| matches!(v, Json::Num(_)))
+                }
+                _ => false,
+            },
+        };
+        if !ok {
+            return Err(format!("{kind}: field \"{name}\" has the wrong type"));
+        }
+    }
+    // Exact field-name set: kind + declared fields, nothing else.
+    for key in obj.keys() {
+        if key != "kind" && !fields.iter().any(|(n, _)| n == key) {
+            return Err(format!("{kind}: unexpected field \"{key}\""));
+        }
+    }
+    Ok(kind_name)
+}
+
+/// Parse one JSON document (object/array/scalar). Not a general-purpose
+/// parser — no surrogate-pair decoding (`\uXXXX` outside the BMP) — but
+/// complete for everything this crate emits.
+pub fn parse(text: &str) -> Result<Json, String> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut pos = 0usize;
+    let v = parse_value(&chars, &mut pos)?;
+    skip_ws(&chars, &mut pos);
+    if pos != chars.len() {
+        return Err(format!("trailing input at {pos}"));
+    }
+    Ok(v)
+}
+
+fn skip_ws(c: &[char], pos: &mut usize) {
+    while *pos < c.len() && c[*pos].is_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn expect(c: &[char], pos: &mut usize, ch: char) -> Result<(), String> {
+    if *pos < c.len() && c[*pos] == ch {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!("expected '{ch}' at {pos}", pos = *pos))
+    }
+}
+
+fn parse_value(c: &[char], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(c, pos);
+    match c.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some('{') => {
+            *pos += 1;
+            let mut obj = BTreeMap::new();
+            skip_ws(c, pos);
+            if c.get(*pos) == Some(&'}') {
+                *pos += 1;
+                return Ok(Json::Obj(obj));
+            }
+            loop {
+                skip_ws(c, pos);
+                let key = parse_string(c, pos)?;
+                skip_ws(c, pos);
+                expect(c, pos, ':')?;
+                let val = parse_value(c, pos)?;
+                obj.insert(key, val);
+                skip_ws(c, pos);
+                match c.get(*pos) {
+                    Some(',') => *pos += 1,
+                    Some('}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(obj));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at {}", *pos)),
+                }
+            }
+        }
+        Some('[') => {
+            *pos += 1;
+            let mut arr = Vec::new();
+            skip_ws(c, pos);
+            if c.get(*pos) == Some(&']') {
+                *pos += 1;
+                return Ok(Json::Arr(arr));
+            }
+            loop {
+                arr.push(parse_value(c, pos)?);
+                skip_ws(c, pos);
+                match c.get(*pos) {
+                    Some(',') => *pos += 1,
+                    Some(']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(arr));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at {}", *pos)),
+                }
+            }
+        }
+        Some('"') => Ok(Json::Str(parse_string(c, pos)?)),
+        Some('t') => parse_lit(c, pos, "true", Json::Bool(true)),
+        Some('f') => parse_lit(c, pos, "false", Json::Bool(false)),
+        Some('n') => parse_lit(c, pos, "null", Json::Null),
+        Some(_) => parse_number(c, pos),
+    }
+}
+
+fn parse_lit(
+    c: &[char],
+    pos: &mut usize,
+    lit: &str,
+    v: Json,
+) -> Result<Json, String> {
+    for ch in lit.chars() {
+        expect(c, pos, ch)?;
+    }
+    Ok(v)
+}
+
+fn parse_string(c: &[char], pos: &mut usize) -> Result<String, String> {
+    expect(c, pos, '"')?;
+    let mut out = String::new();
+    while let Some(&ch) = c.get(*pos) {
+        *pos += 1;
+        match ch {
+            '"' => return Ok(out),
+            '\\' => {
+                let esc = c.get(*pos).copied().ok_or("dangling escape")?;
+                *pos += 1;
+                match esc {
+                    '"' => out.push('"'),
+                    '\\' => out.push('\\'),
+                    '/' => out.push('/'),
+                    'n' => out.push('\n'),
+                    't' => out.push('\t'),
+                    'r' => out.push('\r'),
+                    'b' => out.push('\u{8}'),
+                    'f' => out.push('\u{c}'),
+                    'u' => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = c
+                                .get(*pos)
+                                .and_then(|d| d.to_digit(16))
+                                .ok_or("bad \\u escape")?;
+                            code = code * 16 + d;
+                            *pos += 1;
+                        }
+                        out.push(
+                            char::from_u32(code)
+                                .ok_or("surrogate \\u escape")?,
+                        );
+                    }
+                    other => return Err(format!("bad escape '\\{other}'")),
+                }
+            }
+            ch => out.push(ch),
+        }
+    }
+    Err("unterminated string".to_string())
+}
+
+fn parse_number(c: &[char], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    while let Some(&ch) = c.get(*pos) {
+        if ch.is_ascii_digit() || matches!(ch, '-' | '+' | '.' | 'e' | 'E') {
+            *pos += 1;
+        } else {
+            break;
+        }
+    }
+    let s: String = c[start..*pos].iter().collect();
+    s.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("bad number \"{s}\" at {start}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Event, MigrationPhase};
+
+    #[test]
+    fn every_event_kind_validates_against_its_schema() {
+        let events = vec![
+            Event::Arbitration {
+                round: 0,
+                slot: 1,
+                region: 0,
+                avail: 6,
+                requested: 8,
+                granted: 6,
+                contenders: 2,
+                preempted_jobs: 1,
+            },
+            Event::Preemption { round: 0, slot: 1, region: 0, job: 2, lost: 3 },
+            Event::Migration {
+                round: 0,
+                slot: 1,
+                job: 2,
+                from: 0,
+                to: 1,
+                phase: MigrationPhase::Booked,
+                reason: Some("intent"),
+            },
+            Event::Replay {
+                round: 3,
+                candidate: 17,
+                label: "AHAP(ω=3,v=1,σ=0.7)".into(),
+                clean_slots: 9,
+                replayed_slots: 2,
+                adopted_slots: 1,
+                diverged_at: Some(9),
+            },
+            Event::ReplayCache { round: 3, hits: 10, misses: 4 },
+            Event::ForecastCache {
+                round: 3,
+                caches: 2,
+                slots: 40,
+                hits: 100,
+                misses: 40,
+                fits_price: 20,
+                fits_avail: 20,
+            },
+            Event::Ledger {
+                round: 3,
+                chosen: 5,
+                label: "MSU".into(),
+                expected: 0.51,
+                cum_regret: 1.25,
+                best_fixed: 7,
+                weights: vec![0.5, 0.5],
+                utilities: vec![0.1, f64::NAN],
+            },
+            Event::Solver {
+                windows: 4,
+                greedy_calls: 3,
+                greedy_total_us: 12,
+                greedy_hist_us: vec![0; 11],
+                dp_calls: 1,
+                dp_total_us: 80,
+                dp_hist_us: vec![0; 11],
+            },
+            Event::Summary {
+                events: 9,
+                dropped: 0,
+                counters: vec![("arbitrations", 2)],
+            },
+        ];
+        for e in events {
+            let line = e.to_json();
+            assert_eq!(
+                validate_line(&line),
+                Ok(e.kind()),
+                "line failed: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_kinds_extra_and_missing_fields() {
+        assert!(validate_line("not json").is_err());
+        assert!(validate_line("{\"kind\":\"nope\"}").is_err());
+        assert!(
+            validate_line("{\"kind\":\"replay_cache\",\"round\":0,\"hits\":1}")
+                .unwrap_err()
+                .contains("missing field")
+        );
+        assert!(validate_line(
+            "{\"kind\":\"replay_cache\",\"round\":0,\"hits\":1,\
+             \"misses\":2,\"extra\":3}"
+        )
+        .unwrap_err()
+        .contains("unexpected field"));
+        assert!(validate_line(
+            "{\"kind\":\"replay_cache\",\"round\":\"x\",\"hits\":1,\"misses\":2}"
+        )
+        .unwrap_err()
+        .contains("wrong type"));
+    }
+
+    #[test]
+    fn parser_handles_escapes_nesting_and_numbers() {
+        let v = parse(
+            "{\"a\":[1,-2.5,1e3,null],\"s\":\"q\\\"\\n\\u0041\",\"o\":{}}",
+        )
+        .unwrap();
+        let Json::Obj(o) = v else { panic!() };
+        assert_eq!(
+            o.get("a"),
+            Some(&Json::Arr(vec![
+                Json::Num(1.0),
+                Json::Num(-2.5),
+                Json::Num(1000.0),
+                Json::Null
+            ]))
+        );
+        assert_eq!(o.get("s"), Some(&Json::Str("q\"\nA".into())));
+        assert!(parse("{\"a\":1,}").is_err());
+        assert!(parse("{\"a\":1} extra").is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Shared typed-row CSV sink over [`crate::util::csvio::CsvWriter`] —
+//! one formatting path for every CSV the crate writes (obs summaries,
+//! `coordinator::metrics` slot/loss records, figure data).
+//!
+//! [`Cell`] keeps the value's *type* until formatting so each column
+//! pins its own precision — the `coordinator::metrics` columns are
+//! byte-compatibility contracts, and a shared sink makes the precision
+//! explicit instead of scattered across `format!` calls.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::csvio::CsvWriter;
+
+/// One typed CSV cell with its formatting rule.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Cell {
+    Int(i64),
+    UInt(u64),
+    /// `f64` at the given number of decimals.
+    F64(f64, usize),
+    /// `f32` at the given number of decimals. Formats identically to
+    /// widening first (f32→f64 is exact), but keeps call sites cast-free
+    /// and the column's source type visible.
+    F32(f32, usize),
+    Str(String),
+}
+
+impl Cell {
+    pub fn format(&self) -> String {
+        match self {
+            Cell::Int(v) => v.to_string(),
+            Cell::UInt(v) => v.to_string(),
+            Cell::F64(v, d) => format!("{v:.prec$}", prec = *d),
+            Cell::F32(v, d) => format!("{v:.prec$}", prec = *d),
+            Cell::Str(s) => s.clone(),
+        }
+    }
+}
+
+/// Write `rows` under `header` at `path` (parent directories created),
+/// quoting via the shared [`CsvWriter`] rules. Every row must match the
+/// header width — the writer panics on mismatch, same as `CsvWriter`.
+pub fn write_csv(
+    path: impl AsRef<Path>,
+    header: &[&str],
+    rows: &[Vec<Cell>],
+) -> std::io::Result<PathBuf> {
+    let mut w = CsvWriter::create(path, header)?;
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(Cell::format).collect();
+        w.row(&cells);
+    }
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cells_format_with_their_own_precision() {
+        assert_eq!(Cell::Int(-3).format(), "-3");
+        assert_eq!(Cell::UInt(7).format(), "7");
+        assert_eq!(Cell::F64(1.23456, 3).format(), "1.235");
+        assert_eq!(Cell::F32(0.1, 4).format(), "0.1000");
+        assert_eq!(Cell::Str("a,b".into()).format(), "a,b");
+    }
+
+    #[test]
+    fn f32_cells_match_the_widened_f64_formatting() {
+        // f32→f64 widening is exact, so the two paths must agree — the
+        // invariant that lets `coordinator::metrics` keep byte-identical
+        // columns while routing through the shared sink.
+        for v in [0.1f32, 1.2345, -7.25, 1e-3] {
+            for d in [2usize, 4, 6] {
+                assert_eq!(
+                    Cell::F32(v, d).format(),
+                    Cell::F64(v as f64, d).format()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn writes_rows_through_the_shared_writer() {
+        let dir = std::env::temp_dir()
+            .join(format!("spotfine_obs_sink_{}", std::process::id()));
+        let p = write_csv(
+            dir.join("t.csv"),
+            &["a", "b"],
+            &[
+                vec![Cell::UInt(1), Cell::F64(2.5, 2)],
+                vec![Cell::Str("x,y".into()), Cell::Int(-1)],
+            ],
+        )
+        .unwrap();
+        let s = std::fs::read_to_string(p).unwrap();
+        assert_eq!(s, "a,b\n1,2.50\n\"x,y\",-1\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,147 @@
+//! The merged output of a traced run: JSONL export, a human summary
+//! table (`util::table`), and a counter CSV (`obs::sink` over
+//! `util::csvio`).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::obs::sink::{write_csv, Cell};
+use crate::util::table::Table;
+
+/// A finished, deterministically-merged trace (see
+/// [`crate::obs::Recorder::finish`]). `lines` is the full JSONL stream:
+/// sorted events, then the solver-timing line, then the summary line.
+#[derive(Debug, Clone)]
+pub struct RunLog {
+    /// One serialized JSON object per line, in final order.
+    pub lines: Vec<String>,
+    /// Events merged (excluding the solver/summary trailer lines).
+    pub events: u64,
+    /// Events dropped to ring overflow across all threads.
+    pub dropped: u64,
+    /// Final counter snapshot, in [`crate::obs::Counter::ALL`] order.
+    pub counters: Vec<(&'static str, u64)>,
+}
+
+impl RunLog {
+    /// Write the trace as JSONL, creating parent directories.
+    pub fn write_jsonl(&self, path: impl AsRef<Path>) -> std::io::Result<PathBuf> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(&path)?;
+        for line in &self.lines {
+            f.write_all(line.as_bytes())?;
+            f.write_all(b"\n")?;
+        }
+        Ok(path)
+    }
+
+    /// Count of events per kind (from the serialized stream).
+    pub fn kind_counts(&self) -> Vec<(String, usize)> {
+        let mut counts: std::collections::BTreeMap<String, usize> =
+            std::collections::BTreeMap::new();
+        for line in &self.lines {
+            if let Some(kind) = kind_of(line) {
+                *counts.entry(kind.to_string()).or_insert(0) += 1;
+            }
+        }
+        counts.into_iter().collect()
+    }
+
+    /// The run summary as an aligned table: per-kind event counts, then
+    /// the counters, then the drop diagnostics.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(&["metric", "value"]);
+        for (kind, n) in self.kind_counts() {
+            t.row(&[format!("events.{kind}"), n.to_string()]);
+        }
+        for (name, v) in &self.counters {
+            t.row(&[format!("counter.{name}"), v.to_string()]);
+        }
+        t.row(&["events.merged".to_string(), self.events.to_string()]);
+        t.row(&["events.dropped".to_string(), self.dropped.to_string()]);
+        t
+    }
+
+    /// Write the summary (kind counts + counters) as a two-column CSV.
+    pub fn write_summary_csv(
+        &self,
+        path: impl AsRef<Path>,
+    ) -> std::io::Result<PathBuf> {
+        let mut rows: Vec<Vec<Cell>> = Vec::new();
+        for (kind, n) in self.kind_counts() {
+            rows.push(vec![
+                Cell::Str(format!("events.{kind}")),
+                Cell::UInt(n as u64),
+            ]);
+        }
+        for (name, v) in &self.counters {
+            rows.push(vec![
+                Cell::Str(format!("counter.{name}")),
+                Cell::UInt(*v),
+            ]);
+        }
+        rows.push(vec![
+            Cell::Str("events.merged".to_string()),
+            Cell::UInt(self.events),
+        ]);
+        rows.push(vec![
+            Cell::Str("events.dropped".to_string()),
+            Cell::UInt(self.dropped),
+        ]);
+        write_csv(path, &["metric", "value"], &rows)
+    }
+}
+
+/// The `"kind"` of one serialized event line (every line this crate
+/// writes leads with it).
+fn kind_of(line: &str) -> Option<&str> {
+    let rest = line.strip_prefix("{\"kind\":\"")?;
+    let end = rest.find('"')?;
+    Some(&rest[..end])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log() -> RunLog {
+        RunLog {
+            lines: vec![
+                "{\"kind\":\"arbitration\",\"round\":0}".to_string(),
+                "{\"kind\":\"arbitration\",\"round\":0}".to_string(),
+                "{\"kind\":\"ledger\",\"round\":0}".to_string(),
+                "{\"kind\":\"summary\",\"events\":3}".to_string(),
+            ],
+            events: 3,
+            dropped: 1,
+            counters: vec![("arbitrations", 2), ("rounds", 1)],
+        }
+    }
+
+    #[test]
+    fn table_reports_kinds_counters_and_drops() {
+        let t = log().summary_table();
+        let s = t.render();
+        assert!(s.contains("events.arbitration"));
+        assert!(s.contains("counter.rounds"));
+        assert!(s.contains("events.dropped"));
+    }
+
+    #[test]
+    fn jsonl_and_csv_roundtrip_to_disk() {
+        let dir = std::env::temp_dir()
+            .join(format!("spotfine_obs_summary_{}", std::process::id()));
+        let log = log();
+        let jp = log.write_jsonl(dir.join("t.jsonl")).unwrap();
+        let text = std::fs::read_to_string(&jp).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        let cp = log.write_summary_csv(dir.join("s.csv")).unwrap();
+        let csv = std::fs::read_to_string(&cp).unwrap();
+        assert!(csv.starts_with("metric,value\n"));
+        assert!(csv.contains("events.arbitration,2"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -140,6 +140,7 @@ impl Ahap {
         ctx: &SlotContext,
         prob: &HorizonProblem,
     ) -> HorizonSolution {
+        crate::obs::timing::note_window();
         match self.solver {
             // Under harsh reconfiguration overhead the greedy's
             // μ-deflation heuristic misprices capacity badly (it

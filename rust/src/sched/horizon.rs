@@ -15,6 +15,7 @@
 //!   penalty inside the window. Used by the Fig. 4/6 harnesses and as the
 //!   reference the greedy is property-tested against.
 
+use crate::obs::timing::{timed, TimedSolver};
 use crate::sched::job::Job;
 use crate::sched::policy::{Allocation, MigrationTerms, Models};
 
@@ -139,6 +140,12 @@ impl HorizonProblem<'_> {
 /// the reported utility — the quantity region-aware AHAP compares across
 /// candidate regions.
 pub fn solve_greedy(p: &HorizonProblem) -> HorizonSolution {
+    // The timing shim is a no-op (two relaxed loads) unless an
+    // `obs::Recorder` is live somewhere in the process.
+    timed(TimedSolver::Greedy, || solve_greedy_impl(p))
+}
+
+fn solve_greedy_impl(p: &HorizonProblem) -> HorizonSolution {
     // Two candidate plans: one provisioned against μ₁-deflated unit
     // progress (a ~(1/μ₁−1) safety margin that protects the deadline —
     // the value cliff is much steeper than the spot/on-demand spread),
@@ -285,6 +292,10 @@ pub fn evaluate(p: &HorizonProblem, alloc: &[Allocation]) -> f64 {
 /// Exact DP over (slot, progress-grid, previous-count). Progress is
 /// floored to a grid of `grid_step` workload units (conservative).
 pub fn solve_dp(p: &HorizonProblem, grid_step: f64) -> HorizonSolution {
+    timed(TimedSolver::Dp, || solve_dp_impl(p, grid_step))
+}
+
+fn solve_dp_impl(p: &HorizonProblem, grid_step: f64) -> HorizonSolution {
     assert!(grid_step > 0.0);
     let len = p.len();
     let n_max = p.job.n_max as usize;

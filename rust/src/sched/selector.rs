@@ -5,6 +5,7 @@
 
 use crate::market::generator::TraceGenerator;
 use crate::market::trace::SpotTrace;
+use crate::obs::{Counter, Event, Recorder};
 use crate::sched::job::{Job, JobGenerator};
 use crate::sched::policy::Models;
 use crate::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
@@ -253,9 +254,41 @@ pub fn run_selection_eval(
     jobs: &JobGenerator,
     models: &Models,
     trace_gen: &TraceGenerator,
+    predictor_at: impl FnMut(usize) -> PredictorKind,
+    cfg: &SelectionConfig,
+    eval: &mut dyn EpisodeEvaluator,
+) -> SelectionOutcome {
+    run_selection_eval_observed(
+        specs,
+        jobs,
+        models,
+        trace_gen,
+        predictor_at,
+        cfg,
+        eval,
+        &Recorder::disabled(),
+    )
+}
+
+/// [`run_selection_eval`] with a tracing [`Recorder`] attached. Each
+/// round `k` the recorder's ambient round is set to `k` (so fleet events
+/// from the evaluator carry it) and one `ledger` event is emitted: the
+/// pre-update weight distribution, the full counterfactual utility
+/// vector, the sampled arm and its label, the distribution's expected
+/// utility, the cumulative regret so far, and the current best fixed
+/// policy in hindsight. The trajectory itself is bit-identical to the
+/// unobserved run — the recorder only reads values the loop already
+/// computes.
+#[allow(clippy::too_many_arguments)]
+pub fn run_selection_eval_observed(
+    specs: &[PolicySpec],
+    jobs: &JobGenerator,
+    models: &Models,
+    trace_gen: &TraceGenerator,
     mut predictor_at: impl FnMut(usize) -> PredictorKind,
     cfg: &SelectionConfig,
     eval: &mut dyn EpisodeEvaluator,
+    obs: &Recorder,
 ) -> SelectionOutcome {
     let m = specs.len();
     assert!(m >= 1);
@@ -269,6 +302,8 @@ pub fn run_selection_eval(
     let mut cum_expected = 0.0;
 
     for k in 0..cfg.k_jobs {
+        obs.set_round(k as u32);
+        obs.add(Counter::Rounds, 1);
         let job = jobs.sample(&mut rng);
         // Fresh market segment per job: new seed, random offset into the
         // 10-day trace so jobs see different diurnal phases.
@@ -299,6 +334,20 @@ pub fn run_selection_eval(
             .cloned()
             .fold(f64::NEG_INFINITY, f64::max);
         regret.push(best_cum - cum_expected);
+
+        // Selection ledger: the round's full decision record, with the
+        // *pre-update* weights (the distribution the arm was drawn
+        // from). Reads only values the loop computed anyway.
+        obs.emit(|| Event::Ledger {
+            round: k as u32,
+            chosen,
+            label: specs[chosen].label(),
+            expected: e,
+            cum_regret: best_cum - cum_expected,
+            best_fixed: argmax_total(&per_policy_cum),
+            weights: selector.weights().to_vec(),
+            utilities: u.clone(),
+        });
 
         selector.update(&u);
         if cfg.snapshot_every > 0 && (k + 1) % cfg.snapshot_every == 0 {
@@ -533,6 +582,52 @@ mod tests {
         );
         // utilities normalized
         assert!(out1.realized.iter().all(|&u| (0.0..=1.0).contains(&u)));
+    }
+
+    #[test]
+    fn observed_selection_is_bit_identical_and_writes_a_ledger() {
+        let specs = vec![
+            PolicySpec::OdOnly,
+            PolicySpec::Msu,
+            PolicySpec::Ahanp { sigma: 0.5 },
+        ];
+        let jobs = JobGenerator::default();
+        let models = Models::paper_default();
+        let gen = TraceGenerator::calibrated();
+        let cfg = SelectionConfig { k_jobs: 12, seed: 3, snapshot_every: 0 };
+        let noise =
+            |_: usize| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1));
+        let plain = run_selection(&specs, &jobs, &models, &gen, noise, &cfg);
+        let rec = Recorder::enabled();
+        let observed = run_selection_eval_observed(
+            &specs,
+            &jobs,
+            &models,
+            &gen,
+            noise,
+            &cfg,
+            &mut SingleJobEvaluator,
+            &rec,
+        );
+        assert_eq!(plain.final_weights, observed.final_weights);
+        assert_eq!(plain.realized, observed.realized);
+        assert_eq!(plain.regret, observed.regret);
+        let log = rec.finish().unwrap();
+        let ledgers: Vec<&String> = log
+            .lines
+            .iter()
+            .filter(|l| l.contains("\"kind\":\"ledger\""))
+            .collect();
+        assert_eq!(ledgers.len(), cfg.k_jobs);
+        // One ledger per round, ascending in the merged stream.
+        assert!(ledgers[0].contains("\"round\":0,"));
+        assert!(ledgers
+            .last()
+            .unwrap()
+            .contains(&format!("\"round\":{},", cfg.k_jobs - 1)));
+        let counters: std::collections::HashMap<_, _> =
+            log.counters.iter().copied().collect();
+        assert_eq!(counters["rounds"], cfg.k_jobs as u64);
     }
 
     #[test]

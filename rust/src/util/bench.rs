@@ -219,11 +219,25 @@ fn json_str_field(line: &str, key: &str) -> Option<String> {
     let mut chars = line[start..].chars();
     while let Some(c) = chars.next() {
         match c {
-            '\\' => {
-                if let Some(n) = chars.next() {
-                    out.push(n);
+            // Full escape decode, the inverse of `json_escape` — pushing
+            // the escape's second char raw would turn "\n" into "n" and
+            // break name matching against the live bench names.
+            '\\' => match chars.next()? {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                '/' => out.push('/'),
+                'n' => out.push('\n'),
+                't' => out.push('\t'),
+                'r' => out.push('\r'),
+                'b' => out.push('\u{8}'),
+                'f' => out.push('\u{c}'),
+                'u' => {
+                    let hex: String = chars.by_ref().take(4).collect();
+                    let code = u32::from_str_radix(&hex, 16).ok()?;
+                    out.push(char::from_u32(code)?);
                 }
-            }
+                _ => return None,
+            },
             '"' => return Some(out),
             c => out.push(c),
         }
@@ -293,6 +307,25 @@ mod tests {
         assert_eq!(base[1].name, "beta");
         assert!(rep.mean_of("nope").is_none());
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn baseline_names_with_escapes_roundtrip_exactly() {
+        // Newlines, tabs, backslashes, and quotes in a bench name must
+        // survive the write → load_baseline roundtrip byte for byte
+        // (escaped on write, fully decoded on read).
+        let gnarly = "line1\nline2\tpath\\to\\x \"q\" \u{1}";
+        let mut rep = JsonReport::new("unit");
+        let r = bench(gnarly, 1, 3, || 3 + 3);
+        rep.result("s", &r);
+        let path = std::env::temp_dir()
+            .join(format!("spotfine_escape_test_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        rep.write(&path).unwrap();
+        let base = load_baseline(&path).unwrap();
+        assert_eq!(base.len(), 1);
+        assert_eq!(base[0].name, gnarly);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -1,0 +1,264 @@
+//! Observability invariants (the tentpole guarantees):
+//!
+//! 1. Tracing is *inert*: a traced fleet run / selection loop produces a
+//!    bit-identical result to the untraced one, across seeds, migration
+//!    modes, churn, and thread counts.
+//! 2. The merged event stream is thread-count invariant (solver timing
+//!    lines excluded — they are wall-clock, process-global aggregates).
+//! 3. The JSONL schema is golden-tested: exact serialized bytes per
+//!    event kind, each line valid under `spotfine::obs::schema`.
+
+use spotfine::fleet::{
+    run_fleet_selection, run_fleet_selection_observed, FleetContendedEvaluator,
+    FleetScenario, MigrationMode,
+};
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::generator::TraceGenerator;
+use spotfine::obs::schema::validate_line;
+use spotfine::obs::{Event, MigrationPhase, Recorder};
+use spotfine::sched::job::JobGenerator;
+use spotfine::sched::policy::Models;
+use spotfine::sched::pool::{PolicySpec, PredictorKind};
+use spotfine::sched::selector::SelectionConfig;
+
+fn small_pool() -> Vec<PolicySpec> {
+    vec![
+        PolicySpec::OdOnly,
+        PolicySpec::Msu,
+        PolicySpec::UniformProgress,
+        PolicySpec::Ahap { omega: 3, v: 1, sigma: 0.7 },
+    ]
+}
+
+/// Trace lines with the process-global wall-clock aggregate removed —
+/// everything else must be deterministic.
+fn deterministic_lines(obs: &Recorder) -> Vec<String> {
+    let log = obs.finish().expect("enabled recorder yields a log");
+    log.lines
+        .iter()
+        .filter(|l| !l.contains("\"kind\":\"solver\""))
+        .cloned()
+        .collect()
+}
+
+#[test]
+fn traced_fleet_runs_are_bit_identical_to_untraced() {
+    // Every (seed, migration mode, churn) cell: attaching a live
+    // recorder must not move a single bit of the FleetResult.
+    for seed in [5u64, 23] {
+        for mode in [MigrationMode::Starvation, MigrationMode::Policy] {
+            for churn in [0.0, 0.5] {
+                let sc = FleetScenario::new(5, 2, seed)
+                    .with_stagger(2)
+                    .with_migration_mode(mode)
+                    .with_churn(churn);
+                let plain = sc.run();
+                let obs = Recorder::enabled();
+                let traced = sc.run_traced(&obs);
+                assert_eq!(
+                    plain, traced,
+                    "tracing perturbed seed {seed} mode {mode:?} churn {churn}"
+                );
+                let log = obs.finish().unwrap();
+                assert_eq!(log.dropped, 0, "default capacity overflowed");
+                assert!(log.events > 0, "a contended fleet must narrate");
+                for line in &log.lines {
+                    validate_line(line).unwrap_or_else(|e| {
+                        panic!("invalid trace line {line}: {e}")
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn selection_trace_is_thread_count_invariant() {
+    // The whole contended selection loop, traced at 1 vs 4 worker
+    // threads: outcomes bit-identical AND the merged deterministic
+    // event stream byte-identical (same-key events never span threads,
+    // so the (key, seq) merge is reproducible).
+    let specs = small_pool();
+    let jobs = JobGenerator::default();
+    let models = Models::paper_default();
+    let gen = TraceGenerator::calibrated();
+    let cfg = SelectionConfig { k_jobs: 6, seed: 31, snapshot_every: 2 };
+    let noise = |_: usize| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1));
+
+    let run_at = |threads: usize| {
+        let obs = Recorder::enabled();
+        let mut ev = FleetContendedEvaluator::synthetic(4, 2, 9)
+            .with_threads(threads);
+        let out = run_fleet_selection_observed(
+            &specs, &jobs, &models, &gen, noise, &cfg, &mut ev, &obs,
+        );
+        (out, deterministic_lines(&obs))
+    };
+    let (out1, lines1) = run_at(1);
+    let (out4, lines4) = run_at(4);
+    assert_eq!(out1.realized, out4.realized);
+    assert_eq!(out1.final_weights, out4.final_weights);
+    assert_eq!(out1.regret, out4.regret);
+    assert_eq!(lines1, lines4, "merged trace depends on thread count");
+
+    // And the traced loop matches the untraced reference exactly.
+    let mut plain_ev = FleetContendedEvaluator::synthetic(4, 2, 9);
+    let plain = run_fleet_selection(
+        &specs, &jobs, &models, &gen, noise, &cfg, &mut plain_ev,
+    );
+    assert_eq!(plain.realized, out1.realized);
+    assert_eq!(plain.final_weights, out1.final_weights);
+    assert_eq!(plain.regret, out1.regret);
+
+    // The ledger narrates every round, and replay verdicts appear.
+    let ledgers = lines1
+        .iter()
+        .filter(|l| l.contains("\"kind\":\"ledger\""))
+        .count();
+    assert_eq!(ledgers, cfg.k_jobs);
+    assert!(lines1.iter().any(|l| l.contains("\"kind\":\"replay\"")));
+    for line in &lines1 {
+        validate_line(line).unwrap_or_else(|e| panic!("invalid {line}: {e}"));
+    }
+}
+
+#[test]
+fn traced_delta_replay_matches_full_replay() {
+    // The delta-replay engine with a live recorder must still agree
+    // bit-for-bit with the untraced full `run_with_override` path.
+    let specs = small_pool();
+    let jobs = JobGenerator::default();
+    let models = Models::paper_default();
+    let gen = TraceGenerator::calibrated();
+    let cfg = SelectionConfig { k_jobs: 4, seed: 13, snapshot_every: 2 };
+    let noise = |_: usize| PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1));
+
+    let obs = Recorder::enabled();
+    let mut delta = FleetContendedEvaluator::synthetic(5, 2, 3);
+    let traced = run_fleet_selection_observed(
+        &specs, &jobs, &models, &gen, noise, &cfg, &mut delta, &obs,
+    );
+    let mut full = FleetContendedEvaluator::synthetic(5, 2, 3).with_full_replay();
+    let reference =
+        run_fleet_selection(&specs, &jobs, &models, &gen, noise, &cfg, &mut full);
+    assert_eq!(traced.realized, reference.realized);
+    assert_eq!(traced.final_weights, reference.final_weights);
+    assert_eq!(traced.regret, reference.regret);
+}
+
+#[test]
+fn jsonl_event_schema_is_golden() {
+    // Exact serialized bytes per kind: any field add/remove/rename or
+    // format change must show up here as a deliberate diff.
+    let cases: Vec<(Event, &str)> = vec![
+        (
+            Event::Arbitration {
+                round: 1,
+                slot: 3,
+                region: 0,
+                avail: 6,
+                requested: 9,
+                granted: 6,
+                contenders: 2,
+                preempted_jobs: 1,
+            },
+            r#"{"kind":"arbitration","round":1,"slot":3,"region":0,"avail":6,"requested":9,"granted":6,"contenders":2,"preempted_jobs":1}"#,
+        ),
+        (
+            Event::Preemption { round: 1, slot: 3, region: 0, job: 4, lost: 2 },
+            r#"{"kind":"preemption","round":1,"slot":3,"region":0,"job":4,"lost":2}"#,
+        ),
+        (
+            Event::Migration {
+                round: 0,
+                slot: 5,
+                job: 2,
+                from: 0,
+                to: 1,
+                phase: MigrationPhase::Booked,
+                reason: Some("reflex"),
+            },
+            r#"{"kind":"migration","round":0,"slot":5,"job":2,"from":0,"to":1,"phase":"booked","reason":"reflex"}"#,
+        ),
+        (
+            Event::Migration {
+                round: 0,
+                slot: 5,
+                job: 2,
+                from: 0,
+                to: 1,
+                phase: MigrationPhase::Emitted,
+                reason: None,
+            },
+            r#"{"kind":"migration","round":0,"slot":5,"job":2,"from":0,"to":1,"phase":"emitted","reason":null}"#,
+        ),
+        (
+            Event::Replay {
+                round: 2,
+                candidate: 7,
+                label: "MSU".into(),
+                clean_slots: 8,
+                replayed_slots: 4,
+                adopted_slots: 1,
+                diverged_at: Some(8),
+            },
+            r#"{"kind":"replay","round":2,"candidate":7,"label":"MSU","clean_slots":8,"replayed_slots":4,"adopted_slots":1,"diverged_at":8}"#,
+        ),
+        (
+            Event::ReplayCache { round: 2, hits: 10, misses: 3 },
+            r#"{"kind":"replay_cache","round":2,"hits":10,"misses":3}"#,
+        ),
+        (
+            Event::ForecastCache {
+                round: 0,
+                caches: 2,
+                slots: 20,
+                hits: 100,
+                misses: 5,
+                fits_price: 6,
+                fits_avail: 6,
+            },
+            r#"{"kind":"forecast_cache","round":0,"caches":2,"slots":20,"hits":100,"misses":5,"fits_price":6,"fits_avail":6}"#,
+        ),
+        (
+            Event::Ledger {
+                round: 0,
+                chosen: 1,
+                label: "OD-Only".into(),
+                expected: 0.625,
+                cum_regret: 0.0,
+                best_fixed: 0,
+                weights: vec![0.5, 0.5],
+                utilities: vec![0.25, 1.0],
+            },
+            r#"{"kind":"ledger","round":0,"chosen":1,"label":"OD-Only","expected":0.625000,"cum_regret":0.000000,"best_fixed":0,"weights":[0.500000,0.500000],"utilities":[0.250000,1.000000]}"#,
+        ),
+        (
+            Event::Solver {
+                windows: 3,
+                greedy_calls: 2,
+                greedy_total_us: 10,
+                greedy_hist_us: vec![2, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+                dp_calls: 1,
+                dp_total_us: 4,
+                dp_hist_us: vec![0, 1, 0, 0, 0, 0, 0, 0, 0, 0, 0],
+            },
+            r#"{"kind":"solver","windows":3,"greedy_calls":2,"greedy_total_us":10,"greedy_hist_us":[2,0,0,0,0,0,0,0,0,0,0],"dp_calls":1,"dp_total_us":4,"dp_hist_us":[0,1,0,0,0,0,0,0,0,0,0]}"#,
+        ),
+        (
+            Event::Summary {
+                events: 5,
+                dropped: 0,
+                counters: vec![("arbitrations", 2), ("rounds", 1)],
+            },
+            r#"{"kind":"summary","events":5,"dropped":0,"counters":{"arbitrations":2,"rounds":1}}"#,
+        ),
+    ];
+    for (event, golden) in &cases {
+        let line = event.to_json();
+        assert_eq!(&line, golden, "schema drifted for kind {}", event.kind());
+        let kind = validate_line(&line)
+            .unwrap_or_else(|e| panic!("golden line rejected by schema: {e}"));
+        assert_eq!(kind, event.kind());
+    }
+}
