@@ -1,0 +1,178 @@
+//! Fig. 14 (ours) — production-scale fleet: the event-driven stepper
+//! ([`spotfine::fleet::events`]) simulating ~100k churning jobs across
+//! 64 regions over the full horizon, in seconds. Three claims, each
+//! gated on correctness before it is timed:
+//!
+//! - the arithmetic water-fill is bit-identical to the historical
+//!   one-unit-per-round loop and beats it by orders of magnitude at
+//!   100k-unit capacity;
+//! - the event-driven stepper (1 thread and max threads) reproduces the
+//!   dense reference stepper's `FleetResult` bit-for-bit on the full
+//!   churning fleet;
+//! - the full-scale run completes within a seconds-scale wall-clock
+//!   budget (asserted).
+//!
+//! `--smoke` runs the same benches (same names, so baseline coverage
+//! checks line up) on a small fleet — the CI rot check. Results are
+//! recorded to `BENCH_fleet100k.json` under the `fleet100k` section;
+//! pass `--baseline <path>` (CI points it at the committed repo-root
+//! `BENCH_hotpaths.json`) to diff against the recorded trajectory.
+
+use spotfine::fleet::capacity::{
+    water_fill, water_fill_reference, SpotRequest, Tier,
+};
+use spotfine::fleet::{available_threads, FleetScenario};
+use spotfine::util::bench::{
+    bench, diff_against_baseline, section, JsonReport,
+};
+use spotfine::util::rng::Rng;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let baseline_path = argv
+        .iter()
+        .position(|a| a == "--baseline")
+        .and_then(|i| argv.get(i + 1).cloned());
+    let mut report = JsonReport::new("fig14_fleet_100k");
+    println!(
+        "=== Fig. 14: event-driven fleet at 100k-job scale{} ===",
+        if smoke { "  [smoke]" } else { "" }
+    );
+
+    // --- Water-fill: arithmetic fair share vs the unit loop. ---------
+    // A contended region-slot at production scale: 2000 requests over a
+    // 100k-unit capacity (Σ demand ≈ 130k > cap, so the block-walk and
+    // the partial round are both exercised). Bit-identity across the
+    // cap range is the gate; the timing is the headline.
+    section("fleet100k: water-fill, arithmetic vs unit-loop reference");
+    let mut wrng = Rng::new(0x0F19_0014);
+    let reqs: Vec<SpotRequest> = (0..2000)
+        .map(|k| SpotRequest {
+            job: k,
+            tier: Tier::cycle(k),
+            want: wrng.int_range(0, 120) as u32,
+            held: wrng.int_range(0, 60) as u32,
+        })
+        .collect();
+    let demands: Vec<u32> = reqs.iter().map(|r| r.held.max(r.want)).collect();
+    for cap in [0u32, 1, 999, 10_000, 100_000, 1_000_000] {
+        assert_eq!(
+            water_fill(cap, &reqs, &demands),
+            water_fill_reference(cap, &reqs, &demands),
+            "arithmetic water-fill diverged from its reference at cap={cap}"
+        );
+    }
+    let cap = 100_000u32;
+    let r_ref = bench("water-fill 2000 req / cap 100k (unit loop)", 3, 50, || {
+        water_fill_reference(cap, &reqs, &demands)
+    });
+    println!("{}", r_ref.line());
+    report.result("fleet100k", &r_ref);
+    let r_arith = bench("water-fill 2000 req / cap 100k (arithmetic)", 10, 200, || {
+        water_fill(cap, &reqs, &demands)
+    });
+    println!("{}", r_arith.line());
+    report.result("fleet100k", &r_arith);
+    let wf_speedup = report.speedup(
+        "water-fill arithmetic over unit loop",
+        r_ref.mean_us(),
+        r_arith.mean_us(),
+    );
+    println!("speedup: {wf_speedup:.1}x (arithmetic over unit loop)");
+    assert!(
+        wf_speedup >= 5.0,
+        "PERF TARGET MISSED: arithmetic water-fill only {wf_speedup:.1}x \
+         over the unit loop at cap 100k"
+    );
+
+    // --- The churning fleet: dense vs event-driven, bit-for-bit. -----
+    // Full mode: 4000 base jobs + Poisson(9600)/slot churn over the
+    // 10-slot base horizon ≈ 100k jobs across 64 regions, horizon 19.
+    // Smoke keeps the same shape (and bench names) at 1/64 the churn.
+    let (base_jobs, n_regions, churn) =
+        if smoke { (400, 8, 150.0) } else { (4000, 64, 9600.0) };
+    let sc = FleetScenario::new(base_jobs, n_regions, 0xF1EE7).with_churn(churn);
+    let (engine, specs) = sc.build();
+    let threads = available_threads();
+    section("fleet100k: dense vs event-driven stepper");
+    println!(
+        "fleet: {} jobs ({base_jobs} base + churn) x {n_regions} regions, \
+         {threads} host threads",
+        specs.len(),
+    );
+    if !smoke {
+        assert!(
+            specs.len() >= 95_000,
+            "churn sizing regressed: only {} jobs materialized",
+            specs.len()
+        );
+    }
+
+    let mut out_dense = None;
+    let r_dense = bench("fleet churn, dense stepper", 0, 1, || {
+        out_dense = Some(engine.clone().with_dense_stepper().run(&specs));
+    });
+    println!("{}", r_dense.line());
+    report.result("fleet100k", &r_dense);
+    let mut out_e1 = None;
+    let r_e1 = bench("fleet churn, event stepper (1 thread)", 0, 1, || {
+        out_e1 = Some(engine.clone().with_threads(1).run(&specs));
+    });
+    println!("{}", r_e1.line());
+    report.result("fleet100k", &r_e1);
+    let mut out_en = None;
+    let r_en = bench("fleet churn, event stepper (max threads)", 0, 1, || {
+        out_en = Some(engine.clone().with_threads(threads).run(&specs));
+    });
+    println!("{}", r_en.line());
+    report.result("fleet100k", &r_en);
+
+    // The correctness gate: one result, three steppers.
+    let dense = out_dense.expect("dense run recorded");
+    let e1 = out_e1.expect("event run recorded");
+    let en = out_en.expect("threaded event run recorded");
+    assert_eq!(
+        e1, dense,
+        "event stepper (1 thread) diverged from the dense reference"
+    );
+    assert_eq!(
+        en, dense,
+        "event stepper ({threads} threads) diverged from the dense reference"
+    );
+    println!("bit-identity: dense == event(1) == event({threads})  [ok]");
+
+    let engine_speedup = report.speedup(
+        "event stepper (max threads) over dense",
+        r_dense.mean_us(),
+        r_en.mean_us(),
+    );
+    let job_slots: usize =
+        dense.jobs.iter().map(|j| j.episode.decisions.len()).sum();
+    let secs = r_en.mean_ns / 1e9;
+    println!(
+        "event stepper: {} job-slots over {} slots in {secs:.2} s \
+         ({:.0} job-slots/s); {engine_speedup:.2}x over dense",
+        job_slots,
+        dense.slots,
+        job_slots as f64 / secs.max(1e-9),
+    );
+    if !smoke {
+        // The scale target: the full ~100k-job fleet simulates in
+        // seconds, not minutes.
+        assert!(
+            r_en.mean_ns < 60e9,
+            "PERF TARGET MISSED: 100k-job fleet took {secs:.1} s > 60 s"
+        );
+    }
+
+    match report.write("BENCH_fleet100k.json") {
+        Ok(path) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write BENCH_fleet100k.json: {e}"),
+    }
+    if let Some(path) = baseline_path {
+        // Section-scoped: only `fleet100k` entries in the shared
+        // baseline are this bench's coverage obligation.
+        diff_against_baseline(&report, &path);
+    }
+}

@@ -518,29 +518,12 @@ fn main() {
     }
 
     if let Some(path) = baseline_path {
-        section("baseline diff");
-        let base = spotfine::util::bench::load_baseline(&path)
-            .unwrap_or_else(|e| panic!("failed to load baseline {path}: {e}"));
-        let mut missing = Vec::new();
-        for e in &base {
-            match report.mean_of(&e.name) {
-                Some(cur) => println!(
-                    "{:<44} baseline {:>12.1} µs   current {:>12.1} µs   ({:+.0}%)",
-                    e.name,
-                    e.mean_us,
-                    cur,
-                    100.0 * (cur - e.mean_us) / e.mean_us.max(1e-9)
-                ),
-                None => missing.push(e.name.clone()),
-            }
-        }
         // Ratios are informational (hardware varies; the absolute
-        // budgets are asserted above) — lost coverage is not.
-        assert!(
-            missing.is_empty(),
-            "BASELINE COVERAGE LOST: benches in {path} missing from this run: {missing:?}"
-        );
-        println!("baseline coverage ok: {} benches present", base.len());
+        // budgets are asserted above) — lost coverage is not. The diff
+        // is section-scoped, so other binaries' sections in the shared
+        // baseline (e.g. fig14's `fleet100k`) are not this run's
+        // obligation.
+        spotfine::util::bench::diff_against_baseline(&report, &path);
     }
 
     println!(

@@ -68,9 +68,99 @@ pub struct SpotGrant {
 }
 
 /// Water-fill `cap` units across `requests` (already paired with their
-/// demands): tiers from high to low; within a tier, one unit per job per
-/// round in ascending job-id order until demands or capacity run out.
-fn water_fill(cap: u32, requests: &[SpotRequest], demands: &[u32]) -> Vec<u32> {
+/// demands): tiers from high to low; within a tier, fair-share at the
+/// highest feasible water level with the partial round going to
+/// ascending job ids. Closed-form equivalent of one unit per job per
+/// round in ascending job-id order until demands or capacity run out —
+/// O(k log k) in the tier's member count instead of O(capacity), which
+/// is what keeps 100k-unit regions arbitrable per slot. Bit-identity
+/// with the historical unit loop ([`water_fill_reference`]) is
+/// property-tested in `tests/fleet_properties.rs`.
+pub fn water_fill(cap: u32, requests: &[SpotRequest], demands: &[u32]) -> Vec<u32> {
+    debug_assert_eq!(requests.len(), demands.len());
+    let mut out = vec![0u32; requests.len()];
+    let mut left = cap;
+
+    let mut tiers: Vec<Tier> = requests.iter().map(|r| r.tier).collect();
+    tiers.sort();
+    tiers.dedup();
+
+    for tier in tiers.into_iter().rev() {
+        if left == 0 {
+            break;
+        }
+        let mut members: Vec<usize> = (0..requests.len())
+            .filter(|&i| requests[i].tier == tier)
+            .collect();
+        members.sort_by_key(|&i| requests[i].job);
+
+        let total: u64 = members.iter().map(|&i| demands[i] as u64).sum();
+        if total <= left as u64 {
+            // Demand fits: everyone gets exactly what they asked for.
+            for &i in &members {
+                out[i] = demands[i];
+            }
+            left -= total as u32;
+            continue;
+        }
+
+        // Demand exceeds the remaining budget: find the water level L =
+        // the number of complete one-unit rounds the loop would run,
+        // i.e. the largest L with Σ min(dᵢ, L) ≤ budget, by walking the
+        // sorted demand profile block by block.
+        let budget = left as u64;
+        let mut srt: Vec<u64> =
+            members.iter().map(|&i| demands[i] as u64).collect();
+        srt.sort_unstable();
+        let n = srt.len();
+        let mut used = 0u64; // Σ min(dᵢ, level) so far
+        let mut level = 0u64;
+        let mut idx = 0usize; // members below idx are fully satisfied
+        let (level, partial) = loop {
+            debug_assert!(idx < n, "total > budget ⇒ the walk stops inside");
+            let d = srt[idx];
+            let active = (n - idx) as u64;
+            let step = d - level;
+            if used + active * step <= budget {
+                used += active * step;
+                level = d;
+                while idx < n && srt[idx] == level {
+                    idx += 1;
+                }
+            } else {
+                let extra = (budget - used) / active;
+                break (level + extra, (budget - used) % active);
+            }
+        };
+        // The partial round: one extra unit to the first `partial`
+        // still-hungry members in ascending job-id order — exactly where
+        // the unit loop would have stopped.
+        let mut partial = partial;
+        for &i in &members {
+            let d = demands[i] as u64;
+            let mut g = d.min(level);
+            if partial > 0 && d > level {
+                g += 1;
+                partial -= 1;
+            }
+            out[i] = g as u32;
+        }
+        debug_assert_eq!(partial, 0, "maximal level leaves partial < hungry");
+        // The tier consumed the entire remaining budget.
+        left = 0;
+    }
+    out
+}
+
+/// The historical one-unit-per-round water-fill, kept as the executable
+/// specification the arithmetic [`water_fill`] is property-tested
+/// against (and benchmarked against in `fig14_fleet_100k`). O(min(cap,
+/// Σ demand)) — do not call on the hot path.
+pub fn water_fill_reference(
+    cap: u32,
+    requests: &[SpotRequest],
+    demands: &[u32],
+) -> Vec<u32> {
     debug_assert_eq!(requests.len(), demands.len());
     let mut out = vec![0u32; requests.len()];
     let mut left = cap;
@@ -115,13 +205,17 @@ fn water_fill(cap: u32, requests: &[SpotRequest], demands: &[u32]) -> Vec<u32> {
 /// job's filled claim `fill`:
 ///
 /// - `granted = min(fill, want)` — never above the request;
-/// - `kept    = min(fill, held)` — instances that survive the slot;
-///   `preempted = held − kept` — a drop is forced exactly when the
-///   job's share (capacity minus higher-priority and fair-share claims)
-///   can no longer cover it, whether the cause is an availability
-///   collapse or a higher tier's demand displacing a holder;
 /// - capacity a job claimed for retention but did not request again is
-///   redistributed to still-hungry requesters in a second fill.
+///   redistributed to still-hungry requesters in a second fill;
+/// - `kept    = min(held, max(fill, granted))` — instances that survive
+///   the slot; `preempted = held − kept` — a drop is forced exactly
+///   when the job's share (capacity minus higher-priority and
+///   fair-share claims) can no longer cover it, whether the cause is an
+///   availability collapse or a higher tier's demand displacing a
+///   holder. Preemption is measured against the *final* grant, not the
+///   claim-phase fill: redistribution can raise a grant back to or
+///   above `held`, and a job that ends the slot holding at least what
+///   it held before was not preempted.
 ///
 /// With a single requester this reduces *exactly* to the per-job
 /// market: `granted = min(want, avail)`, `preempted = held − min(held,
@@ -157,7 +251,7 @@ pub fn arbitrate(avail: u32, requests: &[SpotRequest]) -> Vec<SpotGrant> {
         .map(|(i, r)| SpotGrant {
             job: r.job,
             granted: granted[i],
-            preempted: r.held - fill[i].min(r.held),
+            preempted: r.held.saturating_sub(fill[i].max(granted[i])),
         })
         .collect()
 }
@@ -301,6 +395,48 @@ mod tests {
         assert_eq!(g[1].granted, 8);
         let total: u32 = g.iter().map(|x| x.granted).sum();
         assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn redistribution_above_fill_is_not_a_preemption() {
+        // A scales down voluntarily (held 8 → want 2) while B (held 6)
+        // wants 10, avail 10. The claim-phase fill splits 5/5, but
+        // redistribution of A's released capacity lifts B's final grant
+        // to 8 ≥ held: B ends the slot holding *more* than before and
+        // must not be reported preempted (the fill-based accounting
+        // wrongly charged it 1).
+        let g = arbitrate(
+            10,
+            &[
+                req(0, Tier::Normal, 2, 8),
+                req(1, Tier::Normal, 10, 6),
+            ],
+        );
+        assert_eq!(g[0].granted, 2);
+        assert_eq!(g[1].granted, 8);
+        assert_eq!(g[1].preempted, 0);
+        // A's forced loss is unchanged: it defended 8, kept 5, chose 2.
+        assert_eq!(g[0].preempted, 3);
+    }
+
+    #[test]
+    fn arithmetic_water_fill_matches_reference_on_fixtures() {
+        let rs = [
+            req(0, Tier::High, 7, 2),
+            req(3, Tier::Normal, 0, 5),
+            req(1, Tier::Normal, 13, 0),
+            req(2, Tier::Low, 9, 9),
+            req(4, Tier::Normal, 13, 1),
+        ];
+        let demands: Vec<u32> =
+            rs.iter().map(|r| r.held.max(r.want)).collect();
+        for cap in [0, 1, 5, 12, 23, 47, 1000] {
+            assert_eq!(
+                water_fill(cap, &rs, &demands),
+                water_fill_reference(cap, &rs, &demands),
+                "cap={cap}"
+            );
+        }
     }
 
     #[test]

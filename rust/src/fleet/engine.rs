@@ -230,6 +230,13 @@ pub struct FleetEngine {
     /// Tracing handle — disabled (a no-op) by default. A traced run
     /// produces a bit-identical [`FleetResult`]; see [`crate::obs`].
     obs: Recorder,
+    /// Worker threads for the event-driven stepper's per-slot region
+    /// loop (capped at the region count; 1 = in-place sequential).
+    pub(crate) threads: usize,
+    /// Route [`run`](FleetEngine::run) / [`run_recorded`](FleetEngine::run_recorded)
+    /// through the dense reference stepper instead of the event-driven
+    /// one (see [`crate::fleet::events`]). The two are bit-identical.
+    pub(crate) dense: bool,
 }
 
 impl FleetEngine {
@@ -241,6 +248,8 @@ impl FleetEngine {
             migration_mode: MigrationMode::default(),
             forecasts: Some(ForecastCachePool::new()),
             obs: Recorder::disabled(),
+            threads: 1,
+            dense: false,
         }
     }
 
@@ -276,12 +285,45 @@ impl FleetEngine {
         self
     }
 
+    /// Shard the event-driven stepper's per-slot region loop across up
+    /// to `threads` OS threads (capped at the region count). Regions
+    /// within a slot are independent — cross-region effects (migrations)
+    /// are reconciled sequentially between slots — so the result is
+    /// bit-identical for any thread count (property-tested in
+    /// `tests/fleet_engine_equivalence.rs`). No effect on the dense
+    /// stepper, which stays single-threaded.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Route full runs through the dense reference stepper — the
+    /// historical water-fill-every-region-every-slot loop — instead of
+    /// the event-driven one. The two are bit-identical; the dense loop
+    /// survives as the executable specification the event-driven engine
+    /// is property-tested (and benchmarked) against.
+    pub fn with_dense_stepper(mut self) -> Self {
+        self.dense = true;
+        self
+    }
+
     /// Run the fleet to quiescence: every job either completes or
     /// exhausts its deadline horizon (post-deadline termination is
     /// settled analytically, exactly as in `run_episode`).
+    ///
+    /// Routed through the event-driven stepper
+    /// ([`crate::fleet::events`]) unless
+    /// [`with_dense_stepper`](FleetEngine::with_dense_stepper) was
+    /// requested — the results are bit-identical either way.
     pub fn run(&self, specs: &[FleetJobSpec]) -> FleetResult {
-        let result =
-            self.run_inner(specs, self.live_drivers(specs), false, &self.obs).0;
+        let result = if self.dense {
+            self.run_inner(specs, self.live_drivers(specs), false, &self.obs).0
+        } else {
+            crate::fleet::events::run_event_driven(
+                self, specs, false, &self.obs,
+            )
+            .0
+        };
         self.emit_forecast_stats();
         result
     }
@@ -293,8 +335,13 @@ impl FleetEngine {
     ///
     /// [`run_with_override`]: FleetEngine::run_with_override
     pub fn run_recorded(&self, specs: &[FleetJobSpec]) -> CommittedRun {
-        let (result, traces) =
-            self.run_inner(specs, self.live_drivers(specs), true, &self.obs);
+        let (result, traces) = if self.dense {
+            self.run_inner(specs, self.live_drivers(specs), true, &self.obs)
+        } else {
+            crate::fleet::events::run_event_driven(
+                self, specs, true, &self.obs,
+            )
+        };
         self.emit_forecast_stats();
         CommittedRun { result, traces }
     }
@@ -366,6 +413,13 @@ impl FleetEngine {
         // round replays many of them in parallel, and tracing them would
         // make the merged stream (and the disabled-path cost of every
         // counterfactual) depend on the round's schedule.
+        //
+        // They also always take the dense stepper: replay drivers book
+        // their recorded migrations at slot *entry* (a mid-slot
+        // cross-region mutation the event-driven engine's sharded phase
+        // structure has no seam for), and a selection round's replays
+        // are many small fleets where the dense loop is already the
+        // right tool.
         self.run_inner(&all, drivers, false, &Recorder::disabled()).0
     }
 
@@ -495,7 +549,7 @@ impl FleetEngine {
     /// never consulted on the simulation path.
     ///
     /// [`validate_intent`]: FleetEngine::validate_intent
-    fn intent_reject_reason(
+    pub(crate) fn intent_reject_reason(
         &self,
         to: usize,
         current: usize,
@@ -1004,27 +1058,67 @@ impl FleetEngine {
             }
         }
 
-        // Settle every job (identical math to `run_episode`).
+        let finals: Vec<JobFinal> = states
+            .into_iter()
+            .map(|st| JobFinal {
+                region: st.region,
+                progress: st.progress,
+                cost: st.cost,
+                decisions: st.decisions,
+                spot_slots: st.spot_slots,
+                on_demand_slots: st.on_demand_slots,
+                preemptions: st.preemptions,
+                reconfigs: st.reconfigs,
+                migrations: st.migrations,
+                completion_slot: st.completion_slot,
+            })
+            .collect();
+        (
+            self.assemble_result(
+                specs,
+                finals,
+                horizon,
+                region_granted,
+                region_avail,
+            ),
+            committed,
+        )
+    }
+
+    /// Settle every job and aggregate the fleet totals — one body shared
+    /// by the dense and event-driven steppers, so the two can only
+    /// diverge in *simulation*, never in settlement arithmetic. Every
+    /// expression mirrors `run_episode`'s settlement exactly.
+    pub(crate) fn assemble_result(
+        &self,
+        specs: &[FleetJobSpec],
+        finals: Vec<JobFinal>,
+        horizon: usize,
+        region_granted: Vec<Vec<u32>>,
+        region_avail: Vec<Vec<u32>>,
+    ) -> FleetResult {
+        assert_eq!(specs.len(), finals.len());
+        let n_regions = self.regions.len();
         let jobs: Vec<JobOutcome> = specs
             .iter()
-            .zip(states)
-            .map(|(s, st)| {
-                let slots_run = st.decisions.len();
-                let progress_at_deadline = st.progress.min(s.job.workload);
+            .zip(finals)
+            .map(|(s, fin)| {
+                let slots_run = fin.decisions.len();
+                let progress_at_deadline = fin.progress.min(s.job.workload);
                 let (value, total_cost, completion) = settle_episode(
                     &s.job,
                     &self.models,
-                    st.progress,
+                    fin.progress,
                     slots_run,
-                    st.cost,
-                    st.completion_slot,
+                    fin.cost,
+                    fin.completion_slot,
                 );
                 JobOutcome {
                     label: s.policy.label(),
                     tier: s.tier,
                     home_region: s.home_region,
-                    final_region: st.region,
-                    migrations: st.migrations,
+                    final_region: fin.region,
+                    migrations: fin.migrations,
                     episode: EpisodeResult {
                         utility: value - total_cost,
                         value,
@@ -1032,11 +1126,11 @@ impl FleetEngine {
                         completion_slot: completion,
                         on_time: completion <= s.job.deadline,
                         progress_at_deadline,
-                        decisions: st.decisions,
-                        spot_slots: st.spot_slots,
-                        on_demand_slots: st.on_demand_slots,
-                        preemptions: st.preemptions,
-                        reconfigs: st.reconfigs,
+                        decisions: fin.decisions,
+                        spot_slots: fin.spot_slots,
+                        on_demand_slots: fin.on_demand_slots,
+                        preemptions: fin.preemptions,
+                        reconfigs: fin.reconfigs,
                     },
                 }
             })
@@ -1069,22 +1163,57 @@ impl FleetEngine {
             })
             .collect();
 
-        (
-            FleetResult {
-                jobs,
-                slots: horizon,
-                total_utility,
-                total_value,
-                total_cost,
-                on_time_rate,
-                total_preemptions,
-                total_migrations,
-                region_utilization,
-                region_granted,
-                region_avail,
-            },
-            committed,
-        )
+        FleetResult {
+            jobs,
+            slots: horizon,
+            total_utility,
+            total_value,
+            total_cost,
+            on_time_rate,
+            total_preemptions,
+            total_migrations,
+            region_utilization,
+            region_granted,
+            region_avail,
+        }
+    }
+}
+
+/// One job's fully-simulated terminal state — the hand-off between a
+/// stepper (dense [`FleetEngine::run_inner`]-style or event-driven
+/// [`crate::fleet::events`]) and the shared settlement in
+/// [`FleetEngine::assemble_result`].
+#[derive(Debug, Clone)]
+pub(crate) struct JobFinal {
+    pub region: usize,
+    pub progress: f64,
+    pub cost: f64,
+    pub decisions: Vec<Allocation>,
+    pub spot_slots: u32,
+    pub on_demand_slots: u32,
+    pub preemptions: u64,
+    pub reconfigs: u32,
+    pub migrations: u32,
+    /// 1-based local completion slot, if the job finished in-horizon.
+    pub completion_slot: Option<usize>,
+}
+
+impl JobFinal {
+    /// The state of a job that never ran a slot (settles exactly like a
+    /// dense-stepper job whose `JobState` was never touched).
+    pub(crate) fn fresh(region: usize) -> JobFinal {
+        JobFinal {
+            region,
+            progress: 0.0,
+            cost: 0.0,
+            decisions: Vec::new(),
+            spot_slots: 0,
+            on_demand_slots: 0,
+            preemptions: 0,
+            reconfigs: 0,
+            migrations: 0,
+            completion_slot: None,
+        }
     }
 }
 

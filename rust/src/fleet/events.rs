@@ -1,0 +1,638 @@
+//! The event-driven fleet stepper: the delta-replay insight — *a slot
+//! whose request set didn't change is provably identical* — promoted
+//! from the counterfactual engine to the primary simulation path.
+//!
+//! The dense loop in [`crate::fleet::engine`] water-fills every region
+//! over every job every slot, O(jobs × regions × horizon) even when
+//! almost nothing changed. This stepper reorganizes the same simulation
+//! around three structures:
+//!
+//! - **Per-region event queues.** Each region owns a slot-sorted queue
+//!   of arrivals (base fleet + churn) plus staged migration hand-offs;
+//!   a job exists in exactly one region's member set while active and
+//!   is retired the moment it completes or its deadline expires. The
+//!   per-slot cost is proportional to *active* members, not to the
+//!   fleet's lifetime population — the difference between 100k churning
+//!   jobs and 100k× the horizon.
+//! - **Dirty-set arbitration.** [`crate::fleet::capacity::arbitrate`]
+//!   is a pure function of `(avail, requests)`, and a member's request
+//!   is `(job, tier, want, held)`. If a region's membership, capacity,
+//!   and every member's want are unchanged since the previous slot, and
+//!   the previous arbitration granted every member exactly what it held
+//!   (`grant == held`, so `held` is unchanged too), then this slot's
+//!   arbitration input is *identical* to the previous one — determinism
+//!   forces the identical output: `grant = held`, `preempted = 0`. The
+//!   stepper tracks exactly those four dirt conditions and skips the
+//!   arbiter on clean slots, taking the proven answer instead. Traced
+//!   runs disable the skip so the emitted [`crate::obs`] event stream
+//!   is byte-identical to the dense engine's.
+//! - **Struct-of-arrays job state.** The arbitration-hot per-member
+//!   state (`held`, `want`) lives in flat parallel arrays per region;
+//!   cold accounting (costs, decisions, the policy itself) rides behind
+//!   in a `JobCore`. Request vectors are rebuilt from the hot arrays
+//!   without touching the cold data.
+//!
+//! Regions within a slot are independent — every cross-region read
+//! (observations, snapshots, forecasts) is immutable, and the only
+//! cross-region *write* (a migration) is staged on the source shard and
+//! reconciled sequentially between slots, exactly when a dense-booked
+//! migration first becomes visible. That makes the per-slot region loop
+//! embarrassingly parallel: it fans out over
+//! [`crate::fleet::sweep::run_parallel_with`], and the result is
+//! bit-identical for any thread count.
+//!
+//! Bit-identity with the dense stepper — `FleetResult`, committed
+//! traces, and merged obs streams, across seeds × churn × migration
+//! modes × thread counts — is enforced by
+//! `tests/fleet_engine_equivalence.rs`; the 100k-job × 64-region scale
+//! target is tracked by the `fig14_fleet_100k` bench.
+
+use std::sync::Mutex;
+
+use crate::fleet::capacity::{arbitrate, SpotRequest};
+use crate::fleet::engine::{
+    CommittedTrace, FleetEngine, FleetJobSpec, FleetResult, JobFinal,
+};
+use crate::fleet::region::MigrationMode;
+use crate::fleet::sweep::run_parallel_with;
+use crate::market::market::MarketObs;
+use crate::obs::{Counter, Event, MigrationPhase, Recorder};
+use crate::sched::policy::{
+    Allocation, Policy, RegionDecision, RegionView, SlotContext,
+};
+
+/// A queued arrival: spec index plus its prebuilt policy (taken once
+/// when the job is admitted).
+type Arrival = (usize, Option<Box<dyn Policy>>);
+
+/// Cold per-member state: the policy driving the job plus every
+/// accounting accumulator the settlement needs. Kept out of the hot
+/// arrays so arbitration never walks it.
+struct JobCore {
+    /// Index into the spec slice (the global job id).
+    spec: usize,
+    policy: Box<dyn Policy>,
+    progress: f64,
+    prev_total: u32,
+    prev_avail: u32,
+    /// Consecutive slots the job wanted spot and got none.
+    starved: usize,
+    /// Apply the migration μ to the next slot's progress.
+    migration_mu_pending: bool,
+    /// Validated migration intent from this slot's phase 1.
+    intent: Option<usize>,
+    /// Settlement accumulators (region/progress finalized on retire).
+    fin: JobFinal,
+    /// Committed per-slot requests and regions (record mode only).
+    wants: Vec<Allocation>,
+    regions: Vec<usize>,
+}
+
+impl JobCore {
+    fn fresh(spec: usize, policy: Box<dyn Policy>, region: usize) -> JobCore {
+        JobCore {
+            spec,
+            policy,
+            progress: 0.0,
+            prev_total: 0,
+            prev_avail: 0,
+            starved: 0,
+            migration_mu_pending: false,
+            intent: None,
+            fin: JobFinal::fresh(region),
+            wants: Vec::new(),
+            regions: Vec::new(),
+        }
+    }
+
+    /// Seal the core into its terminal state.
+    fn retire(mut self, region: usize) -> (usize, JobFinal, Vec<Allocation>, Vec<usize>) {
+        self.fin.region = region;
+        self.fin.progress = self.progress;
+        (self.spec, self.fin, self.wants, self.regions)
+    }
+}
+
+/// One region's simulation shard: hot struct-of-arrays member state,
+/// the cold cores, the arrival event queue, dirty-set tracking, and the
+/// per-slot capacity history the `FleetResult` reports.
+struct RegionShard {
+    region: usize,
+    // Hot parallel arrays — index i across all of them is one member.
+    held: Vec<u32>,
+    want: Vec<u32>,
+    last_want: Vec<u32>,
+    grant: Vec<u32>,
+    preempted: Vec<u32>,
+    pend: Vec<Option<(Allocation, MarketObs)>>,
+    core: Vec<JobCore>,
+    /// Slot-sorted arrival queue, consumed front-to-back.
+    arrivals: Vec<Arrival>,
+    next_arrival: usize,
+    /// Re-arbitrate this slot (membership / capacity / wants / grants
+    /// changed since the last arbitration-equivalent slot).
+    dirty: bool,
+    last_avail: u32,
+    /// Σ held across members (the clean-slot granted sum).
+    held_sum: u32,
+    granted_hist: Vec<u32>,
+    avail_hist: Vec<u32>,
+    /// Outgoing migrations staged this slot: (destination, core).
+    moves: Vec<(usize, JobCore)>,
+    /// Members retired in this shard (completed, expired, or drained).
+    done: Vec<JobCore>,
+}
+
+impl RegionShard {
+    fn new(region: usize, horizon: usize) -> RegionShard {
+        RegionShard {
+            region,
+            held: Vec::new(),
+            want: Vec::new(),
+            last_want: Vec::new(),
+            grant: Vec::new(),
+            preempted: Vec::new(),
+            pend: Vec::new(),
+            core: Vec::new(),
+            arrivals: Vec::new(),
+            next_arrival: 0,
+            dirty: false,
+            last_avail: 0,
+            held_sum: 0,
+            granted_hist: Vec::with_capacity(horizon),
+            avail_hist: Vec::with_capacity(horizon),
+            moves: Vec::new(),
+            done: Vec::new(),
+        }
+    }
+
+    /// Add a member (arrival or migration hand-off). Membership changed
+    /// ⇒ the shard is dirty.
+    fn admit(&mut self, core: JobCore) {
+        self.held.push(0);
+        self.want.push(0);
+        self.last_want.push(0);
+        self.grant.push(0);
+        self.preempted.push(0);
+        self.pend.push(None);
+        self.core.push(core);
+        self.dirty = true;
+    }
+
+    /// Remove member `i` from every parallel array (order within the
+    /// shard is not meaningful — the arbiter keys on job ids, and the
+    /// obs merge key is canonical — so `swap_remove` keeps this O(1)).
+    /// Membership changed ⇒ the shard is dirty.
+    fn remove(&mut self, i: usize) -> JobCore {
+        self.held.swap_remove(i);
+        self.want.swap_remove(i);
+        self.last_want.swap_remove(i);
+        self.grant.swap_remove(i);
+        self.preempted.swap_remove(i);
+        self.pend.swap_remove(i);
+        self.dirty = true;
+        self.core.swap_remove(i)
+    }
+}
+
+/// Run the fleet through the event-driven stepper. Same contract as the
+/// dense `FleetEngine::run_inner` with live drivers: returns the
+/// settled result plus (in record mode) every job's committed trace.
+pub(crate) fn run_event_driven(
+    eng: &FleetEngine,
+    specs: &[FleetJobSpec],
+    record: bool,
+    rec: &Recorder,
+) -> (FleetResult, Vec<CommittedTrace>) {
+    let n_regions = eng.regions.len();
+    for s in specs {
+        assert!(
+            s.home_region < n_regions,
+            "home_region {} out of range ({n_regions} regions)",
+            s.home_region,
+        );
+    }
+    let horizon = specs
+        .iter()
+        .map(|s| s.arrival + s.job.deadline)
+        .max()
+        .unwrap_or(0);
+
+    // Prebuild every policy up front, in spec order — the exact
+    // construction sequence (and forecast-pool warm-up) of the dense
+    // engine's `live_drivers` — then distribute them into per-region
+    // arrival queues, stable-sorted by arrival slot.
+    let mut queues: Vec<Vec<Arrival>> =
+        (0..n_regions).map(|_| Vec::new()).collect();
+    for (j, s) in specs.iter().enumerate() {
+        queues[s.home_region].push((j, Some(eng.build_policy(s))));
+    }
+    let mut shards: Vec<RegionShard> = (0..n_regions)
+        .map(|r| RegionShard::new(r, horizon))
+        .collect();
+    for (r, mut q) in queues.into_iter().enumerate() {
+        q.sort_by_key(|&(j, _)| specs[j].arrival);
+        shards[r].arrivals = q;
+    }
+
+    let cells: Vec<Mutex<RegionShard>> =
+        shards.into_iter().map(Mutex::new).collect();
+    let items: Vec<usize> = (0..n_regions).collect();
+    let workers = eng.threads.max(1).min(n_regions.max(1));
+    let mut worker_states = vec![(); workers];
+
+    for t in 0..horizon {
+        // Parallel section: each region-slot is stepped by exactly one
+        // worker (items are distinct), every cross-region access inside
+        // is read-only, and the recorder's merge key is canonical — so
+        // the outcome is a pure function of (engine, specs, t),
+        // independent of worker count and scheduling.
+        run_parallel_with(&items, &mut worker_states, |_, _, &r| {
+            let mut sh = cells[r].lock().unwrap();
+            step_shard(eng, specs, &mut sh, t, record, rec);
+        });
+        // Sequential reconcile: deliver staged migrations. A dense-
+        // booked migration mutates the job's region at the end of its
+        // phase 3 and is first *observed* at the next slot's phase 1 —
+        // delivering between slots is the same schedule.
+        for r in 0..n_regions {
+            let moves = std::mem::take(&mut cells[r].lock().unwrap().moves);
+            for (to, core) in moves {
+                cells[to].lock().unwrap().admit(core);
+            }
+        }
+    }
+
+    // Drain: retire everything still alive at the horizon (dense jobs
+    // simply stop being stepped there; their states settle as-is),
+    // collect finals in spec order and the per-region capacity
+    // histories in region order.
+    let mut finals: Vec<Option<JobFinal>> =
+        specs.iter().map(|_| None).collect();
+    let mut committed: Vec<CommittedTrace> = specs
+        .iter()
+        .map(|_| CommittedTrace { wants: Vec::new(), regions: Vec::new() })
+        .collect();
+    let mut region_granted: Vec<Vec<u32>> = Vec::with_capacity(n_regions);
+    let mut region_avail: Vec<Vec<u32>> = Vec::with_capacity(n_regions);
+    for cell in cells {
+        let mut sh = cell.into_inner().unwrap();
+        // Arrivals the slot loop never reached (deadline-0 jobs landing
+        // exactly at the horizon, or an empty horizon): they settle
+        // untouched, like a dense `JobState` that never ran.
+        while sh.next_arrival < sh.arrivals.len() {
+            let j = sh.arrivals[sh.next_arrival].0;
+            sh.next_arrival += 1;
+            finals[j] = Some(JobFinal::fresh(specs[j].home_region));
+        }
+        while !sh.core.is_empty() {
+            let core = sh.remove(0);
+            sh.done.push(core);
+        }
+        let region = sh.region;
+        for core in sh.done {
+            let (j, fin, wants, regions) = core.retire(region);
+            debug_assert!(finals[j].is_none(), "job {j} retired twice");
+            finals[j] = Some(fin);
+            committed[j] = CommittedTrace { wants, regions };
+        }
+        region_granted.push(sh.granted_hist);
+        region_avail.push(sh.avail_hist);
+    }
+    let finals: Vec<JobFinal> = finals
+        .into_iter()
+        .map(|f| f.expect("every spec reaches a terminal state"))
+        .collect();
+    (
+        eng.assemble_result(
+            specs,
+            finals,
+            horizon,
+            region_granted,
+            region_avail,
+        ),
+        committed,
+    )
+}
+
+/// What happens to a member at the end of its phase 3.
+enum Retire {
+    /// Completed (or, at the drain, horizon-expired): settle here.
+    Done,
+    /// Migration booked: hand the core to the destination shard.
+    Move(usize),
+}
+
+/// Step one region through one global slot. Every accounting expression
+/// is a verbatim copy of the dense engine's three-phase loop (that is
+/// the bit-identity invariant); what differs is *when work happens* —
+/// arrivals come off the event queue, retirees leave the member set,
+/// and arbitration runs only on dirty slots.
+fn step_shard(
+    eng: &FleetEngine,
+    specs: &[FleetJobSpec],
+    sh: &mut RegionShard,
+    t: usize,
+    record: bool,
+    rec: &Recorder,
+) {
+    let n_regions = eng.regions.len();
+    let r = sh.region;
+    let avail = eng.regions.avail(r, t);
+    if avail != sh.last_avail {
+        sh.dirty = true;
+        sh.last_avail = avail;
+    }
+
+    // Event queue: admit this slot's arrivals.
+    while sh.next_arrival < sh.arrivals.len()
+        && specs[sh.arrivals[sh.next_arrival].0].arrival == t
+    {
+        let idx = sh.next_arrival;
+        sh.next_arrival += 1;
+        let j = sh.arrivals[idx].0;
+        let policy = sh.arrivals[idx].1.take().expect("policy consumed once");
+        let core = JobCore::fresh(j, policy, r);
+        if specs[j].job.deadline == 0 {
+            // Expired on arrival — the dense loop marks these done
+            // before their first decision; they never join the members.
+            sh.done.push(core);
+        } else {
+            sh.admit(core);
+        }
+    }
+
+    // Expiry: the deadline horizon ended before this slot's decision.
+    let mut i = 0;
+    while i < sh.core.len() {
+        let s = &specs[sh.core[i].spec];
+        if t - s.arrival >= s.job.deadline {
+            let core = sh.remove(i);
+            sh.done.push(core);
+        } else {
+            i += 1;
+        }
+    }
+
+    // Phase 1 — every member observes and decides (dense copy).
+    let region_view_gate = eng.migration_mode == MigrationMode::Policy
+        && n_regions > 1
+        && eng.regions.migration.cost.is_finite();
+    for i in 0..sh.core.len() {
+        let j = sh.core[i].spec;
+        let s = &specs[j];
+        let local_t = t - s.arrival;
+        let obs =
+            eng.regions.observe(r, t, local_t, eng.models.on_demand_price);
+        let core = &mut sh.core[i];
+        let ctx = SlotContext {
+            t: local_t,
+            obs,
+            progress: core.progress,
+            prev_total: core.prev_total,
+            prev_avail: core.prev_avail,
+            job: &s.job,
+            models: &eng.models,
+        };
+        let decision = if region_view_gate && core.policy.region_aware() {
+            let snaps = eng.region_snapshots(s, r, t, local_t);
+            let view = RegionView {
+                current: r,
+                candidates: &snaps,
+                migration: eng.regions.migration.terms(),
+            };
+            core.policy.decide_region(&ctx, &view)
+        } else {
+            RegionDecision {
+                alloc: core.policy.decide(&ctx),
+                migrate_to: None,
+            }
+        };
+        let validated = eng.validate_intent(decision.migrate_to, r, s, local_t);
+        if let Some(to) = decision.migrate_to {
+            rec.add(Counter::IntentsEmitted, 1);
+            rec.emit(|| Event::Migration {
+                round: rec.round(),
+                slot: t,
+                job: j,
+                from: r,
+                to,
+                phase: MigrationPhase::Emitted,
+                reason: None,
+            });
+            if validated.is_some() {
+                rec.emit(|| Event::Migration {
+                    round: rec.round(),
+                    slot: t,
+                    job: j,
+                    from: r,
+                    to,
+                    phase: MigrationPhase::Validated,
+                    reason: None,
+                });
+            } else {
+                rec.add(Counter::IntentsRejected, 1);
+                rec.emit(|| Event::Migration {
+                    round: rec.round(),
+                    slot: t,
+                    job: j,
+                    from: r,
+                    to,
+                    phase: MigrationPhase::Rejected,
+                    reason: Some(
+                        eng.intent_reject_reason(to, r, s, local_t),
+                    ),
+                });
+            }
+        }
+        let want = decision.alloc.clamp_to_job(&s.job, obs.avail);
+        core.intent = validated;
+        if want.spot != sh.last_want[i] {
+            sh.dirty = true;
+        }
+        sh.want[i] = want.spot;
+        sh.pend[i] = Some((want, obs));
+    }
+
+    // Phase 2 — arbitrate if anything changed; otherwise take the
+    // proven clean-slot answer. Traced runs always arbitrate so the
+    // event stream matches the dense engine's byte for byte (the
+    // grants still do, by the same determinism argument).
+    let force = rec.is_enabled();
+    let n_members = sh.core.len();
+    let granted_sum: u32;
+    if n_members == 0 {
+        granted_sum = 0;
+        sh.dirty = false;
+    } else if sh.dirty || force {
+        let requests: Vec<SpotRequest> = (0..n_members)
+            .map(|i| SpotRequest {
+                job: sh.core[i].spec,
+                tier: specs[sh.core[i].spec].tier,
+                want: sh.want[i],
+                held: sh.held[i],
+            })
+            .collect();
+        let grants = arbitrate(avail, &requests);
+        let mut gsum = 0u32;
+        let mut next_dirty = false;
+        for (i, g) in grants.iter().enumerate() {
+            sh.grant[i] = g.granted;
+            sh.preempted[i] = g.preempted;
+            gsum += g.granted;
+            // A grant that changed a member's holding re-dirties the
+            // next slot (its request tuple will differ).
+            if g.granted != sh.held[i] {
+                next_dirty = true;
+            }
+        }
+        if rec.is_enabled() {
+            rec.add(Counter::Arbitrations, 1);
+            let requested: u32 = requests.iter().map(|q| q.want).sum();
+            let preempted_jobs =
+                grants.iter().filter(|g| g.preempted > 0).count();
+            rec.emit(|| Event::Arbitration {
+                round: rec.round(),
+                slot: t,
+                region: r,
+                avail,
+                requested,
+                granted: gsum,
+                contenders: n_members,
+                preempted_jobs,
+            });
+            for g in &grants {
+                if g.preempted > 0 {
+                    rec.add(Counter::Preemptions, 1);
+                    rec.emit(|| Event::Preemption {
+                        round: rec.round(),
+                        slot: t,
+                        region: r,
+                        job: g.job,
+                        lost: g.preempted,
+                    });
+                }
+            }
+        }
+        granted_sum = gsum;
+        sh.dirty = next_dirty;
+    } else {
+        // Clean slot: identical arbitration input ⇒ identical output —
+        // every member keeps exactly what it held, nothing is
+        // preempted (see the module docs for the proof).
+        for i in 0..n_members {
+            sh.grant[i] = sh.held[i];
+            sh.preempted[i] = 0;
+        }
+        granted_sum = sh.held_sum;
+    }
+    sh.granted_hist.push(granted_sum);
+    sh.avail_hist.push(avail);
+
+    // Phase 3 — per-member accounting (dense copy), then retirement.
+    let mut retires: Vec<(usize, Retire)> = Vec::new();
+    for i in 0..sh.core.len() {
+        let (want, obs) = sh.pend[i].take().expect("phase 1 filled pend");
+        let j = sh.core[i].spec;
+        let s = &specs[j];
+        let local_t = t - s.arrival;
+        let spot = sh.grant[i];
+        let preempted_now = sh.preempted[i];
+        sh.held[i] = spot;
+        let core = &mut sh.core[i];
+        if record {
+            core.wants.push(want);
+            core.regions.push(r);
+        }
+        core.fin.preemptions += preempted_now as u64;
+        let total = spot + want.on_demand;
+        let mut mu = eng.models.reconfig.mu(core.prev_total, total);
+        if core.migration_mu_pending {
+            mu *= eng.regions.migration.mu;
+            core.migration_mu_pending = false;
+        }
+        core.progress += mu * eng.models.throughput.h(total);
+        if total != core.prev_total {
+            core.fin.reconfigs += 1;
+        }
+        core.fin.spot_slots += spot;
+        core.fin.on_demand_slots += want.on_demand;
+        core.fin.cost += want.on_demand as f64 * obs.on_demand_price
+            + spot as f64 * obs.spot_price;
+        core.fin.decisions.push(Allocation::new(want.on_demand, spot));
+        core.prev_total = total;
+        core.prev_avail = obs.avail;
+
+        if core.progress >= s.job.workload - 1e-9 {
+            core.fin.completion_slot = Some(local_t + 1);
+            retires.push((i, Retire::Done));
+            continue;
+        }
+
+        // Starvation bookkeeping and migration, exactly as dense.
+        if (want.spot > 0 && spot == 0)
+            || (total == 0 && obs.avail < s.job.n_min)
+        {
+            core.starved += 1;
+        } else {
+            core.starved = 0;
+        }
+        let suppress_reflex = eng.migration_mode == MigrationMode::Policy
+            && core.policy.region_aware();
+        if let Some(best) = core.intent.take() {
+            core.fin.cost += eng.regions.migration.cost;
+            core.fin.migrations += 1;
+            core.migration_mu_pending = true;
+            core.starved = 0;
+            rec.add(Counter::MigrationsBooked, 1);
+            rec.emit(|| Event::Migration {
+                round: rec.round(),
+                slot: t,
+                job: j,
+                from: r,
+                to: best,
+                phase: MigrationPhase::Booked,
+                reason: Some("intent"),
+            });
+            core.policy = eng.rebuild_policy(s, best);
+            retires.push((i, Retire::Move(best)));
+        } else if !suppress_reflex
+            && eng.migration_patience > 0
+            && n_regions > 1
+            && core.starved >= eng.migration_patience
+        {
+            let best = eng.regions.best_region(t);
+            if best != r && eng.regions.avail(best, t) > obs.avail {
+                core.fin.cost += eng.regions.migration.cost;
+                core.fin.migrations += 1;
+                core.migration_mu_pending = true;
+                core.starved = 0;
+                rec.add(Counter::MigrationsBooked, 1);
+                rec.emit(|| Event::Migration {
+                    round: rec.round(),
+                    slot: t,
+                    job: j,
+                    from: r,
+                    to: best,
+                    phase: MigrationPhase::Booked,
+                    reason: Some("reflex"),
+                });
+                core.policy = eng.rebuild_policy(s, best);
+                retires.push((i, Retire::Move(best)));
+            }
+        }
+    }
+    // Apply retirements back-to-front so pending indices stay valid
+    // under swap_remove.
+    for (i, action) in retires.into_iter().rev() {
+        let core = sh.remove(i);
+        match action {
+            Retire::Done => sh.done.push(core),
+            Retire::Move(to) => sh.moves.push((to, core)),
+        }
+    }
+    // Refresh the clean-slot bookkeeping for the survivors.
+    sh.held_sum = sh.held.iter().sum();
+    let RegionShard { last_want, want, .. } = sh;
+    last_want.copy_from_slice(want);
+}

@@ -12,6 +12,11 @@
 //!   record/replay API ([`engine::FleetEngine::run_recorded`] /
 //!   [`engine::FleetEngine::run_with_override`]) that makes one-job
 //!   counterfactuals cheap;
+//! - [`events`] — the event-driven stepper full runs route through:
+//!   per-region event queues, dirty-set arbitration (clean slots take
+//!   the proven answer instead of re-running the arbiter), and a
+//!   region-sharded parallel slot loop — bit-identical to the dense
+//!   reference loop at 100k-job scale;
 //! - [`replay`] — the delta-replay counterfactual engine: a
 //!   [`replay::ReplayPlan`] compacts a recorded run once, then evaluates
 //!   each candidate override in time proportional to how much it
@@ -28,6 +33,7 @@
 
 pub mod capacity;
 pub mod engine;
+pub mod events;
 pub mod region;
 pub mod replay;
 pub mod select;

@@ -189,8 +189,9 @@ pub fn validate_line(line: &str) -> Result<&'static str, String> {
 }
 
 /// Parse one JSON document (object/array/scalar). Not a general-purpose
-/// parser — no surrogate-pair decoding (`\uXXXX` outside the BMP) — but
-/// complete for everything this crate emits.
+/// parser, but complete for everything this crate emits — including
+/// `\uXXXX` surrogate pairs for characters outside the BMP (a lone
+/// surrogate is rejected, matching RFC 8259's well-formedness rules).
 pub fn parse(text: &str) -> Result<Json, String> {
     let chars: Vec<char> = text.chars().collect();
     let mut pos = 0usize;
@@ -308,19 +309,48 @@ fn parse_string(c: &[char], pos: &mut usize) -> Result<String, String> {
                     'b' => out.push('\u{8}'),
                     'f' => out.push('\u{c}'),
                     'u' => {
-                        let mut code = 0u32;
-                        for _ in 0..4 {
-                            let d = c
-                                .get(*pos)
-                                .and_then(|d| d.to_digit(16))
-                                .ok_or("bad \\u escape")?;
-                            code = code * 16 + d;
-                            *pos += 1;
+                        let code = parse_hex4(c, pos)?;
+                        match code {
+                            // High surrogate: must be followed by an
+                            // escaped low surrogate; the pair decodes
+                            // to one astral-plane scalar value.
+                            0xD800..=0xDBFF => {
+                                if c.get(*pos) != Some(&'\\')
+                                    || c.get(*pos + 1) != Some(&'u')
+                                {
+                                    return Err(
+                                        "lone high surrogate \\u escape"
+                                            .to_string(),
+                                    );
+                                }
+                                *pos += 2;
+                                let low = parse_hex4(c, pos)?;
+                                if !(0xDC00..=0xDFFF).contains(&low) {
+                                    return Err(format!(
+                                        "high surrogate followed by \
+                                         \\u{low:04X}, expected a low \
+                                         surrogate"
+                                    ));
+                                }
+                                let scalar = 0x10000
+                                    + ((code - 0xD800) << 10)
+                                    + (low - 0xDC00);
+                                out.push(
+                                    char::from_u32(scalar)
+                                        .expect("pair decodes in range"),
+                                );
+                            }
+                            0xDC00..=0xDFFF => {
+                                return Err(
+                                    "lone low surrogate \\u escape"
+                                        .to_string(),
+                                );
+                            }
+                            _ => out.push(
+                                char::from_u32(code)
+                                    .expect("non-surrogate BMP scalar"),
+                            ),
                         }
-                        out.push(
-                            char::from_u32(code)
-                                .ok_or("surrogate \\u escape")?,
-                        );
                     }
                     other => return Err(format!("bad escape '\\{other}'")),
                 }
@@ -329,6 +359,21 @@ fn parse_string(c: &[char], pos: &mut usize) -> Result<String, String> {
         }
     }
     Err("unterminated string".to_string())
+}
+
+/// Read exactly four hex digits of a `\uXXXX` escape (the `\u` itself
+/// already consumed) and return the code unit.
+fn parse_hex4(c: &[char], pos: &mut usize) -> Result<u32, String> {
+    let mut code = 0u32;
+    for _ in 0..4 {
+        let d = c
+            .get(*pos)
+            .and_then(|d| d.to_digit(16))
+            .ok_or("bad \\u escape")?;
+        code = code * 16 + d;
+        *pos += 1;
+    }
+    Ok(code)
 }
 
 fn parse_number(c: &[char], pos: &mut usize) -> Result<Json, String> {
@@ -469,5 +514,33 @@ mod tests {
         assert_eq!(o.get("s"), Some(&Json::Str("q\"\nA".into())));
         assert!(parse("{\"a\":1,}").is_err());
         assert!(parse("{\"a\":1} extra").is_err());
+    }
+
+    #[test]
+    fn decodes_surrogate_pairs_and_rejects_lone_surrogates() {
+        // U+1F680 (🚀) = \uD83D\uDE80; U+10348 (𐍈) = \uD800\uDF48.
+        assert_eq!(
+            parse("\"\\uD83D\\uDE80\"").unwrap(),
+            Json::Str("\u{1F680}".into())
+        );
+        assert_eq!(
+            parse("\"x\\uD800\\uDF48y\"").unwrap(),
+            Json::Str("x\u{10348}y".into())
+        );
+        // Raw (unescaped) astral characters keep working too.
+        assert_eq!(
+            parse("\"\u{1F680}\"").unwrap(),
+            Json::Str("\u{1F680}".into())
+        );
+        // Lone surrogates, in either half, are malformed JSON text.
+        assert!(parse("\"\\uD83D\"").is_err());
+        assert!(parse("\"\\uD83Dx\"").is_err());
+        assert!(parse("\"\\uDE80\"").is_err());
+        // A high surrogate followed by an escaped non-surrogate is
+        // equally lone — the escape after it must not be consumed as
+        // a character.
+        assert!(parse("\"\\uD83D\\u0041\"").is_err());
+        // Truncated pair at end of input.
+        assert!(parse("\"\\uD83D\\u").is_err());
     }
 }

@@ -102,8 +102,9 @@ pub fn section(title: &str) {
 pub struct JsonReport {
     bench: String,
     entries: Vec<String>,
-    /// `(name, mean_us)` of every recorded bench, for baseline diffs.
-    results: Vec<(String, f64)>,
+    /// `(section, name, mean_us)` of every recorded bench, for baseline
+    /// diffs.
+    results: Vec<(String, String, f64)>,
 }
 
 fn json_escape(s: &str) -> String {
@@ -131,13 +132,18 @@ impl JsonReport {
     pub fn mean_of(&self, name: &str) -> Option<f64> {
         self.results
             .iter()
-            .find(|(n, _)| n == name)
-            .map(|&(_, mean)| mean)
+            .find(|(_, n, _)| n == name)
+            .map(|&(_, _, mean)| mean)
+    }
+
+    /// Whether any recorded bench landed under this section label.
+    pub fn has_section(&self, sec: &str) -> bool {
+        self.results.iter().any(|(s, _, _)| s == sec)
     }
 
     /// Record one timed result under a section label.
     pub fn result(&mut self, sec: &str, r: &BenchResult) {
-        self.results.push((r.name.clone(), r.mean_us()));
+        self.results.push((sec.to_string(), r.name.clone(), r.mean_us()));
         self.entries.push(format!(
             "{{\"kind\":\"bench\",\"section\":\"{}\",\"name\":\"{}\",\"iters\":{},\
              \"mean_us\":{:.3},\"p50_us\":{:.3},\"p95_us\":{:.3}}}",
@@ -188,6 +194,9 @@ impl JsonReport {
 /// One bench from a previously-written report file.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BaselineEntry {
+    /// Section label the bench was recorded under (empty if the
+    /// baseline line predates sections).
+    pub section: String,
     pub name: String,
     pub mean_us: f64,
 }
@@ -206,10 +215,57 @@ pub fn load_baseline(path: &str) -> std::io::Result<Vec<BaselineEntry>> {
         if let (Some(name), Some(mean_us)) =
             (json_str_field(line, "name"), json_num_field(line, "mean_us"))
         {
-            out.push(BaselineEntry { name, mean_us });
+            let section =
+                json_str_field(line, "section").unwrap_or_default();
+            out.push(BaselineEntry { section, name, mean_us });
         }
     }
     Ok(out)
+}
+
+/// Diff a live [`JsonReport`] against a committed baseline file, section
+/// by section: prints a baseline-vs-current line for every baseline
+/// bench the report re-ran, and panics ("BASELINE COVERAGE LOST") if a
+/// baseline bench in a section the report *did* emit was not re-run —
+/// renaming or dropping a tracked bench must update the committed
+/// baseline deliberately. Sections the report did not touch at all are
+/// skipped, so bench binaries tracking different sections can share one
+/// baseline file (e.g. `BENCH_hotpaths.json` holding both the
+/// `perf_hotpaths` and `fig14_fleet_100k` trajectories).
+pub fn diff_against_baseline(report: &JsonReport, path: &str) {
+    let base = match load_baseline(path) {
+        Ok(b) => b,
+        Err(e) => {
+            println!("baseline {path} unreadable ({e}); skipping diff");
+            return;
+        }
+    };
+    section(&format!("vs baseline {path}"));
+    let mut missing = Vec::new();
+    for b in &base {
+        if !report.has_section(&b.section) {
+            continue;
+        }
+        match report.mean_of(&b.name) {
+            Some(cur) => {
+                let delta = if b.mean_us > 0.0 {
+                    (cur - b.mean_us) / b.mean_us * 100.0
+                } else {
+                    0.0
+                };
+                println!(
+                    "{:<44} baseline {:>12.1} µs   current {:>12.1} µs   ({delta:+.0}%)",
+                    b.name, b.mean_us, cur,
+                );
+            }
+            None => missing.push(b.name.clone()),
+        }
+    }
+    assert!(
+        missing.is_empty(),
+        "BASELINE COVERAGE LOST: baseline benches not re-run: {missing:?} \
+         (rename/remove requires updating {path})"
+    );
 }
 
 fn json_str_field(line: &str, key: &str) -> Option<String> {
@@ -303,10 +359,59 @@ mod tests {
         let base = load_baseline(path).unwrap();
         assert_eq!(base.len(), 2);
         assert_eq!(base[0].name, "alpha \"bench\"");
+        assert_eq!(base[0].section, "s");
         assert!((base[0].mean_us - rep.mean_of("alpha \"bench\"").unwrap()).abs() < 1e-2);
         assert_eq!(base[1].name, "beta");
         assert!(rep.mean_of("nope").is_none());
+        assert!(rep.has_section("s"));
+        assert!(!rep.has_section("t"));
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn baseline_diff_is_section_scoped() {
+        // A report that re-ran section "a" but never touched section "b"
+        // must diff cleanly against a baseline holding both — only the
+        // sections a bench binary emits are its coverage obligation.
+        let mut full = JsonReport::new("unit");
+        let a = bench("a-bench", 1, 3, || 1 + 1);
+        let b = bench("b-bench", 1, 3, || 2 + 2);
+        full.result("a", &a);
+        full.result("b", &b);
+        let path = std::env::temp_dir()
+            .join(format!("spotfine_diff_test_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        full.write(&path).unwrap();
+
+        let mut partial = JsonReport::new("unit");
+        partial.result("a", &a);
+        diff_against_baseline(&partial, &path);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    #[should_panic(expected = "BASELINE COVERAGE LOST")]
+    fn baseline_diff_panics_on_lost_coverage() {
+        // Emitting *into* a section without re-running a baseline bench
+        // of that section is a coverage loss, not a skip.
+        let mut full = JsonReport::new("unit");
+        let a = bench("a-bench", 1, 3, || 1 + 1);
+        full.result("a", &a);
+        let path = std::env::temp_dir().join(format!(
+            "spotfine_diff_panic_test_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        full.write(&path).unwrap();
+
+        let mut renamed = JsonReport::new("unit");
+        let r = bench("a-bench-renamed", 1, 3, || 1 + 1);
+        renamed.result("a", &r);
+        let result = std::panic::catch_unwind(|| {
+            diff_against_baseline(&renamed, &path);
+        });
+        let _ = std::fs::remove_file(&path);
+        std::panic::resume_unwind(result.unwrap_err());
     }
 
     #[test]

@@ -101,27 +101,54 @@ impl Rng {
         if lambda <= 0.0 {
             return 0;
         }
-        const CHUNK: f64 = 16.0;
         let mut total = 0u32;
         let mut rem = lambda;
-        while rem > CHUNK {
-            total = total.saturating_add(self.poisson_knuth(CHUNK));
-            rem -= CHUNK;
+        while rem > Self::POISSON_CHUNK {
+            total = total.saturating_add(self.poisson_knuth(Self::POISSON_CHUNK));
+            rem -= Self::POISSON_CHUNK;
         }
         total.saturating_add(self.poisson_knuth(rem))
     }
 
+    /// Largest mean [`Self::poisson`] hands to a single Knuth draw.
+    /// Chosen so `exp(-CHUNK)` is comfortably above the subnormal range
+    /// (≈ 1.1e-7), guaranteeing the product-of-uniforms loop terminates.
+    const POISSON_CHUNK: f64 = 16.0;
+
     /// Knuth's method, valid for small `lambda` (callers chunk).
+    ///
+    /// Termination invariant: `lambda ≤ POISSON_CHUNK = 16`, so `l = exp(-λ) ≥
+    /// exp(-16) ≈ 1.1e-7 > 0` and the running product of uniforms —
+    /// which decays by a factor strictly below 1 in expectation ½ per
+    /// draw — crosses `l` with probability 1 and in O(λ) expected
+    /// draws. No escape-hatch cap: a cap would silently truncate the
+    /// distribution's tail instead of signaling a misuse, and with the
+    /// chunk bound it is unreachable anyway. The `debug_assert!`s turn
+    /// an out-of-contract call (λ large enough that `exp(-λ)`
+    /// underflows to 0, which *would* loop forever) into a loud failure
+    /// rather than a truncated sample; the tail bound of 64·CHUNK is
+    /// > 250σ above the mean — astronomically unreachable for a
+    /// genuine Poisson(≤16) draw, so hitting it means the product
+    /// underflowed.
     fn poisson_knuth(&mut self, lambda: f64) -> u32 {
+        debug_assert!(
+            lambda <= Self::POISSON_CHUNK,
+            "poisson_knuth requires chunked λ ≤ {}, got {lambda}",
+            Self::POISSON_CHUNK,
+        );
         let l = (-lambda).exp();
         let mut k = 0u32;
         let mut p = 1.0;
         loop {
             p *= self.f64();
-            if p <= l || k >= 10_000 {
+            if p <= l {
                 return k;
             }
             k += 1;
+            debug_assert!(
+                (k as f64) < 64.0 * Self::POISSON_CHUNK,
+                "poisson_knuth runaway: λ={lambda} violated the chunk bound"
+            );
         }
     }
 
@@ -248,6 +275,23 @@ mod tests {
         let big: f64 =
             (0..n).map(|_| r.poisson(1000.0) as f64).sum::<f64>() / n as f64;
         assert!((big - 1000.0).abs() < 5.0, "mean={big}");
+    }
+
+    #[test]
+    fn poisson_stream_is_deterministic_for_a_fixed_seed() {
+        // The churn stream (fleet::sweep) samples arrivals from a
+        // dedicated seed single-threaded; the whole engine-equivalence
+        // story rests on the draw sequence being a pure function of the
+        // seed — regardless of how many worker threads consume the
+        // resulting specs later.
+        let sample = |seed: u64| -> Vec<u32> {
+            let mut r = Rng::new(seed);
+            (0..200)
+                .map(|i| r.poisson(0.25 + (i % 7) as f64 * 13.0))
+                .collect()
+        };
+        assert_eq!(sample(0xC0DE), sample(0xC0DE));
+        assert_ne!(sample(0xC0DE), sample(0xC0DF));
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! Engine-equivalence property tests: the event-driven stepper
+//! (`spotfine::fleet::events`) must reproduce the dense reference loop
+//! **bit-for-bit** — `FleetResult`s, committed traces, and merged trace
+//! streams — over randomized fleets (sizes, regions, stagger, migration
+//! patience *and* mode, churn, predictor kinds, seeds) and for any
+//! thread count. This is the contract that lets full runs route through
+//! the event engine while the dense loop survives as the executable
+//! specification.
+
+use spotfine::fleet::{FleetEngine, FleetScenario, MigrationMode};
+use spotfine::obs::schema::validate_line;
+use spotfine::obs::Recorder;
+use spotfine::prop_assert;
+use spotfine::sched::pool::PredictorKind;
+use spotfine::util::prop::{check, PropConfig};
+use spotfine::util::rng::Rng;
+
+/// Trace lines with the process-global wall-clock solver aggregate
+/// removed — everything else must be deterministic.
+fn deterministic_lines(obs: &Recorder) -> Vec<String> {
+    let log = obs.finish().expect("enabled recorder yields a log");
+    log.lines
+        .iter()
+        .filter(|l| !l.contains("\"kind\":\"solver\""))
+        .cloned()
+        .collect()
+}
+
+/// The core contract: over random fleets, plain and recorded runs from
+/// the event-driven stepper — sequential and sharded across threads —
+/// equal the dense reference bit-for-bit.
+#[test]
+fn prop_event_stepper_is_bit_identical_to_dense() {
+    check(
+        "event stepper ≡ dense stepper",
+        PropConfig { cases: 18, seed: 0xE7E27 },
+        |rng: &mut Rng| {
+            let n_jobs = rng.int_range(1, 6) as usize;
+            let n_regions = rng.int_range(1, 3) as usize;
+            let mut sc = FleetScenario::new(n_jobs, n_regions, rng.next_u64());
+            sc.stagger = rng.int_range(0, 3) as usize;
+            sc.migration_patience = rng.int_range(0, 3) as usize;
+            if rng.bool(0.5) {
+                sc.migration_mode = MigrationMode::Policy;
+            }
+            if rng.bool(0.3) {
+                sc.churn = 0.4;
+            }
+            let (engine, mut specs) = sc.build();
+            // Mix in honest-ARIMA jobs: the event path must serve the
+            // engine's shared forecast caches exactly like the dense one.
+            for s in specs.iter_mut() {
+                if rng.bool(0.2) {
+                    s.predictor = PredictorKind::arima();
+                }
+            }
+            let ctx = format!(
+                "{n_jobs} jobs, {n_regions} regions, stagger {}, \
+                 patience {}, mode {:?}, churn {}",
+                sc.stagger, sc.migration_patience, sc.migration_mode, sc.churn
+            );
+
+            let dense = engine.clone().with_dense_stepper().run(&specs);
+            let e1 = engine.clone().run(&specs);
+            prop_assert!(e1 == dense, "event(1 thread) != dense ({ctx})");
+            let e4 = engine.clone().with_threads(4).run(&specs);
+            prop_assert!(e4 == dense, "event(4 threads) != dense ({ctx})");
+
+            // Recorded runs: the committed traces the delta-replay
+            // engine consumes must match too, not just the results.
+            let dense_rec =
+                engine.clone().with_dense_stepper().run_recorded(&specs);
+            prop_assert!(
+                dense_rec.result == dense,
+                "recorded dense result != plain dense result ({ctx})"
+            );
+            let ev_rec = engine.clone().with_threads(4).run_recorded(&specs);
+            prop_assert!(
+                ev_rec == dense_rec,
+                "recorded event run != recorded dense run ({ctx})"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Traced equivalence: with a live recorder the event stepper must (a)
+/// still produce the dense result bit-for-bit, and (b) narrate the
+/// *same merged event stream* byte-for-byte — at any thread count. The
+/// clean-slot shortcut is forced off under tracing precisely so the
+/// arbitration narration never thins out; this test pins that.
+#[test]
+fn traced_event_runs_match_dense_stream_byte_for_byte() {
+    for seed in [5u64, 23] {
+        for mode in [MigrationMode::Starvation, MigrationMode::Policy] {
+            for churn in [0.0, 0.5] {
+                let sc = FleetScenario::new(5, 2, seed)
+                    .with_stagger(2)
+                    .with_migration_mode(mode)
+                    .with_churn(churn);
+                let (engine, specs) = sc.build();
+                let run_traced = |eng: FleetEngine| {
+                    let obs = Recorder::enabled();
+                    let result = eng.with_recorder(obs.clone()).run(&specs);
+                    (result, deterministic_lines(&obs))
+                };
+                let (r_dense, l_dense) =
+                    run_traced(engine.clone().with_dense_stepper());
+                let (r_e1, l_e1) = run_traced(engine.clone());
+                let (r_e4, l_e4) = run_traced(engine.clone().with_threads(4));
+                assert_eq!(
+                    r_e1, r_dense,
+                    "traced event(1) result diverged from dense \
+                     (seed {seed}, mode {mode:?}, churn {churn})"
+                );
+                assert_eq!(
+                    r_e4, r_dense,
+                    "traced event(4) result diverged from dense \
+                     (seed {seed}, mode {mode:?}, churn {churn})"
+                );
+                assert_eq!(
+                    l_e1, l_dense,
+                    "event(1) trace stream diverged from dense \
+                     (seed {seed}, mode {mode:?}, churn {churn})"
+                );
+                assert_eq!(
+                    l_e4, l_dense,
+                    "event(4) trace stream diverged from dense \
+                     (seed {seed}, mode {mode:?}, churn {churn})"
+                );
+                for line in &l_e1 {
+                    validate_line(line).unwrap_or_else(|e| {
+                        panic!("invalid trace line {line}: {e}")
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Degenerate fleets settle identically: an empty roster (horizon 0,
+/// nothing ever arrives) exercises the event engine's drain path
+/// against the dense loop's.
+#[test]
+fn degenerate_fleets_match_dense() {
+    let (engine, _) = FleetScenario::new(1, 2, 7).build();
+    let empty = engine.clone().with_dense_stepper().run(&[]);
+    assert_eq!(engine.clone().run(&[]), empty, "empty fleet diverged");
+    assert_eq!(
+        engine.with_threads(4).run(&[]),
+        empty,
+        "threaded empty fleet diverged"
+    );
+}

@@ -8,6 +8,7 @@
 //! are the invariants the fleet engine — and therefore the fleet-aware
 //! policy selector's counterfactuals — silently rely on every slot.
 
+use spotfine::fleet::capacity::{water_fill, water_fill_reference};
 use spotfine::fleet::{
     arbitrate, FleetContendedEvaluator, FleetScenario, MigrationMode,
     ReplayPlan, SpotRequest, Tier,
@@ -178,6 +179,74 @@ fn prop_higher_tier_never_receives_less_than_identical_lower_tier() {
     );
 }
 
+/// The arithmetic water-fill is the executable unit loop, closed-form:
+/// bit-identical grants over arbitrary demand profiles (including the
+/// zero-demand members the redistribution pass produces) and caps from
+/// starved to far past total demand — where the unit loop's O(cap) cost
+/// is exactly what the arithmetic form exists to avoid.
+#[test]
+fn prop_arithmetic_water_fill_matches_unit_loop_reference() {
+    check(
+        "water-fill arithmetic ≡ unit loop",
+        PropConfig { cases: 500, seed: 0xF111 },
+        |rng: &mut Rng| {
+            let requests = random_requests(rng, 10);
+            // Arbitrary demands, not just the arbiter's max(held, want)
+            // claims: the redistribution fill runs the same routine on
+            // `want − granted` residuals, zeros included.
+            let demands: Vec<u32> = requests
+                .iter()
+                .map(|_| rng.int_range(0, 30) as u32)
+                .collect();
+            let cap = match rng.index(4) {
+                0 => 0,
+                1 => rng.int_range(0, 40) as u32,
+                2 => rng.int_range(40, 300) as u32,
+                _ => 100_000,
+            };
+            let got = water_fill(cap, &requests, &demands);
+            let want = water_fill_reference(cap, &requests, &demands);
+            prop_assert!(
+                got == want,
+                "arithmetic {got:?} != unit loop {want:?} \
+                 (cap {cap}, demands {demands:?})"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// No phantom preemptions: a job whose *final* grant covers what it
+/// held ends the slot at least as large as it started, so the arbiter
+/// must not report a forced loss. This pins the final-grant accounting:
+/// redistribution that lifts a grant back to or above `held` clears any
+/// fill-phase charge.
+#[test]
+fn prop_no_phantom_preemption() {
+    check(
+        "no phantom preemption",
+        PropConfig { cases: 500, seed: 0x9057 },
+        |rng: &mut Rng| {
+            let avail = rng.int_range(0, 24) as u32;
+            let requests = random_requests(rng, 10);
+            let grants = arbitrate(avail, &requests);
+            for (r, g) in requests.iter().zip(&grants) {
+                if g.granted >= r.held {
+                    prop_assert!(
+                        g.preempted == 0,
+                        "job {}: granted {} ≥ held {} yet preempted {}",
+                        r.job,
+                        g.granted,
+                        r.held,
+                        g.preempted
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// A few baselines plus random draws from the paper pool — a candidate
 /// mix that exercises clean prefixes, early divergence, and live
 /// migration in the learner's slot.
@@ -313,9 +382,20 @@ fn prop_delta_selection_round_is_thread_and_engine_invariant() {
     );
 }
 
-/// Preemption accounting stays within holdings, and what the fleet
-/// collectively keeps after a preemption cascade fits under the new
-/// availability.
+/// Preemption accounting stays within holdings on *any* request mix,
+/// and on fleets with no voluntary scale-downs (every `want ≥ held`),
+/// what the fleet collectively keeps after a preemption cascade fits
+/// under the new availability.
+///
+/// The capacity bound deliberately excludes voluntary scale-downs: with
+/// the final-grant accounting, `held − preempted` is not "instances
+/// still occupying capacity" for a job that chose to re-want less than
+/// it held, and redistribution of its released share can lift another
+/// job's grant so that the paper total exceeds `avail` (avail 10, A
+/// want 2 / held 8, B want 10 / held 6 → preempted [3, 0], Σ(held −
+/// preempted) = 11). That is correct behaviour — A's drop from 5 kept
+/// to 2 is a choice, not a preemption — so the bound is only meaningful
+/// when every job defends its holdings.
 #[test]
 fn prop_preemption_cascade_fits_surviving_capacity() {
     check(
@@ -325,7 +405,6 @@ fn prop_preemption_cascade_fits_surviving_capacity() {
             let avail = rng.int_range(0, 24) as u32;
             let requests = random_requests(rng, 10);
             let grants = arbitrate(avail, &requests);
-            let mut kept = 0u32;
             for (r, g) in requests.iter().zip(&grants) {
                 prop_assert!(
                     g.preempted <= r.held,
@@ -334,11 +413,23 @@ fn prop_preemption_cascade_fits_surviving_capacity() {
                     g.preempted,
                     r.held
                 );
+            }
+            // Same fleet with every job defending what it holds: now a
+            // kept instance is a granted instance, and the cascade must
+            // fit under the cap.
+            let defended: Vec<SpotRequest> = requests
+                .iter()
+                .map(|r| SpotRequest { want: r.want.max(r.held), ..*r })
+                .collect();
+            let grants = arbitrate(avail, &defended);
+            let mut kept = 0u32;
+            for (r, g) in defended.iter().zip(&grants) {
                 kept += r.held - g.preempted;
             }
             prop_assert!(
                 kept <= avail,
-                "fleet keeps {kept} instances above availability {avail}"
+                "defending fleet keeps {kept} instances above \
+                 availability {avail}"
             );
             Ok(())
         },

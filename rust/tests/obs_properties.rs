@@ -14,7 +14,7 @@ use spotfine::fleet::{
 };
 use spotfine::forecast::noise::NoiseSpec;
 use spotfine::market::generator::TraceGenerator;
-use spotfine::obs::schema::validate_line;
+use spotfine::obs::schema::{parse, validate_line, Json};
 use spotfine::obs::{Event, MigrationPhase, Recorder};
 use spotfine::sched::job::JobGenerator;
 use spotfine::sched::policy::Models;
@@ -144,6 +144,61 @@ fn traced_delta_replay_matches_full_replay() {
     assert_eq!(traced.realized, reference.realized);
     assert_eq!(traced.final_weights, reference.final_weights);
     assert_eq!(traced.regret, reference.regret);
+}
+
+#[test]
+fn astral_plane_labels_survive_the_full_jsonl_pipeline() {
+    // A policy label outside the Basic Multilingual Plane (emoji +
+    // Gothic hwair), driven end-to-end: Recorder → merged RunLog →
+    // JSONL bytes on disk → schema validation and decode — and then the
+    // surrogate-pair-escaped form of the same line, which is how an
+    // external JSON producer would legally write it.
+    let label = "\u{1F680} ahap-\u{10348}";
+    let obs = Recorder::enabled();
+    obs.emit(|| Event::Ledger {
+        round: 0,
+        chosen: 0,
+        label: label.into(),
+        expected: 1.0,
+        cum_regret: 0.0,
+        best_fixed: 0,
+        weights: vec![1.0],
+        utilities: vec![1.0],
+    });
+    let log = obs.finish().expect("enabled recorder yields a log");
+
+    let dir = std::env::temp_dir()
+        .join(format!("spotfine_obs_props_{}", std::process::id()));
+    let path = log.write_jsonl(dir.join("astral.jsonl")).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    let ledger = text
+        .lines()
+        .inspect(|line| {
+            validate_line(line)
+                .unwrap_or_else(|e| panic!("invalid line {line}: {e}"));
+        })
+        .find(|l| l.contains("\"kind\":\"ledger\""))
+        .expect("the ledger event survives the merge")
+        .to_string();
+
+    // The writer emits raw UTF-8; the schema parser must hand the label
+    // back untouched.
+    let Json::Obj(obj) = parse(&ledger).unwrap() else {
+        panic!("ledger line is not an object");
+    };
+    assert_eq!(obj.get("label"), Some(&Json::Str(label.to_string())));
+
+    // The equivalent surrogate-pair escapes (U+1F680 = 🚀,
+    // U+10348 = 𐍈) must validate and decode to the *same*
+    // document as the raw form.
+    let escaped = ledger
+        .replace("\u{1F680}", "\\uD83D\\uDE80")
+        .replace("\u{10348}", "\\uD800\\uDF48");
+    assert_ne!(escaped, ledger, "escape rewrite must apply");
+    validate_line(&escaped)
+        .unwrap_or_else(|e| panic!("escaped line rejected: {e}"));
+    assert_eq!(parse(&escaped), parse(&ledger));
 }
 
 #[test]
