@@ -4,5 +4,5 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{ExperimentConfig, ObsSettings};
+pub use schema::{CoordinatorSettings, ExperimentConfig, ObsSettings};
 pub use toml::{parse, TomlError, Value};

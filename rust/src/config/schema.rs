@@ -60,6 +60,25 @@ impl Default for FleetSettings {
     }
 }
 
+/// Coordinator robustness knobs (`[coordinator]` in TOML): checkpoint
+/// ring depth, fault-retry budget, and the slot length recovery time is
+/// charged against.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoordinatorSettings {
+    /// Checkpoint generations retained in the on-disk ring.
+    pub retain: usize,
+    /// Retries per checkpoint save/read before falling back.
+    pub max_retries: usize,
+    /// Slot length in seconds (recovery time erodes μ against this).
+    pub slot_secs: f64,
+}
+
+impl Default for CoordinatorSettings {
+    fn default() -> Self {
+        CoordinatorSettings { retain: 3, max_retries: 2, slot_secs: 1800.0 }
+    }
+}
+
 /// Observability knobs (`[obs]` in TOML). CLI flags (`--trace`,
 /// `--obs-summary`) override these when both are given.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
@@ -80,6 +99,7 @@ pub struct ExperimentConfig {
     pub forecast: ForecastSettings,
     pub fleet: FleetSettings,
     pub obs: ObsSettings,
+    pub coordinator: CoordinatorSettings,
     pub selection_jobs: usize,
     pub seed: u64,
     /// Directory where benches/figures write CSVs.
@@ -98,6 +118,7 @@ impl Default for ExperimentConfig {
             forecast: ForecastSettings::default(),
             fleet: FleetSettings::default(),
             obs: ObsSettings::default(),
+            coordinator: CoordinatorSettings::default(),
             selection_jobs: 1000,
             seed: 7,
             results_dir: "results".to_string(),
@@ -259,6 +280,21 @@ impl ExperimentConfig {
             })?;
         }
 
+        // [coordinator] — same i64 range-check-before-cast discipline
+        // as [forecast]: negatives must not wrap through usize.
+        let mut retain = cfg.coordinator.retain as i64;
+        read_opt!(doc, "coordinator.retain", as_int, retain);
+        let mut max_retries = cfg.coordinator.max_retries as i64;
+        read_opt!(doc, "coordinator.max_retries", as_int, max_retries);
+        if retain < 1 || max_retries < 0 {
+            return Err(ConfigError::Invalid(
+                "need coordinator.retain ≥ 1 and max_retries ≥ 0".into(),
+            ));
+        }
+        cfg.coordinator.retain = retain as usize;
+        cfg.coordinator.max_retries = max_retries as usize;
+        read_opt!(doc, "coordinator.slot_secs", as_float, cfg.coordinator.slot_secs);
+
         // [run]
         let mut k = cfg.selection_jobs as i64;
         read_opt!(doc, "run.selection_jobs", as_int, k);
@@ -343,6 +379,12 @@ impl ExperimentConfig {
         }
         if !(self.fleet.churn >= 0.0 && self.fleet.churn.is_finite()) {
             return e("fleet.churn must be finite and ≥ 0");
+        }
+        if self.coordinator.retain == 0 {
+            return e("coordinator.retain must be ≥ 1");
+        }
+        if !(self.coordinator.slot_secs > 0.0 && self.coordinator.slot_secs.is_finite()) {
+            return e("coordinator.slot_secs must be finite and positive");
         }
         if self.selection_jobs == 0 {
             return e("run.selection_jobs must be positive");
@@ -467,6 +509,32 @@ mod tests {
         assert!(!d.obs.summary);
         assert!(ExperimentConfig::from_toml_str("[obs]\ntrace = 7\n").is_err());
         assert!(ExperimentConfig::from_toml_str("[obs]\nsummary = \"yes\"\n").is_err());
+    }
+
+    #[test]
+    fn coordinator_section_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[coordinator]\nretain = 5\nmax_retries = 4\nslot_secs = 900.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.coordinator.retain, 5);
+        assert_eq!(cfg.coordinator.max_retries, 4);
+        assert!((cfg.coordinator.slot_secs - 900.0).abs() < 1e-12);
+        // Defaults match LeaderConfig's paper-aligned values.
+        let d = ExperimentConfig::from_toml_str("").unwrap();
+        assert_eq!(d.coordinator, CoordinatorSettings::default());
+        assert_eq!(d.coordinator.retain, 3);
+        assert_eq!(d.coordinator.max_retries, 2);
+        assert!((d.coordinator.slot_secs - 1800.0).abs() < 1e-12);
+        assert!(ExperimentConfig::from_toml_str("[coordinator]\nretain = 0\n").is_err());
+        // Negatives must not wrap through the usize cast.
+        assert!(ExperimentConfig::from_toml_str("[coordinator]\nretain = -1\n").is_err());
+        assert!(
+            ExperimentConfig::from_toml_str("[coordinator]\nmax_retries = -2\n").is_err()
+        );
+        assert!(
+            ExperimentConfig::from_toml_str("[coordinator]\nslot_secs = 0.0\n").is_err()
+        );
     }
 
     #[test]

@@ -1,14 +1,33 @@
-//! Checkpoint manager: persists [`crate::train::params::ParamStore`]
-//! snapshots around reconfigurations and preemptions, and accounts the
-//! **switching cost** (§II-A): transfer time = checkpoint bytes / network
+//! Crash-safe checkpoint manager: persists
+//! [`crate::train::params::ParamStore`] snapshots around
+//! reconfigurations and preemptions, and accounts the **switching
+//! cost** (§II-A): transfer time = checkpoint bytes / network
 //! bandwidth, the quantity behind the μ model and Fig. 6's bandwidth
 //! sweep.
+//!
+//! Durability model. Every save writes a fresh **generation** file
+//! `{tag}.g{gen:06}.ckpt` atomically (temp file + fsync + rename), so a
+//! crash mid-write can never clobber an older recovery point. Each file
+//! carries a checksummed envelope (magic, version, generation, step,
+//! progress, payload length, CRC-32 over the serialized `ParamStore`),
+//! and a plain-text manifest `{tag}.manifest` — itself rewritten
+//! atomically — indexes the ring of the last `retain` generations.
+//! [`CheckpointManager::restore_latest_valid`] walks the ring newest to
+//! oldest, retrying transient read errors and skipping any generation
+//! whose envelope or checksum fails, so a torn or corrupted file is
+//! detected, never restored. All file I/O calls through a
+//! [`FaultInjector`], which is how `tests/coordinator_properties.rs`
+//! proves crash-at-any-byte recovery; [`NoFaults`] keeps the real path
+//! unperturbed.
 
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
+use crate::coordinator::faults::{FaultInjector, NoFaults, ReadFault, WriteFault};
 use crate::train::params::ParamStore;
+use crate::util::crc::crc32;
 
 /// Switching-cost accounting for one checkpoint movement.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -27,15 +46,88 @@ impl SwitchCost {
     }
 }
 
+/// Envelope magic, "SPCG" (SPot Checkpoint Generation).
+const MAGIC: u32 = 0x5350_4347;
+const VERSION: u32 = 1;
+/// magic(4) + version(4) + gen(8) + step(4) + progress(8) + len(8) + crc(4).
+const HEADER_LEN: usize = 40;
+
+/// One retained generation, as indexed by the manifest.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GenerationMeta {
+    pub gen: u64,
+    /// Optimizer step the generation was taken at.
+    pub step: i32,
+    /// Scheduler progress at save time — restoring recomputes progress
+    /// from this, so falling back to an older generation honestly
+    /// re-does the lost work.
+    pub progress: f64,
+    /// Payload bytes (the `ParamStore` serialization).
+    pub bytes: usize,
+    pub crc: u32,
+}
+
+#[derive(Debug, Default)]
+struct TagState {
+    next_gen: u64,
+    /// Oldest → newest.
+    entries: Vec<GenerationMeta>,
+}
+
+/// Result of one (possibly retried) save.
+#[derive(Debug, Clone, Copy)]
+pub struct SaveReport {
+    /// `Some` if a generation was durably written; `None` after
+    /// exhausting retries (the run continues degraded).
+    pub cost: Option<SwitchCost>,
+    /// Failed write attempts.
+    pub retries: u32,
+    /// Transfer seconds burned by the failed attempts.
+    pub wasted_secs: f64,
+}
+
+/// A successful restore.
+#[derive(Debug)]
+pub struct RestoreReport {
+    pub store: ParamStore,
+    pub meta: GenerationMeta,
+    pub cost: SwitchCost,
+}
+
+/// Result of [`CheckpointManager::restore_latest_valid`] — infallible:
+/// `restored: None` means no valid generation survived, the caller's
+/// last resort (restart from scratch), not an error.
+#[derive(Debug)]
+pub struct RestoreOutcome {
+    pub restored: Option<RestoreReport>,
+    /// Transient read errors retried across all generations.
+    pub retries: u32,
+    /// Generations skipped as corrupt/torn before success (or the total
+    /// walked when nothing was valid).
+    pub generations_walked: u32,
+    /// Seconds burned on failed attempts and corrupt transfers.
+    pub wasted_secs: f64,
+}
+
 /// Checkpoint manager bound to a directory and a bandwidth model.
 #[derive(Debug)]
 pub struct CheckpointManager {
     dir: PathBuf,
     pub bandwidth_mbps: f64,
     pub startup_secs: f64,
+    /// Ring size: how many generations to retain per tag.
+    pub retain: usize,
     pub saves: u64,
     pub restores: u64,
+    /// Saves that exhausted their retries without producing a file.
+    pub save_failures: u64,
+    /// Successful transfer seconds, symmetric across save and restore
+    /// (§II-A counts the checkpoint movement itself both ways).
     pub total_switch_secs: f64,
+    /// Startup overhead paid on restores only (new workers must boot;
+    /// a save keeps the old workers running).
+    pub total_startup_secs: f64,
+    tags: BTreeMap<String, TagState>,
 }
 
 impl CheckpointManager {
@@ -44,14 +136,27 @@ impl CheckpointManager {
             dir: dir.as_ref().to_path_buf(),
             bandwidth_mbps,
             startup_secs: 20.0,
+            retain: 3,
             saves: 0,
             restores: 0,
+            save_failures: 0,
             total_switch_secs: 0.0,
+            total_startup_secs: 0.0,
+            tags: BTreeMap::new(),
         }
     }
 
-    fn path(&self, tag: &str) -> PathBuf {
-        self.dir.join(format!("{tag}.ckpt"))
+    pub fn with_retain(mut self, retain: usize) -> Self {
+        self.retain = retain.max(1);
+        self
+    }
+
+    fn gen_path(dir: &Path, tag: &str, gen: u64) -> PathBuf {
+        dir.join(format!("{tag}.g{gen:06}.ckpt"))
+    }
+
+    fn manifest_path(&self, tag: &str) -> PathBuf {
+        self.dir.join(format!("{tag}.manifest"))
     }
 
     /// Cost model for moving `bytes` over the configured link.
@@ -61,36 +166,318 @@ impl CheckpointManager {
         SwitchCost { bytes, transfer_secs, startup_secs: self.startup_secs }
     }
 
-    /// Save a snapshot; returns the accounted switching cost.
-    pub fn save(&mut self, tag: &str, store: &ParamStore) -> Result<SwitchCost> {
-        store.save_file(&self.path(tag))?;
-        let cost = self.cost_for(store.checkpoint_bytes());
-        self.saves += 1;
-        self.total_switch_secs += cost.transfer_secs;
-        Ok(cost)
+    /// Latest retained generation for `tag`, if any.
+    pub fn latest(&self, tag: &str) -> Option<&GenerationMeta> {
+        self.tags.get(tag).and_then(|t| t.entries.last())
     }
 
-    /// Restore a snapshot; returns (store, cost).
+    /// Retained generations for `tag`, oldest → newest.
+    pub fn generations(&self, tag: &str) -> &[GenerationMeta] {
+        self.tags.get(tag).map(|t| t.entries.as_slice()).unwrap_or(&[])
+    }
+
+    pub fn exists(&self, tag: &str) -> bool {
+        self.latest(tag).is_some()
+    }
+
+    /// Write generation `meta.gen` (envelope + payload) to disk.
+    /// `WriteFault::None` goes through the atomic temp+fsync+rename
+    /// path; `TornAt` simulates a crash *after* rename but before the
+    /// tail of the file reached durable storage: only a byte prefix
+    /// lands at the final path, yet the writer observes success.
+    fn write_generation(
+        dir: &Path,
+        tag: &str,
+        meta: &GenerationMeta,
+        payload: &[u8],
+        fault: WriteFault,
+    ) -> Result<()> {
+        let mut file = Vec::with_capacity(HEADER_LEN + payload.len());
+        file.extend_from_slice(&MAGIC.to_le_bytes());
+        file.extend_from_slice(&VERSION.to_le_bytes());
+        file.extend_from_slice(&meta.gen.to_le_bytes());
+        file.extend_from_slice(&meta.step.to_le_bytes());
+        file.extend_from_slice(&meta.progress.to_bits().to_le_bytes());
+        file.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        file.extend_from_slice(&meta.crc.to_le_bytes());
+        file.extend_from_slice(payload);
+
+        std::fs::create_dir_all(dir)?;
+        let path = Self::gen_path(dir, tag, meta.gen);
+        if let WriteFault::TornAt { frac } = fault {
+            let k = ((file.len() as f64 * frac) as usize).clamp(1, file.len() - 1);
+            std::fs::write(&path, &file[..k])
+                .with_context(|| format!("writing {}", path.display()))?;
+            return Ok(());
+        }
+        let tmp = path.with_extension("ckpt.tmp");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&file)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Rewrite `{tag}.manifest` atomically from the in-memory ring.
+    fn write_manifest(&self, tag: &str) -> Result<()> {
+        let state = self.tags.get(tag).expect("manifest for unknown tag");
+        let mut text = String::from("# spotfine checkpoint manifest v1: gen step progress_bits bytes crc\n");
+        for e in &state.entries {
+            text.push_str(&format!(
+                "{} {} {} {} {}\n",
+                e.gen,
+                e.step,
+                e.progress.to_bits(),
+                e.bytes,
+                e.crc
+            ));
+        }
+        let path = self.manifest_path(tag);
+        let tmp = path.with_extension("manifest.tmp");
+        std::fs::write(&tmp, text)?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Rebuild the in-memory ring for `tag` from its on-disk manifest —
+    /// what a restarted leader does before `restore_latest_valid`.
+    /// Returns the number of generations indexed.
+    pub fn recover_manifest(&mut self, tag: &str) -> Result<usize> {
+        let path = self.manifest_path(tag);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 5 {
+                bail!("bad manifest line `{line}`");
+            }
+            entries.push(GenerationMeta {
+                gen: fields[0].parse()?,
+                step: fields[1].parse()?,
+                progress: f64::from_bits(fields[2].parse()?),
+                bytes: fields[3].parse()?,
+                crc: fields[4].parse()?,
+            });
+        }
+        entries.sort_by_key(|e| e.gen);
+        let n = entries.len();
+        let next_gen = entries.last().map(|e| e.gen + 1).unwrap_or(0);
+        self.tags.insert(tag.to_string(), TagState { next_gen, entries });
+        Ok(n)
+    }
+
+    /// Save a new generation, retrying injected/real write errors up to
+    /// `max_retries` times. Infallible by design: exhaustion is reported
+    /// as `cost: None` (and counted in `save_failures`), never an `Err`
+    /// — the leader continues degraded on its previous generations.
+    pub fn save_with_retries(
+        &mut self,
+        tag: &str,
+        store: &ParamStore,
+        progress: f64,
+        slot: usize,
+        max_retries: usize,
+        inj: &mut dyn FaultInjector,
+    ) -> SaveReport {
+        let cost = self.cost_for(store.checkpoint_bytes());
+        let gen = self.tags.entry(tag.to_string()).or_default().next_gen;
+        let mut payload = Vec::with_capacity(store.checkpoint_bytes());
+        store.save(&mut payload).expect("in-memory serialize");
+        // The manifest and envelope record the *true* payload CRC even
+        // when the file ends up torn: the writer believed the save
+        // succeeded, and restore must catch the lie.
+        let meta = GenerationMeta {
+            gen,
+            step: store.step,
+            progress,
+            bytes: payload.len(),
+            crc: crc32(&payload),
+        };
+        let mut retries = 0u32;
+        let mut wasted = 0.0f64;
+        for attempt in 0..=max_retries {
+            let fault = inj.on_save(slot, attempt);
+            let wrote = if fault == WriteFault::IoError {
+                Err(anyhow::anyhow!("injected write error"))
+            } else {
+                Self::write_generation(&self.dir, tag, &meta, &payload, fault)
+            };
+            match wrote {
+                Ok(()) => {
+                    let state = self.tags.get_mut(tag).expect("tag just inserted");
+                    state.next_gen = gen + 1;
+                    state.entries.push(meta);
+                    while state.entries.len() > self.retain {
+                        let old = state.entries.remove(0);
+                        std::fs::remove_file(Self::gen_path(&self.dir, tag, old.gen))
+                            .ok();
+                    }
+                    self.write_manifest(tag).ok();
+                    self.saves += 1;
+                    self.total_switch_secs += cost.transfer_secs;
+                    return SaveReport { cost: Some(cost), retries, wasted_secs: wasted };
+                }
+                Err(_) => {
+                    retries += 1;
+                    wasted += cost.transfer_secs;
+                }
+            }
+        }
+        self.save_failures += 1;
+        SaveReport { cost: None, retries, wasted_secs: wasted }
+    }
+
+    /// Read generation `meta` from disk and validate every layer of the
+    /// envelope against both the file header and the manifest record,
+    /// so any torn write, bit flip, or truncation is rejected here.
+    fn read_generation(
+        dir: &Path,
+        tag: &str,
+        meta: &GenerationMeta,
+        template: &ParamStore,
+    ) -> Result<ParamStore> {
+        let path = Self::gen_path(dir, tag, meta.gen);
+        let bytes =
+            std::fs::read(&path).with_context(|| format!("reading {}", path.display()))?;
+        if bytes.len() < HEADER_LEN {
+            bail!("checkpoint {} torn inside the header", path.display());
+        }
+        let u32_at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+        let u64_at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+        if u32_at(0) != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        if u32_at(4) != VERSION {
+            bail!("unsupported checkpoint version");
+        }
+        if u64_at(8) != meta.gen {
+            bail!("generation mismatch");
+        }
+        let step = i32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        if step != meta.step {
+            bail!("step mismatch vs manifest");
+        }
+        let payload_len = u64_at(28) as usize;
+        let payload = &bytes[HEADER_LEN..];
+        if payload.len() != payload_len || payload.len() != meta.bytes {
+            bail!("checkpoint payload torn ({} of {} bytes)", payload.len(), meta.bytes);
+        }
+        let crc = crc32(payload);
+        if crc != u32_at(36) || crc != meta.crc {
+            bail!("checkpoint payload checksum mismatch");
+        }
+        let store = ParamStore::load(&mut &payload[..], template)?;
+        if store.step != step {
+            bail!("payload step disagrees with envelope");
+        }
+        Ok(store)
+    }
+
+    /// Walk the ring newest → oldest and restore the first generation
+    /// that validates, retrying transient read errors per generation up
+    /// to `max_retries` times. Corruption is never retried — a torn
+    /// file stays torn — the walk just moves one generation older.
+    pub fn restore_latest_valid(
+        &mut self,
+        tag: &str,
+        template: &ParamStore,
+        slot: usize,
+        max_retries: usize,
+        inj: &mut dyn FaultInjector,
+    ) -> RestoreOutcome {
+        let entries: Vec<GenerationMeta> = self.generations(tag).to_vec();
+        let mut retries = 0u32;
+        let mut walked = 0u32;
+        let mut wasted = 0.0f64;
+        for meta in entries.iter().rev() {
+            let cost = self.cost_for(meta.bytes);
+            let mut attempt = 0usize;
+            loop {
+                if inj.on_read(slot, attempt) == ReadFault::IoError {
+                    // Transient: the transfer ran (and new workers
+                    // idled) for nothing; retry the same generation.
+                    retries += 1;
+                    wasted += cost.total_secs();
+                    if attempt >= max_retries {
+                        break; // give up on this generation
+                    }
+                    attempt += 1;
+                    continue;
+                }
+                match Self::read_generation(&self.dir, tag, meta, template) {
+                    Ok(store) => {
+                        self.restores += 1;
+                        self.total_switch_secs += cost.transfer_secs;
+                        self.total_startup_secs += cost.startup_secs;
+                        return RestoreOutcome {
+                            restored: Some(RestoreReport { store, meta: *meta, cost }),
+                            retries,
+                            generations_walked: walked,
+                            wasted_secs: wasted,
+                        };
+                    }
+                    Err(_) => {
+                        // Deterministic corruption: we paid to transfer
+                        // a generation that failed its checksum.
+                        wasted += cost.transfer_secs;
+                        break;
+                    }
+                }
+            }
+            walked += 1;
+        }
+        RestoreOutcome {
+            restored: None,
+            retries,
+            generations_walked: walked,
+            wasted_secs: wasted,
+        }
+    }
+
+    /// Save a snapshot (fault-free, no retries); returns the accounted
+    /// switching cost.
+    pub fn save(&mut self, tag: &str, store: &ParamStore) -> Result<SwitchCost> {
+        let progress = self.latest(tag).map(|m| m.progress).unwrap_or(0.0);
+        let report = self.save_with_retries(tag, store, progress, 0, 0, &mut NoFaults);
+        report.cost.ok_or_else(|| anyhow::anyhow!("checkpoint save failed"))
+    }
+
+    /// Restore the latest valid snapshot (fault-free, no retries);
+    /// returns (store, cost).
     pub fn restore(
         &mut self,
         tag: &str,
         template: &ParamStore,
     ) -> Result<(ParamStore, SwitchCost)> {
-        let store = ParamStore::load_file(&self.path(tag), template)?;
-        let cost = self.cost_for(store.checkpoint_bytes());
-        self.restores += 1;
-        self.total_switch_secs += cost.total_secs();
-        Ok((store, cost))
+        let out = self.restore_latest_valid(tag, template, 0, 0, &mut NoFaults);
+        match out.restored {
+            Some(rep) => Ok((rep.store, rep.cost)),
+            None => bail!("no valid checkpoint generation for `{tag}`"),
+        }
     }
 
-    pub fn exists(&self, tag: &str) -> bool {
-        self.path(tag).exists()
+    /// Remove the checkpoint directory (ephemeral runs clean up).
+    pub fn cleanup(&mut self) {
+        self.tags.clear();
+        std::fs::remove_dir_all(&self.dir).ok();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::faults::FaultPlan;
     use crate::runtime::executable::HostTensor;
 
     fn store() -> ParamStore {
@@ -100,16 +487,18 @@ mod tests {
         }])
     }
 
-    fn tmpdir() -> PathBuf {
+    /// Unique dir per test — same-process tests must not share state.
+    fn tmpdir(name: &str) -> PathBuf {
         let d = std::env::temp_dir()
-            .join(format!("spotfine_ckptmgr_{}", std::process::id()));
+            .join(format!("spotfine_ckptmgr_{}_{name}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
         std::fs::create_dir_all(&d).unwrap();
         d
     }
 
     #[test]
     fn save_restore_roundtrip() {
-        let dir = tmpdir();
+        let dir = tmpdir("roundtrip");
         let mut mgr = CheckpointManager::new(&dir, 800.0);
         let mut s = store();
         s.step = 9;
@@ -120,6 +509,26 @@ mod tests {
         assert!(cost.transfer_secs > 0.0);
         assert_eq!(mgr.saves, 1);
         assert_eq!(mgr.restores, 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn switch_time_accounting_is_symmetric_in_transfer() {
+        // §II-A: the checkpoint movement costs transfer time in both
+        // directions; only restore additionally boots new workers.
+        let dir = tmpdir("symmetry");
+        let mut mgr = CheckpointManager::new(&dir, 800.0);
+        let s = store();
+        let save_cost = mgr.save("t", &s).unwrap();
+        assert!((mgr.total_switch_secs - save_cost.transfer_secs).abs() < 1e-15);
+        assert_eq!(mgr.total_startup_secs, 0.0);
+        let (_, restore_cost) = mgr.restore("t", &store()).unwrap();
+        assert_eq!(save_cost.transfer_secs, restore_cost.transfer_secs);
+        assert!(
+            (mgr.total_switch_secs - 2.0 * save_cost.transfer_secs).abs() < 1e-15,
+            "save and restore must account the same transfer"
+        );
+        assert!((mgr.total_startup_secs - mgr.startup_secs).abs() < 1e-15);
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -140,9 +549,103 @@ mod tests {
 
     #[test]
     fn restore_missing_fails() {
-        let dir = tmpdir();
+        let dir = tmpdir("missing");
         let mut mgr = CheckpointManager::new(&dir, 800.0);
         assert!(mgr.restore("nope", &store()).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn ring_retains_the_last_n_generations() {
+        let dir = tmpdir("ring");
+        let mut mgr = CheckpointManager::new(&dir, 800.0).with_retain(3);
+        let mut s = store();
+        for step in 1..=5 {
+            s.step = step;
+            mgr.save_with_retries("t", &s, step as f64, 0, 0, &mut NoFaults);
+        }
+        let gens = mgr.generations("t");
+        assert_eq!(gens.len(), 3);
+        assert_eq!(gens.iter().map(|g| g.step).collect::<Vec<_>>(), vec![3, 4, 5]);
+        // Pruned files are really gone; retained files really exist.
+        assert!(!CheckpointManager::gen_path(&dir, "t", gens[0].gen - 1).exists());
+        for g in gens {
+            assert!(CheckpointManager::gen_path(&dir, "t", g.gen).exists());
+        }
+        let (restored, _) = mgr.restore("t", &store()).unwrap();
+        assert_eq!(restored.step, 5);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn atomic_save_leaves_no_temp_files() {
+        let dir = tmpdir("atomic");
+        let mut mgr = CheckpointManager::new(&dir, 800.0);
+        mgr.save("t", &store()).unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "tmp files left behind: {leftovers:?}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn torn_write_is_detected_and_walked_past() {
+        let dir = tmpdir("torn");
+        let mut mgr = CheckpointManager::new(&dir, 800.0);
+        let mut s = store();
+        s.step = 1;
+        mgr.save_with_retries("t", &s, 1.0, 0, 0, &mut NoFaults);
+        s.step = 2;
+        // The newest generation is torn at half length, but the writer
+        // saw success — exactly the crash-after-rename case.
+        let mut torn = FaultPlan::parse("torn@1", 0).unwrap();
+        let rep = mgr.save_with_retries("t", &s, 2.0, 1, 0, &mut torn);
+        assert!(rep.cost.is_some(), "torn save must look successful");
+        let out = mgr.restore_latest_valid("t", &store(), 2, 0, &mut NoFaults);
+        let rep = out.restored.expect("older generation must survive");
+        assert_eq!(rep.store.step, 1, "must fall back past the torn file");
+        assert_eq!(out.generations_walked, 1);
+        assert!(out.wasted_secs > 0.0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn transient_read_errors_are_retried() {
+        let dir = tmpdir("readretry");
+        let mut mgr = CheckpointManager::new(&dir, 800.0);
+        let mut s = store();
+        s.step = 7;
+        mgr.save_with_retries("t", &s, 7.0, 0, 0, &mut NoFaults);
+        let mut flaky = FaultPlan::parse("read@3", 0).unwrap();
+        let out = mgr.restore_latest_valid("t", &store(), 3, 2, &mut flaky);
+        let rep = out.restored.expect("retry must recover the read");
+        assert_eq!(rep.store.step, 7);
+        assert_eq!(out.retries, 1);
+        assert!(out.wasted_secs > 0.0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn manifest_recovery_after_restart() {
+        let dir = tmpdir("manifest");
+        let mut mgr = CheckpointManager::new(&dir, 800.0);
+        let mut s = store();
+        s.step = 3;
+        mgr.save_with_retries("t", &s, 2.5, 0, 0, &mut NoFaults);
+        s.step = 4;
+        mgr.save_with_retries("t", &s, 3.5, 1, 0, &mut NoFaults);
+        // A fresh manager (restarted process) rebuilds the ring from
+        // the on-disk manifest and restores the newest generation.
+        let mut fresh = CheckpointManager::new(&dir, 800.0);
+        assert_eq!(fresh.recover_manifest("t").unwrap(), 2);
+        let latest = *fresh.latest("t").unwrap();
+        assert_eq!(latest.step, 4);
+        assert_eq!(latest.progress, 3.5);
+        let (restored, _) = fresh.restore("t", &store()).unwrap();
+        assert_eq!(restored.step, 4);
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -11,9 +11,25 @@ pub enum Event {
     InstanceLaunched { slot: usize, id: u64, spot: bool },
     InstanceReleased { slot: usize, id: u64, spot: bool },
     InstancePreempted { slot: usize, id: u64 },
+    /// A launch failed with insufficient capacity; the pool runs short.
+    InstanceLaunchFailed { slot: usize, spot: bool },
     Reconfigured { slot: usize, from: u32, to: u32, mu: f64 },
     CheckpointSaved { slot: usize, bytes: usize },
+    /// A save exhausted its retries; the run continues on older
+    /// generations.
+    CheckpointSaveFailed { slot: usize, attempts: u32 },
     CheckpointRestored { slot: usize, bytes: usize },
+    /// Shards were killed after `after_step` steps, before the slot's
+    /// periodic save — the work since the last checkpoint is lost.
+    MidSlotPreempted { slot: usize, after_step: usize, lost_shards: u32 },
+    /// Preemption left zero replacement capacity, so the restore is
+    /// deferred: `bytes` of transfer were *not* paid this slot.
+    RestoreSkipped { slot: usize, bytes: usize },
+    /// Recovery had to retry reads and/or walk back `walked`
+    /// generations; `steps_lost` optimizer steps will be re-done.
+    RecoveredFromGeneration { slot: usize, gen: u64, walked: u32, retries: u32, steps_lost: u64 },
+    /// No valid generation survived — training restarts from step 0.
+    RestartedFromScratch { slot: usize, steps_lost: u64 },
     TrainStep { slot: usize, step: i32, loss: f32, shards: usize },
     SlotFinished { slot: usize, progress: f64, cost: f64 },
     JobCompleted { slot: usize, utility: f64 },
@@ -38,14 +54,38 @@ impl fmt::Display for Event {
             Event::InstancePreempted { slot, id } => {
                 write!(f, "[slot {slot}] PREEMPTED #{id}")
             }
+            Event::InstanceLaunchFailed { slot, spot } => {
+                write!(f, "[slot {slot}] LAUNCH FAILED ({})", kind(*spot))
+            }
             Event::Reconfigured { slot, from, to, mu } => {
                 write!(f, "[slot {slot}] reconfig {from}→{to} (μ={mu:.2})")
             }
             Event::CheckpointSaved { slot, bytes } => {
                 write!(f, "[slot {slot}] checkpoint saved ({bytes} B)")
             }
+            Event::CheckpointSaveFailed { slot, attempts } => {
+                write!(f, "[slot {slot}] CHECKPOINT SAVE FAILED after {attempts} attempts")
+            }
             Event::CheckpointRestored { slot, bytes } => {
                 write!(f, "[slot {slot}] checkpoint restored ({bytes} B)")
+            }
+            Event::MidSlotPreempted { slot, after_step, lost_shards } => {
+                write!(
+                    f,
+                    "[slot {slot}] MID-SLOT PREEMPTION after step {after_step} ({lost_shards} shards lost)"
+                )
+            }
+            Event::RestoreSkipped { slot, bytes } => {
+                write!(f, "[slot {slot}] restore skipped, no capacity ({bytes} B saved)")
+            }
+            Event::RecoveredFromGeneration { slot, gen, walked, retries, steps_lost } => {
+                write!(
+                    f,
+                    "[slot {slot}] recovered from gen {gen} ({walked} walked, {retries} retries, {steps_lost} steps lost)"
+                )
+            }
+            Event::RestartedFromScratch { slot, steps_lost } => {
+                write!(f, "[slot {slot}] RESTARTED FROM SCRATCH ({steps_lost} steps lost)")
             }
             Event::TrainStep { slot, step, loss, shards } => {
                 write!(f, "[slot {slot}] step {step}: loss {loss:.4} ({shards} shards)")
@@ -123,5 +163,18 @@ mod tests {
         assert_eq!(e.to_string(), "[slot 3] reconfig 4→8 (μ=0.90)");
         let e2 = Event::InstanceLaunched { slot: 0, id: 1, spot: true };
         assert!(e2.to_string().contains("spot"));
+        let e3 = Event::RecoveredFromGeneration {
+            slot: 5,
+            gen: 2,
+            walked: 1,
+            retries: 3,
+            steps_lost: 8,
+        };
+        assert_eq!(
+            e3.to_string(),
+            "[slot 5] recovered from gen 2 (1 walked, 3 retries, 8 steps lost)"
+        );
+        let e4 = Event::RestoreSkipped { slot: 4, bytes: 64 };
+        assert!(e4.to_string().contains("no capacity"));
     }
 }

@@ -1,0 +1,349 @@
+//! Deterministic fault injection for the coordinator.
+//!
+//! The leader's real I/O paths — checkpoint writes/reads, per-slot
+//! shard execution, instance launches — all call through the
+//! [`FaultInjector`] trait. [`NoFaults`] (the default) answers every
+//! hook with "no fault" and costs one virtual call per hook site;
+//! [`FaultPlan`] is a seeded injector driven by [`crate::util::rng`],
+//! so a given `(spec, seed)` reproduces the exact same fault sequence
+//! across runs. This is what lets the crash-safety property tests in
+//! `tests/coordinator_properties.rs` explore arbitrary fault schedules
+//! while the fault-free path stays bit-identical to the plain run.
+//!
+//! Fault kinds (mirroring the failure modes the paper's §II-A switching
+//! model abstracts over):
+//! - **save I/O errors** — a checkpoint write fails outright;
+//! - **torn writes** — the save "succeeds" but only a byte prefix
+//!   reaches durable storage (the crash-after-rename case);
+//! - **read I/O errors** — transient restore failures worth retrying;
+//! - **mid-slot preemptions** — shards die after step *s*, before the
+//!   slot's periodic save, destroying the work since the last
+//!   checkpoint;
+//! - **launch failures** — insufficient-capacity errors while
+//!   reconciling the instance pool, per kind (spot / on-demand).
+
+use crate::coordinator::instances::InstanceKind;
+use crate::util::rng::Rng;
+
+/// What happens to one checkpoint write attempt.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WriteFault {
+    /// The write completes normally.
+    None,
+    /// The write fails with an I/O error (nothing durable is produced).
+    IoError,
+    /// The write appears to succeed but only `frac` of the file's bytes
+    /// survive (a crash between rename and durability). `frac` ∈ (0,1).
+    TornAt { frac: f64 },
+}
+
+/// What happens to one checkpoint read attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReadFault {
+    /// The read completes normally.
+    None,
+    /// A transient I/O error; retrying may succeed.
+    IoError,
+}
+
+/// The injector trait the coordinator's real paths call through. Every
+/// hook defaults to "no fault", so [`NoFaults`] is a zero-state
+/// implementation and custom injectors override only what they script.
+pub trait FaultInjector {
+    /// Consulted once per checkpoint-write attempt (`attempt` counts
+    /// from 0 within one save).
+    fn on_save(&mut self, _slot: usize, _attempt: usize) -> WriteFault {
+        WriteFault::None
+    }
+
+    /// Consulted once per checkpoint-read attempt (`attempt` counts
+    /// from 0 within one generation).
+    fn on_read(&mut self, _slot: usize, _attempt: usize) -> ReadFault {
+        ReadFault::None
+    }
+
+    /// Consulted once per executing slot: `Some(s)` kills the shards
+    /// after `s` of the slot's `planned` steps, before the periodic
+    /// save. `s` is clamped to `planned` by the caller.
+    fn midslot_kill(&mut self, _slot: usize, _planned: usize) -> Option<usize> {
+        None
+    }
+
+    /// Consulted once per instance the pool tries to launch; `true`
+    /// means the provider reports insufficient capacity for this one.
+    fn launch_fails(&mut self, _slot: usize, _kind: InstanceKind) -> bool {
+        false
+    }
+}
+
+/// The zero-cost default: never injects anything.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoFaults;
+
+impl FaultInjector for NoFaults {}
+
+/// Probabilities and scripted slots for a [`FaultPlan`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultConfig {
+    /// P(one save attempt fails with an I/O error).
+    pub save_io: f64,
+    /// P(one save attempt is torn) — evaluated after `save_io` misses.
+    pub torn: f64,
+    /// P(one read attempt fails transiently).
+    pub read_io: f64,
+    /// P(an executing slot is killed mid-slot).
+    pub midslot: f64,
+    /// P(one spot launch reports insufficient capacity).
+    pub launch_spot: f64,
+    /// P(one on-demand launch reports insufficient capacity) — kept
+    /// separate because real markets fail spot far more often.
+    pub launch_od: f64,
+    /// Slots whose *first* save attempt is forced to fail.
+    pub scripted_save: Vec<usize>,
+    /// Slots whose first save attempt is forced torn (at half length).
+    pub scripted_torn: Vec<usize>,
+    /// Slots whose first read attempt is forced to fail.
+    pub scripted_read: Vec<usize>,
+    /// Slots forced to die mid-slot (after half the planned steps).
+    pub scripted_midslot: Vec<usize>,
+    /// Slots where every launch reports insufficient capacity.
+    pub scripted_launch: Vec<usize>,
+}
+
+impl FaultConfig {
+    fn probs(&self) -> [f64; 6] {
+        [
+            self.save_io,
+            self.torn,
+            self.read_io,
+            self.midslot,
+            self.launch_spot,
+            self.launch_od,
+        ]
+    }
+
+    /// True when the plan can never inject anything.
+    pub fn is_empty(&self) -> bool {
+        self.probs().iter().all(|&p| p == 0.0)
+            && self.scripted_save.is_empty()
+            && self.scripted_torn.is_empty()
+            && self.scripted_read.is_empty()
+            && self.scripted_midslot.is_empty()
+            && self.scripted_launch.is_empty()
+    }
+}
+
+/// A seeded, reproducible fault schedule. Randomness is consumed in
+/// hook-call order, so for a fixed run trajectory the same `(config,
+/// seed)` injects the same faults; probability-zero kinds draw nothing,
+/// which keeps plans with disjoint kinds independent of each other.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub cfg: FaultConfig,
+    rng: Rng,
+    /// Total faults injected so far (all kinds).
+    pub injected: u64,
+}
+
+impl FaultPlan {
+    pub fn new(cfg: FaultConfig, seed: u64) -> FaultPlan {
+        FaultPlan { cfg, rng: Rng::new(seed ^ 0xFA01_7AB1E), injected: 0 }
+    }
+
+    /// The empty plan: behaviorally identical to [`NoFaults`] (proven
+    /// bit-for-bit by `tests/coordinator_properties.rs`).
+    pub fn none() -> FaultPlan {
+        FaultPlan::new(FaultConfig::default(), 0)
+    }
+
+    /// Parse a fault spec: comma-separated clauses, each either
+    /// `kind=prob` (per-opportunity probability) or `kind@s1+s2+…`
+    /// (scripted slots). Kinds: `save`, `torn`, `read`, `midslot`,
+    /// `launch` (spot), `launch-od`. Example:
+    /// `"torn=0.2,midslot@3+5,launch=0.25"`.
+    pub fn parse(spec: &str, seed: u64) -> anyhow::Result<FaultPlan> {
+        let mut cfg = FaultConfig::default();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            if let Some((kind, prob)) = clause.split_once('=') {
+                let p: f64 = prob
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad probability in `{clause}`"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    anyhow::bail!("probability out of [0,1] in `{clause}`");
+                }
+                match kind.trim() {
+                    "save" => cfg.save_io = p,
+                    "torn" => cfg.torn = p,
+                    "read" => cfg.read_io = p,
+                    "midslot" => cfg.midslot = p,
+                    "launch" => cfg.launch_spot = p,
+                    "launch-od" | "launch_od" => cfg.launch_od = p,
+                    other => anyhow::bail!("unknown fault kind `{other}`"),
+                }
+            } else if let Some((kind, slots)) = clause.split_once('@') {
+                let parsed: Result<Vec<usize>, _> =
+                    slots.split('+').map(|s| s.trim().parse::<usize>()).collect();
+                let slots = parsed
+                    .map_err(|_| anyhow::anyhow!("bad slot list in `{clause}`"))?;
+                match kind.trim() {
+                    "save" => cfg.scripted_save = slots,
+                    "torn" => cfg.scripted_torn = slots,
+                    "read" => cfg.scripted_read = slots,
+                    "midslot" => cfg.scripted_midslot = slots,
+                    "launch" => cfg.scripted_launch = slots,
+                    other => anyhow::bail!("unknown fault kind `{other}`"),
+                }
+            } else {
+                anyhow::bail!(
+                    "bad fault clause `{clause}` (want kind=prob or kind@s1+s2)"
+                );
+            }
+        }
+        Ok(FaultPlan::new(cfg, seed))
+    }
+
+    fn draw(&mut self, p: f64) -> bool {
+        // Skip the draw entirely at p == 0 so unrelated fault kinds
+        // don't perturb each other's random sequences.
+        p > 0.0 && self.rng.bool(p)
+    }
+}
+
+impl FaultInjector for FaultPlan {
+    fn on_save(&mut self, slot: usize, attempt: usize) -> WriteFault {
+        if attempt == 0 && self.cfg.scripted_save.contains(&slot) {
+            self.injected += 1;
+            return WriteFault::IoError;
+        }
+        if attempt == 0 && self.cfg.scripted_torn.contains(&slot) {
+            self.injected += 1;
+            return WriteFault::TornAt { frac: 0.5 };
+        }
+        if self.draw(self.cfg.save_io) {
+            self.injected += 1;
+            return WriteFault::IoError;
+        }
+        if self.draw(self.cfg.torn) {
+            self.injected += 1;
+            // Anywhere in (0,1); the writer clamps to a real prefix.
+            return WriteFault::TornAt { frac: self.rng.f64().clamp(0.05, 0.95) };
+        }
+        WriteFault::None
+    }
+
+    fn on_read(&mut self, slot: usize, attempt: usize) -> ReadFault {
+        if attempt == 0 && self.cfg.scripted_read.contains(&slot) {
+            self.injected += 1;
+            return ReadFault::IoError;
+        }
+        if self.draw(self.cfg.read_io) {
+            self.injected += 1;
+            return ReadFault::IoError;
+        }
+        ReadFault::None
+    }
+
+    fn midslot_kill(&mut self, slot: usize, planned: usize) -> Option<usize> {
+        if self.cfg.scripted_midslot.contains(&slot) {
+            self.injected += 1;
+            return Some(planned / 2);
+        }
+        if self.draw(self.cfg.midslot) {
+            self.injected += 1;
+            return Some(self.rng.index(planned.max(1)));
+        }
+        None
+    }
+
+    fn launch_fails(&mut self, slot: usize, kind: InstanceKind) -> bool {
+        if self.cfg.scripted_launch.contains(&slot) {
+            self.injected += 1;
+            return true;
+        }
+        let p = match kind {
+            InstanceKind::Spot => self.cfg.launch_spot,
+            InstanceKind::OnDemand => self.cfg.launch_od,
+        };
+        if self.draw(p) {
+            self.injected += 1;
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_faults_answers_every_hook_with_none() {
+        let mut inj = NoFaults;
+        assert_eq!(inj.on_save(3, 0), WriteFault::None);
+        assert_eq!(inj.on_read(3, 0), ReadFault::None);
+        assert_eq!(inj.midslot_kill(3, 4), None);
+        assert!(!inj.launch_fails(3, InstanceKind::Spot));
+    }
+
+    #[test]
+    fn empty_plan_is_a_noop_and_draws_nothing() {
+        let mut plan = FaultPlan::none();
+        assert!(plan.cfg.is_empty());
+        for slot in 0..50 {
+            assert_eq!(plan.on_save(slot, 0), WriteFault::None);
+            assert_eq!(plan.on_read(slot, 0), ReadFault::None);
+            assert_eq!(plan.midslot_kill(slot, 4), None);
+            assert!(!plan.launch_fails(slot, InstanceKind::Spot));
+            assert!(!plan.launch_fails(slot, InstanceKind::OnDemand));
+        }
+        assert_eq!(plan.injected, 0);
+    }
+
+    #[test]
+    fn spec_parses_probabilities_and_scripts() {
+        let plan =
+            FaultPlan::parse("save=0.1, torn=0.2,read=0.3,midslot@3+5,launch=0.4,launch-od=0.05", 7)
+                .unwrap();
+        assert!((plan.cfg.save_io - 0.1).abs() < 1e-12);
+        assert!((plan.cfg.torn - 0.2).abs() < 1e-12);
+        assert!((plan.cfg.read_io - 0.3).abs() < 1e-12);
+        assert_eq!(plan.cfg.scripted_midslot, vec![3, 5]);
+        assert!((plan.cfg.launch_spot - 0.4).abs() < 1e-12);
+        assert!((plan.cfg.launch_od - 0.05).abs() < 1e-12);
+        assert!(FaultPlan::parse("save=1.5", 0).is_err());
+        assert!(FaultPlan::parse("warp=0.1", 0).is_err());
+        assert!(FaultPlan::parse("midslot@x", 0).is_err());
+        assert!(FaultPlan::parse("justaword", 0).is_err());
+    }
+
+    #[test]
+    fn scripted_slots_fire_exactly_on_the_first_attempt() {
+        let mut plan = FaultPlan::parse("torn@2,launch@4", 7).unwrap();
+        assert_eq!(plan.on_save(1, 0), WriteFault::None);
+        assert_eq!(plan.on_save(2, 0), WriteFault::TornAt { frac: 0.5 });
+        // Retries of the same save are not re-scripted.
+        assert_eq!(plan.on_save(2, 1), WriteFault::None);
+        assert!(plan.launch_fails(4, InstanceKind::Spot));
+        assert!(plan.launch_fails(4, InstanceKind::OnDemand));
+        assert!(!plan.launch_fails(5, InstanceKind::Spot));
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let run = |seed| {
+            let mut plan = FaultPlan::parse("save=0.3,read=0.4,midslot=0.5", seed).unwrap();
+            let mut out = Vec::new();
+            for slot in 0..40 {
+                out.push((
+                    plan.on_save(slot, 0),
+                    plan.on_read(slot, 0),
+                    plan.midslot_kill(slot, 4),
+                ));
+            }
+            out
+        };
+        assert_eq!(run(11), run(11));
+        assert_ne!(run(11), run(12), "different seeds should diverge");
+    }
+}

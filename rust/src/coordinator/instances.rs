@@ -4,6 +4,7 @@
 //! capacity.
 
 use crate::coordinator::events::{Event, EventLog};
+use crate::coordinator::faults::{FaultInjector, NoFaults};
 
 /// Instance flavor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -20,6 +21,26 @@ pub struct Instance {
     pub launched_slot: usize,
 }
 
+/// What one reconcile pass actually achieved. `shortfall_*` is the gap
+/// between the policy's target and real holdings after launch failures
+/// — the next `SlotContext` must see the pool the leader *has*, not
+/// the one it asked for.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ReconcileReport {
+    pub launched: u32,
+    pub released: u32,
+    /// Launches that failed with insufficient capacity.
+    pub launch_failures: u32,
+    pub shortfall_od: u32,
+    pub shortfall_spot: u32,
+}
+
+impl ReconcileReport {
+    pub fn shortfall(&self) -> u32 {
+        self.shortfall_od + self.shortfall_spot
+    }
+}
+
 /// The pool of currently-held instances.
 #[derive(Debug, Default)]
 pub struct InstancePool {
@@ -27,6 +48,7 @@ pub struct InstancePool {
     next_id: u64,
     pub total_launches: u64,
     pub total_preemptions: u64,
+    pub total_launch_failures: u64,
 }
 
 impl InstancePool {
@@ -84,8 +106,24 @@ impl InstancePool {
         target_spot: u32,
         log: &mut EventLog,
     ) -> (u32, u32) {
-        let mut launched = 0;
-        let mut released = 0;
+        let rep = self.reconcile_with(slot, target_od, target_spot, log, &mut NoFaults);
+        (rep.launched, rep.released)
+    }
+
+    /// Fault-aware reconcile: every launch goes through the injector,
+    /// and an insufficient-capacity failure is *not* retried within the
+    /// slot (the provider has nothing to give right now) — it becomes a
+    /// reported shortfall instead. With [`NoFaults`] this is exactly
+    /// [`InstancePool::reconcile`].
+    pub fn reconcile_with(
+        &mut self,
+        slot: usize,
+        target_od: u32,
+        target_spot: u32,
+        log: &mut EventLog,
+        inj: &mut dyn FaultInjector,
+    ) -> ReconcileReport {
+        let mut rep = ReconcileReport::default();
         for (kind, target) in [
             (InstanceKind::OnDemand, target_od),
             (InstanceKind::Spot, target_spot),
@@ -93,6 +131,18 @@ impl InstancePool {
             let have = self.count(kind);
             if have < target {
                 for _ in 0..target - have {
+                    if inj.launch_fails(slot, kind) {
+                        log.emit(Event::InstanceLaunchFailed {
+                            slot,
+                            spot: kind == InstanceKind::Spot,
+                        });
+                        rep.launch_failures += 1;
+                        match kind {
+                            InstanceKind::OnDemand => rep.shortfall_od += 1,
+                            InstanceKind::Spot => rep.shortfall_spot += 1,
+                        }
+                        continue;
+                    }
                     self.next_id += 1;
                     let id = self.next_id;
                     self.instances.push(Instance {
@@ -105,7 +155,7 @@ impl InstancePool {
                         id,
                         spot: kind == InstanceKind::Spot,
                     });
-                    launched += 1;
+                    rep.launched += 1;
                 }
             } else if have > target {
                 // Release newest first (oldest instances have warm caches
@@ -120,7 +170,7 @@ impl InstancePool {
                             spot: kind == InstanceKind::Spot,
                         });
                         to_drop -= 1;
-                        released += 1;
+                        rep.released += 1;
                     } else {
                         kept.push(inst);
                     }
@@ -129,8 +179,9 @@ impl InstancePool {
                 self.instances = kept;
             }
         }
-        self.total_launches += launched as u64;
-        (launched, released)
+        self.total_launches += rep.launched as u64;
+        self.total_launch_failures += rep.launch_failures as u64;
+        rep
     }
 }
 
@@ -187,6 +238,30 @@ mod tests {
         pool.reconcile(0, 0, 3, &mut log); // ids 1,2,3
         pool.reconcile(1, 0, 1, &mut log);
         assert_eq!(pool.ids(), vec![1]);
+    }
+
+    #[test]
+    fn launch_failures_become_shortfall() {
+        use crate::coordinator::faults::FaultPlan;
+        let mut pool = InstancePool::new();
+        let mut log = EventLog::new(false);
+        let mut inj = FaultPlan::parse("launch@0", 1).unwrap();
+        let rep = pool.reconcile_with(0, 2, 3, &mut log, &mut inj);
+        assert_eq!(rep.launched, 0);
+        assert_eq!(rep.launch_failures, 5);
+        assert_eq!((rep.shortfall_od, rep.shortfall_spot), (2, 3));
+        assert_eq!(rep.shortfall(), 5);
+        assert_eq!(pool.total(), 0);
+        assert_eq!(
+            log.count_matching(|e| matches!(e, Event::InstanceLaunchFailed { .. })),
+            5
+        );
+        // Next slot the market recovers; failed launches never consumed
+        // ids, so numbering continues from 1 as if nothing happened.
+        let rep = pool.reconcile_with(1, 2, 3, &mut log, &mut NoFaults);
+        assert_eq!(rep.launched, 5);
+        assert_eq!(pool.ids(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(pool.total_launch_failures, 5);
     }
 
     #[test]

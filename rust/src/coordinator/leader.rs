@@ -9,6 +9,18 @@
 //!    shards (μ-scaled step count models the reconfiguration stall), and
 //! 5. accounts progress, cost, and the loss curve.
 //!
+//! **Degraded-mode recovery.** Every I/O path calls through a
+//! [`FaultInjector`], and an injected fault never turns into an `Err`
+//! from [`Leader::run`]: checkpoint writes retry up to
+//! `max_retries` times and then the run continues on older generations;
+//! restores walk the generation ring past torn/corrupt files and fall
+//! back to restarting from scratch as the last resort (recomputing
+//! `progress` from the restored snapshot, so lost work is honestly
+//! re-done); launch failures shrink the realized pool, which is what
+//! the next `SlotContext` sees. Robustness has a price the scheduler
+//! feels: seconds burned on retries and corrupt transfers erode the
+//! slot's μ-scaled step count exactly like switching cost.
+//!
 //! This is the end-to-end path `examples/finetune_spot.rs` and
 //! `spotfine train` exercise; the pure simulator in [`crate::sched`]
 //! runs the same decision logic without the training substrate.
@@ -17,10 +29,12 @@ use anyhow::Result;
 
 use crate::coordinator::checkpoint::CheckpointManager;
 use crate::coordinator::events::{Event, EventLog};
+use crate::coordinator::faults::{FaultInjector, NoFaults};
 use crate::coordinator::instances::InstancePool;
-use crate::coordinator::metrics::{Metrics, SlotRecord};
+use crate::coordinator::metrics::{Metrics, RecoveryStats, SlotRecord};
 use crate::market::market::SpotMarket;
 use crate::market::trace::SpotTrace;
+use crate::obs::recorder::{Counter, Recorder};
 use crate::sched::job::Job;
 use crate::sched::policy::{Models, Policy, SlotContext};
 use crate::train::trainer::Trainer;
@@ -32,18 +46,36 @@ pub struct LeaderConfig {
     pub steps_per_slot: usize,
     /// Network bandwidth for checkpoint movement (Mbps).
     pub bandwidth_mbps: f64,
-    /// Checkpoint directory.
+    /// Checkpoint directory (the default is unique per construction —
+    /// concurrent runs and same-process tests must not share one).
     pub checkpoint_dir: std::path::PathBuf,
+    /// Remove the checkpoint directory when the run finishes.
+    pub ephemeral_dir: bool,
+    /// Generations retained in the checkpoint ring.
+    pub retain: usize,
+    /// Checkpoint I/O retries before degrading.
+    pub max_retries: usize,
+    /// Wall seconds per slot (paper: 30-minute slots); the denominator
+    /// that converts recovery seconds into eroded μ.
+    pub slot_secs: f64,
     /// Echo events to stderr.
     pub verbose: bool,
 }
 
 impl Default for LeaderConfig {
     fn default() -> Self {
+        static RUN_COUNTER: std::sync::atomic::AtomicU64 =
+            std::sync::atomic::AtomicU64::new(0);
+        let n = RUN_COUNTER.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         LeaderConfig {
             steps_per_slot: 4,
             bandwidth_mbps: 800.0,
-            checkpoint_dir: std::env::temp_dir().join("spotfine_ckpt"),
+            checkpoint_dir: std::env::temp_dir()
+                .join(format!("spotfine_ckpt_{}_{n}", std::process::id())),
+            ephemeral_dir: true,
+            retain: 3,
+            max_retries: 2,
+            slot_secs: 1800.0,
             verbose: false,
         }
     }
@@ -73,10 +105,60 @@ pub struct RunOutcome {
     pub events: EventLog,
 }
 
+impl RunOutcome {
+    /// What the run's faults cost it (all zeros when fault-free).
+    pub fn recovery(&self) -> &RecoveryStats {
+        &self.metrics.recovery
+    }
+}
+
 /// The leader itself.
 pub struct Leader {
     pub cfg: LeaderConfig,
     pub models: Models,
+}
+
+/// Run a (possibly retried) checkpoint save through the injector and
+/// account the result. Returns the seconds wasted on failed attempts,
+/// which the caller may charge against the current slot's μ.
+#[allow(clippy::too_many_arguments)]
+fn save_checkpoint(
+    ckpt: &mut CheckpointManager,
+    trainer: &Trainer,
+    progress: f64,
+    slot: usize,
+    max_retries: usize,
+    inj: &mut dyn FaultInjector,
+    log: &mut EventLog,
+    metrics: &mut Metrics,
+    obs: &Recorder,
+    account_bytes: bool,
+) -> f64 {
+    let rep = ckpt.save_with_retries("latest", &trainer.store, progress, slot, max_retries, inj);
+    if rep.retries > 0 {
+        metrics.recovery.save_retries += rep.retries as u64;
+        metrics.recovery.recovery_secs += rep.wasted_secs;
+        obs.emit(|| crate::obs::Event::Fault {
+            round: slot as u32,
+            slot,
+            fault: "save_io",
+            detail: rep.retries as u64,
+        });
+        obs.add(Counter::Faults, rep.retries as u64);
+    }
+    match rep.cost {
+        Some(cost) => {
+            log.emit(Event::CheckpointSaved { slot, bytes: cost.bytes });
+            if account_bytes {
+                metrics.checkpoint_bytes_moved += cost.bytes as u64;
+            }
+        }
+        None => {
+            metrics.recovery.save_failures += 1;
+            log.emit(Event::CheckpointSaveFailed { slot, attempts: rep.retries });
+        }
+    }
+    rep.wasted_secs
 }
 
 impl Leader {
@@ -95,6 +177,24 @@ impl Leader {
         policy: &mut dyn Policy,
         trainer: &mut Trainer,
     ) -> Result<RunOutcome> {
+        self.run_with_faults(job, trace, policy, trainer, &mut NoFaults, &Recorder::disabled())
+    }
+
+    /// [`Leader::run`] with a fault injector and an observability
+    /// recorder. With [`NoFaults`] this is bit-identical to `run` (the
+    /// property tests in `tests/coordinator_properties.rs` pin that);
+    /// with injected faults the run degrades — retries, generation
+    /// fall-backs, restarts — but never returns `Err` because of a
+    /// fault.
+    pub fn run_with_faults(
+        &self,
+        job: &Job,
+        trace: &SpotTrace,
+        policy: &mut dyn Policy,
+        trainer: &mut Trainer,
+        inj: &mut dyn FaultInjector,
+        obs: &Recorder,
+    ) -> Result<RunOutcome> {
         policy.reset();
         let mut market =
             SpotMarket::new(trace).with_on_demand_price(self.models.on_demand_price);
@@ -102,56 +202,159 @@ impl Leader {
         let mut metrics = Metrics::new();
         let mut pool = InstancePool::new();
         let mut ckpt =
-            CheckpointManager::new(&self.cfg.checkpoint_dir, self.cfg.bandwidth_mbps);
+            CheckpointManager::new(&self.cfg.checkpoint_dir, self.cfg.bandwidth_mbps)
+                .with_retain(self.cfg.retain);
+        // Last-resort recovery target: the pristine initial state.
+        let initial_store = trainer.store.clone();
 
         let mut progress = 0.0f64;
         let mut prev_total = 0u32;
         let mut prev_avail = 0u32;
         let mut completion_slot = None;
+        // Shard state was lost (boundary preemption or mid-slot kill)
+        // and must be re-seeded from a checkpoint before stepping.
+        let mut needs_restore = false;
 
         for t in 0..job.deadline {
-            let obs = market.observe();
+            let obs_slot = market.observe();
             log.emit(Event::SlotStarted {
                 slot: t,
-                spot_price: obs.spot_price,
-                avail: obs.avail,
+                spot_price: obs_slot.spot_price,
+                avail: obs_slot.avail,
             });
 
             // Market-forced preemptions happen before we decide.
-            let preempted = pool.preempt_to_availability(t, obs.avail, &mut log);
+            let preempted = pool.preempt_to_availability(t, obs_slot.avail, &mut log);
             if preempted > 0 && trainer.store.step > 0 {
-                // Recover the training state onto replacement capacity.
-                if ckpt.exists("latest") {
-                    let (restored, cost) =
-                        ckpt.restore("latest", &trainer.store)?;
-                    trainer.restore(restored)?;
-                    log.emit(Event::CheckpointRestored {
-                        slot: t,
-                        bytes: cost.bytes,
-                    });
-                    metrics.checkpoint_bytes_moved += cost.bytes as u64;
-                }
+                needs_restore = true;
             }
 
             let ctx = SlotContext {
                 t,
-                obs,
+                obs: obs_slot,
                 progress,
                 prev_total,
                 prev_avail,
-                job: job,
+                job,
                 models: &self.models,
             };
-            let want = policy.decide(&ctx).clamp_to_job(job, obs.avail);
+            let want = policy.decide(&ctx).clamp_to_job(job, obs_slot.avail);
             log.emit(Event::Decision {
                 slot: t,
                 on_demand: want.on_demand,
                 spot: want.spot,
             });
             let grant = market.request(want.on_demand, want.spot);
-            let total = grant.on_demand + grant.spot;
+            let reconciled =
+                pool.reconcile_with(t, grant.on_demand, grant.spot, &mut log, inj);
+            if reconciled.launch_failures > 0 {
+                metrics.recovery.launch_shortfalls += reconciled.shortfall() as u64;
+                obs.emit(|| crate::obs::Event::Fault {
+                    round: t as u32,
+                    slot: t,
+                    fault: "launch",
+                    detail: reconciled.launch_failures as u64,
+                });
+                obs.add(Counter::Faults, reconciled.launch_failures as u64);
+            }
+            // The realized pool, not the grant: launch failures mean the
+            // leader trains on what it actually holds.
+            let total = pool.total();
 
             let mu = self.models.reconfig.mu(prev_total, total);
+            // Seconds burned on recovery this slot — erodes μ below.
+            let mut slot_recovery = 0.0f64;
+
+            // Recover shard state onto replacement capacity. Ordered
+            // after reconcile: a restore needs instances to restore
+            // *onto*, so when preemption left zero capacity the
+            // transfer is skipped (deferred), not paid.
+            if needs_restore {
+                if total > 0 {
+                    let out = ckpt.restore_latest_valid(
+                        "latest",
+                        &trainer.store,
+                        t,
+                        self.cfg.max_retries,
+                        inj,
+                    );
+                    slot_recovery += out.wasted_secs;
+                    metrics.recovery.restore_retries += out.retries as u64;
+                    metrics.recovery.generations_walked += out.generations_walked as u64;
+                    metrics.recovery.recovery_secs += out.wasted_secs;
+                    match out.restored {
+                        Some(rep) => {
+                            let steps_lost =
+                                (trainer.store.step - rep.meta.step).max(0) as u64;
+                            metrics.recovery.steps_lost += steps_lost;
+                            trainer.restore(rep.store)?;
+                            // Progress is recomputed from the restored
+                            // snapshot: falling back means honestly
+                            // re-doing the lost slots. Fault-free the
+                            // latest generation carries the current
+                            // progress, so this is exact.
+                            progress = rep.meta.progress;
+                            log.emit(Event::CheckpointRestored {
+                                slot: t,
+                                bytes: rep.cost.bytes,
+                            });
+                            metrics.checkpoint_bytes_moved += rep.cost.bytes as u64;
+                            if out.retries > 0 || out.generations_walked > 0 {
+                                log.emit(Event::RecoveredFromGeneration {
+                                    slot: t,
+                                    gen: rep.meta.gen,
+                                    walked: out.generations_walked,
+                                    retries: out.retries,
+                                    steps_lost,
+                                });
+                            }
+                            let gens = out.generations_walked as u64;
+                            obs.emit(|| crate::obs::Event::Recovery {
+                                round: t as u32,
+                                slot: t,
+                                action: "restore",
+                                generations: gens,
+                                steps_lost,
+                            });
+                            obs.add(Counter::Recoveries, 1);
+                        }
+                        None => {
+                            // Last resort: no valid generation anywhere.
+                            let steps_lost = trainer.store.step.max(0) as u64;
+                            metrics.recovery.steps_lost += steps_lost;
+                            metrics.recovery.restarts_from_scratch += 1;
+                            trainer.restore(initial_store.clone())?;
+                            progress = 0.0;
+                            log.emit(Event::RestartedFromScratch { slot: t, steps_lost });
+                            obs.emit(|| crate::obs::Event::Recovery {
+                                round: t as u32,
+                                slot: t,
+                                action: "restart",
+                                generations: 0,
+                                steps_lost,
+                            });
+                            obs.add(Counter::Recoveries, 1);
+                        }
+                    }
+                    needs_restore = false;
+                } else if preempted > 0 && ckpt.exists("latest") {
+                    // No replacement capacity this slot: paying the
+                    // transfer now would be pure waste — defer it.
+                    let bytes = trainer.store.checkpoint_bytes();
+                    metrics.recovery.restores_skipped += 1;
+                    metrics.recovery.restore_bytes_saved += bytes as u64;
+                    log.emit(Event::RestoreSkipped { slot: t, bytes });
+                    obs.emit(|| crate::obs::Event::Recovery {
+                        round: t as u32,
+                        slot: t,
+                        action: "skip",
+                        generations: 0,
+                        steps_lost: 0,
+                    });
+                    obs.add(Counter::Recoveries, 1);
+                }
+            }
+
             if total != prev_total {
                 metrics.reconfigs += 1;
                 log.emit(Event::Reconfigured {
@@ -162,19 +365,48 @@ impl Leader {
                 });
                 // Resizing moves a checkpoint to the new topology.
                 if trainer.store.step > 0 {
-                    let cost = ckpt.save("latest", &trainer.store)?;
-                    log.emit(Event::CheckpointSaved { slot: t, bytes: cost.bytes });
-                    metrics.checkpoint_bytes_moved += cost.bytes as u64;
+                    slot_recovery += save_checkpoint(
+                        &mut ckpt,
+                        trainer,
+                        progress,
+                        t,
+                        self.cfg.max_retries,
+                        inj,
+                        &mut log,
+                        &mut metrics,
+                        obs,
+                        true,
+                    );
                 }
             }
-            pool.reconcile(t, grant.on_demand, grant.spot, &mut log);
+
+            // Retry/corruption time is switching cost the scheduler
+            // feels: it erodes this slot's μ. The branch (rather than
+            // an unconditional multiply) keeps the fault-free path
+            // bit-identical.
+            let mu_eff = if slot_recovery > 0.0 {
+                mu * (1.0 - slot_recovery / self.cfg.slot_secs).max(0.0)
+            } else {
+                mu
+            };
 
             // Execute: μ-scaled optimizer steps with `total` shards.
             let mut losses = Vec::new();
+            let mut killed = None;
             if total > 0 {
-                let steps =
-                    ((self.cfg.steps_per_slot as f64) * mu).round() as usize;
-                for _ in 0..steps.max(1) {
+                let planned = (((self.cfg.steps_per_slot as f64) * mu_eff).round()
+                    as usize)
+                    .max(1);
+                if slot_recovery > 0.0 {
+                    let clean = (((self.cfg.steps_per_slot as f64) * mu).round()
+                        as usize)
+                        .max(1);
+                    metrics.recovery.steps_eroded +=
+                        clean.saturating_sub(planned) as u64;
+                }
+                killed = inj.midslot_kill(t, planned).map(|k| k.min(planned));
+                let run_steps = killed.unwrap_or(planned);
+                for _ in 0..run_steps {
                     let stats = trainer.step_parallel(total as usize)?;
                     metrics.total_samples += stats.samples;
                     metrics.record_loss(stats.step, stats.loss);
@@ -186,12 +418,50 @@ impl Leader {
                     });
                     losses.push(stats.loss);
                 }
-                // Periodic checkpoint so preemption recovery has a base.
-                let cost = ckpt.save("latest", &trainer.store)?;
-                log.emit(Event::CheckpointSaved { slot: t, bytes: cost.bytes });
+                if let Some(after_step) = killed {
+                    // Shards died before the periodic save: everything
+                    // since the last checkpoint is lost, and this
+                    // slot's progress with it.
+                    metrics.recovery.midslot_preemptions += 1;
+                    log.emit(Event::MidSlotPreempted {
+                        slot: t,
+                        after_step,
+                        lost_shards: total,
+                    });
+                    obs.emit(|| crate::obs::Event::Fault {
+                        round: t as u32,
+                        slot: t,
+                        fault: "midslot",
+                        detail: after_step as u64,
+                    });
+                    obs.add(Counter::Faults, 1);
+                    if trainer.store.step > 0 {
+                        needs_restore = true;
+                    }
+                } else {
+                    // Periodic checkpoint so preemption recovery has a
+                    // base. The envelope records the post-slot progress:
+                    // restoring this generation resumes exactly here.
+                    let next_progress =
+                        progress + mu_eff * self.models.throughput.h(total);
+                    save_checkpoint(
+                        &mut ckpt,
+                        trainer,
+                        next_progress,
+                        t,
+                        self.cfg.max_retries,
+                        inj,
+                        &mut log,
+                        &mut metrics,
+                        obs,
+                        false,
+                    );
+                    progress = next_progress;
+                }
+            } else {
+                progress += mu_eff * self.models.throughput.h(total);
             }
 
-            progress += mu * self.models.throughput.h(total);
             let mean_loss = if losses.is_empty() {
                 f32::NAN
             } else {
@@ -199,11 +469,11 @@ impl Leader {
             };
             metrics.record_slot(SlotRecord {
                 slot: t,
-                spot_price: obs.spot_price,
-                avail: obs.avail,
+                spot_price: obs_slot.spot_price,
+                avail: obs_slot.avail,
                 on_demand: grant.on_demand,
                 spot: grant.spot,
-                mu,
+                mu: mu_eff,
                 progress,
                 cost: grant.cost,
                 mean_loss,
@@ -217,7 +487,7 @@ impl Leader {
             });
 
             prev_total = total;
-            prev_avail = obs.avail;
+            prev_avail = obs_slot.avail;
             market.advance();
             if progress >= job.workload - 1e-9 {
                 completion_slot = Some(t + 1);
@@ -258,6 +528,10 @@ impl Leader {
             }
         };
 
+        if self.cfg.ephemeral_dir {
+            ckpt.cleanup();
+        }
+
         Ok(RunOutcome {
             utility: value - cost,
             value,
@@ -271,4 +545,5 @@ impl Leader {
 }
 
 // Leader integration tests (which need compiled artifacts) live in
-// rust/tests/coordinator_end_to_end.rs.
+// rust/tests/coordinator_end_to_end.rs; artifact-free fault-injection
+// property tests in rust/tests/coordinator_properties.rs.

@@ -26,6 +26,38 @@ pub struct SlotRecord {
     pub preemptions: u32,
 }
 
+/// Degraded-mode recovery accounting: what faults cost the run. All
+/// zeros on a fault-free run — asserted bit-identical by the empty
+/// fault-plan property test.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct RecoveryStats {
+    /// Checkpoint write attempts that failed and were retried.
+    pub save_retries: u64,
+    /// Checkpoint saves that exhausted every retry.
+    pub save_failures: u64,
+    /// Transient checkpoint read errors retried during restores.
+    pub restore_retries: u64,
+    /// Corrupt/torn generations walked past during restores.
+    pub generations_walked: u64,
+    /// Optimizer steps lost to fall-back restores and restarts.
+    pub steps_lost: u64,
+    /// Times training had to restart from step 0.
+    pub restarts_from_scratch: u64,
+    /// Instances the pool could not launch (insufficient capacity).
+    pub launch_shortfalls: u64,
+    /// Slots killed between periodic saves.
+    pub midslot_preemptions: u64,
+    /// Restores deferred because preemption left zero capacity.
+    pub restores_skipped: u64,
+    /// Checkpoint bytes *not* transferred thanks to deferred restores.
+    pub restore_bytes_saved: u64,
+    /// Wall seconds burned on retries and corrupt transfers — charged
+    /// as switching cost, eroding the slot's μ-scaled steps.
+    pub recovery_secs: f64,
+    /// Optimizer steps the recovery_secs erosion cost the run.
+    pub steps_eroded: u64,
+}
+
 /// Aggregated metrics for a coordinated run.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -36,6 +68,7 @@ pub struct Metrics {
     pub preemptions: u64,
     pub reconfigs: u64,
     pub checkpoint_bytes_moved: u64,
+    pub recovery: RecoveryStats,
 }
 
 impl Metrics {

@@ -1,14 +1,18 @@
 //! L3 coordinator: the slot-driven leader loop that binds scheduling
 //! decisions (AHAP/AHANP/…) to the execution substrate — instance pool
-//! management with spot preemption, checkpoint/restore, switching-cost
-//! accounting, and metrics.
+//! management with spot preemption, crash-safe generational
+//! checkpointing, fault injection, degraded-mode recovery,
+//! switching-cost accounting, and metrics.
 
 pub mod checkpoint;
 pub mod events;
+pub mod faults;
 pub mod instances;
 pub mod leader;
 pub mod metrics;
 
-pub use instances::{InstanceKind, InstancePool};
+pub use checkpoint::{CheckpointManager, GenerationMeta, SwitchCost};
+pub use faults::{FaultConfig, FaultInjector, FaultPlan, NoFaults};
+pub use instances::{InstanceKind, InstancePool, ReconcileReport};
 pub use leader::{Leader, LeaderConfig, RunOutcome, SlotReport};
-pub use metrics::Metrics;
+pub use metrics::{Metrics, RecoveryStats};

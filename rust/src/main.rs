@@ -19,6 +19,7 @@ use std::process::ExitCode;
 
 use spotfine::cli::args::Args;
 use spotfine::config::schema::ExperimentConfig;
+use spotfine::coordinator::faults::FaultPlan;
 use spotfine::coordinator::leader::{Leader, LeaderConfig};
 use spotfine::fleet::{
     available_threads, run_fleet_selection_observed, run_fleet_sweep,
@@ -50,7 +51,9 @@ const USAGE: &str = "spotfine — deadline-aware spot-market fine-tuning schedul
 USAGE: spotfine <command> [--flags]
 
 COMMANDS:
-  train      end-to-end fine-tune under a scheduling policy (PJRT)
+  train      end-to-end fine-tune under a scheduling policy (PJRT or
+             the artifact-free synthetic backend), with optional
+             seeded fault injection
   simulate   one policy x one job on a synthetic market
   fleet      many concurrent jobs across regional spot markets with
              shared capacity, priority arbitration and migration
@@ -76,6 +79,19 @@ COMMON FLAGS:
   --batch-fit           forecast: use the legacy full-history refit path
                         (the reference the incremental fitter is tested
                         against) instead of incremental fitting
+
+TRAIN FLAGS:
+  --backend <kind>      pjrt (default, needs `make artifacts`) |
+                        synthetic (in-process byte-level regressor, no
+                        artifacts — what CI smokes)
+  --faults <spec>       seeded fault plan: comma-separated clauses,
+                        each `kind=prob` or `kind@s1+s2+...` (slots),
+                        kinds: save | torn | read | midslot | launch |
+                        launch-od (e.g. \"midslot@1,torn@2,launch=0.25\")
+  --fault-seed <u64>    fault-plan RNG seed (default: --seed)
+  --retain <n>          checkpoint generations kept in the ring
+                        (default from config [coordinator], 3)
+  --max-retries <n>     checkpoint save/read retry budget (default 2)
 
 FLEET FLAGS:
   --jobs <n>            concurrent jobs in the fleet (default 16)
@@ -103,11 +119,12 @@ FLEET-SELECT FLAGS:
                         engine (bit-identical results, much slower —
                         the reference path)
 
-OBSERVABILITY FLAGS (fleet / select / fleet-select):
+OBSERVABILITY FLAGS (train / fleet / select / fleet-select):
   --trace <path.jsonl>  record typed scheduler events — arbitration,
                         preemptions, migration intent phases, replay
                         verdicts, forecast-cache stats, solver timings,
-                        and the per-round selection ledger — as JSONL
+                        faults/recoveries (train), and the per-round
+                        selection ledger — as JSONL
                         (fleet: with --sweeps > 1 only sweep 1 is traced)
   --obs-summary         print the aggregated event/counter summary table
   --obs-csv <path.csv>  write that summary as metric,value CSV
@@ -279,23 +296,39 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let deadline = args.get_usize("deadline", 10)?;
     let noise = args.get_f64("noise", 0.1)?;
 
-    if !ArtifactBundle::present(&artifacts) {
-        anyhow::bail!(
-            "artifacts not found in {} — run `make artifacts` first",
-            artifacts.display()
-        );
-    }
-    let client = RuntimeClient::cpu()?;
-    eprintln!("[train] PJRT platform: {}", client.platform());
-    let bundle = ArtifactBundle::load(&artifacts)?;
-    eprintln!(
-        "[train] model preset `{}`: {} params ({} trainable tensors)",
-        bundle.meta.preset,
-        bundle.meta.param_count,
-        bundle.meta.trainable.len()
-    );
-    let exec = TrainStepExec::compile(&client, bundle)?;
-    let mut trainer = Trainer::new(exec, TrainerConfig::default())?;
+    let mut trainer = match args.get_string("backend", "pjrt").as_str() {
+        "synthetic" => {
+            eprintln!("[train] backend: synthetic (artifact-free)");
+            Trainer::synthetic(TrainerConfig::default())?
+        }
+        "pjrt" => {
+            if !ArtifactBundle::present(&artifacts) {
+                anyhow::bail!(
+                    "artifacts not found in {} — run `make artifacts` first \
+                     (or pass --backend synthetic)",
+                    artifacts.display()
+                );
+            }
+            let client = RuntimeClient::cpu()?;
+            eprintln!("[train] PJRT platform: {}", client.platform());
+            let bundle = ArtifactBundle::load(&artifacts)?;
+            eprintln!(
+                "[train] model preset `{}`: {} params ({} trainable tensors)",
+                bundle.meta.preset,
+                bundle.meta.param_count,
+                bundle.meta.trainable.len()
+            );
+            let exec = TrainStepExec::compile(&client, bundle)?;
+            Trainer::new(exec, TrainerConfig::default())?
+        }
+        other => anyhow::bail!("unknown backend `{other}` (pjrt|synthetic)"),
+    };
+
+    let fault_seed = args.get_u64("fault-seed", seed)?;
+    let mut faults = match args.get("faults") {
+        Some(spec) => FaultPlan::parse(spec, fault_seed)?,
+        None => FaultPlan::none(),
+    };
 
     let job = Job {
         workload,
@@ -313,16 +346,31 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     );
     let mut policy = policy_spec.build(&env);
 
+    // checkpoint_dir/ephemeral_dir come from the default: a unique
+    // per-run temp directory, removed after the run.
     let leader = Leader::new(
         LeaderConfig {
             steps_per_slot,
             bandwidth_mbps: args.get_f64("bandwidth", 800.0)?,
-            checkpoint_dir: std::env::temp_dir().join("spotfine_train_ckpt"),
+            retain: args.get_usize("retain", cfg.coordinator.retain)?.max(1),
+            max_retries: args
+                .get_usize("max-retries", cfg.coordinator.max_retries)?,
+            slot_secs: cfg.coordinator.slot_secs,
             verbose: args.get_bool("verbose"),
+            ..LeaderConfig::default()
         },
         cfg.models,
     );
-    let out = leader.run(&job, &trace, policy.as_mut(), &mut trainer)?;
+    let obs = ObsCli::from_args(args, &cfg);
+    let rec = obs.recorder();
+    let out = leader.run_with_faults(
+        &job,
+        &trace,
+        policy.as_mut(),
+        &mut trainer,
+        &mut faults,
+        &rec,
+    )?;
 
     println!("policy            {}", policy.name());
     println!("utility           {:.2}", out.utility);
@@ -337,12 +385,34 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let (Some(l0), Some(l1)) = (out.metrics.initial_loss(3), out.metrics.final_loss(3)) {
         println!("loss              {:.4} -> {:.4}", l0, l1);
     }
+    if args.get("faults").is_some() {
+        let rs = out.recovery();
+        println!("faults injected   {}", faults.injected);
+        println!(
+            "save retries      {} ({} save(s) exhausted retries)",
+            rs.save_retries, rs.save_failures
+        );
+        println!(
+            "restore retries   {} ({} generation(s) walked past)",
+            rs.restore_retries, rs.generations_walked
+        );
+        println!("midslot kills     {}", rs.midslot_preemptions);
+        println!("launch shortfall  {}", rs.launch_shortfalls);
+        println!("restarts          {}", rs.restarts_from_scratch);
+        println!(
+            "restores skipped  {} ({} checkpoint bytes not moved)",
+            rs.restores_skipped, rs.restore_bytes_saved
+        );
+        println!("steps lost        {} (+{} eroded)", rs.steps_lost, rs.steps_eroded);
+        println!("recovery seconds  {:.1}", rs.recovery_secs);
+    }
     if let Some(dir) = args.get("out") {
         let dir = PathBuf::from(dir);
         out.metrics.write_slots_csv(&dir.join("slots.csv"))?;
         out.metrics.write_loss_csv(&dir.join("loss.csv"))?;
         eprintln!("wrote {}/slots.csv and loss.csv", dir.display());
     }
+    obs.emit(&rec)?;
     Ok(())
 }
 

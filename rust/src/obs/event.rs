@@ -76,6 +76,26 @@ pub enum Event {
         phase: MigrationPhase,
         reason: Option<&'static str>,
     },
+    /// An injected or real fault the coordinator absorbed (checkpoint
+    /// write error, mid-slot kill, launch failure). `detail` is
+    /// fault-specific: retries for `save_io`, the step survived for
+    /// `midslot`, failed launches for `launch`.
+    Fault {
+        round: u32,
+        slot: usize,
+        fault: &'static str,
+        detail: u64,
+    },
+    /// One recovery action the leader took: `restore` (from a
+    /// checkpoint generation), `restart` (from scratch), or `skip`
+    /// (restore deferred for lack of capacity).
+    Recovery {
+        round: u32,
+        slot: usize,
+        action: &'static str,
+        generations: u64,
+        steps_lost: u64,
+    },
     /// One delta-replay counterfactual's verdict for a candidate.
     Replay {
         round: u32,
@@ -152,6 +172,8 @@ impl Event {
             Event::Arbitration { .. } => "arbitration",
             Event::Preemption { .. } => "preemption",
             Event::Migration { .. } => "migration",
+            Event::Fault { .. } => "fault",
+            Event::Recovery { .. } => "recovery",
             Event::Replay { .. } => "replay",
             Event::ReplayCache { .. } => "replay_cache",
             Event::ForecastCache { .. } => "forecast_cache",
@@ -173,6 +195,10 @@ impl Event {
             }
             Event::Migration { round, slot, job, phase, .. } => {
                 k(*round, *slot as u32, *job as u32, phase.rank(), 2)
+            }
+            Event::Fault { round, slot, .. } => k(*round, *slot as u32, END, END, 3),
+            Event::Recovery { round, slot, .. } => {
+                k(*round, *slot as u32, END, END, 4)
             }
             Event::Replay { round, candidate, .. } => {
                 k(*round, END, *candidate as u32, END, 6)
@@ -226,6 +252,19 @@ impl Event {
                 num(&mut s, "to", *to as u64);
                 str_field(&mut s, "phase", phase.as_str());
                 opt_str(&mut s, "reason", *reason);
+            }
+            Event::Fault { round, slot, fault, detail } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "slot", *slot as u64);
+                str_field(&mut s, "fault", fault);
+                num(&mut s, "detail", *detail);
+            }
+            Event::Recovery { round, slot, action, generations, steps_lost } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "slot", *slot as u64);
+                str_field(&mut s, "action", action);
+                num(&mut s, "generations", *generations);
+                num(&mut s, "steps_lost", *steps_lost);
             }
             Event::Replay {
                 round,
@@ -478,6 +517,21 @@ mod tests {
         assert!(mk(MigrationPhase::Emitted).key() < mk(MigrationPhase::Validated).key());
         assert!(mk(MigrationPhase::Validated).key() < mk(MigrationPhase::Rejected).key());
         assert!(mk(MigrationPhase::Rejected).key() < mk(MigrationPhase::Booked).key());
+    }
+
+    #[test]
+    fn fault_sorts_before_recovery_at_the_same_slot() {
+        let f = Event::Fault { round: 1, slot: 3, fault: "save_io", detail: 2 };
+        let r = Event::Recovery {
+            round: 1,
+            slot: 3,
+            action: "restore",
+            generations: 1,
+            steps_lost: 4,
+        };
+        assert!(f.key() < r.key(), "the fault precedes its recovery");
+        assert!(f.to_json().starts_with("{\"kind\":\"fault\""));
+        assert!(r.to_json().contains("\"action\":\"restore\""));
     }
 
     #[test]

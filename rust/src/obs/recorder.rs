@@ -32,10 +32,12 @@ pub enum Counter {
     ReplayedSlots,
     AdoptedSlots,
     Rounds,
+    Faults,
+    Recoveries,
 }
 
 impl Counter {
-    pub const COUNT: usize = 9;
+    pub const COUNT: usize = 11;
 
     pub const ALL: [Counter; Counter::COUNT] = [
         Counter::Arbitrations,
@@ -47,6 +49,8 @@ impl Counter {
         Counter::ReplayedSlots,
         Counter::AdoptedSlots,
         Counter::Rounds,
+        Counter::Faults,
+        Counter::Recoveries,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -60,6 +64,8 @@ impl Counter {
             Counter::ReplayedSlots => "replayed_slots",
             Counter::AdoptedSlots => "adopted_slots",
             Counter::Rounds => "rounds",
+            Counter::Faults => "faults",
+            Counter::Recoveries => "recoveries",
         }
     }
 
@@ -74,6 +80,8 @@ impl Counter {
             Counter::ReplayedSlots => 6,
             Counter::AdoptedSlots => 7,
             Counter::Rounds => 8,
+            Counter::Faults => 9,
+            Counter::Recoveries => 10,
         }
     }
 }

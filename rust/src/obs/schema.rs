@@ -129,6 +129,25 @@ pub const SCHEMA: &[(&str, &[(&str, FieldType)])] = &[
         ],
     ),
     (
+        "fault",
+        &[
+            ("round", FieldType::Num),
+            ("slot", FieldType::Num),
+            ("fault", FieldType::Str),
+            ("detail", FieldType::Num),
+        ],
+    ),
+    (
+        "recovery",
+        &[
+            ("round", FieldType::Num),
+            ("slot", FieldType::Num),
+            ("action", FieldType::Str),
+            ("generations", FieldType::Num),
+            ("steps_lost", FieldType::Num),
+        ],
+    ),
+    (
         "summary",
         &[
             ("events", FieldType::Num),
@@ -456,6 +475,14 @@ mod tests {
                 dp_calls: 1,
                 dp_total_us: 80,
                 dp_hist_us: vec![0; 11],
+            },
+            Event::Fault { round: 2, slot: 7, fault: "save_io", detail: 1 },
+            Event::Recovery {
+                round: 2,
+                slot: 8,
+                action: "restore",
+                generations: 1,
+                steps_lost: 4,
             },
             Event::Summary {
                 events: 9,

@@ -1,11 +1,14 @@
 //! Fine-tuning substrate on top of [`crate::runtime`]: parameter store,
-//! synthetic corpus + batching, and the data-parallel trainer that maps
-//! "n instances" from the scheduler into n gradient shards per slot.
+//! synthetic corpus + batching, pluggable step backends, and the
+//! data-parallel trainer that maps "n instances" from the scheduler
+//! into n gradient shards per slot.
 
+pub mod backend;
 pub mod data;
 pub mod params;
 pub mod trainer;
 
+pub use backend::{StepBackend, SyntheticBackend};
 pub use data::{Batch, Corpus};
 pub use params::ParamStore;
 pub use trainer::{Trainer, TrainerConfig};

@@ -8,6 +8,7 @@
 use anyhow::Result;
 
 use crate::runtime::executable::{HostTensor, TrainStepExec};
+use crate::train::backend::{StepBackend, SyntheticBackend};
 use crate::train::data::Corpus;
 use crate::train::params::ParamStore;
 use crate::util::rng::Rng;
@@ -36,9 +37,11 @@ pub struct StepStats {
     pub shards: usize,
 }
 
-/// The training engine the coordinator drives.
+/// The training engine the coordinator drives. The execution substrate
+/// is a [`StepBackend`]: PJRT artifacts in production, the pure-Rust
+/// [`SyntheticBackend`] for artifact-free tests and fault drills.
 pub struct Trainer {
-    pub exec: TrainStepExec,
+    backend: Box<dyn StepBackend>,
     pub frozen: Vec<HostTensor>,
     pub store: ParamStore,
     corpus: Corpus,
@@ -48,22 +51,32 @@ pub struct Trainer {
 impl Trainer {
     /// Initialize params via the init artifact and build the corpus.
     pub fn new(exec: TrainStepExec, cfg: TrainerConfig) -> Result<Self> {
-        let (frozen, trainable) = exec.init_params()?;
+        Self::from_backend(Box::new(exec), cfg)
+    }
+
+    /// Artifact-free trainer on the synthetic backend.
+    pub fn synthetic(cfg: TrainerConfig) -> Result<Self> {
+        Self::from_backend(Box::new(SyntheticBackend::new()), cfg)
+    }
+
+    /// Initialize params via the backend and build the corpus.
+    pub fn from_backend(backend: Box<dyn StepBackend>, cfg: TrainerConfig) -> Result<Self> {
+        let (frozen, trainable) = backend.init_params()?;
         let store = ParamStore::new(trainable);
-        store.check_meta(&exec.bundle.meta)?;
+        store.check_meta(backend.meta())?;
         let corpus = Corpus::synthetic(cfg.corpus_bytes, cfg.data_seed);
-        Ok(Trainer { exec, frozen, store, corpus, rng: Rng::new(cfg.data_seed) })
+        Ok(Trainer { backend, frozen, store, corpus, rng: Rng::new(cfg.data_seed) })
     }
 
     /// Restore training state (checkpoint recovery after preemption).
     pub fn restore(&mut self, store: ParamStore) -> Result<()> {
-        store.check_meta(&self.exec.bundle.meta)?;
+        store.check_meta(self.backend.meta())?;
         self.store = store;
         Ok(())
     }
 
     pub fn meta(&self) -> &crate::runtime::artifact::ModelMeta {
-        &self.exec.bundle.meta
+        self.backend.meta()
     }
 
     /// One data-parallel optimizer step over `shards` instances: each
@@ -71,7 +84,7 @@ impl Trainer {
     /// AdamW update is applied. Returns the mean shard loss.
     pub fn step_parallel(&mut self, shards: usize) -> Result<StepStats> {
         assert!(shards >= 1, "need at least one shard");
-        let meta = self.exec.bundle.meta.clone();
+        let meta = self.backend.meta().clone();
         let mut acc: Option<Vec<HostTensor>> = None;
         let mut loss_sum = 0.0f32;
         for _ in 0..shards {
@@ -80,7 +93,7 @@ impl Trainer {
                 meta.batch_per_shard,
                 meta.seq_len,
             );
-            let out = self.exec.grad_step(
+            let out = self.backend.grad_step(
                 &self.frozen,
                 &self.store.trainable,
                 &batch.data,
@@ -103,7 +116,7 @@ impl Trainer {
             }
         }
         let step = self.store.step + 1;
-        let (t, m, v) = self.exec.apply_step(
+        let (t, m, v) = self.backend.apply_step(
             &self.store.trainable,
             &self.store.m,
             &self.store.v,

@@ -1,0 +1,59 @@
+//! CRC-32 (IEEE 802.3 polynomial, the zlib/PNG variant), table-driven
+//! and computed at compile time. Used by the checkpoint envelope in
+//! [`crate::coordinator::checkpoint`] to detect torn or corrupted
+//! `ParamStore` payloads; kept in `util` because it is generic and the
+//! crate is dependency-free.
+
+/// Reflected CRC-32 polynomial (0x04C11DB7 bit-reversed).
+const POLY: u32 = 0xEDB8_8320;
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            c = if c & 1 != 0 { (c >> 1) ^ POLY } else { c >> 1 };
+            bit += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `data` (init 0xFFFFFFFF, final XOR 0xFFFFFFFF — the
+/// standard check value of `b"123456789"` is `0xCBF43926`).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = (c >> 8) ^ TABLE[((c ^ b as u32) & 0xFF) as usize];
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_the_standard_check_value() {
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn detects_single_bit_flips_and_truncation() {
+        let data: Vec<u8> = (0..=255).collect();
+        let base = crc32(&data);
+        for i in [0usize, 1, 100, 255] {
+            let mut flipped = data.clone();
+            flipped[i] ^= 0x01;
+            assert_ne!(crc32(&flipped), base, "flip at byte {i} undetected");
+        }
+        assert_ne!(crc32(&data[..data.len() - 1]), base);
+    }
+}

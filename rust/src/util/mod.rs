@@ -4,6 +4,7 @@
 //! and `criterion`.
 
 pub mod bench;
+pub mod crc;
 pub mod csvio;
 pub mod prop;
 pub mod rng;

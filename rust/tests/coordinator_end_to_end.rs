@@ -42,7 +42,7 @@ fn leader(tag: &str) -> Leader {
             bandwidth_mbps: 800.0,
             checkpoint_dir: std::env::temp_dir()
                 .join(format!("spotfine_test_{tag}_{}", std::process::id())),
-            verbose: false,
+            ..LeaderConfig::default()
         },
         Models::paper_default(),
     )

@@ -1,0 +1,564 @@
+//! Fault-injection and crash-safety properties for the coordinator —
+//! artifact-free (everything runs on the synthetic training backend,
+//! so `cargo test` exercises the full leader loop on a fresh checkout):
+//!
+//! - the empty fault plan is bit-identical to the plain run,
+//! - arbitrary fault plans never surface as `Err` and are reproducible,
+//! - checkpoint faults never inflate progress past the fault-free run,
+//! - a crash at any byte of the newest generation restores a previously
+//!   fully-saved store — never torn state,
+//! - the instance pool matches a reference model (conservation, unique
+//!   ids, oldest-first preemption, newest-first release),
+//! - deferred restores (satellite of §II-A switching cost) skip the
+//!   transfer when preemption leaves nothing to restore onto.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use spotfine::coordinator::checkpoint::CheckpointManager;
+use spotfine::coordinator::events::{Event, EventLog};
+use spotfine::coordinator::faults::{FaultConfig, FaultPlan, NoFaults};
+use spotfine::coordinator::instances::{InstanceKind, InstancePool};
+use spotfine::coordinator::leader::{Leader, LeaderConfig};
+use spotfine::coordinator::metrics::RecoveryStats;
+use spotfine::market::trace::SpotTrace;
+use spotfine::obs::schema::validate_line;
+use spotfine::obs::Recorder;
+use spotfine::prop_assert;
+use spotfine::runtime::executable::HostTensor;
+use spotfine::sched::job::Job;
+use spotfine::sched::policy::{Allocation, Models, Policy, SlotContext};
+use spotfine::train::params::ParamStore;
+use spotfine::train::trainer::{Trainer, TrainerConfig};
+use spotfine::util::prop::{check, PropConfig};
+
+/// A constant-allocation policy: the leader clamps it to the job and
+/// the market, which is all these tests need.
+struct Fixed(u32, u32);
+
+impl Policy for Fixed {
+    fn reset(&mut self) {}
+    fn decide(&mut self, _: &SlotContext) -> Allocation {
+        Allocation::new(self.0, self.1)
+    }
+    fn name(&self) -> String {
+        "Fixed".into()
+    }
+}
+
+fn leader(steps_per_slot: usize) -> Leader {
+    // The default config's checkpoint dir is unique per construction
+    // and ephemeral — concurrent tests never share state.
+    Leader::new(
+        LeaderConfig { steps_per_slot, ..LeaderConfig::default() },
+        Models::paper_default(),
+    )
+}
+
+fn trainer() -> Trainer {
+    Trainer::synthetic(TrainerConfig::default()).unwrap()
+}
+
+fn job(workload: f64, deadline: usize) -> Job {
+    Job { workload, deadline, n_min: 1, n_max: 6, value: 1.5 * workload, gamma: 1.5 }
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("spotfine_props_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn empty_fault_plan_is_bit_identical_to_the_plain_run() {
+    let job = job(20.0, 6);
+    // Availability dips at slot 2 so the run exercises preemption and a
+    // real checkpoint restore on both paths.
+    let trace = SpotTrace::new(
+        vec![0.4, 0.5, 0.3, 0.4, 0.5, 0.4],
+        vec![4, 4, 2, 4, 4, 4],
+    );
+    let mut ta = trainer();
+    let a = leader(2).run(&job, &trace, &mut Fixed(1, 3), &mut ta).unwrap();
+
+    let mut tb = trainer();
+    let mut plan = FaultPlan::none();
+    let b = leader(2)
+        .run_with_faults(&job, &trace, &mut Fixed(1, 3), &mut tb, &mut plan, &Recorder::disabled())
+        .unwrap();
+
+    assert_eq!(a.utility.to_bits(), b.utility.to_bits());
+    assert_eq!(a.value.to_bits(), b.value.to_bits());
+    assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+    assert_eq!(a.completion_slot, b.completion_slot);
+    assert_eq!(a.on_time, b.on_time);
+    assert_eq!(a.metrics.slots, b.metrics.slots);
+    assert_eq!(a.metrics.losses, b.metrics.losses);
+    assert_eq!(a.events.all(), b.events.all());
+    // Trainer state marched in lockstep too.
+    assert_eq!(ta.store, tb.store);
+    // Fault-free means all-zero recovery accounting on both paths.
+    assert_eq!(*a.recovery(), RecoveryStats::default());
+    assert_eq!(*b.recovery(), RecoveryStats::default());
+    assert_eq!(plan.injected, 0);
+    // The dip really exercised the restore path.
+    let restores = a
+        .events
+        .count_matching(|e| matches!(e, Event::CheckpointRestored { .. }));
+    assert!(restores > 0, "trace must exercise a checkpoint restore");
+}
+
+#[test]
+fn arbitrary_fault_plans_never_error_and_are_reproducible() {
+    check(
+        "fault_plans_reproducible",
+        PropConfig { cases: 12, seed: 0xFA177 },
+        |rng| {
+            let deadline = 6usize;
+            let mut prices = Vec::new();
+            let mut avail = Vec::new();
+            for _ in 0..deadline {
+                prices.push(rng.uniform(0.2, 0.8));
+                avail.push(rng.int_range(0, 5) as u32);
+            }
+            let trace = SpotTrace::new(prices, avail);
+            let cfg = FaultConfig {
+                save_io: rng.uniform(0.0, 0.4),
+                torn: rng.uniform(0.0, 0.4),
+                read_io: rng.uniform(0.0, 0.4),
+                midslot: rng.uniform(0.0, 0.4),
+                launch_spot: rng.uniform(0.0, 0.4),
+                launch_od: rng.uniform(0.0, 0.2),
+                scripted_torn: vec![rng.index(deadline)],
+                scripted_midslot: vec![rng.index(deadline)],
+                ..FaultConfig::default()
+            };
+            let seed = rng.next_u64();
+            let j = job(16.0, deadline);
+            let run = || {
+                let mut plan = FaultPlan::new(cfg.clone(), seed);
+                let mut tr = trainer();
+                let out = leader(2)
+                    .run_with_faults(
+                        &j,
+                        &trace,
+                        &mut Fixed(1, 3),
+                        &mut tr,
+                        &mut plan,
+                        &Recorder::disabled(),
+                    )
+                    .expect("an injected fault must never surface as Err");
+                (out, plan.injected)
+            };
+            let (a, ia) = run();
+            let (b, ib) = run();
+            prop_assert!(
+                a.utility.is_finite() && a.cost.is_finite(),
+                "degraded run produced non-finite outcome"
+            );
+            prop_assert!(
+                a.utility.to_bits() == b.utility.to_bits(),
+                "utility diverged across identical plans"
+            );
+            prop_assert!(a.metrics.slots == b.metrics.slots, "slot records diverged");
+            prop_assert!(a.events.all() == b.events.all(), "event streams diverged");
+            prop_assert!(ia == ib, "injected fault counts diverged: {ia} vs {ib}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn checkpoint_faults_never_inflate_progress() {
+    // Checkpoint-layer faults (write errors, torn files, read errors,
+    // mid-slot kills) may only lose or erode work — per-slot progress
+    // must never exceed the fault-free run's. Launch faults are excluded
+    // so both runs see identical pools (and thus identical μ).
+    check(
+        "no_progress_inflation",
+        PropConfig { cases: 12, seed: 0x9602E55 },
+        |rng| {
+            let deadline = 6usize;
+            let mut prices = Vec::new();
+            let mut avail = Vec::new();
+            for _ in 0..deadline {
+                prices.push(rng.uniform(0.2, 0.8));
+                avail.push(rng.int_range(1, 5) as u32);
+            }
+            let trace = SpotTrace::new(prices, avail);
+            let j = job(40.0, deadline);
+            let cfg = FaultConfig {
+                save_io: rng.uniform(0.0, 0.5),
+                torn: rng.uniform(0.0, 0.5),
+                read_io: rng.uniform(0.0, 0.5),
+                midslot: rng.uniform(0.0, 0.5),
+                scripted_midslot: vec![rng.index(deadline)],
+                ..FaultConfig::default()
+            };
+            let mut tc = trainer();
+            let clean = leader(2)
+                .run(&j, &trace, &mut Fixed(1, 3), &mut tc)
+                .unwrap();
+            let mut plan = FaultPlan::new(cfg, rng.next_u64());
+            let mut tf = trainer();
+            let faulted = leader(2)
+                .run_with_faults(
+                    &j,
+                    &trace,
+                    &mut Fixed(1, 3),
+                    &mut tf,
+                    &mut plan,
+                    &Recorder::disabled(),
+                )
+                .unwrap();
+            let n = clean.metrics.slots.len().min(faulted.metrics.slots.len());
+            for i in 0..n {
+                let c = clean.metrics.slots[i].progress;
+                let f = faulted.metrics.slots[i].progress;
+                prop_assert!(
+                    f <= c + 1e-9,
+                    "slot {i}: faulted progress {f} exceeds clean {c}"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn crash_at_any_byte_never_restores_torn_state() {
+    let dir = tmpdir("anybyte");
+    let mut mgr = CheckpointManager::new(&dir, 800.0);
+    let mk = |step: i32, fill: f32| {
+        let mut s = ParamStore::new(vec![HostTensor {
+            shape: vec![4],
+            data: vec![fill; 4],
+        }]);
+        s.step = step;
+        s.m[0].data[2] = fill * 0.5;
+        s
+    };
+    let snap1 = mk(1, 1.0);
+    mgr.save_with_retries("t", &snap1, 1.0, 0, 0, &mut NoFaults);
+    let snap2 = mk(2, 2.0);
+    mgr.save_with_retries("t", &snap2, 2.0, 1, 0, &mut NoFaults);
+
+    let newest = *mgr.latest("t").unwrap();
+    let path = dir.join(format!("t.g{:06}.ckpt", newest.gen));
+    let pristine = std::fs::read(&path).unwrap();
+    let template = ParamStore::new(vec![HostTensor::zeros(&[4])]);
+
+    // Crash after rename: any prefix of the newest generation may be
+    // what survives. Restore must detect it and fall back — always.
+    for cut in 0..pristine.len() {
+        std::fs::write(&path, &pristine[..cut]).unwrap();
+        let out = mgr.restore_latest_valid("t", &template, 0, 0, &mut NoFaults);
+        let rep = out
+            .restored
+            .unwrap_or_else(|| panic!("no generation survived cut at {cut}"));
+        assert_eq!(rep.store, snap1, "cut at {cut} must fall back a generation");
+        assert_eq!(out.generations_walked, 1);
+        assert!(out.wasted_secs > 0.0, "the corrupt transfer must be charged");
+    }
+
+    // Bit rot: flipping any single byte must either be caught (fall
+    // back to the older generation) or provably harmless (the header's
+    // progress field, which restore takes from the manifest instead).
+    for i in 0..pristine.len() {
+        let mut corrupt = pristine.clone();
+        corrupt[i] ^= 0x40;
+        std::fs::write(&path, &corrupt).unwrap();
+        let out = mgr.restore_latest_valid("t", &template, 0, 0, &mut NoFaults);
+        let rep = out
+            .restored
+            .unwrap_or_else(|| panic!("no generation survived flip at {i}"));
+        if (20..28).contains(&i) {
+            assert_eq!(rep.store, snap2, "header progress bits are advisory");
+            assert_eq!(rep.meta.progress, 2.0, "progress must come from the manifest");
+        } else {
+            assert_eq!(rep.store, snap1, "flip at byte {i} must be detected");
+        }
+    }
+
+    // With the pristine file back, the newest generation restores.
+    std::fs::write(&path, &pristine).unwrap();
+    let out = mgr.restore_latest_valid("t", &template, 0, 0, &mut NoFaults);
+    assert_eq!(out.restored.unwrap().store, snap2);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn instance_pool_matches_the_reference_model() {
+    // Model-based property: a shadow pool with the documented semantics
+    // — fresh unique ids, od reconciled before spot, newest-first
+    // release, oldest-first spot preemption — must match the real pool
+    // id-for-id under arbitrary interleavings.
+    check(
+        "pool_model",
+        PropConfig { cases: 96, seed: 0xB007ED },
+        |rng| {
+            let mut pool = InstancePool::new();
+            let mut log = EventLog::new(false);
+            let mut shadow: Vec<(u64, InstanceKind)> = Vec::new();
+            let mut next_id = 0u64;
+            let mut retired: HashSet<u64> = HashSet::new();
+            let mut released_total = 0u64;
+            let slots = rng.int_range(4, 24) as usize;
+            for slot in 0..slots {
+                let avail = rng.int_range(0, 6) as u32;
+                let dropped = pool.preempt_to_availability(slot, avail, &mut log);
+                let have = shadow
+                    .iter()
+                    .filter(|(_, k)| *k == InstanceKind::Spot)
+                    .count() as u32;
+                let mut to_drop = have.saturating_sub(avail);
+                prop_assert!(
+                    dropped == to_drop,
+                    "slot {slot}: preempted {dropped}, model expected {to_drop}"
+                );
+                let mut kept = Vec::with_capacity(shadow.len());
+                for e in shadow.drain(..) {
+                    if e.1 == InstanceKind::Spot && to_drop > 0 {
+                        to_drop -= 1;
+                        retired.insert(e.0);
+                    } else {
+                        kept.push(e);
+                    }
+                }
+                shadow = kept;
+
+                let od = rng.int_range(0, 4) as u32;
+                let spot = rng.int_range(0, 6) as u32;
+                let rep = pool.reconcile_with(slot, od, spot, &mut log, &mut NoFaults);
+                released_total += rep.released as u64;
+                prop_assert!(rep.shortfall() == 0, "NoFaults must not report shortfall");
+                for (kind, target) in
+                    [(InstanceKind::OnDemand, od), (InstanceKind::Spot, spot)]
+                {
+                    let have =
+                        shadow.iter().filter(|(_, k)| *k == kind).count() as u32;
+                    if have < target {
+                        for _ in 0..target - have {
+                            next_id += 1;
+                            shadow.push((next_id, kind));
+                        }
+                    } else {
+                        let mut surplus = have - target;
+                        for i in (0..shadow.len()).rev() {
+                            if surplus == 0 {
+                                break;
+                            }
+                            if shadow[i].1 == kind {
+                                retired.insert(shadow[i].0);
+                                shadow.remove(i);
+                                surplus -= 1;
+                            }
+                        }
+                    }
+                }
+
+                let ids = pool.ids();
+                let model_ids: Vec<u64> = shadow.iter().map(|e| e.0).collect();
+                prop_assert!(
+                    ids == model_ids,
+                    "slot {slot}: pool ids {ids:?} differ from model {model_ids:?}"
+                );
+                prop_assert!(
+                    pool.count(InstanceKind::OnDemand) == od
+                        && pool.count(InstanceKind::Spot) == spot,
+                    "slot {slot}: kind counts missed the target"
+                );
+                prop_assert!(
+                    ids.iter().all(|id| !retired.contains(id)),
+                    "slot {slot}: a released/preempted id was resurrected"
+                );
+            }
+            prop_assert!(
+                pool.total() as u64
+                    == pool.total_launches - pool.total_preemptions - released_total,
+                "conservation violated: {} held, {} launched, {} preempted, {released_total} released",
+                pool.total(),
+                pool.total_launches,
+                pool.total_preemptions
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn launch_failures_leave_counts_short_by_exactly_the_shortfall() {
+    check(
+        "launch_shortfall",
+        PropConfig { cases: 64, seed: 0x5807 },
+        |rng| {
+            let mut pool = InstancePool::new();
+            let mut log = EventLog::new(false);
+            let mut plan = FaultPlan::new(
+                FaultConfig {
+                    launch_spot: rng.uniform(0.0, 1.0),
+                    launch_od: rng.uniform(0.0, 1.0),
+                    ..FaultConfig::default()
+                },
+                rng.next_u64(),
+            );
+            let mut released_total = 0u64;
+            let slots = rng.int_range(3, 12) as usize;
+            for slot in 0..slots {
+                let avail = rng.int_range(0, 6) as u32;
+                pool.preempt_to_availability(slot, avail, &mut log);
+                let od = rng.int_range(0, 4) as u32;
+                let spot = rng.int_range(0, 6) as u32;
+                let rep = pool.reconcile_with(slot, od, spot, &mut log, &mut plan);
+                released_total += rep.released as u64;
+                // A failed launch becomes a shortfall — never a phantom
+                // instance, never a blocked release.
+                prop_assert!(
+                    pool.count(InstanceKind::OnDemand) == od - rep.shortfall_od,
+                    "slot {slot}: od count vs shortfall mismatch"
+                );
+                prop_assert!(
+                    pool.count(InstanceKind::Spot) == spot - rep.shortfall_spot,
+                    "slot {slot}: spot count vs shortfall mismatch"
+                );
+            }
+            prop_assert!(
+                pool.total() as u64
+                    == pool.total_launches - pool.total_preemptions - released_total,
+                "conservation violated under launch failures"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn restore_is_deferred_when_preemption_leaves_zero_capacity() {
+    // Slot 1 preempts every shard and the market offers nothing:
+    // transferring a checkpoint would be pure waste. The restore is
+    // deferred (bytes saved, accounted) and paid once capacity returns.
+    let j = job(40.0, 8);
+    let trace = SpotTrace::new(vec![0.4; 8], vec![4, 0, 0, 4, 4, 4, 4, 4]);
+    let mut tr = trainer();
+    let ckpt_bytes = tr.store.checkpoint_bytes() as u64;
+    let out = leader(2).run(&j, &trace, &mut Fixed(0, 4), &mut tr).unwrap();
+    let rs = out.recovery();
+    assert_eq!(
+        *rs,
+        RecoveryStats {
+            restores_skipped: 1,
+            restore_bytes_saved: ckpt_bytes,
+            ..RecoveryStats::default()
+        },
+        "exactly one deferred restore, nothing else, on this fault-free run"
+    );
+    let skips = out
+        .events
+        .count_matching(|e| matches!(e, Event::RestoreSkipped { .. }));
+    let restores = out
+        .events
+        .count_matching(|e| matches!(e, Event::CheckpointRestored { .. }));
+    assert_eq!(skips, 1);
+    assert_eq!(restores, 1, "the deferred restore happens when capacity returns");
+}
+
+#[test]
+fn all_generations_torn_forces_restart_from_scratch() {
+    // Every periodic save is torn before the preemption, so recovery
+    // walks the whole ring, finds nothing valid, and restarts — without
+    // surfacing an error.
+    let j = job(30.0, 6);
+    let trace = SpotTrace::new(vec![0.4; 6], vec![4, 4, 0, 4, 4, 4]);
+    let mut plan = FaultPlan::parse("torn@0+1", 3).unwrap();
+    let mut tr = trainer();
+    let out = leader(2)
+        .run_with_faults(&j, &trace, &mut Fixed(0, 4), &mut tr, &mut plan, &Recorder::disabled())
+        .unwrap();
+    let rs = out.recovery();
+    assert_eq!(rs.restarts_from_scratch, 1);
+    assert_eq!(rs.generations_walked, 2, "both torn generations must be walked");
+    assert!(rs.steps_lost >= 4, "restart re-does all prior steps: {rs:?}");
+    assert!(rs.recovery_secs > 0.0, "corrupt transfers must be charged");
+    assert_eq!(
+        out.events
+            .count_matching(|e| matches!(e, Event::RestartedFromScratch { .. })),
+        1
+    );
+    // The run keeps training after the restart.
+    assert!(!out.metrics.losses.is_empty());
+    assert!(out.metrics.losses.iter().all(|(_, l)| l.is_finite()));
+}
+
+#[test]
+fn transient_save_errors_are_retried_and_charged() {
+    let j = job(30.0, 4);
+    let trace = SpotTrace::new(vec![0.4; 4], vec![4; 4]);
+    let mut plan = FaultPlan::parse("save@1", 5).unwrap();
+    let mut tr = trainer();
+    let out = leader(2)
+        .run_with_faults(&j, &trace, &mut Fixed(1, 3), &mut tr, &mut plan, &Recorder::disabled())
+        .unwrap();
+    let rs = out.recovery();
+    assert_eq!(rs.save_retries, 1, "slot 1's first write attempt must retry");
+    assert_eq!(rs.save_failures, 0, "the retry succeeds within the budget");
+    assert!(rs.recovery_secs > 0.0, "the failed attempt's transfer is charged");
+}
+
+#[test]
+fn unrecoverable_save_errors_degrade_without_erroring() {
+    // Every write attempt fails: saves exhaust their retries, the ring
+    // stays empty, and the post-preemption restore has to restart from
+    // scratch — still no Err.
+    let j = job(30.0, 5);
+    let trace = SpotTrace::new(vec![0.4; 5], vec![4, 4, 1, 4, 4]);
+    let mut plan = FaultPlan::parse("save=1.0", 11).unwrap();
+    let mut tr = trainer();
+    let out = leader(2)
+        .run_with_faults(&j, &trace, &mut Fixed(0, 4), &mut tr, &mut plan, &Recorder::disabled())
+        .unwrap();
+    let rs = out.recovery();
+    assert!(rs.save_failures >= 2, "every save must exhaust retries: {rs:?}");
+    assert_eq!(rs.save_retries, 3 * rs.save_failures, "retries = budget × failures");
+    assert!(rs.restarts_from_scratch >= 1, "no generation to fall back to");
+    assert!(
+        out.events
+            .count_matching(|e| matches!(e, Event::CheckpointSaveFailed { .. }))
+            >= 2
+    );
+}
+
+#[test]
+fn traced_fault_run_emits_schema_valid_fault_and_recovery_lines() {
+    let j = job(16.0, 6);
+    let trace = SpotTrace::new(vec![0.4; 6], vec![4; 6]);
+    let mut plan = FaultPlan::parse("midslot@1,torn@2", 7).unwrap();
+    let mut tr = trainer();
+    let rec = Recorder::enabled();
+    let out = leader(2)
+        .run_with_faults(&j, &trace, &mut Fixed(1, 3), &mut tr, &mut plan, &rec)
+        .unwrap();
+    assert!(plan.injected >= 2);
+    assert!(out.recovery().midslot_preemptions >= 1);
+    let log = rec.finish().unwrap();
+    let mut kinds: HashSet<&str> = HashSet::new();
+    for line in &log.lines {
+        let kind = validate_line(line)
+            .unwrap_or_else(|e| panic!("schema-invalid trace line `{line}`: {e}"));
+        kinds.insert(kind);
+    }
+    assert!(kinds.contains("fault"), "fault events must reach the trace");
+    assert!(kinds.contains("recovery"), "recovery events must reach the trace");
+}
+
+#[test]
+fn default_leader_configs_get_unique_checkpoint_dirs() {
+    let a = LeaderConfig::default();
+    let b = LeaderConfig::default();
+    assert_ne!(
+        a.checkpoint_dir, b.checkpoint_dir,
+        "two runs must never share a default checkpoint dir"
+    );
+    assert!(a.ephemeral_dir, "default runs clean up after themselves");
+}

@@ -248,6 +248,20 @@ fn jsonl_event_schema_is_golden() {
             r#"{"kind":"migration","round":0,"slot":5,"job":2,"from":0,"to":1,"phase":"emitted","reason":null}"#,
         ),
         (
+            Event::Fault { round: 2, slot: 7, fault: "save_io", detail: 3 },
+            r#"{"kind":"fault","round":2,"slot":7,"fault":"save_io","detail":3}"#,
+        ),
+        (
+            Event::Recovery {
+                round: 2,
+                slot: 8,
+                action: "restore",
+                generations: 1,
+                steps_lost: 4,
+            },
+            r#"{"kind":"recovery","round":2,"slot":8,"action":"restore","generations":1,"steps_lost":4}"#,
+        ),
+        (
             Event::Replay {
                 round: 2,
                 candidate: 7,
