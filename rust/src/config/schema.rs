@@ -71,11 +71,14 @@ pub struct CoordinatorSettings {
     pub max_retries: usize,
     /// Slot length in seconds (recovery time erodes μ against this).
     pub slot_secs: f64,
+    /// Consecutive outage-starved slots a fleet job tolerates before
+    /// the recovery ladder fails it over to a surviving region.
+    pub failover_after: usize,
 }
 
 impl Default for CoordinatorSettings {
     fn default() -> Self {
-        CoordinatorSettings { retain: 3, max_retries: 2, slot_secs: 1800.0 }
+        CoordinatorSettings { retain: 3, max_retries: 2, slot_secs: 1800.0, failover_after: 1 }
     }
 }
 
@@ -286,13 +289,16 @@ impl ExperimentConfig {
         read_opt!(doc, "coordinator.retain", as_int, retain);
         let mut max_retries = cfg.coordinator.max_retries as i64;
         read_opt!(doc, "coordinator.max_retries", as_int, max_retries);
-        if retain < 1 || max_retries < 0 {
+        let mut failover_after = cfg.coordinator.failover_after as i64;
+        read_opt!(doc, "coordinator.failover_after", as_int, failover_after);
+        if retain < 1 || max_retries < 0 || failover_after < 1 {
             return Err(ConfigError::Invalid(
-                "need coordinator.retain ≥ 1 and max_retries ≥ 0".into(),
+                "need coordinator.retain ≥ 1, max_retries ≥ 0, failover_after ≥ 1".into(),
             ));
         }
         cfg.coordinator.retain = retain as usize;
         cfg.coordinator.max_retries = max_retries as usize;
+        cfg.coordinator.failover_after = failover_after as usize;
         read_opt!(doc, "coordinator.slot_secs", as_float, cfg.coordinator.slot_secs);
 
         // [run]
@@ -382,6 +388,9 @@ impl ExperimentConfig {
         }
         if self.coordinator.retain == 0 {
             return e("coordinator.retain must be ≥ 1");
+        }
+        if self.coordinator.failover_after == 0 {
+            return e("coordinator.failover_after must be ≥ 1");
         }
         if !(self.coordinator.slot_secs > 0.0 && self.coordinator.slot_secs.is_finite()) {
             return e("coordinator.slot_secs must be finite and positive");
@@ -514,23 +523,31 @@ mod tests {
     #[test]
     fn coordinator_section_parses_and_validates() {
         let cfg = ExperimentConfig::from_toml_str(
-            "[coordinator]\nretain = 5\nmax_retries = 4\nslot_secs = 900.0\n",
+            "[coordinator]\nretain = 5\nmax_retries = 4\nslot_secs = 900.0\nfailover_after = 2\n",
         )
         .unwrap();
         assert_eq!(cfg.coordinator.retain, 5);
         assert_eq!(cfg.coordinator.max_retries, 4);
         assert!((cfg.coordinator.slot_secs - 900.0).abs() < 1e-12);
+        assert_eq!(cfg.coordinator.failover_after, 2);
         // Defaults match LeaderConfig's paper-aligned values.
         let d = ExperimentConfig::from_toml_str("").unwrap();
         assert_eq!(d.coordinator, CoordinatorSettings::default());
         assert_eq!(d.coordinator.retain, 3);
         assert_eq!(d.coordinator.max_retries, 2);
         assert!((d.coordinator.slot_secs - 1800.0).abs() < 1e-12);
+        assert_eq!(d.coordinator.failover_after, 1);
         assert!(ExperimentConfig::from_toml_str("[coordinator]\nretain = 0\n").is_err());
         // Negatives must not wrap through the usize cast.
         assert!(ExperimentConfig::from_toml_str("[coordinator]\nretain = -1\n").is_err());
         assert!(
             ExperimentConfig::from_toml_str("[coordinator]\nmax_retries = -2\n").is_err()
+        );
+        assert!(
+            ExperimentConfig::from_toml_str("[coordinator]\nfailover_after = 0\n").is_err()
+        );
+        assert!(
+            ExperimentConfig::from_toml_str("[coordinator]\nfailover_after = -1\n").is_err()
         );
         assert!(
             ExperimentConfig::from_toml_str("[coordinator]\nslot_secs = 0.0\n").is_err()

@@ -474,6 +474,39 @@ impl CheckpointManager {
     }
 }
 
+/// Drop guard for ephemeral checkpoint directories: removes the
+/// directory when dropped — panics and early `Err` returns included —
+/// so aborted runs and failing tests don't leak per-run temp dirs.
+#[derive(Debug)]
+pub struct EphemeralDir {
+    dir: Option<PathBuf>,
+}
+
+impl EphemeralDir {
+    pub fn new(dir: impl Into<PathBuf>) -> EphemeralDir {
+        EphemeralDir { dir: Some(dir.into()) }
+    }
+
+    /// Armed only when `ephemeral`; otherwise a no-op guard, so callers
+    /// can hold one unconditionally.
+    pub fn armed_if(ephemeral: bool, dir: &Path) -> EphemeralDir {
+        EphemeralDir { dir: ephemeral.then(|| dir.to_path_buf()) }
+    }
+
+    /// Keep the directory after all (e.g. the run is worth inspecting).
+    pub fn disarm(&mut self) {
+        self.dir = None;
+    }
+}
+
+impl Drop for EphemeralDir {
+    fn drop(&mut self) {
+        if let Some(dir) = self.dir.take() {
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -647,5 +680,36 @@ mod tests {
         let (restored, _) = fresh.restore("t", &store()).unwrap();
         assert_eq!(restored.step, 4);
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn ephemeral_guard_removes_the_dir_even_on_panic() {
+        let dir = tmpdir("guard_panic");
+        assert!(dir.exists());
+        let moved = dir.clone();
+        let unwound = std::panic::catch_unwind(move || {
+            let _guard = EphemeralDir::new(moved);
+            panic!("a test aborting mid-run");
+        });
+        assert!(unwound.is_err());
+        assert!(!dir.exists(), "the guard must clean up during unwind");
+    }
+
+    #[test]
+    fn ephemeral_guard_respects_arming_and_disarm() {
+        let keep = tmpdir("guard_keep");
+        {
+            let _guard = EphemeralDir::armed_if(false, &keep);
+        }
+        assert!(keep.exists(), "an unarmed guard must not delete");
+        {
+            let mut guard = EphemeralDir::armed_if(true, &keep);
+            guard.disarm();
+        }
+        assert!(keep.exists(), "a disarmed guard must not delete");
+        {
+            let _guard = EphemeralDir::armed_if(true, &keep);
+        }
+        assert!(!keep.exists(), "an armed guard deletes on drop");
     }
 }

@@ -30,6 +30,9 @@ pub enum Event {
     RecoveredFromGeneration { slot: usize, gen: u64, walked: u32, retries: u32, steps_lost: u64 },
     /// No valid generation survived — training restarts from step 0.
     RestartedFromScratch { slot: usize, steps_lost: u64 },
+    /// The fleet's recovery ladder moved the job out of a region whose
+    /// outage starved its launches; shard state follows via restore.
+    FailedOver { slot: usize, from: usize, to: usize },
     TrainStep { slot: usize, step: i32, loss: f32, shards: usize },
     SlotFinished { slot: usize, progress: f64, cost: f64 },
     JobCompleted { slot: usize, utility: f64 },
@@ -86,6 +89,9 @@ impl fmt::Display for Event {
             }
             Event::RestartedFromScratch { slot, steps_lost } => {
                 write!(f, "[slot {slot}] RESTARTED FROM SCRATCH ({steps_lost} steps lost)")
+            }
+            Event::FailedOver { slot, from, to } => {
+                write!(f, "[slot {slot}] FAILED OVER region {from}→{to}")
             }
             Event::TrainStep { slot, step, loss, shards } => {
                 write!(f, "[slot {slot}] step {step}: loss {loss:.4} ({shards} shards)")
@@ -176,5 +182,7 @@ mod tests {
         );
         let e4 = Event::RestoreSkipped { slot: 4, bytes: 64 };
         assert!(e4.to_string().contains("no capacity"));
+        let e5 = Event::FailedOver { slot: 6, from: 0, to: 1 };
+        assert_eq!(e5.to_string(), "[slot 6] FAILED OVER region 0→1");
     }
 }

@@ -10,8 +10,8 @@
 //! `tests/coordinator_properties.rs` explore arbitrary fault schedules
 //! while the fault-free path stays bit-identical to the plain run.
 //!
-//! Fault kinds (mirroring the failure modes the paper's §II-A switching
-//! model abstracts over):
+//! Per-job fault kinds (mirroring the failure modes the paper's §II-A
+//! switching model abstracts over):
 //! - **save I/O errors** — a checkpoint write fails outright;
 //! - **torn writes** — the save "succeeds" but only a byte prefix
 //!   reaches durable storage (the crash-after-rename case);
@@ -21,6 +21,20 @@
 //!   checkpoint;
 //! - **launch failures** — insufficient-capacity errors while
 //!   reconciling the instance pool, per kind (spot / on-demand).
+//!
+//! Region-scoped fault domains (the correlated failures a fleet
+//! coordinator must treat as first-class — one event hits every job
+//! sharing the domain, not independent per-job coin flips):
+//! - **regional outages** (`region@r:s..e`) — the region's launch
+//!   capacity is zero for an inclusive slot window; every launch there
+//!   reports insufficient capacity;
+//! - **preemption storms** (`storm=p` / `storm@r:s`) — one draw kills
+//!   every spot instance in a region at once;
+//! - **checkpoint-store brownouts** (`brownout@s..e`) — every save to
+//!   the shared store fails transiently for the window (reads still
+//!   work, so deferred restores remain possible).
+
+use std::fmt;
 
 use crate::coordinator::instances::InstanceKind;
 use crate::util::rng::Rng;
@@ -44,6 +58,38 @@ pub enum ReadFault {
     None,
     /// A transient I/O error; retrying may succeed.
     IoError,
+}
+
+/// An inclusive slot window `start..=end`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotWindow {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl SlotWindow {
+    pub fn contains(&self, slot: usize) -> bool {
+        self.start <= slot && slot <= self.end
+    }
+}
+
+impl fmt::Display for SlotWindow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}..{}", self.start, self.end)
+    }
+}
+
+/// One region's scripted outage window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegionWindow {
+    pub region: usize,
+    pub window: SlotWindow,
+}
+
+impl fmt::Display for RegionWindow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.region, self.window)
+    }
 }
 
 /// The injector trait the coordinator's real paths call through. Every
@@ -74,6 +120,24 @@ pub trait FaultInjector {
     fn launch_fails(&mut self, _slot: usize, _kind: InstanceKind) -> bool {
         false
     }
+
+    /// Consulted once per `(slot, region)` by the fleet coordinator:
+    /// `true` zeroes the region's launch capacity for the slot.
+    fn region_outage(&mut self, _slot: usize, _region: usize) -> bool {
+        false
+    }
+
+    /// Consulted once per `(slot, region)` by the fleet coordinator:
+    /// `true` kills every spot instance in the region this slot.
+    fn preemption_storm(&mut self, _slot: usize, _region: usize) -> bool {
+        false
+    }
+
+    /// Consulted once per slot by the fleet coordinator: `true` makes
+    /// every save to the shared checkpoint store fail transiently.
+    fn store_brownout(&mut self, _slot: usize) -> bool {
+        false
+    }
 }
 
 /// The zero-cost default: never injects anything.
@@ -98,6 +162,8 @@ pub struct FaultConfig {
     /// P(one on-demand launch reports insufficient capacity) — kept
     /// separate because real markets fail spot far more often.
     pub launch_od: f64,
+    /// P(a correlated preemption storm hits one `(slot, region)`).
+    pub storm: f64,
     /// Slots whose *first* save attempt is forced to fail.
     pub scripted_save: Vec<usize>,
     /// Slots whose first save attempt is forced torn (at half length).
@@ -108,10 +174,18 @@ pub struct FaultConfig {
     pub scripted_midslot: Vec<usize>,
     /// Slots where every launch reports insufficient capacity.
     pub scripted_launch: Vec<usize>,
+    /// Scripted storms: `(region, slot)` pairs.
+    pub scripted_storm: Vec<(usize, usize)>,
+    /// Regional outage windows: every launch in the region fails for
+    /// the (inclusive) window.
+    pub outages: Vec<RegionWindow>,
+    /// Checkpoint-store brownout windows: every save fails transiently
+    /// for the (inclusive) window.
+    pub brownouts: Vec<SlotWindow>,
 }
 
 impl FaultConfig {
-    fn probs(&self) -> [f64; 6] {
+    fn probs(&self) -> [f64; 7] {
         [
             self.save_io,
             self.torn,
@@ -119,6 +193,7 @@ impl FaultConfig {
             self.midslot,
             self.launch_spot,
             self.launch_od,
+            self.storm,
         ]
     }
 
@@ -130,6 +205,63 @@ impl FaultConfig {
             && self.scripted_read.is_empty()
             && self.scripted_midslot.is_empty()
             && self.scripted_launch.is_empty()
+            && self.scripted_storm.is_empty()
+            && self.outages.is_empty()
+            && self.brownouts.is_empty()
+    }
+}
+
+impl fmt::Display for FaultConfig {
+    /// Canonical spec form: probability clauses in declaration order,
+    /// then scripted clauses, empty fields skipped. `{}` prints each
+    /// probability as its shortest exact decimal, so
+    /// `FaultPlan::parse(&cfg.to_string(), seed)` reproduces the config
+    /// field-for-field (asserted by `display_round_trips_through_parse`).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn slots(v: &[usize]) -> String {
+            v.iter().map(|s| s.to_string()).collect::<Vec<_>>().join("+")
+        }
+        let mut parts: Vec<String> = Vec::new();
+        let probs = [
+            ("save", self.save_io),
+            ("torn", self.torn),
+            ("read", self.read_io),
+            ("midslot", self.midslot),
+            ("launch", self.launch_spot),
+            ("launch-od", self.launch_od),
+            ("storm", self.storm),
+        ];
+        for (kind, p) in probs {
+            if p > 0.0 {
+                parts.push(format!("{kind}={p}"));
+            }
+        }
+        let scripted = [
+            ("save", &self.scripted_save),
+            ("torn", &self.scripted_torn),
+            ("read", &self.scripted_read),
+            ("midslot", &self.scripted_midslot),
+            ("launch", &self.scripted_launch),
+        ];
+        for (kind, v) in scripted {
+            if !v.is_empty() {
+                parts.push(format!("{kind}@{}", slots(v)));
+            }
+        }
+        if !self.scripted_storm.is_empty() {
+            let toks: Vec<String> =
+                self.scripted_storm.iter().map(|(r, s)| format!("{r}:{s}")).collect();
+            parts.push(format!("storm@{}", toks.join("+")));
+        }
+        if !self.outages.is_empty() {
+            let toks: Vec<String> = self.outages.iter().map(|o| o.to_string()).collect();
+            parts.push(format!("region@{}", toks.join("+")));
+        }
+        if !self.brownouts.is_empty() {
+            let toks: Vec<String> = self.brownouts.iter().map(|w| w.to_string()).collect();
+            parts.push(format!("brownout@{}", toks.join("+")));
+        }
+        f.write_str(&parts.join(","))
     }
 }
 
@@ -145,6 +277,24 @@ pub struct FaultPlan {
     pub injected: u64,
 }
 
+fn parse_window(tok: &str, clause: &str) -> anyhow::Result<SlotWindow> {
+    let (s, e) = tok
+        .split_once("..")
+        .ok_or_else(|| anyhow::anyhow!("bad window `{tok}` in `{clause}` (want S..E)"))?;
+    let start: usize = s
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad window start `{}` in `{clause}`", s.trim()))?;
+    let end: usize = e
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad window end `{}` in `{clause}`", e.trim()))?;
+    if end < start {
+        anyhow::bail!("empty window `{tok}` in `{clause}` (end before start)");
+    }
+    Ok(SlotWindow { start, end })
+}
+
 impl FaultPlan {
     pub fn new(cfg: FaultConfig, seed: u64) -> FaultPlan {
         FaultPlan { cfg, rng: Rng::new(seed ^ 0xFA01_7AB1E), injected: 0 }
@@ -157,47 +307,109 @@ impl FaultPlan {
     }
 
     /// Parse a fault spec: comma-separated clauses, each either
-    /// `kind=prob` (per-opportunity probability) or `kind@s1+s2+…`
-    /// (scripted slots). Kinds: `save`, `torn`, `read`, `midslot`,
-    /// `launch` (spot), `launch-od`. Example:
-    /// `"torn=0.2,midslot@3+5,launch=0.25"`.
+    /// `kind=prob` (per-opportunity probability) or `kind@…` (scripted).
+    /// Per-job kinds: `save`, `torn`, `read`, `midslot`, `launch`
+    /// (spot), `launch-od`, with scripted forms `kind@s1+s2+…`.
+    /// Region-scoped kinds: `storm=p` / `storm@r:s+…` (correlated
+    /// preemption storms), `region@r:s..e+…` (regional outage windows),
+    /// `brownout@s..e+…` (checkpoint-store brownout windows); windows
+    /// are inclusive. Each clause key (`kind=` or `kind@`) may appear
+    /// at most once. Example:
+    /// `"torn=0.2,midslot@3+5,region@0:2..6,storm@0:2,brownout@4..5"`.
     pub fn parse(spec: &str, seed: u64) -> anyhow::Result<FaultPlan> {
         let mut cfg = FaultConfig::default();
+        let mut seen: Vec<String> = Vec::new();
+        let mut claim = |key: String, clause: &str| -> anyhow::Result<()> {
+            if seen.contains(&key) {
+                anyhow::bail!("duplicate fault clause `{key}…` at `{clause}`");
+            }
+            seen.push(key);
+            Ok(())
+        };
         for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
             if let Some((kind, prob)) = clause.split_once('=') {
-                let p: f64 = prob
-                    .trim()
+                let kind = kind.trim();
+                claim(format!("{kind}="), clause)?;
+                let tok = prob.trim();
+                let p: f64 = tok
                     .parse()
-                    .map_err(|_| anyhow::anyhow!("bad probability in `{clause}`"))?;
+                    .map_err(|_| anyhow::anyhow!("bad probability `{tok}` in `{clause}`"))?;
                 if !(0.0..=1.0).contains(&p) {
-                    anyhow::bail!("probability out of [0,1] in `{clause}`");
+                    anyhow::bail!("probability `{tok}` out of [0,1] in `{clause}`");
                 }
-                match kind.trim() {
+                match kind {
                     "save" => cfg.save_io = p,
                     "torn" => cfg.torn = p,
                     "read" => cfg.read_io = p,
                     "midslot" => cfg.midslot = p,
                     "launch" => cfg.launch_spot = p,
                     "launch-od" | "launch_od" => cfg.launch_od = p,
-                    other => anyhow::bail!("unknown fault kind `{other}`"),
+                    "storm" => cfg.storm = p,
+                    other => anyhow::bail!("unknown fault kind `{other}` in `{clause}`"),
                 }
-            } else if let Some((kind, slots)) = clause.split_once('@') {
-                let parsed: Result<Vec<usize>, _> =
-                    slots.split('+').map(|s| s.trim().parse::<usize>()).collect();
-                let slots = parsed
-                    .map_err(|_| anyhow::anyhow!("bad slot list in `{clause}`"))?;
-                match kind.trim() {
-                    "save" => cfg.scripted_save = slots,
-                    "torn" => cfg.scripted_torn = slots,
-                    "read" => cfg.scripted_read = slots,
-                    "midslot" => cfg.scripted_midslot = slots,
-                    "launch" => cfg.scripted_launch = slots,
-                    other => anyhow::bail!("unknown fault kind `{other}`"),
+            } else if let Some((kind, body)) = clause.split_once('@') {
+                let kind = kind.trim();
+                claim(format!("{kind}@"), clause)?;
+                let toks = body.split('+').map(str::trim);
+                match kind {
+                    "save" | "torn" | "read" | "midslot" | "launch" => {
+                        let slots: Vec<usize> = toks
+                            .map(|t| {
+                                t.parse::<usize>().map_err(|_| {
+                                    anyhow::anyhow!("bad slot `{t}` in `{clause}`")
+                                })
+                            })
+                            .collect::<anyhow::Result<_>>()?;
+                        match kind {
+                            "save" => cfg.scripted_save = slots,
+                            "torn" => cfg.scripted_torn = slots,
+                            "read" => cfg.scripted_read = slots,
+                            "midslot" => cfg.scripted_midslot = slots,
+                            _ => cfg.scripted_launch = slots,
+                        }
+                    }
+                    "storm" => {
+                        cfg.scripted_storm = toks
+                            .map(|t| {
+                                let (r, s) = t.split_once(':').ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "bad storm `{t}` in `{clause}` (want REGION:SLOT)"
+                                    )
+                                })?;
+                                let region: usize = r.trim().parse().map_err(|_| {
+                                    anyhow::anyhow!("bad region `{}` in `{clause}`", r.trim())
+                                })?;
+                                let slot: usize = s.trim().parse().map_err(|_| {
+                                    anyhow::anyhow!("bad slot `{}` in `{clause}`", s.trim())
+                                })?;
+                                Ok((region, slot))
+                            })
+                            .collect::<anyhow::Result<_>>()?;
+                    }
+                    "region" => {
+                        cfg.outages = toks
+                            .map(|t| {
+                                let (r, w) = t.split_once(':').ok_or_else(|| {
+                                    anyhow::anyhow!(
+                                        "bad outage `{t}` in `{clause}` (want REGION:S..E)"
+                                    )
+                                })?;
+                                let region: usize = r.trim().parse().map_err(|_| {
+                                    anyhow::anyhow!("bad region `{}` in `{clause}`", r.trim())
+                                })?;
+                                Ok(RegionWindow { region, window: parse_window(w.trim(), clause)? })
+                            })
+                            .collect::<anyhow::Result<_>>()?;
+                    }
+                    "brownout" => {
+                        cfg.brownouts = toks
+                            .map(|t| parse_window(t, clause))
+                            .collect::<anyhow::Result<_>>()?;
+                    }
+                    other => anyhow::bail!("unknown fault kind `{other}` in `{clause}`"),
                 }
             } else {
-                anyhow::bail!(
-                    "bad fault clause `{clause}` (want kind=prob or kind@s1+s2)"
-                );
+                anyhow::bail!("bad fault clause `{clause}` (want kind=prob or kind@…)");
             }
         }
         Ok(FaultPlan::new(cfg, seed))
@@ -207,6 +419,12 @@ impl FaultPlan {
         // Skip the draw entirely at p == 0 so unrelated fault kinds
         // don't perturb each other's random sequences.
         p > 0.0 && self.rng.bool(p)
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.cfg.fmt(f)
     }
 }
 
@@ -271,6 +489,34 @@ impl FaultInjector for FaultPlan {
         }
         false
     }
+
+    fn region_outage(&mut self, slot: usize, region: usize) -> bool {
+        if self.cfg.outages.iter().any(|o| o.region == region && o.window.contains(slot)) {
+            self.injected += 1;
+            return true;
+        }
+        false
+    }
+
+    fn preemption_storm(&mut self, slot: usize, region: usize) -> bool {
+        if self.cfg.scripted_storm.contains(&(region, slot)) {
+            self.injected += 1;
+            return true;
+        }
+        if self.draw(self.cfg.storm) {
+            self.injected += 1;
+            return true;
+        }
+        false
+    }
+
+    fn store_brownout(&mut self, slot: usize) -> bool {
+        if self.cfg.brownouts.iter().any(|w| w.contains(slot)) {
+            self.injected += 1;
+            return true;
+        }
+        false
+    }
 }
 
 #[cfg(test)]
@@ -284,6 +530,9 @@ mod tests {
         assert_eq!(inj.on_read(3, 0), ReadFault::None);
         assert_eq!(inj.midslot_kill(3, 4), None);
         assert!(!inj.launch_fails(3, InstanceKind::Spot));
+        assert!(!inj.region_outage(3, 0));
+        assert!(!inj.preemption_storm(3, 0));
+        assert!(!inj.store_brownout(3));
     }
 
     #[test]
@@ -296,8 +545,12 @@ mod tests {
             assert_eq!(plan.midslot_kill(slot, 4), None);
             assert!(!plan.launch_fails(slot, InstanceKind::Spot));
             assert!(!plan.launch_fails(slot, InstanceKind::OnDemand));
+            assert!(!plan.region_outage(slot, 0));
+            assert!(!plan.preemption_storm(slot, 1));
+            assert!(!plan.store_brownout(slot));
         }
         assert_eq!(plan.injected, 0);
+        assert_eq!(plan.to_string(), "");
     }
 
     #[test]
@@ -318,6 +571,65 @@ mod tests {
     }
 
     #[test]
+    fn spec_parses_region_scoped_kinds() {
+        let plan = FaultPlan::parse(
+            "storm=0.25,storm@0:2+1:5,region@0:3..5+1:7..9,brownout@4..6",
+            7,
+        )
+        .unwrap();
+        assert!((plan.cfg.storm - 0.25).abs() < 1e-12);
+        assert_eq!(plan.cfg.scripted_storm, vec![(0, 2), (1, 5)]);
+        assert_eq!(
+            plan.cfg.outages,
+            vec![
+                RegionWindow { region: 0, window: SlotWindow { start: 3, end: 5 } },
+                RegionWindow { region: 1, window: SlotWindow { start: 7, end: 9 } },
+            ]
+        );
+        assert_eq!(plan.cfg.brownouts, vec![SlotWindow { start: 4, end: 6 }]);
+    }
+
+    #[test]
+    fn display_round_trips_through_parse() {
+        let spec = "save=0.1,torn=0.25,read=0.3,midslot=0.05,launch=0.4,launch-od=0.02,\
+                    storm=0.15,save@1+3,torn@2,read@4,midslot@5,launch@6,\
+                    storm@0:2+1:5,region@0:3..5+1:7..9,brownout@4..6";
+        let plan = FaultPlan::parse(spec, 9).unwrap();
+        let shown = plan.to_string();
+        let again = FaultPlan::parse(&shown, 9).unwrap();
+        assert_eq!(plan.cfg, again.cfg, "display must reproduce the plan through parse");
+        // The canonical form is a fixed point of display∘parse.
+        assert_eq!(shown, again.to_string());
+        // And a plan with a single clause prints exactly that clause.
+        assert_eq!(FaultPlan::parse("brownout@4..6", 0).unwrap().to_string(), "brownout@4..6");
+    }
+
+    #[test]
+    fn duplicate_clause_keys_are_rejected_naming_the_clause() {
+        let err = FaultPlan::parse("save=0.1,save=0.2", 0).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "got: {err}");
+        assert!(err.contains("save=0.2"), "error should name the offending clause: {err}");
+        assert!(FaultPlan::parse("midslot@1,midslot@2", 0).is_err());
+        assert!(FaultPlan::parse("region@0:1..2,region@1:3..4", 0).is_err());
+        // Probability and scripted forms are distinct keys: both allowed.
+        assert!(FaultPlan::parse("save=0.1,save@2", 0).is_ok());
+    }
+
+    #[test]
+    fn parse_errors_name_the_offending_token() {
+        let err = FaultPlan::parse("midslot@3+x+5", 0).unwrap_err().to_string();
+        assert!(err.contains("`x`"), "got: {err}");
+        let err = FaultPlan::parse("region@0:9..2", 0).unwrap_err().to_string();
+        assert!(err.contains("9..2"), "got: {err}");
+        let err = FaultPlan::parse("storm@0-3", 0).unwrap_err().to_string();
+        assert!(err.contains("0-3"), "got: {err}");
+        let err = FaultPlan::parse("brownout@7", 0).unwrap_err().to_string();
+        assert!(err.contains("`7`"), "got: {err}");
+        let err = FaultPlan::parse("save=nope", 0).unwrap_err().to_string();
+        assert!(err.contains("nope"), "got: {err}");
+    }
+
+    #[test]
     fn scripted_slots_fire_exactly_on_the_first_attempt() {
         let mut plan = FaultPlan::parse("torn@2,launch@4", 7).unwrap();
         assert_eq!(plan.on_save(1, 0), WriteFault::None);
@@ -327,6 +639,20 @@ mod tests {
         assert!(plan.launch_fails(4, InstanceKind::Spot));
         assert!(plan.launch_fails(4, InstanceKind::OnDemand));
         assert!(!plan.launch_fails(5, InstanceKind::Spot));
+    }
+
+    #[test]
+    fn region_hooks_fire_inside_their_windows_only() {
+        let mut plan = FaultPlan::parse("region@1:2..4,storm@0:3,brownout@5..5", 7).unwrap();
+        for slot in 0..8 {
+            assert_eq!(plan.region_outage(slot, 1), (2..=4).contains(&slot));
+            assert!(!plan.region_outage(slot, 0), "other regions stay up");
+            assert_eq!(plan.preemption_storm(slot, 0), slot == 3);
+            assert!(!plan.preemption_storm(slot, 1));
+            assert_eq!(plan.store_brownout(slot), slot == 5);
+        }
+        // 3 outage slots + 1 storm + 1 brownout, all counted.
+        assert_eq!(plan.injected, 5);
     }
 
     #[test]

@@ -21,13 +21,18 @@
 //! feels: seconds burned on retries and corrupt transfers erode the
 //! slot's μ-scaled step count exactly like switching cost.
 //!
-//! This is the end-to-end path `examples/finetune_spot.rs` and
-//! `spotfine train` exercise; the pure simulator in [`crate::sched`]
-//! runs the same decision logic without the training substrate.
+//! The per-slot state machine lives in [`SlotEngine`], stepped one slot
+//! at a time. [`Leader`] drives one engine over its private market and
+//! checkpoint dir — the end-to-end path `examples/finetune_spot.rs` and
+//! `spotfine train` exercise — while
+//! [`crate::coordinator::fleet::FleetCoordinator`] embeds many engines
+//! against per-region markets and a shared checkpoint store. The pure
+//! simulator in [`crate::sched`] runs the same decision logic without
+//! the training substrate.
 
 use anyhow::Result;
 
-use crate::coordinator::checkpoint::CheckpointManager;
+use crate::coordinator::checkpoint::{CheckpointManager, EphemeralDir};
 use crate::coordinator::events::{Event, EventLog};
 use crate::coordinator::faults::{FaultInjector, NoFaults};
 use crate::coordinator::instances::InstancePool;
@@ -37,6 +42,7 @@ use crate::market::trace::SpotTrace;
 use crate::obs::recorder::{Counter, Recorder};
 use crate::sched::job::Job;
 use crate::sched::policy::{Models, Policy, SlotContext};
+use crate::train::params::ParamStore;
 use crate::train::trainer::Trainer;
 
 /// Leader configuration.
@@ -112,6 +118,18 @@ impl RunOutcome {
     }
 }
 
+/// What one [`SlotEngine::step`] did — the hooks the fleet's recovery
+/// ladder keys on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotStepReport {
+    /// The job crossed its workload this slot.
+    pub completed: bool,
+    /// Instances the reconcile wanted but could not launch.
+    pub shortfall: u32,
+    /// Instances held after reconciliation.
+    pub total: u32,
+}
+
 /// The leader itself.
 pub struct Leader {
     pub cfg: LeaderConfig,
@@ -124,6 +142,8 @@ pub struct Leader {
 #[allow(clippy::too_many_arguments)]
 fn save_checkpoint(
     ckpt: &mut CheckpointManager,
+    tag: &str,
+    job_idx: usize,
     trainer: &Trainer,
     progress: f64,
     slot: usize,
@@ -134,13 +154,14 @@ fn save_checkpoint(
     obs: &Recorder,
     account_bytes: bool,
 ) -> f64 {
-    let rep = ckpt.save_with_retries("latest", &trainer.store, progress, slot, max_retries, inj);
+    let rep = ckpt.save_with_retries(tag, &trainer.store, progress, slot, max_retries, inj);
     if rep.retries > 0 {
         metrics.recovery.save_retries += rep.retries as u64;
         metrics.recovery.recovery_secs += rep.wasted_secs;
         obs.emit(|| crate::obs::Event::Fault {
             round: slot as u32,
             slot,
+            job: job_idx,
             fault: "save_io",
             detail: rep.retries as u64,
         });
@@ -159,6 +180,457 @@ fn save_checkpoint(
         }
     }
     rep.wasted_secs
+}
+
+/// The embeddable per-job slot-step: all mutable state of one job's
+/// slot loop, advanced one slot at a time. This is the historical
+/// [`Leader`] loop body extracted — not re-implemented — so the
+/// fault-free degeneracy stays bit-identical to [`Leader::run`]
+/// (pinned to `f64::to_bits` by `tests/fleet_coordinator.rs`).
+pub struct SlotEngine {
+    cfg: LeaderConfig,
+    models: Models,
+    pool: InstancePool,
+    log: EventLog,
+    metrics: Metrics,
+    /// Last-resort recovery target: the pristine initial state.
+    initial_store: ParamStore,
+    progress: f64,
+    prev_total: u32,
+    prev_avail: u32,
+    /// Shard state was lost (boundary preemption, mid-slot kill, or a
+    /// storm/failover between slots) and must be re-seeded from a
+    /// checkpoint before stepping.
+    needs_restore: bool,
+    completion_slot: Option<usize>,
+    /// Spot instances a preemption storm killed since the last step;
+    /// folded into the next step's deferral decision, zero when no
+    /// storm fired (so the fault-free path is untouched).
+    pending_storm_losses: u32,
+    /// Job index stamped into this engine's obs fault/recovery events
+    /// (0 for standalone leader runs).
+    obs_job: usize,
+}
+
+impl SlotEngine {
+    pub fn new(cfg: LeaderConfig, models: Models, trainer: &Trainer) -> SlotEngine {
+        SlotEngine {
+            cfg,
+            models,
+            pool: InstancePool::new(),
+            log: EventLog::new(false),
+            metrics: Metrics::new(),
+            initial_store: trainer.store.clone(),
+            progress: 0.0,
+            prev_total: 0,
+            prev_avail: 0,
+            needs_restore: false,
+            completion_slot: None,
+            pending_storm_losses: 0,
+            obs_job: 0,
+        }
+    }
+
+    /// Echo coordinator events to stderr as they are emitted.
+    pub fn with_verbose(mut self, verbose: bool) -> SlotEngine {
+        self.log = EventLog::new(verbose);
+        self
+    }
+
+    /// Stamp `job` into this engine's obs fault/recovery events so a
+    /// fleet's merged trace stays deterministic across thread counts.
+    pub fn with_obs_job(mut self, job: usize) -> SlotEngine {
+        self.obs_job = job;
+        self
+    }
+
+    /// Scheduler-units progress so far.
+    pub fn progress(&self) -> f64 {
+        self.progress
+    }
+
+    /// A correlated preemption storm: every spot instance dies at once,
+    /// regardless of market availability. Returns the count killed; the
+    /// losses fold into the next [`SlotEngine::step`]'s restore/defer
+    /// decision exactly like boundary preemptions.
+    pub fn storm_preempt(&mut self, slot: usize, trainer: &Trainer) -> u32 {
+        let lost = self.pool.preempt_to_availability(slot, 0, &mut self.log);
+        if lost > 0 && trainer.store.step > 0 {
+            self.needs_restore = true;
+        }
+        self.pending_storm_losses += lost;
+        lost
+    }
+
+    /// Fail over from region `from` to region `to`: release every
+    /// instance (the old region keeps nothing warm) and require a
+    /// restore onto whatever the next step launches. The caller
+    /// switches the market and injector region; cross-region transfer
+    /// cost is then paid through the ordinary restore path.
+    pub fn fail_over(&mut self, slot: usize, trainer: &Trainer, from: usize, to: usize) -> u32 {
+        let released = self
+            .pool
+            .reconcile_with(slot, 0, 0, &mut self.log, &mut NoFaults)
+            .released;
+        if trainer.store.step > 0 {
+            self.needs_restore = true;
+        }
+        self.log.emit(Event::FailedOver { slot, from, to });
+        released
+    }
+
+    /// Advance one slot: observe → preempt → decide → reconcile →
+    /// recover → train → account. Never turns an injected fault into
+    /// `Err`; real I/O or backend failures still propagate.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        t: usize,
+        job: &Job,
+        market: &mut SpotMarket,
+        policy: &mut dyn Policy,
+        trainer: &mut Trainer,
+        ckpt: &mut CheckpointManager,
+        tag: &str,
+        inj: &mut dyn FaultInjector,
+        obs: &Recorder,
+    ) -> Result<SlotStepReport> {
+        let storm_losses = std::mem::take(&mut self.pending_storm_losses);
+        let obs_slot = market.observe();
+        self.log.emit(Event::SlotStarted {
+            slot: t,
+            spot_price: obs_slot.spot_price,
+            avail: obs_slot.avail,
+        });
+
+        // Market-forced preemptions happen before we decide.
+        let preempted = self.pool.preempt_to_availability(t, obs_slot.avail, &mut self.log);
+        if preempted > 0 && trainer.store.step > 0 {
+            self.needs_restore = true;
+        }
+
+        let ctx = SlotContext {
+            t,
+            obs: obs_slot,
+            progress: self.progress,
+            prev_total: self.prev_total,
+            prev_avail: self.prev_avail,
+            job,
+            models: &self.models,
+        };
+        let want = policy.decide(&ctx).clamp_to_job(job, obs_slot.avail);
+        self.log.emit(Event::Decision {
+            slot: t,
+            on_demand: want.on_demand,
+            spot: want.spot,
+        });
+        let grant = market.request(want.on_demand, want.spot);
+        let reconciled =
+            self.pool.reconcile_with(t, grant.on_demand, grant.spot, &mut self.log, inj);
+        if reconciled.launch_failures > 0 {
+            self.metrics.recovery.launch_shortfalls += reconciled.shortfall() as u64;
+            let job_idx = self.obs_job;
+            obs.emit(|| crate::obs::Event::Fault {
+                round: t as u32,
+                slot: t,
+                job: job_idx,
+                fault: "launch",
+                detail: reconciled.launch_failures as u64,
+            });
+            obs.add(Counter::Faults, reconciled.launch_failures as u64);
+        }
+        // The realized pool, not the grant: launch failures mean the
+        // leader trains on what it actually holds.
+        let total = self.pool.total();
+
+        let mu = self.models.reconfig.mu(self.prev_total, total);
+        // Seconds burned on recovery this slot — erodes μ below.
+        let mut slot_recovery = 0.0f64;
+
+        // Recover shard state onto replacement capacity. Ordered
+        // after reconcile: a restore needs instances to restore
+        // *onto*, so when preemption left zero capacity the
+        // transfer is skipped (deferred), not paid.
+        if self.needs_restore {
+            if total > 0 {
+                let out = ckpt.restore_latest_valid(
+                    tag,
+                    &trainer.store,
+                    t,
+                    self.cfg.max_retries,
+                    inj,
+                );
+                slot_recovery += out.wasted_secs;
+                self.metrics.recovery.restore_retries += out.retries as u64;
+                self.metrics.recovery.generations_walked += out.generations_walked as u64;
+                self.metrics.recovery.recovery_secs += out.wasted_secs;
+                match out.restored {
+                    Some(rep) => {
+                        let steps_lost = (trainer.store.step - rep.meta.step).max(0) as u64;
+                        self.metrics.recovery.steps_lost += steps_lost;
+                        trainer.restore(rep.store)?;
+                        // Progress is recomputed from the restored
+                        // snapshot: falling back means honestly
+                        // re-doing the lost slots. Fault-free the
+                        // latest generation carries the current
+                        // progress, so this is exact.
+                        self.progress = rep.meta.progress;
+                        self.log.emit(Event::CheckpointRestored {
+                            slot: t,
+                            bytes: rep.cost.bytes,
+                        });
+                        self.metrics.checkpoint_bytes_moved += rep.cost.bytes as u64;
+                        if out.retries > 0 || out.generations_walked > 0 {
+                            self.log.emit(Event::RecoveredFromGeneration {
+                                slot: t,
+                                gen: rep.meta.gen,
+                                walked: out.generations_walked,
+                                retries: out.retries,
+                                steps_lost,
+                            });
+                        }
+                        let gens = out.generations_walked as u64;
+                        let job_idx = self.obs_job;
+                        obs.emit(|| crate::obs::Event::Recovery {
+                            round: t as u32,
+                            slot: t,
+                            job: job_idx,
+                            action: "restore",
+                            generations: gens,
+                            steps_lost,
+                        });
+                        obs.add(Counter::Recoveries, 1);
+                    }
+                    None => {
+                        // Last resort: no valid generation anywhere.
+                        let steps_lost = trainer.store.step.max(0) as u64;
+                        self.metrics.recovery.steps_lost += steps_lost;
+                        self.metrics.recovery.restarts_from_scratch += 1;
+                        trainer.restore(self.initial_store.clone())?;
+                        self.progress = 0.0;
+                        self.log.emit(Event::RestartedFromScratch { slot: t, steps_lost });
+                        let job_idx = self.obs_job;
+                        obs.emit(|| crate::obs::Event::Recovery {
+                            round: t as u32,
+                            slot: t,
+                            job: job_idx,
+                            action: "restart",
+                            generations: 0,
+                            steps_lost,
+                        });
+                        obs.add(Counter::Recoveries, 1);
+                    }
+                }
+                self.needs_restore = false;
+            } else if preempted + storm_losses > 0 && ckpt.exists(tag) {
+                // No replacement capacity this slot: paying the
+                // transfer now would be pure waste — defer it.
+                let bytes = trainer.store.checkpoint_bytes();
+                self.metrics.recovery.restores_skipped += 1;
+                self.metrics.recovery.restore_bytes_saved += bytes as u64;
+                self.log.emit(Event::RestoreSkipped { slot: t, bytes });
+                let job_idx = self.obs_job;
+                obs.emit(|| crate::obs::Event::Recovery {
+                    round: t as u32,
+                    slot: t,
+                    job: job_idx,
+                    action: "skip",
+                    generations: 0,
+                    steps_lost: 0,
+                });
+                obs.add(Counter::Recoveries, 1);
+            }
+        }
+
+        if total != self.prev_total {
+            self.metrics.reconfigs += 1;
+            self.log.emit(Event::Reconfigured {
+                slot: t,
+                from: self.prev_total,
+                to: total,
+                mu,
+            });
+            // Resizing moves a checkpoint to the new topology.
+            if trainer.store.step > 0 {
+                slot_recovery += save_checkpoint(
+                    ckpt,
+                    tag,
+                    self.obs_job,
+                    trainer,
+                    self.progress,
+                    t,
+                    self.cfg.max_retries,
+                    inj,
+                    &mut self.log,
+                    &mut self.metrics,
+                    obs,
+                    true,
+                );
+            }
+        }
+
+        // Retry/corruption time is switching cost the scheduler
+        // feels: it erodes this slot's μ. The branch (rather than
+        // an unconditional multiply) keeps the fault-free path
+        // bit-identical.
+        let mu_eff = if slot_recovery > 0.0 {
+            mu * (1.0 - slot_recovery / self.cfg.slot_secs).max(0.0)
+        } else {
+            mu
+        };
+
+        // Execute: μ-scaled optimizer steps with `total` shards.
+        let mut losses = Vec::new();
+        let mut killed = None;
+        if total > 0 {
+            let planned =
+                (((self.cfg.steps_per_slot as f64) * mu_eff).round() as usize).max(1);
+            if slot_recovery > 0.0 {
+                let clean =
+                    (((self.cfg.steps_per_slot as f64) * mu).round() as usize).max(1);
+                self.metrics.recovery.steps_eroded += clean.saturating_sub(planned) as u64;
+            }
+            killed = inj.midslot_kill(t, planned).map(|k| k.min(planned));
+            let run_steps = killed.unwrap_or(planned);
+            for _ in 0..run_steps {
+                let stats = trainer.step_parallel(total as usize)?;
+                self.metrics.total_samples += stats.samples;
+                self.metrics.record_loss(stats.step, stats.loss);
+                self.log.emit(Event::TrainStep {
+                    slot: t,
+                    step: stats.step,
+                    loss: stats.loss,
+                    shards: stats.shards,
+                });
+                losses.push(stats.loss);
+            }
+            if let Some(after_step) = killed {
+                // Shards died before the periodic save: everything
+                // since the last checkpoint is lost, and this
+                // slot's progress with it.
+                self.metrics.recovery.midslot_preemptions += 1;
+                self.log.emit(Event::MidSlotPreempted {
+                    slot: t,
+                    after_step,
+                    lost_shards: total,
+                });
+                let job_idx = self.obs_job;
+                obs.emit(|| crate::obs::Event::Fault {
+                    round: t as u32,
+                    slot: t,
+                    job: job_idx,
+                    fault: "midslot",
+                    detail: after_step as u64,
+                });
+                obs.add(Counter::Faults, 1);
+                if trainer.store.step > 0 {
+                    self.needs_restore = true;
+                }
+            } else {
+                // Periodic checkpoint so preemption recovery has a
+                // base. The envelope records the post-slot progress:
+                // restoring this generation resumes exactly here.
+                let next_progress = self.progress + mu_eff * self.models.throughput.h(total);
+                save_checkpoint(
+                    ckpt,
+                    tag,
+                    self.obs_job,
+                    trainer,
+                    next_progress,
+                    t,
+                    self.cfg.max_retries,
+                    inj,
+                    &mut self.log,
+                    &mut self.metrics,
+                    obs,
+                    false,
+                );
+                self.progress = next_progress;
+            }
+        } else {
+            self.progress += mu_eff * self.models.throughput.h(total);
+        }
+
+        let mean_loss = if losses.is_empty() {
+            f32::NAN
+        } else {
+            losses.iter().sum::<f32>() / losses.len() as f32
+        };
+        self.metrics.record_slot(SlotRecord {
+            slot: t,
+            spot_price: obs_slot.spot_price,
+            avail: obs_slot.avail,
+            on_demand: grant.on_demand,
+            spot: grant.spot,
+            mu: mu_eff,
+            progress: self.progress,
+            cost: grant.cost,
+            mean_loss,
+            steps: losses.len(),
+            preemptions: preempted,
+            shortfall: reconciled.shortfall(),
+        });
+        self.log.emit(Event::SlotFinished {
+            slot: t,
+            progress: self.progress,
+            cost: grant.cost,
+        });
+
+        self.prev_total = total;
+        self.prev_avail = obs_slot.avail;
+        market.advance();
+        let completed = self.progress >= job.workload - 1e-9;
+        if completed {
+            self.completion_slot = Some(t + 1);
+        }
+        Ok(SlotStepReport { completed, shortfall: reconciled.shortfall(), total })
+    }
+
+    /// Close the books: value at completion (or the on-demand
+    /// termination config for a missed deadline) minus `pre_cost`, the
+    /// market spend the caller accumulated across this engine's slots.
+    pub fn finish(mut self, job: &Job, pre_cost: f64) -> RunOutcome {
+        self.metrics.preemptions = self.pool.total_preemptions;
+        let (value, cost, completion) = match self.completion_slot {
+            Some(t) => {
+                self.log.emit(Event::JobCompleted {
+                    slot: t - 1,
+                    utility: job.value_at(t as f64) - pre_cost,
+                });
+                (job.value_at(t as f64), pre_cost, t)
+            }
+            None => {
+                let remaining = job.workload - self.progress;
+                self.log.emit(Event::DeadlineMissed {
+                    slot: job.deadline,
+                    remaining,
+                });
+                // Termination config: on-demand at N^max until done
+                // (same accounting as sched::simulate).
+                let g = self.models.throughput.h(job.n_max);
+                let first = self.models.reconfig.mu_up * g;
+                let extra = if remaining <= first {
+                    1
+                } else {
+                    1 + ((remaining - first) / g).ceil() as usize
+                };
+                let slots_run = self.metrics.slots.len();
+                let t = slots_run + extra;
+                let term_cost = extra as f64 * job.n_max as f64 * self.models.on_demand_price;
+                (job.value_at(t as f64), pre_cost + term_cost, t)
+            }
+        };
+
+        RunOutcome {
+            utility: value - cost,
+            value,
+            cost,
+            completion_slot: completion,
+            on_time: completion <= job.deadline,
+            metrics: self.metrics,
+            events: self.log,
+        }
+    }
 }
 
 impl Leader {
@@ -198,349 +670,24 @@ impl Leader {
         policy.reset();
         let mut market =
             SpotMarket::new(trace).with_on_demand_price(self.models.on_demand_price);
-        let mut log = EventLog::new(self.cfg.verbose);
-        let mut metrics = Metrics::new();
-        let mut pool = InstancePool::new();
         let mut ckpt =
             CheckpointManager::new(&self.cfg.checkpoint_dir, self.cfg.bandwidth_mbps)
                 .with_retain(self.cfg.retain);
-        // Last-resort recovery target: the pristine initial state.
-        let initial_store = trainer.store.clone();
-
-        let mut progress = 0.0f64;
-        let mut prev_total = 0u32;
-        let mut prev_avail = 0u32;
-        let mut completion_slot = None;
-        // Shard state was lost (boundary preemption or mid-slot kill)
-        // and must be re-seeded from a checkpoint before stepping.
-        let mut needs_restore = false;
+        // Panic- and early-return-safe: the guard removes the ephemeral
+        // per-run dir even when a step `Err`s out or a test panics.
+        let _guard = EphemeralDir::armed_if(self.cfg.ephemeral_dir, &self.cfg.checkpoint_dir);
+        let mut engine = SlotEngine::new(self.cfg.clone(), self.models, trainer)
+            .with_verbose(self.cfg.verbose);
 
         for t in 0..job.deadline {
-            let obs_slot = market.observe();
-            log.emit(Event::SlotStarted {
-                slot: t,
-                spot_price: obs_slot.spot_price,
-                avail: obs_slot.avail,
-            });
-
-            // Market-forced preemptions happen before we decide.
-            let preempted = pool.preempt_to_availability(t, obs_slot.avail, &mut log);
-            if preempted > 0 && trainer.store.step > 0 {
-                needs_restore = true;
-            }
-
-            let ctx = SlotContext {
-                t,
-                obs: obs_slot,
-                progress,
-                prev_total,
-                prev_avail,
-                job,
-                models: &self.models,
-            };
-            let want = policy.decide(&ctx).clamp_to_job(job, obs_slot.avail);
-            log.emit(Event::Decision {
-                slot: t,
-                on_demand: want.on_demand,
-                spot: want.spot,
-            });
-            let grant = market.request(want.on_demand, want.spot);
-            let reconciled =
-                pool.reconcile_with(t, grant.on_demand, grant.spot, &mut log, inj);
-            if reconciled.launch_failures > 0 {
-                metrics.recovery.launch_shortfalls += reconciled.shortfall() as u64;
-                obs.emit(|| crate::obs::Event::Fault {
-                    round: t as u32,
-                    slot: t,
-                    fault: "launch",
-                    detail: reconciled.launch_failures as u64,
-                });
-                obs.add(Counter::Faults, reconciled.launch_failures as u64);
-            }
-            // The realized pool, not the grant: launch failures mean the
-            // leader trains on what it actually holds.
-            let total = pool.total();
-
-            let mu = self.models.reconfig.mu(prev_total, total);
-            // Seconds burned on recovery this slot — erodes μ below.
-            let mut slot_recovery = 0.0f64;
-
-            // Recover shard state onto replacement capacity. Ordered
-            // after reconcile: a restore needs instances to restore
-            // *onto*, so when preemption left zero capacity the
-            // transfer is skipped (deferred), not paid.
-            if needs_restore {
-                if total > 0 {
-                    let out = ckpt.restore_latest_valid(
-                        "latest",
-                        &trainer.store,
-                        t,
-                        self.cfg.max_retries,
-                        inj,
-                    );
-                    slot_recovery += out.wasted_secs;
-                    metrics.recovery.restore_retries += out.retries as u64;
-                    metrics.recovery.generations_walked += out.generations_walked as u64;
-                    metrics.recovery.recovery_secs += out.wasted_secs;
-                    match out.restored {
-                        Some(rep) => {
-                            let steps_lost =
-                                (trainer.store.step - rep.meta.step).max(0) as u64;
-                            metrics.recovery.steps_lost += steps_lost;
-                            trainer.restore(rep.store)?;
-                            // Progress is recomputed from the restored
-                            // snapshot: falling back means honestly
-                            // re-doing the lost slots. Fault-free the
-                            // latest generation carries the current
-                            // progress, so this is exact.
-                            progress = rep.meta.progress;
-                            log.emit(Event::CheckpointRestored {
-                                slot: t,
-                                bytes: rep.cost.bytes,
-                            });
-                            metrics.checkpoint_bytes_moved += rep.cost.bytes as u64;
-                            if out.retries > 0 || out.generations_walked > 0 {
-                                log.emit(Event::RecoveredFromGeneration {
-                                    slot: t,
-                                    gen: rep.meta.gen,
-                                    walked: out.generations_walked,
-                                    retries: out.retries,
-                                    steps_lost,
-                                });
-                            }
-                            let gens = out.generations_walked as u64;
-                            obs.emit(|| crate::obs::Event::Recovery {
-                                round: t as u32,
-                                slot: t,
-                                action: "restore",
-                                generations: gens,
-                                steps_lost,
-                            });
-                            obs.add(Counter::Recoveries, 1);
-                        }
-                        None => {
-                            // Last resort: no valid generation anywhere.
-                            let steps_lost = trainer.store.step.max(0) as u64;
-                            metrics.recovery.steps_lost += steps_lost;
-                            metrics.recovery.restarts_from_scratch += 1;
-                            trainer.restore(initial_store.clone())?;
-                            progress = 0.0;
-                            log.emit(Event::RestartedFromScratch { slot: t, steps_lost });
-                            obs.emit(|| crate::obs::Event::Recovery {
-                                round: t as u32,
-                                slot: t,
-                                action: "restart",
-                                generations: 0,
-                                steps_lost,
-                            });
-                            obs.add(Counter::Recoveries, 1);
-                        }
-                    }
-                    needs_restore = false;
-                } else if preempted > 0 && ckpt.exists("latest") {
-                    // No replacement capacity this slot: paying the
-                    // transfer now would be pure waste — defer it.
-                    let bytes = trainer.store.checkpoint_bytes();
-                    metrics.recovery.restores_skipped += 1;
-                    metrics.recovery.restore_bytes_saved += bytes as u64;
-                    log.emit(Event::RestoreSkipped { slot: t, bytes });
-                    obs.emit(|| crate::obs::Event::Recovery {
-                        round: t as u32,
-                        slot: t,
-                        action: "skip",
-                        generations: 0,
-                        steps_lost: 0,
-                    });
-                    obs.add(Counter::Recoveries, 1);
-                }
-            }
-
-            if total != prev_total {
-                metrics.reconfigs += 1;
-                log.emit(Event::Reconfigured {
-                    slot: t,
-                    from: prev_total,
-                    to: total,
-                    mu,
-                });
-                // Resizing moves a checkpoint to the new topology.
-                if trainer.store.step > 0 {
-                    slot_recovery += save_checkpoint(
-                        &mut ckpt,
-                        trainer,
-                        progress,
-                        t,
-                        self.cfg.max_retries,
-                        inj,
-                        &mut log,
-                        &mut metrics,
-                        obs,
-                        true,
-                    );
-                }
-            }
-
-            // Retry/corruption time is switching cost the scheduler
-            // feels: it erodes this slot's μ. The branch (rather than
-            // an unconditional multiply) keeps the fault-free path
-            // bit-identical.
-            let mu_eff = if slot_recovery > 0.0 {
-                mu * (1.0 - slot_recovery / self.cfg.slot_secs).max(0.0)
-            } else {
-                mu
-            };
-
-            // Execute: μ-scaled optimizer steps with `total` shards.
-            let mut losses = Vec::new();
-            let mut killed = None;
-            if total > 0 {
-                let planned = (((self.cfg.steps_per_slot as f64) * mu_eff).round()
-                    as usize)
-                    .max(1);
-                if slot_recovery > 0.0 {
-                    let clean = (((self.cfg.steps_per_slot as f64) * mu).round()
-                        as usize)
-                        .max(1);
-                    metrics.recovery.steps_eroded +=
-                        clean.saturating_sub(planned) as u64;
-                }
-                killed = inj.midslot_kill(t, planned).map(|k| k.min(planned));
-                let run_steps = killed.unwrap_or(planned);
-                for _ in 0..run_steps {
-                    let stats = trainer.step_parallel(total as usize)?;
-                    metrics.total_samples += stats.samples;
-                    metrics.record_loss(stats.step, stats.loss);
-                    log.emit(Event::TrainStep {
-                        slot: t,
-                        step: stats.step,
-                        loss: stats.loss,
-                        shards: stats.shards,
-                    });
-                    losses.push(stats.loss);
-                }
-                if let Some(after_step) = killed {
-                    // Shards died before the periodic save: everything
-                    // since the last checkpoint is lost, and this
-                    // slot's progress with it.
-                    metrics.recovery.midslot_preemptions += 1;
-                    log.emit(Event::MidSlotPreempted {
-                        slot: t,
-                        after_step,
-                        lost_shards: total,
-                    });
-                    obs.emit(|| crate::obs::Event::Fault {
-                        round: t as u32,
-                        slot: t,
-                        fault: "midslot",
-                        detail: after_step as u64,
-                    });
-                    obs.add(Counter::Faults, 1);
-                    if trainer.store.step > 0 {
-                        needs_restore = true;
-                    }
-                } else {
-                    // Periodic checkpoint so preemption recovery has a
-                    // base. The envelope records the post-slot progress:
-                    // restoring this generation resumes exactly here.
-                    let next_progress =
-                        progress + mu_eff * self.models.throughput.h(total);
-                    save_checkpoint(
-                        &mut ckpt,
-                        trainer,
-                        next_progress,
-                        t,
-                        self.cfg.max_retries,
-                        inj,
-                        &mut log,
-                        &mut metrics,
-                        obs,
-                        false,
-                    );
-                    progress = next_progress;
-                }
-            } else {
-                progress += mu_eff * self.models.throughput.h(total);
-            }
-
-            let mean_loss = if losses.is_empty() {
-                f32::NAN
-            } else {
-                losses.iter().sum::<f32>() / losses.len() as f32
-            };
-            metrics.record_slot(SlotRecord {
-                slot: t,
-                spot_price: obs_slot.spot_price,
-                avail: obs_slot.avail,
-                on_demand: grant.on_demand,
-                spot: grant.spot,
-                mu: mu_eff,
-                progress,
-                cost: grant.cost,
-                mean_loss,
-                steps: losses.len(),
-                preemptions: preempted,
-            });
-            log.emit(Event::SlotFinished {
-                slot: t,
-                progress,
-                cost: grant.cost,
-            });
-
-            prev_total = total;
-            prev_avail = obs_slot.avail;
-            market.advance();
-            if progress >= job.workload - 1e-9 {
-                completion_slot = Some(t + 1);
+            let step =
+                engine.step(t, job, &mut market, policy, trainer, &mut ckpt, "latest", inj, obs)?;
+            if step.completed {
                 break;
             }
         }
 
-        metrics.preemptions = pool.total_preemptions;
-        let pre_cost = market.total_cost;
-        let (value, cost, completion) = match completion_slot {
-            Some(t) => {
-                log.emit(Event::JobCompleted {
-                    slot: t - 1,
-                    utility: job.value_at(t as f64) - pre_cost,
-                });
-                (job.value_at(t as f64), pre_cost, t)
-            }
-            None => {
-                let remaining = job.workload - progress;
-                log.emit(Event::DeadlineMissed {
-                    slot: job.deadline,
-                    remaining,
-                });
-                // Termination config: on-demand at N^max until done
-                // (same accounting as sched::simulate).
-                let g = self.models.throughput.h(job.n_max);
-                let first = self.models.reconfig.mu_up * g;
-                let extra = if remaining <= first {
-                    1
-                } else {
-                    1 + ((remaining - first) / g).ceil() as usize
-                };
-                let slots_run = metrics.slots.len();
-                let t = slots_run + extra;
-                let term_cost =
-                    extra as f64 * job.n_max as f64 * self.models.on_demand_price;
-                (job.value_at(t as f64), pre_cost + term_cost, t)
-            }
-        };
-
-        if self.cfg.ephemeral_dir {
-            ckpt.cleanup();
-        }
-
-        Ok(RunOutcome {
-            utility: value - cost,
-            value,
-            cost,
-            completion_slot: completion,
-            on_time: completion <= job.deadline,
-            metrics,
-            events: log,
-        })
+        Ok(engine.finish(job, market.total_cost))
     }
 }
 

@@ -2,9 +2,12 @@
 //! CSV for the figures and EXPERIMENTS.md.
 //!
 //! Export goes through the shared [`crate::obs::sink`] typed-row writer
-//! so every CSV the crate emits uses one formatting/quoting path; the
-//! column set and per-column precision here are unchanged — they are a
-//! byte-compatibility contract with existing figure scripts.
+//! so every CSV the crate emits uses one formatting/quoting path. The
+//! historical column set and per-column precision are a
+//! byte-compatibility contract with existing figure scripts: new
+//! columns (`shortfall`) are only ever *appended*, and
+//! `csv_columns_match_the_legacy_format_exactly` pins the legacy
+//! prefix byte for byte.
 
 use std::path::Path;
 
@@ -24,6 +27,10 @@ pub struct SlotRecord {
     pub mean_loss: f32,
     pub steps: usize,
     pub preemptions: u32,
+    /// Instances the slot's reconcile wanted but could not launch
+    /// ([`crate::coordinator::instances::ReconcileReport::shortfall`]) —
+    /// the signal the fleet's failover ladder keys on.
+    pub shortfall: u32,
 }
 
 /// Degraded-mode recovery accounting: what faults cost the run. All
@@ -56,6 +63,25 @@ pub struct RecoveryStats {
     pub recovery_secs: f64,
     /// Optimizer steps the recovery_secs erosion cost the run.
     pub steps_eroded: u64,
+}
+
+impl RecoveryStats {
+    /// Fold another run's stats into this one — the fleet-level rollup
+    /// across jobs.
+    pub fn absorb(&mut self, other: &RecoveryStats) {
+        self.save_retries += other.save_retries;
+        self.save_failures += other.save_failures;
+        self.restore_retries += other.restore_retries;
+        self.generations_walked += other.generations_walked;
+        self.steps_lost += other.steps_lost;
+        self.restarts_from_scratch += other.restarts_from_scratch;
+        self.launch_shortfalls += other.launch_shortfalls;
+        self.midslot_preemptions += other.midslot_preemptions;
+        self.restores_skipped += other.restores_skipped;
+        self.restore_bytes_saved += other.restore_bytes_saved;
+        self.recovery_secs += other.recovery_secs;
+        self.steps_eroded += other.steps_eroded;
+    }
 }
 
 /// Aggregated metrics for a coordinated run.
@@ -103,8 +129,10 @@ impl Metrics {
         Some(head.iter().map(|(_, l)| l).sum::<f32>() / head.len() as f32)
     }
 
-    /// Write the per-slot table to CSV (columns and precision are a
-    /// stability contract — do not change them).
+    /// Write the per-slot table to CSV. The legacy columns and their
+    /// precision are a stability contract — never change or reorder
+    /// them; new columns append on the right (`shortfall` surfaces the
+    /// reconcile's unmet launches).
     pub fn write_slots_csv(&self, path: &Path) -> std::io::Result<()> {
         let rows: Vec<Vec<Cell>> = self
             .slots
@@ -122,6 +150,7 @@ impl Metrics {
                     Cell::F32(r.mean_loss, 4),
                     Cell::UInt(r.steps as u64),
                     Cell::UInt(r.preemptions as u64),
+                    Cell::UInt(r.shortfall as u64),
                 ]
             })
             .collect();
@@ -130,6 +159,7 @@ impl Metrics {
             &[
                 "slot", "spot_price", "avail", "on_demand", "spot", "mu",
                 "progress", "cost", "mean_loss", "steps", "preemptions",
+                "shortfall",
             ],
             &rows,
         )?;
@@ -165,6 +195,7 @@ mod tests {
             mean_loss: 3.0,
             steps: 4,
             preemptions: 0,
+            shortfall: 0,
         }
     }
 
@@ -206,7 +237,8 @@ mod tests {
     #[test]
     fn csv_columns_match_the_legacy_format_exactly() {
         // Routing through the shared obs sink must reproduce the
-        // historical hand-formatted rows byte for byte.
+        // historical hand-formatted rows byte for byte; new columns
+        // (shortfall) may only append after the legacy prefix.
         let mut m = Metrics::new();
         m.record_slot(SlotRecord {
             slot: 3,
@@ -220,6 +252,7 @@ mod tests {
             mean_loss: 2.71828,
             steps: 9,
             preemptions: 1,
+            shortfall: 2,
         });
         m.record_loss(-1, 0.333_333);
         let dir = std::env::temp_dir()
@@ -227,13 +260,44 @@ mod tests {
         m.write_slots_csv(&dir.join("slots.csv")).unwrap();
         m.write_loss_csv(&dir.join("loss.csv")).unwrap();
         let slots = std::fs::read_to_string(dir.join("slots.csv")).unwrap();
-        let expect = format!(
+        let legacy = format!(
             "3,{:.4},7,2,5,{:.3},{:.2},{:.4},{:.4},9,1",
             0.12345, 0.8, 12.3456, 1.98765, 2.71828f32
         );
-        assert_eq!(slots.lines().nth(1).unwrap(), expect);
+        let row = slots.lines().nth(1).unwrap();
+        assert!(
+            row.starts_with(&legacy),
+            "legacy columns must stay byte-identical: {row}"
+        );
+        assert_eq!(row, format!("{legacy},2"), "shortfall appends on the right");
+        let header = slots.lines().next().unwrap();
+        assert!(header.starts_with("slot,spot_price,"));
+        assert!(header.ends_with(",preemptions,shortfall"));
         let loss = std::fs::read_to_string(dir.join("loss.csv")).unwrap();
         assert_eq!(loss.lines().nth(1).unwrap(), format!("-1,{:.6}", 0.333_333f32));
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn recovery_stats_absorb_sums_fieldwise() {
+        let mut a = RecoveryStats {
+            save_retries: 1,
+            steps_lost: 5,
+            recovery_secs: 1.5,
+            ..RecoveryStats::default()
+        };
+        let b = RecoveryStats {
+            save_retries: 2,
+            restarts_from_scratch: 1,
+            launch_shortfalls: 4,
+            recovery_secs: 0.5,
+            ..RecoveryStats::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.save_retries, 3);
+        assert_eq!(a.steps_lost, 5);
+        assert_eq!(a.restarts_from_scratch, 1);
+        assert_eq!(a.launch_shortfalls, 4);
+        assert!((a.recovery_secs - 2.0).abs() < 1e-12);
     }
 }

@@ -7,12 +7,17 @@
 pub mod checkpoint;
 pub mod events;
 pub mod faults;
+pub mod fleet;
 pub mod instances;
 pub mod leader;
 pub mod metrics;
 
-pub use checkpoint::{CheckpointManager, GenerationMeta, SwitchCost};
+pub use checkpoint::{CheckpointManager, EphemeralDir, GenerationMeta, SwitchCost};
 pub use faults::{FaultConfig, FaultInjector, FaultPlan, NoFaults};
+pub use fleet::{
+    FleetConfig, FleetCoordinator, FleetJob, FleetJobOutcome, FleetOutcome, FleetStore,
+    RegionRecovery,
+};
 pub use instances::{InstanceKind, InstancePool, ReconcileReport};
-pub use leader::{Leader, LeaderConfig, RunOutcome, SlotReport};
+pub use leader::{Leader, LeaderConfig, RunOutcome, SlotEngine, SlotReport, SlotStepReport};
 pub use metrics::{Metrics, RecoveryStats};

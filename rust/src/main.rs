@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train        end-to-end: schedule + really fine-tune via PJRT
+//!   train-fleet  many training loops at once: per-region markets,
+//!                shared checkpoint store, region-scoped faults
 //!   simulate     run one policy on one job/market (fast, no training)
 //!   fleet        multi-job multi-region fleet with shared capacity
 //!   compare      policy comparison table on sampled jobs (Fig. 5 row)
@@ -20,6 +22,7 @@ use std::process::ExitCode;
 use spotfine::cli::args::Args;
 use spotfine::config::schema::ExperimentConfig;
 use spotfine::coordinator::faults::FaultPlan;
+use spotfine::coordinator::fleet::{FleetConfig, FleetCoordinator, FleetJob};
 use spotfine::coordinator::leader::{Leader, LeaderConfig};
 use spotfine::fleet::{
     available_threads, run_fleet_selection_observed, run_fleet_sweep,
@@ -54,6 +57,10 @@ COMMANDS:
   train      end-to-end fine-tune under a scheduling policy (PJRT or
              the artifact-free synthetic backend), with optional
              seeded fault injection
+  train-fleet  many concurrent *training* loops against per-region spot
+             markets and one shared crash-safe checkpoint store, with
+             region-scoped fault domains (outages, preemption storms,
+             checkpoint-store brownouts) and a failover recovery ladder
   simulate   one policy x one job on a synthetic market
   fleet      many concurrent jobs across regional spot markets with
              shared capacity, priority arbitration and migration
@@ -87,11 +94,26 @@ TRAIN FLAGS:
   --faults <spec>       seeded fault plan: comma-separated clauses,
                         each `kind=prob` or `kind@s1+s2+...` (slots),
                         kinds: save | torn | read | midslot | launch |
-                        launch-od (e.g. \"midslot@1,torn@2,launch=0.25\")
+                        launch-od (e.g. \"midslot@1,torn@2,launch=0.25\");
+                        region-scoped kinds (train-fleet): storm=p or
+                        storm@R:S+... (correlated preemption storms),
+                        region@R:S..E+... (regional outage windows),
+                        brownout@S..E+... (checkpoint-store brownouts)
   --fault-seed <u64>    fault-plan RNG seed (default: --seed)
   --retain <n>          checkpoint generations kept in the ring
                         (default from config [coordinator], 3)
   --max-retries <n>     checkpoint save/read retry budget (default 2)
+
+TRAIN-FLEET FLAGS (plus the train fault/checkpoint flags above):
+  --jobs <n>            concurrent training jobs (default 4)
+  --regions <n>         regional spot markets (default 2)
+  --workload <L>        per-job workload (default 60)
+  --deadline <d>        per-job deadline in slots (default 12)
+  --threads <n>         worker threads (results thread-count-invariant)
+  --failover-after <k>  outage-starved slots before a job fails over
+                        (default from config [coordinator], 1)
+  --out <dir>           write per-region recovery counters to
+                        <dir>/regions.csv
 
 FLEET FLAGS:
   --jobs <n>            concurrent jobs in the fleet (default 16)
@@ -270,6 +292,7 @@ fn run() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("train-fleet") => cmd_train_fleet(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("fleet") => cmd_fleet(&args),
         Some("compare") => cmd_compare(&args),
@@ -411,6 +434,168 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         out.metrics.write_slots_csv(&dir.join("slots.csv"))?;
         out.metrics.write_loss_csv(&dir.join("loss.csv"))?;
         eprintln!("wrote {}/slots.csv and loss.csv", dir.display());
+    }
+    obs.emit(&rec)?;
+    Ok(())
+}
+
+fn cmd_train_fleet(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let seed = args.get_u64("seed", cfg.seed)?;
+    let policy_spec = parse_policy(&args.get_string("policy", "msu"))?;
+    let steps_per_slot = args.get_usize("steps-per-slot", 4)?;
+    let workload = args.get_f64("workload", 60.0)?;
+    let deadline = args.get_usize("deadline", 12)?;
+    let noise = args.get_f64("noise", 0.1)?;
+    let n_jobs = args.get_usize("jobs", 4)?.max(1);
+    let n_regions = args.get_usize("regions", 2)?.max(1);
+    let threads = args.get_usize("threads", 1)?.max(1);
+
+    match args.get_string("backend", "synthetic").as_str() {
+        "synthetic" => {
+            eprintln!("[train-fleet] backend: synthetic (artifact-free)")
+        }
+        other => anyhow::bail!(
+            "train-fleet supports only --backend synthetic for now (got `{other}`)"
+        ),
+    }
+
+    let fault_seed = args.get_u64("fault-seed", seed)?;
+    let plan = match args.get("faults") {
+        Some(spec) => FaultPlan::parse(spec, fault_seed)?,
+        None => FaultPlan::none(),
+    };
+
+    let gen = TraceGenerator::new(cfg.market.clone());
+    let regions: Vec<SpotTrace> = (0..n_regions)
+        .map(|r| gen.generate(seed.wrapping_add(r as u64)).slice_from(37))
+        .collect();
+    let specs: Vec<FleetJob> = (0..n_jobs)
+        .map(|j| FleetJob {
+            job: Job {
+                workload,
+                deadline,
+                n_min: 1,
+                n_max: 12,
+                value: 1.5 * workload,
+                gamma: 1.5,
+            },
+            region: j % n_regions,
+        })
+        .collect();
+    // One policy environment per job, over its home region's market.
+    let envs: Vec<PolicyEnv> = specs
+        .iter()
+        .enumerate()
+        .map(|(j, spec)| {
+            PolicyEnv::new(
+                PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(noise)),
+                regions[spec.region].clone(),
+                seed.wrapping_add(j as u64),
+            )
+        })
+        .collect();
+
+    let fleet = FleetCoordinator::new(
+        FleetConfig {
+            leader: LeaderConfig {
+                steps_per_slot,
+                bandwidth_mbps: args.get_f64("bandwidth", 800.0)?,
+                retain: args.get_usize("retain", cfg.coordinator.retain)?.max(1),
+                max_retries: args
+                    .get_usize("max-retries", cfg.coordinator.max_retries)?,
+                slot_secs: cfg.coordinator.slot_secs,
+                verbose: args.get_bool("verbose"),
+                ..LeaderConfig::default()
+            },
+            failover_after: args
+                .get_usize("failover-after", cfg.coordinator.failover_after)?
+                .max(1),
+            threads,
+        },
+        cfg.models,
+    );
+    let obs = ObsCli::from_args(args, &cfg);
+    let rec = obs.recorder();
+    let make_policy = |j: usize| policy_spec.build(&envs[j]);
+    let make_trainer = |_: usize| Trainer::synthetic(TrainerConfig::default());
+    let out = fleet.run(
+        &regions,
+        &specs,
+        &make_policy,
+        &make_trainer,
+        &plan.cfg,
+        fault_seed,
+        &rec,
+    )?;
+
+    eprintln!(
+        "train-fleet: {n_jobs} job(s) x {n_regions} region(s), {threads} thread(s)"
+    );
+    let mut t = Table::new(&[
+        "job", "region", "utility", "cost", "done", "on-time", "failovers",
+    ]);
+    for (j, jo) in out.jobs.iter().enumerate() {
+        t.row(&[
+            format!("{j}"),
+            if specs[j].region == jo.final_region {
+                format!("{}", jo.final_region)
+            } else {
+                format!("{}->{}", specs[j].region, jo.final_region)
+            },
+            f(jo.outcome.utility, 2),
+            f(jo.outcome.cost, 2),
+            format!("{}", jo.outcome.completion_slot),
+            if jo.outcome.on_time { "yes".into() } else { "NO".into() },
+            format!("{}", jo.failovers),
+        ]);
+    }
+    t.print();
+
+    if args.get("faults").is_some() {
+        let rs = &out.recovery;
+        println!("region faults     {} scheduled", out.region_faults_injected);
+        println!(
+            "brownouts         {} slot(s), {} save(s) failed",
+            out.brownout_slots, out.brownout_saves_failed
+        );
+        println!(
+            "save retries      {} ({} save(s) exhausted retries)",
+            rs.save_retries, rs.save_failures
+        );
+        println!(
+            "restore retries   {} ({} generation(s) walked past)",
+            rs.restore_retries, rs.generations_walked
+        );
+        println!("midslot kills     {}", rs.midslot_preemptions);
+        println!("launch shortfall  {}", rs.launch_shortfalls);
+        println!("restarts          {}", rs.restarts_from_scratch);
+        println!(
+            "restores skipped  {} ({} checkpoint bytes not moved)",
+            rs.restores_skipped, rs.restore_bytes_saved
+        );
+        println!("steps lost        {} (+{} eroded)", rs.steps_lost, rs.steps_eroded);
+        let mut rt = Table::new(&[
+            "region", "outage slots", "storms", "storm preempts",
+            "shortfall", "failed over out", "in",
+        ]);
+        for (r, s) in out.regions.iter().enumerate() {
+            rt.row(&[
+                format!("{r}"),
+                format!("{}", s.outage_slots),
+                format!("{}", s.storms),
+                format!("{}", s.storm_preemptions),
+                format!("{}", s.launch_shortfalls),
+                format!("{}", s.failovers_out),
+                format!("{}", s.failovers_in),
+            ]);
+        }
+        rt.print();
+    }
+    if let Some(dir) = args.get("out") {
+        let dir = PathBuf::from(dir);
+        out.write_region_csv(&dir.join("regions.csv"))?;
+        eprintln!("wrote {}/regions.csv", dir.display());
     }
     obs.emit(&rec)?;
     Ok(())

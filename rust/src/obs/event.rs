@@ -79,22 +79,61 @@ pub enum Event {
     /// An injected or real fault the coordinator absorbed (checkpoint
     /// write error, mid-slot kill, launch failure). `detail` is
     /// fault-specific: retries for `save_io`, the step survived for
-    /// `midslot`, failed launches for `launch`.
+    /// `midslot`, failed launches for `launch`. `job` keys the event to
+    /// the fleet job that felt it (0 for standalone leader runs) so
+    /// merged fleet traces stay deterministic across thread counts.
     Fault {
         round: u32,
         slot: usize,
+        job: usize,
         fault: &'static str,
         detail: u64,
     },
     /// One recovery action the leader took: `restore` (from a
     /// checkpoint generation), `restart` (from scratch), or `skip`
-    /// (restore deferred for lack of capacity).
+    /// (restore deferred for lack of capacity). `job` keys the event to
+    /// the fleet job recovering (0 for standalone leader runs).
     Recovery {
         round: u32,
         slot: usize,
+        job: usize,
         action: &'static str,
         generations: u64,
         steps_lost: u64,
+    },
+    /// A scripted regional outage slot: the region's launch capacity is
+    /// zero, so every launch there reports insufficient capacity.
+    /// `jobs_affected` counts the fleet jobs resident in the region.
+    RegionOutage {
+        round: u32,
+        slot: usize,
+        region: usize,
+        jobs_affected: u64,
+    },
+    /// A correlated preemption storm: one draw killed every spot
+    /// instance in the region this slot, across all resident jobs.
+    PreemptionStorm {
+        round: u32,
+        slot: usize,
+        region: usize,
+        instances_lost: u64,
+        jobs_hit: u64,
+    },
+    /// A checkpoint-store brownout slot: every save to the shared store
+    /// failed transiently (`saves_failed` attempts across the fleet).
+    Brownout {
+        round: u32,
+        slot: usize,
+        saves_failed: u64,
+    },
+    /// The fleet's recovery ladder moved a job to a surviving region
+    /// after a regional outage starved its launches.
+    Failover {
+        round: u32,
+        slot: usize,
+        job: usize,
+        from: usize,
+        to: usize,
     },
     /// One delta-replay counterfactual's verdict for a candidate.
     Replay {
@@ -174,6 +213,10 @@ impl Event {
             Event::Migration { .. } => "migration",
             Event::Fault { .. } => "fault",
             Event::Recovery { .. } => "recovery",
+            Event::RegionOutage { .. } => "region_outage",
+            Event::PreemptionStorm { .. } => "preemption_storm",
+            Event::Brownout { .. } => "brownout",
+            Event::Failover { .. } => "failover",
             Event::Replay { .. } => "replay",
             Event::ReplayCache { .. } => "replay_cache",
             Event::ForecastCache { .. } => "forecast_cache",
@@ -196,9 +239,27 @@ impl Event {
             Event::Migration { round, slot, job, phase, .. } => {
                 k(*round, *slot as u32, *job as u32, phase.rank(), 2)
             }
-            Event::Fault { round, slot, .. } => k(*round, *slot as u32, END, END, 3),
-            Event::Recovery { round, slot, .. } => {
-                k(*round, *slot as u32, END, END, 4)
+            // Region-domain events (k2 0/1) sort before per-job faults
+            // (k2 END) at the same slot; `job` in k1 keeps same-slot
+            // events from different fleet jobs on distinct keys, which
+            // is what makes merged fleet traces thread-count-invariant.
+            Event::RegionOutage { round, slot, region, .. } => {
+                k(*round, *slot as u32, *region as u32, 0, 3)
+            }
+            Event::PreemptionStorm { round, slot, region, .. } => {
+                k(*round, *slot as u32, *region as u32, 1, 3)
+            }
+            Event::Brownout { round, slot, .. } => k(*round, *slot as u32, END, 0, 3),
+            Event::Fault { round, slot, job, .. } => {
+                k(*round, *slot as u32, *job as u32, END, 3)
+            }
+            // A job's failover precedes its recovery at the same slot
+            // (k2 0 < END).
+            Event::Failover { round, slot, job, .. } => {
+                k(*round, *slot as u32, *job as u32, 0, 4)
+            }
+            Event::Recovery { round, slot, job, .. } => {
+                k(*round, *slot as u32, *job as u32, END, 4)
             }
             Event::Replay { round, candidate, .. } => {
                 k(*round, END, *candidate as u32, END, 6)
@@ -253,18 +314,45 @@ impl Event {
                 str_field(&mut s, "phase", phase.as_str());
                 opt_str(&mut s, "reason", *reason);
             }
-            Event::Fault { round, slot, fault, detail } => {
+            Event::Fault { round, slot, job, fault, detail } => {
                 num(&mut s, "round", *round as u64);
                 num(&mut s, "slot", *slot as u64);
+                num(&mut s, "job", *job as u64);
                 str_field(&mut s, "fault", fault);
                 num(&mut s, "detail", *detail);
             }
-            Event::Recovery { round, slot, action, generations, steps_lost } => {
+            Event::Recovery { round, slot, job, action, generations, steps_lost } => {
                 num(&mut s, "round", *round as u64);
                 num(&mut s, "slot", *slot as u64);
+                num(&mut s, "job", *job as u64);
                 str_field(&mut s, "action", action);
                 num(&mut s, "generations", *generations);
                 num(&mut s, "steps_lost", *steps_lost);
+            }
+            Event::RegionOutage { round, slot, region, jobs_affected } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "slot", *slot as u64);
+                num(&mut s, "region", *region as u64);
+                num(&mut s, "jobs_affected", *jobs_affected);
+            }
+            Event::PreemptionStorm { round, slot, region, instances_lost, jobs_hit } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "slot", *slot as u64);
+                num(&mut s, "region", *region as u64);
+                num(&mut s, "instances_lost", *instances_lost);
+                num(&mut s, "jobs_hit", *jobs_hit);
+            }
+            Event::Brownout { round, slot, saves_failed } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "slot", *slot as u64);
+                num(&mut s, "saves_failed", *saves_failed);
+            }
+            Event::Failover { round, slot, job, from, to } => {
+                num(&mut s, "round", *round as u64);
+                num(&mut s, "slot", *slot as u64);
+                num(&mut s, "job", *job as u64);
+                num(&mut s, "from", *from as u64);
+                num(&mut s, "to", *to as u64);
             }
             Event::Replay {
                 round,
@@ -521,10 +609,11 @@ mod tests {
 
     #[test]
     fn fault_sorts_before_recovery_at_the_same_slot() {
-        let f = Event::Fault { round: 1, slot: 3, fault: "save_io", detail: 2 };
+        let f = Event::Fault { round: 1, slot: 3, job: 0, fault: "save_io", detail: 2 };
         let r = Event::Recovery {
             round: 1,
             slot: 3,
+            job: 0,
             action: "restore",
             generations: 1,
             steps_lost: 4,
@@ -532,6 +621,39 @@ mod tests {
         assert!(f.key() < r.key(), "the fault precedes its recovery");
         assert!(f.to_json().starts_with("{\"kind\":\"fault\""));
         assert!(r.to_json().contains("\"action\":\"restore\""));
+    }
+
+    #[test]
+    fn region_fault_domains_sort_before_per_job_faults() {
+        let outage = Event::RegionOutage { round: 0, slot: 3, region: 1, jobs_affected: 2 };
+        let storm = Event::PreemptionStorm {
+            round: 0,
+            slot: 3,
+            region: 1,
+            instances_lost: 5,
+            jobs_hit: 2,
+        };
+        let brown = Event::Brownout { round: 0, slot: 3, saves_failed: 4 };
+        let fault = Event::Fault { round: 0, slot: 3, job: 1, fault: "launch", detail: 3 };
+        assert!(outage.key() < storm.key(), "outage precedes storm per region");
+        assert!(storm.key() < brown.key(), "region domains precede the store domain");
+        assert!(brown.key() < fault.key(), "domain events precede per-job faults");
+        // A job's failover precedes its recovery narration.
+        let fo = Event::Failover { round: 0, slot: 3, job: 1, from: 0, to: 1 };
+        let rec = Event::Recovery {
+            round: 0,
+            slot: 3,
+            job: 1,
+            action: "restore",
+            generations: 0,
+            steps_lost: 0,
+        };
+        assert!(fault.key() < fo.key());
+        assert!(fo.key() < rec.key());
+        // Distinct jobs get distinct keys at the same slot — the
+        // property fleet-trace thread invariance rests on.
+        let other = Event::Fault { round: 0, slot: 3, job: 2, fault: "launch", detail: 1 };
+        assert!(fault.key() < other.key());
     }
 
     #[test]

@@ -6,7 +6,8 @@
 //! ([`crate::obs::EventKey`]) and, at the emission sites instrumented in
 //! this crate, *same-key* events are only ever produced by one thread
 //! (engine runs are single-threaded; replay verdicts key on the
-//! candidate index each worker owns). The merge sorts by (key, per-
+//! candidate index each worker owns; fleet fault/recovery events key
+//! on the job index each worker owns). The merge sorts by (key, per-
 //! thread sequence, serialized line), so the merged stream — like the
 //! `FleetResult`s it narrates — is invariant to thread count and
 //! scheduling. Solver/summary lines are wall-clock aggregates appended
@@ -34,10 +35,14 @@ pub enum Counter {
     Rounds,
     Faults,
     Recoveries,
+    /// Region-domain fault events (outages, storms, brownouts).
+    RegionFaults,
+    /// Jobs the fleet's ladder moved to a surviving region.
+    Failovers,
 }
 
 impl Counter {
-    pub const COUNT: usize = 11;
+    pub const COUNT: usize = 13;
 
     pub const ALL: [Counter; Counter::COUNT] = [
         Counter::Arbitrations,
@@ -51,6 +56,8 @@ impl Counter {
         Counter::Rounds,
         Counter::Faults,
         Counter::Recoveries,
+        Counter::RegionFaults,
+        Counter::Failovers,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -66,6 +73,8 @@ impl Counter {
             Counter::Rounds => "rounds",
             Counter::Faults => "faults",
             Counter::Recoveries => "recoveries",
+            Counter::RegionFaults => "region_faults",
+            Counter::Failovers => "failovers",
         }
     }
 
@@ -82,6 +91,8 @@ impl Counter {
             Counter::Rounds => 8,
             Counter::Faults => 9,
             Counter::Recoveries => 10,
+            Counter::RegionFaults => 11,
+            Counter::Failovers => 12,
         }
     }
 }

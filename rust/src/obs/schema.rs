@@ -133,6 +133,7 @@ pub const SCHEMA: &[(&str, &[(&str, FieldType)])] = &[
         &[
             ("round", FieldType::Num),
             ("slot", FieldType::Num),
+            ("job", FieldType::Num),
             ("fault", FieldType::Str),
             ("detail", FieldType::Num),
         ],
@@ -142,9 +143,47 @@ pub const SCHEMA: &[(&str, &[(&str, FieldType)])] = &[
         &[
             ("round", FieldType::Num),
             ("slot", FieldType::Num),
+            ("job", FieldType::Num),
             ("action", FieldType::Str),
             ("generations", FieldType::Num),
             ("steps_lost", FieldType::Num),
+        ],
+    ),
+    (
+        "region_outage",
+        &[
+            ("round", FieldType::Num),
+            ("slot", FieldType::Num),
+            ("region", FieldType::Num),
+            ("jobs_affected", FieldType::Num),
+        ],
+    ),
+    (
+        "preemption_storm",
+        &[
+            ("round", FieldType::Num),
+            ("slot", FieldType::Num),
+            ("region", FieldType::Num),
+            ("instances_lost", FieldType::Num),
+            ("jobs_hit", FieldType::Num),
+        ],
+    ),
+    (
+        "brownout",
+        &[
+            ("round", FieldType::Num),
+            ("slot", FieldType::Num),
+            ("saves_failed", FieldType::Num),
+        ],
+    ),
+    (
+        "failover",
+        &[
+            ("round", FieldType::Num),
+            ("slot", FieldType::Num),
+            ("job", FieldType::Num),
+            ("from", FieldType::Num),
+            ("to", FieldType::Num),
         ],
     ),
     (
@@ -476,14 +515,25 @@ mod tests {
                 dp_total_us: 80,
                 dp_hist_us: vec![0; 11],
             },
-            Event::Fault { round: 2, slot: 7, fault: "save_io", detail: 1 },
+            Event::Fault { round: 2, slot: 7, job: 0, fault: "save_io", detail: 1 },
             Event::Recovery {
                 round: 2,
                 slot: 8,
+                job: 0,
                 action: "restore",
                 generations: 1,
                 steps_lost: 4,
             },
+            Event::RegionOutage { round: 0, slot: 4, region: 1, jobs_affected: 3 },
+            Event::PreemptionStorm {
+                round: 0,
+                slot: 4,
+                region: 1,
+                instances_lost: 6,
+                jobs_hit: 2,
+            },
+            Event::Brownout { round: 0, slot: 5, saves_failed: 4 },
+            Event::Failover { round: 0, slot: 6, job: 2, from: 0, to: 1 },
             Event::Summary {
                 events: 9,
                 dropped: 0,

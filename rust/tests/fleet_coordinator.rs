@@ -1,0 +1,419 @@
+//! Fleet-coordinator properties — artifact-free (synthetic backend):
+//!
+//! - a fault-free 1-job/1-region fleet is bit-identical to the plain
+//!   `Leader::run` (the degeneracy the whole module is pinned to),
+//! - seeded fault runs are reproducible and thread-count-invariant,
+//!   down to the merged JSONL trace,
+//! - checkpoint/storm/brownout faults never inflate progress past the
+//!   clean fleet run,
+//! - an all-regions-out window forces deferral in place — never a
+//!   failover to nowhere, never an `Err`,
+//! - every scheduled region-scoped fault is accounted for in the
+//!   trace, schema-valid,
+//! - `FleetStore::reopen` walks past corrupt generations and tolerates
+//!   jobs that never saved,
+//! - the per-region recovery CSV keeps its column contract.
+
+use std::path::{Path, PathBuf};
+
+use spotfine::coordinator::fleet::{
+    FleetConfig, FleetCoordinator, FleetJob, FleetOutcome, FleetStore, RegionRecovery,
+};
+use spotfine::coordinator::faults::{FaultConfig, FaultPlan};
+use spotfine::coordinator::leader::{Leader, LeaderConfig};
+use spotfine::coordinator::metrics::RecoveryStats;
+use spotfine::market::trace::SpotTrace;
+use spotfine::obs::schema::validate_line;
+use spotfine::obs::summary::RunLog;
+use spotfine::obs::Recorder;
+use spotfine::sched::job::Job;
+use spotfine::sched::policy::{Allocation, Models, Policy, SlotContext};
+use spotfine::train::trainer::{Trainer, TrainerConfig};
+
+/// A constant-allocation policy, as in the leader property tests.
+struct Fixed(u32, u32);
+
+impl Policy for Fixed {
+    fn reset(&mut self) {}
+    fn decide(&mut self, _: &SlotContext) -> Allocation {
+        Allocation::new(self.0, self.1)
+    }
+    fn name(&self) -> String {
+        "Fixed".into()
+    }
+}
+
+/// A policy factory the fleet can call per job from worker threads.
+fn fixed_policy(od: u32, spot: u32) -> impl Fn(usize) -> Box<dyn Policy> + Sync {
+    move |_: usize| -> Box<dyn Policy> { Box::new(Fixed(od, spot)) }
+}
+
+fn synthetic_trainer(_: usize) -> anyhow::Result<Trainer> {
+    Trainer::synthetic(TrainerConfig::default())
+}
+
+fn job(workload: f64, deadline: usize) -> Job {
+    Job { workload, deadline, n_min: 1, n_max: 6, value: 1.5 * workload, gamma: 1.5 }
+}
+
+fn tmpdir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("spotfine_fleet_{}_{name}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn fleet(dir: &Path, threads: usize, ephemeral: bool) -> FleetCoordinator {
+    FleetCoordinator::new(
+        FleetConfig {
+            leader: LeaderConfig {
+                steps_per_slot: 2,
+                checkpoint_dir: dir.to_path_buf(),
+                ephemeral_dir: ephemeral,
+                ..LeaderConfig::default()
+            },
+            failover_after: 1,
+            threads,
+        },
+        Models::paper_default(),
+    )
+}
+
+fn parse(spec: &str) -> FaultConfig {
+    FaultPlan::parse(spec, 0).unwrap().cfg
+}
+
+/// The merged event lines of a trace, without the solver-timing and
+/// summary trailers (which carry wall-clock measurements).
+fn event_lines(log: &RunLog) -> &[String] {
+    &log.lines[..log.lines.len() - 2]
+}
+
+#[test]
+fn fault_free_single_job_fleet_degenerates_to_leader_run() {
+    // Availability dips at slot 2, so both paths exercise a real
+    // preemption + checkpoint restore, not just the happy path.
+    let j = job(20.0, 6);
+    let trace = SpotTrace::new(
+        vec![0.4, 0.5, 0.3, 0.4, 0.5, 0.4],
+        vec![4, 4, 2, 4, 4, 4],
+    );
+    let mut ta = synthetic_trainer(0).unwrap();
+    let a = Leader::new(
+        LeaderConfig { steps_per_slot: 2, ..LeaderConfig::default() },
+        Models::paper_default(),
+    )
+    .run(&j, &trace, &mut Fixed(1, 3), &mut ta)
+    .unwrap();
+
+    let dir = tmpdir("degeneracy");
+    let out = fleet(&dir, 1, true)
+        .run(
+            &[trace.clone()],
+            &[FleetJob { job: j, region: 0 }],
+            &fixed_policy(1, 3),
+            &synthetic_trainer,
+            &FaultConfig::default(),
+            42,
+            &Recorder::disabled(),
+        )
+        .unwrap();
+    assert_eq!(out.jobs.len(), 1);
+    let b = &out.jobs[0];
+
+    // Bit-for-bit: the fleet path must not perturb a single operation.
+    assert_eq!(a.utility.to_bits(), b.outcome.utility.to_bits());
+    assert_eq!(a.value.to_bits(), b.outcome.value.to_bits());
+    assert_eq!(a.cost.to_bits(), b.outcome.cost.to_bits());
+    assert_eq!(a.completion_slot, b.outcome.completion_slot);
+    assert_eq!(a.on_time, b.outcome.on_time);
+    assert_eq!(a.metrics.slots, b.outcome.metrics.slots);
+    assert_eq!(a.metrics.losses, b.outcome.metrics.losses);
+    assert_eq!(a.events.all(), b.outcome.events.all());
+    assert_eq!(ta.store, b.store, "trainer parameters must march in lockstep");
+
+    // Fault-free: the recovery ledger is all zeros at every level.
+    assert_eq!(out.recovery, RecoveryStats::default());
+    assert_eq!(out.regions, vec![RegionRecovery::default()]);
+    assert_eq!(out.brownout_slots, 0);
+    assert_eq!(out.brownout_saves_failed, 0);
+    assert_eq!(out.region_faults_injected, 0);
+    assert_eq!(b.failovers, 0);
+    assert_eq!(b.final_region, 0);
+    assert!(b.region_by_slot.iter().all(|&r| r == 0));
+    assert!(out.manifest.is_none(), "ephemeral stores write no manifest");
+}
+
+#[test]
+fn seeded_fault_runs_are_reproducible_and_thread_invariant() {
+    let faults = parse("save=0.3,read=0.2,midslot=0.2,region@0:2..3,storm@1:3,brownout@4..4");
+    let traces = vec![
+        SpotTrace::new(vec![0.4, 0.5, 0.3, 0.4, 0.5, 0.4, 0.3, 0.4], vec![4; 8]),
+        SpotTrace::new(vec![0.5, 0.4, 0.4, 0.3, 0.4, 0.5, 0.4, 0.3], vec![4; 8]),
+    ];
+    let specs: Vec<FleetJob> = (0..4)
+        .map(|i| FleetJob { job: job(30.0, 8), region: i % 2 })
+        .collect();
+    let run = |name: &str, threads: usize| -> (FleetOutcome, RunLog) {
+        let dir = tmpdir(name);
+        let rec = Recorder::enabled();
+        let out = fleet(&dir, threads, true)
+            .run(&traces, &specs, &fixed_policy(1, 3), &synthetic_trainer, &faults, 13, &rec)
+            .unwrap();
+        (out, rec.finish().unwrap())
+    };
+    let (a, la) = run("ti_a", 1);
+    let (b, lb) = run("ti_b", 4);
+    let (c, lc) = run("ti_c", 1);
+
+    for (x, tag) in [(&b, "4 threads"), (&c, "rerun")] {
+        assert_eq!(a.jobs.len(), x.jobs.len());
+        for (ja, jx) in a.jobs.iter().zip(&x.jobs) {
+            assert_eq!(
+                ja.outcome.utility.to_bits(),
+                jx.outcome.utility.to_bits(),
+                "utility diverged vs {tag}"
+            );
+            assert_eq!(ja.outcome.metrics.slots, jx.outcome.metrics.slots);
+            assert_eq!(ja.store, jx.store, "parameters diverged vs {tag}");
+            assert_eq!(ja.failovers, jx.failovers);
+            assert_eq!(ja.region_by_slot, jx.region_by_slot);
+        }
+        assert_eq!(a.recovery, x.recovery, "recovery rollup diverged vs {tag}");
+        assert_eq!(a.regions, x.regions, "region counters diverged vs {tag}");
+        assert_eq!(a.region_faults_injected, x.region_faults_injected);
+        assert_eq!(a.brownout_saves_failed, x.brownout_saves_failed);
+    }
+    // The merged trace itself is a pure function of the run — worker
+    // interleavings must not leak into line content or order.
+    assert_eq!(event_lines(&la), event_lines(&lb), "trace diverged across thread counts");
+    assert_eq!(event_lines(&la), event_lines(&lc), "trace diverged across reruns");
+}
+
+#[test]
+fn fleet_faults_never_inflate_progress() {
+    // Checkpoint-layer faults, storms, and brownouts may only lose or
+    // erode work. Launch probabilities and regional outages are
+    // excluded: those change the pool (and thus μ) on a different
+    // trajectory, so per-slot domination is not a theorem for them.
+    let traces = vec![SpotTrace::new(vec![0.4; 8], vec![4; 8])];
+    let specs: Vec<FleetJob> =
+        (0..2).map(|_| FleetJob { job: job(40.0, 8), region: 0 }).collect();
+    let go = |name: &str, faults: &FaultConfig| -> FleetOutcome {
+        let dir = tmpdir(name);
+        fleet(&dir, 1, true)
+            .run(
+                &traces,
+                &specs,
+                &fixed_policy(1, 3),
+                &synthetic_trainer,
+                faults,
+                29,
+                &Recorder::disabled(),
+            )
+            .unwrap()
+    };
+    let clean = go("dom_clean", &FaultConfig::default());
+    let faulted = go(
+        "dom_faulted",
+        &parse("save=0.4,torn=0.3,read=0.3,midslot=0.3,storm@0:2,brownout@3..3"),
+    );
+    for (jc, jf) in clean.jobs.iter().zip(&faulted.jobs) {
+        let n = jc.outcome.metrics.slots.len().min(jf.outcome.metrics.slots.len());
+        for i in 0..n {
+            let c = jc.outcome.metrics.slots[i].progress;
+            let f = jf.outcome.metrics.slots[i].progress;
+            assert!(f <= c + 1e-9, "slot {i}: faulted progress {f} exceeds clean {c}");
+        }
+    }
+}
+
+#[test]
+fn all_regions_out_defers_in_place_instead_of_failing_over_or_erroring() {
+    // Slots 2..4 take *every* region out, and the slot-2 storms kill
+    // each job's whole spot fleet — so there is no failover target and
+    // no capacity to restore onto. The ladder's answer is rung 1:
+    // defer the restore, keep the run alive, pay when capacity returns.
+    let faults = parse("region@0:2..4+1:2..4,storm@0:2+1:2");
+    let traces = vec![
+        SpotTrace::new(vec![0.4; 8], vec![4; 8]),
+        SpotTrace::new(vec![0.5; 8], vec![4; 8]),
+    ];
+    let specs = vec![
+        FleetJob { job: job(40.0, 8), region: 0 },
+        FleetJob { job: job(40.0, 8), region: 1 },
+    ];
+    let dir = tmpdir("allout");
+    let out = fleet(&dir, 2, true)
+        .run(
+            &traces,
+            &specs,
+            &fixed_policy(0, 3),
+            &synthetic_trainer,
+            &faults,
+            5,
+            &Recorder::disabled(),
+        )
+        .unwrap();
+    for (j, fj) in out.jobs.iter().enumerate() {
+        assert_eq!(fj.failovers, 0, "job {j} must not fail over into an outage");
+        assert_eq!(fj.final_region, specs[j].region);
+        assert!(
+            fj.outcome.recovery().restores_skipped >= 1,
+            "job {j} must defer its restore through the blackout"
+        );
+    }
+    assert_eq!(out.recovery.restarts_from_scratch, 0, "saved work must survive");
+    assert_eq!(out.regions[0].outage_slots, 3);
+    assert_eq!(out.regions[1].outage_slots, 3);
+    assert_eq!(out.regions[0].failovers_out + out.regions[1].failovers_out, 0);
+}
+
+#[test]
+fn every_scheduled_region_fault_reaches_the_trace_schema_valid() {
+    // The slot-2 storm empties job 0's pool *inside* region 0's outage
+    // window: the relaunches fail, the job starves, and the ladder
+    // fails it over at slot 3. (An outage alone never starves a job
+    // whose pool already holds its target — outages only block new
+    // launches.)
+    let faults = parse("region@0:2..3,storm@0:2+1:1,brownout@4..4");
+    let traces = vec![
+        SpotTrace::new(vec![0.4; 6], vec![4; 6]),
+        SpotTrace::new(vec![0.5; 6], vec![4; 6]),
+    ];
+    let specs = vec![
+        FleetJob { job: job(30.0, 6), region: 0 },
+        FleetJob { job: job(30.0, 6), region: 1 },
+    ];
+    let dir = tmpdir("accounting");
+    let rec = Recorder::enabled();
+    let out = fleet(&dir, 1, true)
+        .run(&traces, &specs, &fixed_policy(1, 3), &synthetic_trainer, &faults, 17, &rec)
+        .unwrap();
+    // 2 outage slots + 2 storms + 1 brownout slot.
+    assert_eq!(out.region_faults_injected, 5);
+
+    let log = rec.finish().unwrap();
+    let count = |kind: &str| {
+        log.lines
+            .iter()
+            .filter(|l| l.contains(&format!("\"kind\":\"{kind}\"")))
+            .count() as u64
+    };
+    assert_eq!(count("region_outage"), out.regions[0].outage_slots);
+    assert_eq!(
+        count("preemption_storm"),
+        out.regions[0].storms + out.regions[1].storms
+    );
+    assert_eq!(count("brownout"), out.brownout_slots);
+    let failovers: u64 = out.jobs.iter().map(|fj| fj.failovers as u64).sum();
+    assert_eq!(count("failover"), failovers);
+    assert!(failovers >= 1, "job 0 must escape its region-0 outage");
+    assert_eq!(out.regions[0].failovers_out, failovers);
+    assert_eq!(out.regions[1].failovers_in, failovers);
+    assert_eq!(
+        count("region_outage") + count("preemption_storm") + count("brownout"),
+        out.region_faults_injected,
+        "every scheduled region-scoped fault must be narrated exactly once"
+    );
+    for line in &log.lines {
+        validate_line(line)
+            .unwrap_or_else(|e| panic!("schema-invalid trace line `{line}`: {e}"));
+    }
+}
+
+#[test]
+fn reopened_fleet_store_walks_past_corrupt_generations() {
+    let dir = tmpdir("reopen");
+    let traces = vec![SpotTrace::new(vec![0.4; 6], vec![4; 6])];
+    let specs = vec![
+        FleetJob { job: job(30.0, 6), region: 0 },
+        FleetJob { job: job(30.0, 6), region: 0 },
+    ];
+    // Persistent store: the run leaves its generations and writes the
+    // fleet manifest.
+    let out = fleet(&dir, 1, false)
+        .run(
+            &traces,
+            &specs,
+            &fixed_policy(1, 3),
+            &synthetic_trainer,
+            &FaultConfig::default(),
+            3,
+            &Recorder::disabled(),
+        )
+        .unwrap();
+    let manifest = out.manifest.as_ref().expect("persistent stores write a manifest");
+    assert!(manifest.exists());
+    let text = std::fs::read_to_string(manifest).unwrap();
+    assert!(text.contains("job0000") && text.contains("job0001"));
+
+    // Flip one payload byte in job 0's newest generation: a reopen must
+    // detect the corruption (CRC) and fall back one generation.
+    let mut gens: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            let n = p.file_name().unwrap().to_string_lossy().into_owned();
+            n.starts_with("job0000.g") && n.ends_with(".ckpt")
+        })
+        .collect();
+    gens.sort();
+    assert!(gens.len() >= 2, "the run must retain at least two generations");
+    let newest = gens.last().unwrap();
+    let mut bytes = std::fs::read(newest).unwrap();
+    bytes[41] ^= 0x40; // header is 40 bytes; byte 41 is payload.
+    std::fs::write(newest, &bytes).unwrap();
+
+    let template = synthetic_trainer(0).unwrap().store;
+    // A third job that never ran (no manifest on disk) must be
+    // tolerated, not an error.
+    let (store, dropped) = FleetStore::reopen(&dir, 800.0, 3, 3, &template);
+    assert_eq!(dropped, vec![1, 0, 0], "only job 0's corrupt generation is walked");
+    assert!(store.managers[0].exists(&FleetStore::tag(0)));
+    assert!(store.managers[1].exists(&FleetStore::tag(1)));
+    assert!(!store.managers[2].exists(&FleetStore::tag(2)));
+    // The reopened store re-indexes the manifest and can rewrite it.
+    store.write_manifest().unwrap();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn region_csv_keeps_its_column_contract() {
+    let faults = parse("region@0:2..3,storm@1:1");
+    let traces = vec![
+        SpotTrace::new(vec![0.4; 6], vec![4; 6]),
+        SpotTrace::new(vec![0.5; 6], vec![4; 6]),
+    ];
+    let specs = vec![
+        FleetJob { job: job(30.0, 6), region: 0 },
+        FleetJob { job: job(30.0, 6), region: 1 },
+    ];
+    let dir = tmpdir("regioncsv");
+    let out = fleet(&dir.join("store"), 1, true)
+        .run(
+            &traces,
+            &specs,
+            &fixed_policy(1, 3),
+            &synthetic_trainer,
+            &faults,
+            23,
+            &Recorder::disabled(),
+        )
+        .unwrap();
+    let path = dir.join("regions.csv");
+    out.write_region_csv(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(
+        lines[0],
+        "region,outage_slots,storms,storm_preemptions,launch_shortfalls,failovers_out,failovers_in",
+        "the column contract is append-only — existing consumers parse by name"
+    );
+    assert_eq!(lines.len(), 1 + out.regions.len());
+    assert!(lines[1].starts_with("0,"));
+    assert!(lines[2].starts_with("1,"));
+    assert_eq!(lines[1].split(',').count(), 7);
+    std::fs::remove_dir_all(dir).ok();
+}

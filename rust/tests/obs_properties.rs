@@ -248,18 +248,41 @@ fn jsonl_event_schema_is_golden() {
             r#"{"kind":"migration","round":0,"slot":5,"job":2,"from":0,"to":1,"phase":"emitted","reason":null}"#,
         ),
         (
-            Event::Fault { round: 2, slot: 7, fault: "save_io", detail: 3 },
-            r#"{"kind":"fault","round":2,"slot":7,"fault":"save_io","detail":3}"#,
+            Event::Fault { round: 2, slot: 7, job: 0, fault: "save_io", detail: 3 },
+            r#"{"kind":"fault","round":2,"slot":7,"job":0,"fault":"save_io","detail":3}"#,
         ),
         (
             Event::Recovery {
                 round: 2,
                 slot: 8,
+                job: 0,
                 action: "restore",
                 generations: 1,
                 steps_lost: 4,
             },
-            r#"{"kind":"recovery","round":2,"slot":8,"action":"restore","generations":1,"steps_lost":4}"#,
+            r#"{"kind":"recovery","round":2,"slot":8,"job":0,"action":"restore","generations":1,"steps_lost":4}"#,
+        ),
+        (
+            Event::RegionOutage { round: 0, slot: 4, region: 1, jobs_affected: 3 },
+            r#"{"kind":"region_outage","round":0,"slot":4,"region":1,"jobs_affected":3}"#,
+        ),
+        (
+            Event::PreemptionStorm {
+                round: 0,
+                slot: 4,
+                region: 1,
+                instances_lost: 6,
+                jobs_hit: 2,
+            },
+            r#"{"kind":"preemption_storm","round":0,"slot":4,"region":1,"instances_lost":6,"jobs_hit":2}"#,
+        ),
+        (
+            Event::Brownout { round: 0, slot: 5, saves_failed: 4 },
+            r#"{"kind":"brownout","round":0,"slot":5,"saves_failed":4}"#,
+        ),
+        (
+            Event::Failover { round: 0, slot: 6, job: 2, from: 0, to: 1 },
+            r#"{"kind":"failover","round":0,"slot":6,"job":2,"from":0,"to":1}"#,
         ),
         (
             Event::Replay {
