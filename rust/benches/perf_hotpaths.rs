@@ -37,6 +37,7 @@ use spotfine::sched::policy::{Models, Policy, SlotContext};
 use spotfine::sched::pool::{paper_pool, PolicyEnv, PolicySpec, PredictorKind};
 use spotfine::sched::selector::EgSelector;
 use spotfine::sched::simulate::run_episode;
+use spotfine::sched::warm::WarmState;
 use spotfine::util::bench::{bench, section, JsonReport};
 use spotfine::util::rng::Rng;
 
@@ -81,6 +82,181 @@ fn main() {
     });
     println!("{}", r.line());
     report.result("solvers", &r);
+
+    section("solvers: warm-started sliding windows (ω=5)");
+    // The warm solvers' home turf: AHAP re-solving overlapping windows
+    // slot after slot. A wide job (n_max 48 → ~240 menu units per
+    // window) makes the cold per-window menu rebuild + sort visible;
+    // the incremental menu moves ≤2 runs per slide and the scan
+    // early-exits at workload saturation. Bit-identity is asserted
+    // before anything is timed (the full property suite lives in
+    // tests/warm_solver_properties.rs).
+    let wide_job = Job {
+        workload: 80.0,
+        deadline: 40,
+        n_min: 1,
+        n_max: 48,
+        value: 160.0,
+        gamma: 1.5,
+    };
+    let slides = 30usize;
+    let strip_p: Vec<f64> =
+        (0..slides + 5).map(|i| trace.price_at(i % trace.len())).collect();
+    let strip_a: Vec<u32> = (0..slides + 5)
+        .map(|i| (trace.avail_at(i % trace.len()) * 4 + 3).min(52))
+        .collect();
+    let win_prob = |t: usize, z0: f64| HorizonProblem {
+        job: &wide_job,
+        models: &models,
+        start_slot: t,
+        z0,
+        prices: &strip_p[t..t + 5],
+        avail: &strip_a[t..t + 5],
+        n_prev: 8,
+        terminal_kind: TerminalKind::LinearCost,
+        migration: None,
+    };
+    {
+        let mut ws = WarmState::default();
+        let mut z0 = 20.0;
+        for t in 0..slides {
+            let p = win_prob(t, z0);
+            ws.begin_decision();
+            let w = ws.solve_greedy(&p, true);
+            let c = solve_greedy(&p);
+            assert_eq!(w.alloc, c.alloc, "warm greedy diverged at slide {t}");
+            assert_eq!(w.utility.to_bits(), c.utility.to_bits());
+            z0 += 1.5;
+        }
+    }
+    let r_cold_seq =
+        bench("greedy sliding sequence, cold (30 slides, n_max 48)", 10, 200, || {
+            let mut acc = 0.0;
+            let mut z0 = 20.0;
+            for t in 0..slides {
+                acc += solve_greedy(&win_prob(t, z0)).utility;
+                z0 += 1.5;
+            }
+            acc
+        });
+    println!("{}", r_cold_seq.line());
+    report.result("solvers", &r_cold_seq);
+    let mut warm_greedy = WarmState::default();
+    let r_warm_seq =
+        bench("greedy sliding sequence, warm (30 slides, n_max 48)", 10, 200, || {
+            let mut acc = 0.0;
+            let mut z0 = 20.0;
+            for t in 0..slides {
+                let p = win_prob(t, z0);
+                warm_greedy.begin_decision();
+                acc += warm_greedy.solve_greedy(&p, true).utility;
+                z0 += 1.5;
+            }
+            acc
+        });
+    println!("{}", r_warm_seq.line());
+    report.result("solvers", &r_warm_seq);
+    let warm_greedy_speedup = report.speedup(
+        "warm greedy sliding sequence (ω=5)",
+        r_cold_seq.mean_us(),
+        r_warm_seq.mean_us(),
+    );
+    println!("speedup: {warm_greedy_speedup:.1}x (incremental menu over cold rebuild)");
+    assert!(
+        warm_greedy_speedup >= 5.0,
+        "PERF TARGET MISSED: warm greedy only {warm_greedy_speedup:.1}x over cold on the sliding sequence"
+    );
+
+    // Warm DP under the harsh-μ regime the automatic dispatch routes to
+    // it, seeded each slide with the previous committed plan.
+    let dp_models = Models {
+        reconfig: spotfine::sched::throughput::ReconfigModel::new(0.5, 0.7),
+        ..models
+    };
+    let dp_slides = 5usize;
+    let dp_prob = |t: usize, z0: f64| HorizonProblem {
+        job: &job,
+        models: &dp_models,
+        start_slot: t,
+        z0,
+        prices: &strip_p[t..t + 5],
+        avail: &strip_a[t..t + 5],
+        n_prev: 4,
+        terminal_kind: TerminalKind::LinearCost,
+        migration: None,
+    };
+    {
+        let mut ws = WarmState::default();
+        let mut z0 = 0.0;
+        for t in 0..dp_slides {
+            let p = dp_prob(t, z0);
+            let w = ws.solve_dp(&p, 0.1, true);
+            let c = solve_dp(&p, 0.1);
+            assert_eq!(w.alloc, c.alloc, "warm DP diverged at slide {t}");
+            assert_eq!(w.utility.to_bits(), c.utility.to_bits());
+            ws.note_home_plan(t, &w.alloc);
+            z0 += 4.0;
+        }
+    }
+    let r_cold_dp =
+        bench("exact DP sliding sequence, cold (5 slides, grid 0.1)", 3, 30, || {
+            let mut acc = 0.0;
+            let mut z0 = 0.0;
+            for t in 0..dp_slides {
+                acc += solve_dp(&dp_prob(t, z0), 0.1).utility;
+                z0 += 4.0;
+            }
+            acc
+        });
+    println!("{}", r_cold_dp.line());
+    report.result("solvers", &r_cold_dp);
+    let mut warm_dp = WarmState::default();
+    let r_warm_dp = bench(
+        "exact DP sliding sequence, warm-seeded (5 slides, grid 0.1)",
+        3,
+        30,
+        || {
+            let mut acc = 0.0;
+            let mut z0 = 0.0;
+            for t in 0..dp_slides {
+                let p = dp_prob(t, z0);
+                let s = warm_dp.solve_dp(&p, 0.1, true);
+                warm_dp.note_home_plan(t, &s.alloc);
+                acc += s.utility;
+                z0 += 4.0;
+            }
+            acc
+        },
+    );
+    println!("{}", r_warm_dp.line());
+    report.result("solvers", &r_warm_dp);
+    let warm_dp_speedup = report.speedup(
+        "warm DP sliding sequence (grid 0.1)",
+        r_cold_dp.mean_us(),
+        r_warm_dp.mean_us(),
+    );
+    println!("speedup: {warm_dp_speedup:.1}x (reachable-state memo + incumbent bound)");
+    assert!(
+        warm_dp_speedup >= 1.2,
+        "PERF TARGET MISSED: warm DP only {warm_dp_speedup:.1}x over cold on the sliding sequence"
+    );
+
+    // One deterministic portfolio round: both racers inline, DP adopted
+    // iff strictly better. The budget here is a loose sanity ceiling —
+    // the round must stay in the same order as greedy + DP themselves.
+    let mut portfolio = WarmState::default();
+    let r_port =
+        bench("portfolio round, deterministic (greedy + DP 0.25)", 10, 200, || {
+            portfolio.begin_decision();
+            portfolio.race(&prob, 0.25, None, true).utility
+        });
+    println!("{}", r_port.line());
+    report.result("solvers", &r_port);
+    assert!(
+        r_port.mean_us() < 5_000.0,
+        "PERF TARGET MISSED: deterministic portfolio round {} µs > 5 ms",
+        r_port.mean_us()
+    );
 
     section("L3: AHAP decision (observe + forecast + solve + commit)");
     let mut ahap = Ahap::new(5, 2, 0.7, Box::new(OraclePredictor::new(trace.clone())));

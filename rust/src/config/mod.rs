@@ -4,5 +4,8 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{CoordinatorSettings, ExperimentConfig, ObsSettings};
+pub use schema::{
+    CoordinatorSettings, ExperimentConfig, ObsSettings, SolverChoice,
+    SolverSettings,
+};
 pub use toml::{parse, TomlError, Value};

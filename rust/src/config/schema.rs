@@ -11,6 +11,7 @@ use crate::fleet::region::MigrationMode;
 use crate::forecast::arima::ArimaConfig;
 use crate::forecast::noise::{NoiseKind, NoiseMagnitude, NoiseSpec};
 use crate::market::generator::GeneratorConfig;
+use crate::sched::ahap::SolverKind;
 use crate::sched::job::JobGenerator;
 use crate::sched::policy::Models;
 use crate::sched::throughput::{ReconfigModel, ThroughputModel};
@@ -82,6 +83,55 @@ impl Default for CoordinatorSettings {
     }
 }
 
+/// Which Eq. 10 window-solver backend a config selects (`solver.kind`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverChoice {
+    /// Marginal-unit greedy (the historical default).
+    Greedy,
+    /// Exact DP on a progress grid.
+    Dp,
+    /// Warm-started incremental solvers (bit-identical to the default).
+    Warm,
+    /// Anytime greedy-vs-DP racing portfolio (`sched::warm`).
+    Portfolio,
+}
+
+/// Window-solver knobs (`[solver]` in TOML).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SolverSettings {
+    pub kind: SolverChoice,
+    /// Progress-grid step for the DP-backed kinds (`dp`, `portfolio`).
+    pub grid_step: f64,
+    /// Per-decision budget in µs for the portfolio's DP lane; absent =
+    /// deterministic inline racing (recorded runs stay bit-reproducible).
+    pub budget_us: Option<u64>,
+}
+
+impl Default for SolverSettings {
+    fn default() -> Self {
+        SolverSettings {
+            kind: SolverChoice::Greedy,
+            grid_step: 0.25,
+            budget_us: None,
+        }
+    }
+}
+
+impl SolverSettings {
+    /// The [`SolverKind`] these settings select.
+    pub fn solver_kind(&self) -> SolverKind {
+        match self.kind {
+            SolverChoice::Greedy => SolverKind::Greedy,
+            SolverChoice::Dp => SolverKind::Dp { grid_step: self.grid_step },
+            SolverChoice::Warm => SolverKind::Warm,
+            SolverChoice::Portfolio => SolverKind::Portfolio {
+                grid_step: self.grid_step,
+                budget_us: self.budget_us,
+            },
+        }
+    }
+}
+
 /// Observability knobs (`[obs]` in TOML). CLI flags (`--trace`,
 /// `--obs-summary`) override these when both are given.
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
@@ -103,6 +153,7 @@ pub struct ExperimentConfig {
     pub fleet: FleetSettings,
     pub obs: ObsSettings,
     pub coordinator: CoordinatorSettings,
+    pub solver: SolverSettings,
     pub selection_jobs: usize,
     pub seed: u64,
     /// Directory where benches/figures write CSVs.
@@ -122,6 +173,7 @@ impl Default for ExperimentConfig {
             fleet: FleetSettings::default(),
             obs: ObsSettings::default(),
             coordinator: CoordinatorSettings::default(),
+            solver: SolverSettings::default(),
             selection_jobs: 1000,
             seed: 7,
             results_dir: "results".to_string(),
@@ -301,6 +353,36 @@ impl ExperimentConfig {
         cfg.coordinator.failover_after = failover_after as usize;
         read_opt!(doc, "coordinator.slot_secs", as_float, cfg.coordinator.slot_secs);
 
+        // [solver]
+        if let Some(v) = doc.get("solver.kind") {
+            let s = v.as_str().ok_or_else(|| {
+                ConfigError::Invalid("`solver.kind` must be a string".into())
+            })?;
+            cfg.solver.kind = match s {
+                "greedy" => SolverChoice::Greedy,
+                "dp" => SolverChoice::Dp,
+                "warm" => SolverChoice::Warm,
+                "portfolio" => SolverChoice::Portfolio,
+                other => {
+                    return Err(ConfigError::Invalid(format!(
+                        "unknown solver.kind `{other}` (greedy|dp|warm|portfolio)"
+                    )))
+                }
+            };
+        }
+        read_opt!(doc, "solver.grid_step", as_float, cfg.solver.grid_step);
+        if let Some(v) = doc.get("solver.budget_us") {
+            let b = v.as_int().ok_or_else(|| {
+                ConfigError::Invalid("`solver.budget_us` has wrong type".into())
+            })?;
+            if b < 0 {
+                return Err(ConfigError::Invalid(
+                    "solver.budget_us must be ≥ 0".into(),
+                ));
+            }
+            cfg.solver.budget_us = Some(b as u64);
+        }
+
         // [run]
         let mut k = cfg.selection_jobs as i64;
         read_opt!(doc, "run.selection_jobs", as_int, k);
@@ -394,6 +476,9 @@ impl ExperimentConfig {
         }
         if !(self.coordinator.slot_secs > 0.0 && self.coordinator.slot_secs.is_finite()) {
             return e("coordinator.slot_secs must be finite and positive");
+        }
+        if !(self.solver.grid_step > 0.0 && self.solver.grid_step.is_finite()) {
+            return e("solver.grid_step must be finite and positive");
         }
         if self.selection_jobs == 0 {
             return e("run.selection_jobs must be positive");
@@ -551,6 +636,40 @@ mod tests {
         );
         assert!(
             ExperimentConfig::from_toml_str("[coordinator]\nslot_secs = 0.0\n").is_err()
+        );
+    }
+
+    #[test]
+    fn solver_section_parses_and_validates() {
+        let cfg = ExperimentConfig::from_toml_str(
+            "[solver]\nkind = \"portfolio\"\ngrid_step = 0.1\nbudget_us = 800\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.solver.kind, SolverChoice::Portfolio);
+        assert!((cfg.solver.grid_step - 0.1).abs() < 1e-12);
+        assert_eq!(cfg.solver.budget_us, Some(800));
+        assert_eq!(
+            cfg.solver.solver_kind(),
+            SolverKind::Portfolio { grid_step: 0.1, budget_us: Some(800) }
+        );
+        let warm = ExperimentConfig::from_toml_str("[solver]\nkind = \"warm\"\n").unwrap();
+        assert_eq!(warm.solver.solver_kind(), SolverKind::Warm);
+        // Default: the historical greedy, deterministic (no budget).
+        let d = ExperimentConfig::from_toml_str("").unwrap();
+        assert_eq!(d.solver, SolverSettings::default());
+        assert_eq!(d.solver.solver_kind(), SolverKind::Greedy);
+        assert!(d.solver.budget_us.is_none());
+        assert!(
+            ExperimentConfig::from_toml_str("[solver]\nkind = \"simplex\"\n").is_err()
+        );
+        assert!(
+            ExperimentConfig::from_toml_str("[solver]\ngrid_step = 0.0\n").is_err()
+        );
+        assert!(
+            ExperimentConfig::from_toml_str("[solver]\ngrid_step = -0.5\n").is_err()
+        );
+        assert!(
+            ExperimentConfig::from_toml_str("[solver]\nbudget_us = -1\n").is_err()
         );
     }
 

@@ -19,6 +19,7 @@ use crate::forecast::arima::{ArimaConfig, ArimaPredictor};
 use crate::forecast::cache::{ForecastCachePool, RegionForecasts, SharedForecaster};
 use crate::forecast::predictor::{Forecast, Predictor};
 use crate::obs::{Counter, Event, MigrationPhase, Recorder};
+use crate::sched::ahap::SolverKind;
 use crate::sched::job::Job;
 use crate::sched::policy::{
     Allocation, Models, Policy, RegionDecision, RegionSnapshot, RegionView,
@@ -237,6 +238,12 @@ pub struct FleetEngine {
     /// through the dense reference stepper instead of the event-driven
     /// one (see [`crate::fleet::events`]). The two are bit-identical.
     pub(crate) dense: bool,
+    /// Eq. 10 window-solver backend handed to every AHAP policy the
+    /// fleet builds (see [`SolverKind`]). The default (`Greedy`) is the
+    /// historical behavior; `Warm` reproduces it bit-for-bit with
+    /// incremental state (property-tested in
+    /// `tests/warm_solver_properties.rs`).
+    pub(crate) solver: SolverKind,
 }
 
 impl FleetEngine {
@@ -250,6 +257,7 @@ impl FleetEngine {
             obs: Recorder::disabled(),
             threads: 1,
             dense: false,
+            solver: SolverKind::default(),
         }
     }
 
@@ -304,6 +312,14 @@ impl FleetEngine {
     /// is property-tested (and benchmarked) against.
     pub fn with_dense_stepper(mut self) -> Self {
         self.dense = true;
+        self
+    }
+
+    /// Select the Eq. 10 window-solver backend for every AHAP policy
+    /// the fleet builds. `Warm` and the deterministic portfolio
+    /// (`budget_us: None`) reproduce the default run bit-for-bit.
+    pub fn with_solver(mut self, solver: SolverKind) -> Self {
+        self.solver = solver;
         self
     }
 
@@ -487,6 +503,7 @@ impl FleetEngine {
         }
         let mut env = PolicyEnv::new(s.predictor.clone(), trace, s.seed);
         env.forecasts = forecasts;
+        env.solver = self.solver;
         env
     }
 

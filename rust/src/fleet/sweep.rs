@@ -20,6 +20,7 @@ use crate::forecast::noise::NoiseSpec;
 use crate::market::generator::{GeneratorConfig, TraceGenerator};
 use crate::market::trace::SpotTrace;
 use crate::obs::Recorder;
+use crate::sched::ahap::SolverKind;
 use crate::sched::job::{Job, JobGenerator};
 use crate::sched::policy::Models;
 use crate::sched::pool::{
@@ -251,6 +252,9 @@ pub struct FleetScenario {
     /// build time from a dedicated seed stream, so results are
     /// deterministic and identical across thread counts.
     pub churn: f64,
+    /// Eq. 10 window-solver backend every AHAP policy in the fleet
+    /// uses; the default (`Greedy`) is the historical behavior.
+    pub solver: SolverKind,
 }
 
 impl FleetScenario {
@@ -270,7 +274,13 @@ impl FleetScenario {
             migration_mode: MigrationMode::default(),
             stagger: 0,
             churn: 0.0,
+            solver: SolverKind::default(),
         }
+    }
+
+    pub fn with_solver(mut self, solver: SolverKind) -> Self {
+        self.solver = solver;
+        self
     }
 
     pub fn with_stagger(mut self, stagger: usize) -> Self {
@@ -307,7 +317,8 @@ impl FleetScenario {
             .with_migration(self.migration);
         let engine = FleetEngine::new(self.models, regions)
             .with_migration_patience(self.migration_patience)
-            .with_migration_mode(self.migration_mode);
+            .with_migration_mode(self.migration_mode)
+            .with_solver(self.solver);
         let roster = fleet_roster();
         let mut rng = Rng::new(self.seed ^ JOBS_STREAM);
         let mut specs: Vec<FleetJobSpec> = (0..self.n_jobs)

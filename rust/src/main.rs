@@ -20,7 +20,7 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use spotfine::cli::args::Args;
-use spotfine::config::schema::ExperimentConfig;
+use spotfine::config::schema::{ExperimentConfig, SolverChoice};
 use spotfine::coordinator::faults::FaultPlan;
 use spotfine::coordinator::fleet::{FleetConfig, FleetCoordinator, FleetJob};
 use spotfine::coordinator::leader::{Leader, LeaderConfig};
@@ -39,6 +39,7 @@ use spotfine::obs::Recorder;
 use spotfine::runtime::artifact::ArtifactBundle;
 use spotfine::runtime::client::RuntimeClient;
 use spotfine::runtime::executable::TrainStepExec;
+use spotfine::sched::ahap::SolverKind;
 use spotfine::sched::job::Job;
 use spotfine::sched::offline::solve_offline;
 use spotfine::sched::pool::{paper_pool, PolicyEnv, PolicySpec, PredictorKind};
@@ -83,6 +84,14 @@ COMMON FLAGS:
                         arima = honest online fits, one shared forecast
                         cache per counterfactual pool sweep)
   --refit-every <k>     ARIMA refit cadence in slots (default from config)
+  --solver <kind>       greedy | dp | warm | portfolio — Eq. 10 window
+                        solver for AHAP policies (simulate/fleet; default
+                        from config [solver], greedy). warm is bit-identical
+                        to greedy's automatic dispatch but incremental;
+                        portfolio races greedy vs exact DP per decision
+  --solver-grid <g>     progress-grid step for dp/portfolio (default 0.25)
+  --solver-budget-us <b>  portfolio per-decision DP budget in µs; omit for
+                        deterministic inline racing (bit-reproducible)
   --batch-fit           forecast: use the legacy full-history refit path
                         (the reference the incremental fitter is tested
                         against) instead of incremental fitting
@@ -258,6 +267,40 @@ fn migration_mode_arg(
         Some("policy") => MigrationMode::Policy,
         Some(other) => {
             anyhow::bail!("unknown migration mode `{other}` (starvation|policy)")
+        }
+    })
+}
+
+/// `--solver greedy|dp|warm|portfolio` (+ `--solver-grid`,
+/// `--solver-budget-us`), defaulting to the config's `[solver]` block
+/// (itself defaulting to the historical greedy).
+fn solver_arg(args: &Args, cfg: &ExperimentConfig) -> anyhow::Result<SolverKind> {
+    let grid = args.get_f64("solver-grid", cfg.solver.grid_step)?;
+    if !(grid > 0.0 && grid.is_finite()) {
+        anyhow::bail!("--solver-grid must be finite and positive");
+    }
+    let budget = match args.get("solver-budget-us") {
+        Some(raw) => Some(raw.parse::<u64>().map_err(|_| {
+            anyhow::anyhow!("--solver-budget-us must be a non-negative integer")
+        })?),
+        None => cfg.solver.budget_us,
+    };
+    let kind = match args.get("solver") {
+        None => cfg.solver.kind,
+        Some("greedy") => SolverChoice::Greedy,
+        Some("dp") => SolverChoice::Dp,
+        Some("warm") => SolverChoice::Warm,
+        Some("portfolio") => SolverChoice::Portfolio,
+        Some(other) => {
+            anyhow::bail!("unknown solver `{other}` (greedy|dp|warm|portfolio)")
+        }
+    };
+    Ok(match kind {
+        SolverChoice::Greedy => SolverKind::Greedy,
+        SolverChoice::Dp => SolverKind::Dp { grid_step: grid },
+        SolverChoice::Warm => SolverKind::Warm,
+        SolverChoice::Portfolio => {
+            SolverKind::Portfolio { grid_step: grid, budget_us: budget }
         }
     })
 }
@@ -616,7 +659,8 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         &cfg,
         PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(noise)),
     )?;
-    let env = PolicyEnv::new(predictor, trace.clone(), seed);
+    let env = PolicyEnv::new(predictor, trace.clone(), seed)
+        .with_solver(solver_arg(args, &cfg)?);
     let mut policy = policy_spec.build(&env);
     let r = run_episode(&job, &trace, &cfg.models, policy.as_mut());
     let opt = solve_offline(&job, &trace, &cfg.models, 0.1);
@@ -657,6 +701,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         anyhow::bail!("--churn must be finite and ≥ 0");
     }
     let stagger = args.get_usize("stagger", 2)?;
+    let solver = solver_arg(args, &cfg)?;
 
     let scenarios: Vec<FleetScenario> = (0..sweeps)
         .map(|s| {
@@ -670,6 +715,7 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
             sc.migration_mode = migration_mode;
             sc.stagger = stagger;
             sc.churn = churn;
+            sc.solver = solver;
             sc
         })
         .collect();

@@ -182,6 +182,18 @@ pub enum Event {
         dp_total_us: u64,
         dp_hist_us: Vec<u64>,
     },
+    /// Solver-portfolio race outcomes for the whole run (see
+    /// `sched::warm::SolverPortfolio`): emitted only when at least one
+    /// race ran, so non-portfolio traces are byte-identical to before.
+    /// `total_us` is wall-clock and excluded from determinism
+    /// comparisons.
+    SolverRace {
+        races: u64,
+        dp_adopted: u64,
+        greedy_kept: u64,
+        timeouts: u64,
+        total_us: u64,
+    },
     /// End-of-run counter snapshot (always the last line of a trace).
     Summary {
         events: u64,
@@ -222,6 +234,7 @@ impl Event {
             Event::ForecastCache { .. } => "forecast_cache",
             Event::Ledger { .. } => "ledger",
             Event::Solver { .. } => "solver",
+            Event::SolverRace { .. } => "solver_race",
             Event::Summary { .. } => "summary",
         }
     }
@@ -268,7 +281,8 @@ impl Event {
             Event::ForecastCache { round, .. } => k(*round, END, END, END, 8),
             Event::Ledger { round, .. } => k(*round, END, END, END, 9),
             Event::Solver { .. } => k(END, END, END, END, 10),
-            Event::Summary { .. } => k(END, END, END, END, 11),
+            Event::SolverRace { .. } => k(END, END, END, END, 11),
+            Event::Summary { .. } => k(END, END, END, END, 12),
         }
     }
 
@@ -428,6 +442,19 @@ impl Event {
                 num(&mut s, "dp_calls", *dp_calls);
                 num(&mut s, "dp_total_us", *dp_total_us);
                 u64_array(&mut s, "dp_hist_us", dp_hist_us);
+            }
+            Event::SolverRace {
+                races,
+                dp_adopted,
+                greedy_kept,
+                timeouts,
+                total_us,
+            } => {
+                num(&mut s, "races", *races);
+                num(&mut s, "dp_adopted", *dp_adopted);
+                num(&mut s, "greedy_kept", *greedy_kept);
+                num(&mut s, "timeouts", *timeouts);
+                num(&mut s, "total_us", *total_us);
             }
             Event::Summary { events, dropped, counters } => {
                 num(&mut s, "events", *events);

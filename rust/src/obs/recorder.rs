@@ -247,6 +247,9 @@ impl Recorder {
             recs.into_iter().map(|(_, _, line)| line).collect();
         let solver = timing::drain();
         lines.push(solver.to_json());
+        if let Some(race) = timing::drain_races() {
+            lines.push(race.to_json());
+        }
         let counters: Vec<(&'static str, u64)> = Counter::ALL
             .iter()
             .map(|c| {

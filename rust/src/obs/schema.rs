@@ -129,6 +129,16 @@ pub const SCHEMA: &[(&str, &[(&str, FieldType)])] = &[
         ],
     ),
     (
+        "solver_race",
+        &[
+            ("races", FieldType::Num),
+            ("dp_adopted", FieldType::Num),
+            ("greedy_kept", FieldType::Num),
+            ("timeouts", FieldType::Num),
+            ("total_us", FieldType::Num),
+        ],
+    ),
+    (
         "fault",
         &[
             ("round", FieldType::Num),
@@ -514,6 +524,13 @@ mod tests {
                 dp_calls: 1,
                 dp_total_us: 80,
                 dp_hist_us: vec![0; 11],
+            },
+            Event::SolverRace {
+                races: 6,
+                dp_adopted: 2,
+                greedy_kept: 4,
+                timeouts: 1,
+                total_us: 480,
             },
             Event::Fault { round: 2, slot: 7, job: 0, fault: "save_io", detail: 1 },
             Event::Recovery {

@@ -79,6 +79,13 @@ static WINDOWS: AtomicU64 = AtomicU64::new(0);
 static GREEDY: Lane = Lane::new();
 static DP: Lane = Lane::new();
 
+// Solver-portfolio race outcomes (sched::warm). Same pool discipline as
+// the lanes: process-global, drained into one per-run event.
+static RACES: AtomicU64 = AtomicU64::new(0);
+static RACE_DP_ADOPTED: AtomicU64 = AtomicU64::new(0);
+static RACE_TIMEOUTS: AtomicU64 = AtomicU64::new(0);
+static RACE_TOTAL_US: AtomicU64 = AtomicU64::new(0);
+
 /// Whether any enabled recorder is alive (one relaxed load).
 #[inline]
 pub fn is_on() -> bool {
@@ -110,6 +117,24 @@ pub fn note_window() {
     }
 }
 
+/// Count one solver-portfolio race: whether the DP's plan was adopted
+/// over the always-ready greedy, whether the DP blew its budget, and
+/// the decision's wall-clock. No-op without a live recorder.
+#[inline]
+pub fn note_race(dp_adopted: bool, timed_out: bool, us: u64) {
+    if !is_on() {
+        return;
+    }
+    RACES.fetch_add(1, Ordering::Relaxed);
+    if dp_adopted {
+        RACE_DP_ADOPTED.fetch_add(1, Ordering::Relaxed);
+    }
+    if timed_out {
+        RACE_TIMEOUTS.fetch_add(1, Ordering::Relaxed);
+    }
+    RACE_TOTAL_US.fetch_add(us, Ordering::Relaxed);
+}
+
 pub(crate) fn acquire() {
     REFS.fetch_add(1, Ordering::Relaxed);
 }
@@ -133,6 +158,26 @@ pub(crate) fn drain() -> crate::obs::Event {
         dp_total_us: dt,
         dp_hist_us: dh,
     }
+}
+
+/// Drain the portfolio race pool into a `solver_race` event, or `None`
+/// when no race ran — runs that never used the portfolio keep their
+/// trace streams byte-identical.
+pub(crate) fn drain_races() -> Option<crate::obs::Event> {
+    let races = RACES.swap(0, Ordering::Relaxed);
+    let dp_adopted = RACE_DP_ADOPTED.swap(0, Ordering::Relaxed);
+    let timeouts = RACE_TIMEOUTS.swap(0, Ordering::Relaxed);
+    let total_us = RACE_TOTAL_US.swap(0, Ordering::Relaxed);
+    if races == 0 {
+        return None;
+    }
+    Some(crate::obs::Event::SolverRace {
+        races,
+        dp_adopted,
+        greedy_kept: races - dp_adopted,
+        timeouts,
+        total_us,
+    })
 }
 
 #[cfg(test)]
@@ -162,6 +207,29 @@ mod tests {
             _ => panic!("drain must yield a solver event"),
         }
         release();
+    }
+
+    #[test]
+    fn races_drain_to_event_only_when_nonzero() {
+        acquire();
+        note_race(true, false, 120);
+        note_race(false, true, 80);
+        match drain_races() {
+            Some(crate::obs::Event::SolverRace {
+                races, dp_adopted, greedy_kept, timeouts, total_us,
+            }) => {
+                // Other tests may race concurrently; assert directions.
+                assert!(races >= 2);
+                assert!(dp_adopted >= 1);
+                assert!(timeouts >= 1);
+                assert_eq!(greedy_kept, races - dp_adopted);
+                assert!(total_us >= 200);
+            }
+            other => panic!("expected a solver_race event, got {other:?}"),
+        }
+        release();
+        // Pool drained and nothing recorded since: no event.
+        assert!(drain_races().is_none());
     }
 
     #[test]

@@ -25,6 +25,7 @@ use crate::sched::horizon::{
 use crate::sched::policy::{
     Allocation, Policy, RegionDecision, RegionView, SlotContext,
 };
+use crate::sched::warm::WarmState;
 
 /// Which Eq. 10 solver AHAP uses when behind schedule.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -34,6 +35,29 @@ pub enum SolverKind {
     Greedy,
     /// Exact DP on a progress grid of the given step (handles β≠0, μ<1).
     Dp { grid_step: f64 },
+    /// The warm-started twins of `Greedy`'s automatic dispatch
+    /// (`sched::warm`): incremental-menu greedy, or the warm DP under
+    /// harsh μ. Bit-identical allocations; faster on sliding windows.
+    Warm,
+    /// Anytime racing portfolio: the incremental greedy is always ready
+    /// at the slot tick; the exact DP (at `grid_step`) is adopted only
+    /// if strictly better — and, with a finite `budget_us`, only if it
+    /// finishes inside the per-decision budget on the worker thread.
+    /// `budget_us: None` runs both inline (deterministic).
+    Portfolio { grid_step: f64, budget_us: Option<u64> },
+}
+
+impl Default for SolverKind {
+    fn default() -> Self {
+        SolverKind::Greedy
+    }
+}
+
+impl SolverKind {
+    /// Whether this solver accumulates state in [`WarmState`].
+    fn uses_warm_state(&self) -> bool {
+        matches!(self, SolverKind::Warm | SolverKind::Portfolio { .. })
+    }
 }
 
 /// AHAP policy (Algorithm 1).
@@ -46,6 +70,9 @@ pub struct Ahap {
     /// Plans from the last `v` slots: `(start_slot, per-slot allocations
     /// covering start_slot..=start_slot+ω)`.
     plans: VecDeque<(usize, Vec<Allocation>)>,
+    /// Persistent state for the `Warm`/`Portfolio` solvers: menus,
+    /// terminal memo, DP buffers, last committed plan, race worker.
+    warm: WarmState,
 }
 
 impl Ahap {
@@ -64,12 +91,22 @@ impl Ahap {
             solver: SolverKind::Greedy,
             predictor,
             plans: VecDeque::new(),
+            warm: WarmState::default(),
         }
     }
 
     pub fn with_solver(mut self, solver: SolverKind) -> Self {
         self.solver = solver;
         self
+    }
+
+    /// Switch solvers in place — the workspace path's analogue of
+    /// [`with_solver`](Ahap::with_solver). Drops any warm state the old
+    /// solver accumulated, so a reconfigured instance behaves exactly
+    /// like a fresh build with this solver.
+    pub fn set_solver(&mut self, solver: SolverKind) {
+        self.solver = solver;
+        self.warm.reset();
     }
 
     /// Re-target this instance to another pool candidate's
@@ -88,6 +125,7 @@ impl Ahap {
         self.sigma = sigma;
         self.solver = SolverKind::Greedy;
         self.plans.clear();
+        self.warm.reset();
     }
 
     /// Receding Horizon Control: re-plan every slot, execute only the
@@ -134,11 +172,14 @@ impl Ahap {
 impl Ahap {
     /// Eq. 10 solved with the configured solver — the single dispatch
     /// point both the home window and candidate-region windows go
-    /// through, so every window is priced by the same solver.
+    /// through, so every window is priced by the same solver. `home`
+    /// tells the warm solvers which menu to maintain: home solves slide
+    /// the persistent menu, candidate solves patch a scratch copy.
     fn solve_window(
-        &self,
+        &mut self,
         ctx: &SlotContext,
         prob: &HorizonProblem,
+        home: bool,
     ) -> HorizonSolution {
         crate::obs::timing::note_window();
         match self.solver {
@@ -152,6 +193,15 @@ impl Ahap {
             }
             SolverKind::Greedy => solve_greedy(prob),
             SolverKind::Dp { grid_step } => solve_dp(prob, grid_step),
+            // Warm mirrors Greedy's automatic dispatch, bit-for-bit,
+            // through the warm-started twins.
+            SolverKind::Warm if ctx.models.reconfig.mu_up < 0.7 => {
+                self.warm.solve_dp(prob, 0.25, home)
+            }
+            SolverKind::Warm => self.warm.solve_greedy(prob, home),
+            SolverKind::Portfolio { grid_step, budget_us } => {
+                self.warm.race(prob, grid_step, budget_us, home)
+            }
         }
     }
 
@@ -171,6 +221,10 @@ impl Ahap {
         self.predictor
             .observe(ctx.t, ctx.obs.spot_price, ctx.obs.avail);
         let fc = self.predictor.predict(self.omega);
+
+        // The terminal memo is conditioned on this decision's job state
+        // (z0, models); the home and candidate solves below share it.
+        self.warm.begin_decision();
 
         // Window of up to ω+1 slots: the current (observed) one +
         // forecasts, truncated at the deadline — slots past `d` cannot
@@ -214,8 +268,12 @@ impl Ahap {
                 terminal_kind: terminal_kind_for(ctx, win),
                 migration: None,
             };
-            let sol = self.solve_window(ctx, &prob);
+            let sol = self.solve_window(ctx, &prob, true);
             stay_utility = Some(sol.utility);
+            if self.solver.uses_warm_state() {
+                // Next slot's DP warm-start incumbent.
+                self.warm.note_home_plan(ctx.t, &sol.alloc);
+            }
             sol.alloc
         };
 
@@ -262,7 +320,7 @@ impl Ahap {
     /// the transition exactly.)
     #[allow(clippy::too_many_arguments)]
     fn plan_migration(
-        &self,
+        &mut self,
         ctx: &SlotContext,
         view: &RegionView,
         home_prices: &[f64],
@@ -294,7 +352,7 @@ impl Ahap {
                     terminal_kind: terminal_kind_for(ctx, win),
                     migration: None,
                 };
-                self.solve_window(ctx, &stay).utility
+                self.solve_window(ctx, &stay, true).utility
             }
         };
 
@@ -326,7 +384,7 @@ impl Ahap {
                 terminal_kind: terminal_kind_for(ctx, w),
                 migration: Some(view.migration),
             };
-            let u = self.solve_window(ctx, &prob).utility;
+            let u = self.solve_window(ctx, &prob, false).utility;
             // Strictly-greater keeps ties on the earlier region index.
             let improves = match best {
                 Some((_, ub)) => u > ub,
@@ -358,6 +416,7 @@ impl Policy for Ahap {
     fn reset(&mut self) {
         self.plans.clear();
         self.predictor.reset();
+        self.warm.reset();
     }
 
     fn decide(&mut self, ctx: &SlotContext) -> Allocation {
@@ -642,6 +701,48 @@ mod tests {
             &RegionView { current: 0, candidates: &twin, migration: free },
         );
         assert_eq!(d.migrate_to, None);
+    }
+
+    #[test]
+    fn warm_solver_matches_greedy_decisions() {
+        let prices: Vec<f64> =
+            (0..12).map(|i| 0.2 + 0.1 * ((i * 3) % 5) as f64).collect();
+        let avails: Vec<u32> = (0..12).map(|i| ((i * 7) % 13) as u32).collect();
+        let tr = SpotTrace::new(prices.clone(), avails.clone());
+        let j = Job { workload: 60.0, deadline: 10, ..job() };
+        let m = models();
+        let mut cold = Ahap::new(3, 2, 0.5, oracle(&tr));
+        let mut warm =
+            Ahap::new(3, 2, 0.5, oracle(&tr)).with_solver(SolverKind::Warm);
+        let mut progress = 0.0;
+        for t in 0..8 {
+            let c = ctx(t, prices[t], avails[t], progress, &j, &m);
+            let a = cold.decide(&c);
+            let b = warm.decide(&c);
+            assert_eq!(a, b, "slot {t}");
+            progress += a.total() as f64;
+        }
+    }
+
+    #[test]
+    fn set_solver_after_reconfigure_matches_fresh_warm_build() {
+        let tr = SpotTrace::new(
+            vec![0.2, 0.6, 0.3, 0.5, 0.4, 0.3, 0.2, 0.5],
+            vec![8; 8],
+        );
+        let j = job();
+        let m = models();
+        let mut reused = Ahap::new(5, 3, 0.9, oracle(&tr));
+        let _ = reused.decide(&ctx(0, 0.2, 8, 0.0, &j, &m));
+        reused.reconfigure(2, 1, 0.5);
+        reused.set_solver(SolverKind::Warm);
+        reused.reset();
+        let mut fresh =
+            Ahap::new(2, 1, 0.5, oracle(&tr)).with_solver(SolverKind::Warm);
+        for t in 0..4 {
+            let c = ctx(t, tr.price_at(t), tr.avail_at(t), 4.0 * t as f64, &j, &m);
+            assert_eq!(reused.decide(&c), fresh.decide(&c), "slot {t}");
+        }
     }
 
     #[test]

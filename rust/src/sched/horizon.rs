@@ -15,6 +15,8 @@
 //!   penalty inside the window. Used by the Fig. 4/6 harnesses and as the
 //!   reference the greedy is property-tested against.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+
 use crate::obs::timing::{timed, TimedSolver};
 use crate::sched::job::Job;
 use crate::sched::policy::{Allocation, MigrationTerms, Models};
@@ -73,18 +75,18 @@ pub struct HorizonSolution {
 }
 
 impl HorizonProblem<'_> {
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         self.prices.len()
     }
 
     /// 1-based "slots run so far" count at the end of the window.
-    fn end_slot(&self) -> usize {
+    pub(crate) fn end_slot(&self) -> usize {
         self.start_slot + self.len()
     }
 
     /// Terminal value of ending the window with progress `z`, under the
     /// problem's [`TerminalKind`].
-    fn terminal(&self, z: f64) -> f64 {
+    pub(crate) fn terminal(&self, z: f64) -> f64 {
         match self.terminal_kind {
             TerminalKind::Exact => self.job.terminal_value(
                 z,
@@ -117,7 +119,7 @@ impl HorizonProblem<'_> {
 
     /// Cheapest-first split of `n` total instances at window slot `i`:
     /// returns (on_demand, spot, cost).
-    fn split(&self, i: usize, n: u32) -> (u32, u32, f64) {
+    pub(crate) fn split(&self, i: usize, n: u32) -> (u32, u32, f64) {
         let p_s = self.prices[i];
         let p_o = self.models.on_demand_price;
         let cap_s = self.avail[i].min(n);
@@ -170,35 +172,45 @@ fn solve_greedy_impl(p: &HorizonProblem) -> HorizonSolution {
     }
 }
 
+/// The ≤2 maximal constant-price "runs" of window slot `i`'s unit menu:
+/// `(count, price, is_spot)`, cheaper run first. Expanding the runs in
+/// order reproduces exactly the units [`greedy_with_alpha`] pushes for
+/// the slot; `sched::warm` keeps whole runs instead of individual units
+/// so a window slide moves O(1) entries per slot.
+pub(crate) fn slot_runs(p: &HorizonProblem, i: usize) -> [(u32, f64, bool); 2] {
+    let n_max = p.job.n_max;
+    let p_o = p.models.on_demand_price;
+    let spot_n = p.avail[i].min(n_max);
+    let cheaper_spot = p.prices[i] <= p_o;
+    let (first_n, first_spot, first_price) = if cheaper_spot {
+        (spot_n, true, p.prices[i])
+    } else {
+        (n_max, false, p_o)
+    };
+    let rest = n_max - first_n.min(n_max);
+    let (rest_spot, rest_price) =
+        if cheaper_spot { (false, p_o) } else { (true, p.prices[i]) };
+    let rest_n = if rest_spot { rest.min(spot_n) } else { rest };
+    [(first_n, first_price, first_spot), (rest_n, rest_price, rest_spot)]
+}
+
 fn greedy_with_alpha(p: &HorizonProblem, alpha: f64) -> HorizonSolution {
     let len = p.len();
     let n_max = p.job.n_max;
-    let p_o = p.models.on_demand_price;
 
     // Build the unit menu: (price, slot, is_spot).
     let mut units: Vec<(f64, usize, bool)> = Vec::with_capacity(len * n_max as usize);
     for i in 0..len {
-        let spot_n = p.avail[i].min(n_max);
-        let cheaper_spot = p.prices[i] <= p_o;
-        let (first_n, first_spot, first_price) = if cheaper_spot {
-            (spot_n, true, p.prices[i])
-        } else {
-            (n_max, false, p_o)
-        };
-        for _ in 0..first_n {
-            units.push((first_price, i, first_spot));
-        }
-        let rest = n_max - first_n.min(n_max);
-        let (rest_spot, rest_price) =
-            if cheaper_spot { (false, p_o) } else { (true, p.prices[i]) };
-        let rest_n = if rest_spot { rest.min(spot_n) } else { rest };
-        for _ in 0..rest_n {
-            units.push((rest_price, i, rest_spot));
+        for (count, price, is_spot) in slot_runs(p, i) {
+            for _ in 0..count {
+                units.push((price, i, is_spot));
+            }
         }
     }
-    units.sort_by(|a, b| {
-        a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
-    });
+    // `total_cmp` so a NaN forecast price degrades deterministically
+    // (sorted to the expensive end) instead of panicking mid-episode —
+    // the same convention as `util::argmax_total`.
+    units.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
 
     // Find optimal purchase quantity via prefix costs.
     let mut best_q = 0usize;
@@ -223,9 +235,29 @@ fn greedy_with_alpha(p: &HorizonProblem, alpha: f64) -> HorizonSolution {
         }
     }
 
-    // Repair N^min violations: for each undersized slot, choose the better
-    // of rounding up (cheapest local units) or dropping to idle.
-    for i in 0..len {
+    repair_nmin(p, alpha, &mut alloc);
+
+    // Recompute utility for the final (repaired) allocation.
+    let utility = evaluate(p, &alloc);
+    HorizonSolution { alloc, utility }
+}
+
+/// Repair N^min violations: for each undersized slot, choose the better
+/// of rounding up (cheapest local units) or dropping to idle. Shared by
+/// the cold greedy and `sched::warm` so both repair identically.
+///
+/// The running `units_total` replaces a per-slot re-sum of every
+/// allocation (O(len²) across the pass). Slot totals are small integers,
+/// so their f64 sum is exact and `units_total as f64` is bit-identical
+/// to the sum the re-scan produced.
+pub(crate) fn repair_nmin(
+    p: &HorizonProblem,
+    alpha: f64,
+    alloc: &mut [Allocation],
+) {
+    let p_o = p.models.on_demand_price;
+    let mut units_total: u64 = alloc.iter().map(|a| a.total() as u64).sum();
+    for i in 0..alloc.len() {
         let total = alloc[i].total();
         if total > 0 && total < p.job.n_min {
             let deficit = p.job.n_min - total;
@@ -241,24 +273,20 @@ fn greedy_with_alpha(p: &HorizonProblem, alpha: f64) -> HorizonSolution {
                 add_s as f64 * p.prices[i] + add_o as f64 * p_o;
             let gain = alpha * deficit as f64; // extra progress
             // Compare marginal utility of topping up vs idling this slot.
-            let z_now: f64 = p.z0
-                + alpha
-                    * alloc.iter().map(|a| a.total() as f64).sum::<f64>();
+            let z_now: f64 = p.z0 + alpha * units_total as f64;
             let u_top = p.terminal(z_now + gain) - topup_cost;
             let (_, _, cur_cost) = p.split(i, total);
             let u_drop = p.terminal(z_now - alpha * total as f64) + cur_cost;
             if u_top >= u_drop {
                 alloc[i].spot += add_s;
                 alloc[i].on_demand += add_o;
+                units_total += deficit as u64;
             } else {
                 alloc[i] = Allocation::idle();
+                units_total -= total as u64;
             }
         }
     }
-
-    // Recompute utility for the final (repaired) allocation.
-    let utility = evaluate(p, &alloc);
-    HorizonSolution { alloc, utility }
 }
 
 /// Utility of a concrete window allocation under the problem's model
@@ -289,6 +317,15 @@ pub fn evaluate(p: &HorizonProblem, alloc: &[Allocation]) -> f64 {
     p.terminal(z) - cost
 }
 
+/// The DP's per-slot candidate totals: 0 (idle) or [n_min, n_max], in
+/// the exact order both the cold DP and `sched::warm`'s warm DP iterate
+/// them (first-max tie-breaking depends on it).
+pub(crate) fn dp_totals(job: &Job) -> Vec<u32> {
+    let mut totals: Vec<u32> = vec![0];
+    totals.extend(job.n_min..=job.n_max);
+    totals
+}
+
 /// Exact DP over (slot, progress-grid, previous-count). Progress is
 /// floored to a grid of `grid_step` workload units (conservative).
 pub fn solve_dp(p: &HorizonProblem, grid_step: f64) -> HorizonSolution {
@@ -296,6 +333,20 @@ pub fn solve_dp(p: &HorizonProblem, grid_step: f64) -> HorizonSolution {
 }
 
 fn solve_dp_impl(p: &HorizonProblem, grid_step: f64) -> HorizonSolution {
+    static NEVER: AtomicBool = AtomicBool::new(false);
+    solve_dp_cancellable(p, grid_step, &NEVER)
+        .expect("uncancellable DP solve cannot be cancelled")
+}
+
+/// [`solve_dp`] with a cooperative cancellation flag, checked once per
+/// τ-layer. Returns `None` if cancelled — the anytime portfolio's way
+/// of abandoning a DP solve that blew its budget. Identical arithmetic
+/// to the plain solve (the flag is only ever *read*).
+pub(crate) fn solve_dp_cancellable(
+    p: &HorizonProblem,
+    grid_step: f64,
+    cancel: &AtomicBool,
+) -> Option<HorizonSolution> {
     assert!(grid_step > 0.0);
     let len = p.len();
     let n_max = p.job.n_max as usize;
@@ -315,12 +366,13 @@ fn solve_dp_impl(p: &HorizonProblem, grid_step: f64) -> HorizonSolution {
         }
     }
     let mut choice = vec![vec![0u32; zn * n_states]; len];
+    let totals = dp_totals(p.job);
 
     for tau in (0..len).rev() {
+        if cancel.load(Ordering::Relaxed) {
+            return None;
+        }
         let mut cur = vec![f64::NEG_INFINITY; zn * n_states];
-        // candidate totals: 0 or [n_min, n_max]
-        let mut totals: Vec<u32> = vec![0];
-        totals.extend(p.job.n_min..=p.job.n_max);
         for zi in 0..zn {
             for np in 0..n_states {
                 let mut best = f64::NEG_INFINITY;
@@ -372,7 +424,7 @@ fn solve_dp_impl(p: &HorizonProblem, grid_step: f64) -> HorizonSolution {
         z += mu * p.models.throughput.h(n);
         np = n;
     }
-    HorizonSolution { alloc, utility }
+    Some(HorizonSolution { alloc, utility })
 }
 
 #[cfg(test)]
@@ -641,5 +693,93 @@ mod tests {
         };
         let s = solve_greedy(&p);
         assert_eq!(s.alloc[0].total(), 8, "{:?}", s.alloc);
+    }
+
+    #[test]
+    fn nan_forecast_price_degrades_without_panicking() {
+        // A NaN spot price compares false against p^o, so the slot's
+        // menu offers only on-demand units — `total_cmp` sorts them
+        // deterministically and the solve completes. Pre-fix this
+        // panicked in `partial_cmp().unwrap()`.
+        let j = job(16.0, 4);
+        let m = models_free();
+        let prices = [0.2, f64::NAN, 0.2, 0.9];
+        let avail = [8, 8, 8, 8];
+        let p = HorizonProblem {
+            job: &j, models: &m, start_slot: 0, z0: 0.0,
+            prices: &prices, avail: &avail, n_prev: 0,
+            terminal_kind: TerminalKind::Exact,
+            migration: None,
+        };
+        let s = solve_greedy(&p);
+        // No spot is ever bought at a NaN price.
+        assert_eq!(s.alloc[1].spot, 0);
+        // The two clean 0.2 slots still carry the work.
+        assert_eq!(s.alloc[0].spot, 8);
+        assert_eq!(s.alloc[2].spot, 8);
+    }
+
+    #[test]
+    fn repair_running_total_matches_naive_recompute() {
+        // The shared repair pass keeps a running unit total; the old
+        // code re-summed every allocation per undersized slot. Both are
+        // exact integer sums in f64, so decisions must be bit-identical.
+        let j = Job { workload: 30.0, deadline: 6, n_min: 4, n_max: 8, value: 45.0, gamma: 1.5 };
+        let m = models_free();
+        let prices = [0.2, 0.9, 0.3, 1.4, 0.5, 0.7];
+        let avail = [8, 2, 8, 8, 3, 8];
+        let p = HorizonProblem {
+            job: &j, models: &m, start_slot: 0, z0: 0.0,
+            prices: &prices, avail: &avail, n_prev: 0,
+            terminal_kind: TerminalKind::Exact,
+            migration: None,
+        };
+        let naive = |alloc: &mut [Allocation]| {
+            let p_o = p.models.on_demand_price;
+            for i in 0..alloc.len() {
+                let total = alloc[i].total();
+                if total > 0 && total < p.job.n_min {
+                    let deficit = p.job.n_min - total;
+                    let spare_spot =
+                        p.avail[i].min(p.job.n_max) - alloc[i].spot;
+                    let (add_s, add_o) = if p.prices[i] <= p_o {
+                        let s = deficit.min(spare_spot);
+                        (s, deficit - s)
+                    } else {
+                        (0, deficit)
+                    };
+                    let topup_cost =
+                        add_s as f64 * p.prices[i] + add_o as f64 * p_o;
+                    let gain = 1.0 * deficit as f64;
+                    let z_now: f64 = p.z0
+                        + alloc.iter().map(|a| a.total() as f64).sum::<f64>();
+                    let u_top = p.terminal(z_now + gain) - topup_cost;
+                    let (_, _, cur_cost) = p.split(i, total);
+                    let u_drop =
+                        p.terminal(z_now - total as f64) + cur_cost;
+                    if u_top >= u_drop {
+                        alloc[i].spot += add_s;
+                        alloc[i].on_demand += add_o;
+                    } else {
+                        alloc[i] = Allocation::idle();
+                    }
+                }
+            }
+        };
+        // Sweep a range of undersized patterns, including multiple
+        // repairs in one pass (each repair shifts z for the next).
+        for seed in 0..32u32 {
+            let mut a = Vec::new();
+            for i in 0..6 {
+                let t = (seed.wrapping_mul(7).wrapping_add(i * 3)) % 6;
+                let spot = t.min(avail[i as usize]);
+                a.push(Allocation::new(t - spot, spot));
+            }
+            let mut fast = a.clone();
+            let mut slow = a.clone();
+            repair_nmin(&p, 1.0, &mut fast);
+            naive(&mut slow);
+            assert_eq!(fast, slow, "seed {seed}: {a:?}");
+        }
     }
 }

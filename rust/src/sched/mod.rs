@@ -15,6 +15,7 @@ pub mod pool;
 pub mod selector;
 pub mod simulate;
 pub mod throughput;
+pub mod warm;
 
 pub use job::{Job, JobGenerator};
 pub use policy::{

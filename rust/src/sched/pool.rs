@@ -11,7 +11,7 @@ use crate::forecast::noise::{NoiseSpec, NoisyOracle};
 use crate::forecast::predictor::{OraclePredictor, Predictor};
 use crate::market::trace::SpotTrace;
 use crate::sched::ahanp::Ahanp;
-use crate::sched::ahap::Ahap;
+use crate::sched::ahap::{Ahap, SolverKind};
 use crate::sched::baselines::{Msu, OdOnly, UniformProgress};
 use crate::sched::policy::Policy;
 
@@ -53,11 +53,27 @@ pub struct PolicyEnv {
     /// is ARIMA, built policies get cache handles instead of private
     /// models (bit-identical forecasts, one fit per slot pool-wide).
     pub forecasts: Option<SharedForecaster>,
+    /// The Eq. 10 solver AHAP-family policies are built with (default
+    /// `Greedy`, the historical behavior).
+    pub solver: SolverKind,
 }
 
 impl PolicyEnv {
     pub fn new(predictor: PredictorKind, trace: SpotTrace, seed: u64) -> Self {
-        PolicyEnv { predictor, trace, seed, history: None, forecasts: None }
+        PolicyEnv {
+            predictor,
+            trace,
+            seed,
+            history: None,
+            forecasts: None,
+            solver: SolverKind::default(),
+        }
+    }
+
+    /// Build AHAP-family policies with the given window solver.
+    pub fn with_solver(mut self, solver: SolverKind) -> Self {
+        self.solver = solver;
+        self
     }
 
     /// Seed honest predictors with market history preceding the trace.
@@ -131,7 +147,10 @@ impl PolicySpec {
     pub fn build(&self, env: &PolicyEnv) -> Box<dyn Policy> {
         match *self {
             PolicySpec::Ahap { omega, v, sigma } => {
-                Box::new(Ahap::new(omega, v, sigma, env.make_predictor()))
+                Box::new(
+                    Ahap::new(omega, v, sigma, env.make_predictor())
+                        .with_solver(env.solver),
+                )
             }
             PolicySpec::Ahanp { sigma } => Box::new(Ahanp::new(sigma)),
             PolicySpec::OdOnly => Box::new(OdOnly),
@@ -243,10 +262,18 @@ impl PolicyWorkspace {
         match *spec {
             PolicySpec::Ahap { omega, v, sigma } => {
                 match self.ahap.as_mut() {
-                    Some(a) => a.reconfigure(omega, v, sigma),
+                    Some(a) => {
+                        a.reconfigure(omega, v, sigma);
+                        // reconfigure restores the built default
+                        // (Greedy); re-apply the env's solver so the
+                        // served instance matches `spec.build(env)`.
+                        a.set_solver(env.solver);
+                    }
                     None => {
-                        self.ahap =
-                            Some(Ahap::new(omega, v, sigma, env.make_predictor()));
+                        self.ahap = Some(
+                            Ahap::new(omega, v, sigma, env.make_predictor())
+                                .with_solver(env.solver),
+                        );
                     }
                 }
                 self.ahap.as_mut().unwrap()

@@ -1,0 +1,1121 @@
+//! Warm-started, anytime twins of the Eq. 10 window solvers.
+//!
+//! AHAP re-solves the CHC window from scratch every slot, and
+//! region-aware planning multiplies that by one solve per candidate
+//! region — yet consecutive windows overlap in ω−1 slots and all
+//! candidates share the same job state. Everything here exploits that
+//! overlap **without changing a single committed allocation**: the warm
+//! solvers are bit-identical to `solve_greedy` / `solve_dp` (shared
+//! repair and evaluation code, identical f64 expression order, pruning
+//! only on proven bounds), property-tested in
+//! `tests/warm_solver_properties.rs`.
+//!
+//! - [`WindowSolver`] — incremental greedy. The sorted unit menu is
+//!   persisted as per-slot constant-price *runs* keyed by a total-order
+//!   encoding of the price; a window slide evicts the expired slot's
+//!   runs and merge-inserts the new slot's ≤2 runs (O(n_max log U) per
+//!   slot instead of an O(U log U) rebuild), and candidate-region
+//!   solves patch a scratch copy of the home menu, touching only slots
+//!   whose (price, avail) differ. `terminal(z)` evaluations are shared
+//!   across the decision's candidates via [`TerminalMemo`].
+//! - [`WarmDp`] — the exact DP recast as top-down recursion over
+//!   *reachable* states only, with an epoch-stamped memo reused across
+//!   solves, a terminal-bound child skip, and the previous slot's
+//!   committed plan (shifted by one) walked first as a root incumbent
+//!   bound — the aries `warm_up.rs` seeding idea.
+//! - [`SolverPortfolio`] — an aries `ParSolver`-style racing harness:
+//!   the incremental greedy's feasible answer is always ready at the
+//!   slot tick, while a worker thread (idle → running → halting, with a
+//!   cooperative cancellation flag) runs the exact DP under a
+//!   per-decision budget; the DP's plan is adopted only if it finishes
+//!   in budget *and* is strictly better. `budget = None` runs both
+//!   inline — deterministic, for tests and recorded fleet runs.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::obs::timing::{self, timed, TimedSolver};
+use crate::sched::horizon::{
+    dp_totals, evaluate, repair_nmin, slot_runs, solve_dp_cancellable,
+    HorizonProblem, HorizonSolution, TerminalKind,
+};
+use crate::sched::job::Job;
+use crate::sched::policy::{Allocation, MigrationTerms, Models};
+
+/// Order-preserving total encoding of an f64 price: `price_key(a) <
+/// price_key(b)` iff `a.total_cmp(&b) == Less`. Lets the menu order on
+/// a u64 while matching the cold sort's `total_cmp` exactly (NaN
+/// forecast prices included).
+fn price_key(p: f64) -> u64 {
+    let b = p.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
+
+/// One maximal constant-price run of a slot's unit menu (the unit of
+/// incremental maintenance — a slide moves ≤2 runs per changed slot).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Run {
+    /// `price_key(price)` — primary sort key.
+    key: u64,
+    /// Absolute slot index, so runs keep their identity as the window
+    /// slides (secondary sort key, matching the cold earlier-slot tie
+    /// break).
+    slot: usize,
+    /// 0 = the slot's cheap run, 1 = the remainder run. The cold sort
+    /// is stable, so at an equal (price, slot) the cheap run's units
+    /// come first; the rank reproduces that as the last tie break.
+    rank: u8,
+    count: u32,
+    price: f64,
+    is_spot: bool,
+}
+
+/// Per-decision memo of `terminal(z0 + α·q)` evaluations, shared across
+/// the home solve and every candidate-region solve of one AHAP decision
+/// (they all share `z0`, the job, and the models — the terminal never
+/// depends on a candidate's prices or migration term). Cleared by
+/// [`WarmState::begin_decision`].
+#[derive(Debug, Default)]
+pub struct TerminalMemo {
+    entries: Vec<MemoEntry>,
+}
+
+#[derive(Debug)]
+struct MemoEntry {
+    key: (u64, u64, usize, TerminalKind),
+    /// `vals[q] = terminal(z0 + α·q)`; NaN = not yet evaluated (a
+    /// genuinely-NaN terminal just recomputes — same value every time).
+    vals: Vec<f64>,
+}
+
+impl TerminalMemo {
+    /// Forget everything — must be called when the job state (`z0`,
+    /// job, models) the memo is conditioned on may have changed.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
+
+    /// `terminal(z0 + α·q)`, computed once per (α, window-end) within a
+    /// decision. The z expression matches the cold scan's
+    /// `z0 + alpha * (q as f64)` bit-for-bit.
+    fn term(&mut self, p: &HorizonProblem, alpha: f64, q: usize) -> f64 {
+        let key =
+            (alpha.to_bits(), p.z0.to_bits(), p.end_slot(), p.terminal_kind);
+        let at = match self.entries.iter().position(|e| e.key == key) {
+            Some(i) => i,
+            None => {
+                self.entries.push(MemoEntry { key, vals: Vec::new() });
+                self.entries.len() - 1
+            }
+        };
+        let e = &mut self.entries[at];
+        if e.vals.len() <= q {
+            e.vals.resize(q + 1, f64::NAN);
+        }
+        if e.vals[q].is_nan() {
+            e.vals[q] = p.terminal(p.z0 + alpha * q as f64);
+        }
+        e.vals[q]
+    }
+}
+
+/// Incremental marginal-unit greedy: persists the sorted unit menu
+/// across consecutive (overlapping) windows. Produces bit-identical
+/// allocations and utilities to [`crate::sched::horizon::solve_greedy`].
+#[derive(Debug, Clone, Default)]
+pub struct WindowSolver {
+    /// (absolute slot, price bits, avail) of every slot currently in
+    /// the menu — the change-detection signature.
+    sig: Vec<(usize, u64, u32)>,
+    /// All runs, sorted by (key, slot, rank) — exactly the cold unit
+    /// sort's order.
+    runs: Vec<Run>,
+    /// True iff every menu price is finite and ≥ 0. Prefix costs are
+    /// then nondecreasing, so the scan may stop once progress saturates
+    /// the workload (the terminal is constant beyond it and no later
+    /// unit can beat the incumbent by > 1e-12). Off on weird prices:
+    /// full cold-order scan.
+    safe_prices: bool,
+    /// (n_max, on-demand price bits): the menu inputs besides each
+    /// slot's (price, avail). A change invalidates every run.
+    config: (u32, u64),
+}
+
+impl WindowSolver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop the persisted menu (job switch, reconfigure, …). The next
+    /// solve rebuilds from scratch — identical results either way; this
+    /// only forfeits reuse.
+    pub fn reset(&mut self) {
+        self.sig.clear();
+        self.runs.clear();
+    }
+
+    /// Bring the menu in sync with `p`'s window: evict slots that left
+    /// the window, re-insert slots whose (price, avail) changed, and
+    /// merge-insert slots that entered. Unchanged slots — the ω−1
+    /// overlap of a slide, or all-but-the-differing slots of a
+    /// candidate region — are untouched.
+    fn sync(&mut self, p: &HorizonProblem) {
+        let config = (p.job.n_max, p.models.on_demand_price.to_bits());
+        if config != self.config {
+            self.config = config;
+            self.sig.clear();
+            self.runs.clear();
+        }
+        let lo = p.start_slot;
+        let hi = p.start_slot + p.len();
+        if self.sig.iter().any(|&(s, _, _)| s < lo || s >= hi) {
+            self.sig.retain(|&(s, _, _)| s >= lo && s < hi);
+            self.runs.retain(|r| r.slot >= lo && r.slot < hi);
+        }
+        for off in 0..p.len() {
+            let slot = lo + off;
+            let want = (slot, p.prices[off].to_bits(), p.avail[off]);
+            match self.sig.iter().position(|e| e.0 == slot) {
+                Some(i) if self.sig[i] == want => continue,
+                Some(i) => {
+                    self.sig[i] = want;
+                    self.runs.retain(|r| r.slot != slot);
+                }
+                None => self.sig.push(want),
+            }
+            for (rank, (count, price, is_spot)) in
+                slot_runs(p, off).into_iter().enumerate()
+            {
+                if count == 0 {
+                    continue;
+                }
+                let run = Run {
+                    key: price_key(price),
+                    slot,
+                    rank: rank as u8,
+                    count,
+                    price,
+                    is_spot,
+                };
+                let pos = self.runs.partition_point(|r| {
+                    (r.key, r.slot, r.rank) < (run.key, run.slot, run.rank)
+                });
+                self.runs.insert(pos, run);
+            }
+        }
+        self.safe_prices =
+            self.runs.iter().all(|r| r.price.is_finite() && r.price >= 0.0);
+    }
+
+    /// Warm twin of `solve_greedy`: sync the menu, then run the same
+    /// two-α (deflated / exact) scheme over it.
+    pub fn solve(
+        &mut self,
+        p: &HorizonProblem,
+        memo: &mut TerminalMemo,
+    ) -> HorizonSolution {
+        timed(TimedSolver::Greedy, || {
+            self.sync(p);
+            let deflated = self.with_alpha(
+                p,
+                p.models.throughput.alpha * p.models.reconfig.mu_up,
+                memo,
+            );
+            if p.models.reconfig.mu_up >= 1.0 - 1e-12 {
+                return deflated;
+            }
+            let exact =
+                self.with_alpha(p, p.models.throughput.alpha, memo);
+            let u_deflated = evaluate(p, &deflated.alloc);
+            let u_exact = evaluate(p, &exact.alloc);
+            if u_exact > u_deflated {
+                HorizonSolution { alloc: exact.alloc, utility: u_exact }
+            } else {
+                HorizonSolution { alloc: deflated.alloc, utility: u_deflated }
+            }
+        })
+    }
+
+    fn with_alpha(
+        &self,
+        p: &HorizonProblem,
+        alpha: f64,
+        memo: &mut TerminalMemo,
+    ) -> HorizonSolution {
+        // Prefix-cost scan in the cold unit order. `cost` accumulates
+        // unit-by-unit (not run-at-a-time) so the f64 addition sequence
+        // — and therefore every compared utility — is bit-identical.
+        let mut best_q = 0usize;
+        let mut best_u = memo.term(p, alpha, 0);
+        let mut cost = 0.0;
+        let mut q = 0usize;
+        let sat = p.job.workload - 1e-9;
+        'scan: for r in &self.runs {
+            for _ in 0..r.count {
+                cost += r.price;
+                let u = memo.term(p, alpha, q + 1) - cost;
+                if u > best_u + 1e-12 {
+                    best_u = u;
+                    best_q = q + 1;
+                }
+                q += 1;
+                // Beyond saturation the terminal is constant and (with
+                // nonnegative prices and α) cost only grows while z
+                // stays saturated: no later unit can clear the strict
+                // improvement threshold.
+                if self.safe_prices
+                    && alpha >= 0.0
+                    && p.z0 + alpha * q as f64 >= sat
+                {
+                    break 'scan;
+                }
+            }
+        }
+
+        // Materialize the first `best_q` units, run-at-a-time.
+        let mut alloc = vec![Allocation::idle(); p.len()];
+        let mut left = best_q;
+        for r in &self.runs {
+            if left == 0 {
+                break;
+            }
+            let take = (r.count as usize).min(left) as u32;
+            let i = r.slot - p.start_slot;
+            if r.is_spot {
+                alloc[i].spot += take;
+            } else {
+                alloc[i].on_demand += take;
+            }
+            left -= take as usize;
+        }
+        repair_nmin(p, alpha, &mut alloc);
+        let utility = evaluate(p, &alloc);
+        HorizonSolution { alloc, utility }
+    }
+}
+
+/// Epoch-stamped memo cell pool for [`WarmDp`]: buffers are sized once
+/// and revalidated by bumping `epoch`, so a solve does no clearing and
+/// (after warm-up) no allocation.
+#[derive(Debug, Default)]
+struct DpMemo {
+    stamp: Vec<u32>,
+    val: Vec<f64>,
+    pick: Vec<u32>,
+    epoch: u32,
+}
+
+impl DpMemo {
+    fn begin(&mut self, cells: usize) {
+        if self.stamp.len() < cells {
+            self.stamp.resize(cells, 0);
+            self.val.resize(cells, 0.0);
+            self.pick.resize(cells, 0);
+        }
+        if self.epoch == u32::MAX {
+            self.stamp.fill(0);
+            self.epoch = 0;
+        }
+        self.epoch += 1;
+    }
+}
+
+/// Warm-started exact DP. Identical recurrence, candidate order, and
+/// strict-improvement argmax as `solve_dp` — evaluated top-down so only
+/// states reachable from the root are expanded, with two provably-safe
+/// prunes:
+///
+/// - a child whose optimistic bound `T_top − cost` cannot strictly beat
+///   the running best is skipped (`T_top` = the terminal layer's max;
+///   all future costs are nonnegative on well-formed prices);
+/// - at the root, the previous slot's committed plan — shifted by one
+///   and walked through the exact grid transition — gives an incumbent
+///   lower bound `B`; root children provably below `B` are skipped
+///   before their subtrees are ever touched.
+///
+/// Both prunes only discard children the cold argmax would not have
+/// selected, so values *and* extracted plans stay bit-identical.
+#[derive(Debug, Default)]
+pub struct WarmDp {
+    memo: DpMemo,
+    term: Vec<f64>,
+}
+
+struct DpCtx<'a, 'b> {
+    p: &'a HorizonProblem<'b>,
+    grid_step: f64,
+    len: usize,
+    zn: usize,
+    n_states: usize,
+    totals: &'a [u32],
+    term: &'a [f64],
+    t_top: f64,
+    /// Prices finite and ≥ 0, and `t_top` finite: bounds are valid.
+    safe: bool,
+    root_bound: f64,
+    memo: &'a mut DpMemo,
+}
+
+impl DpCtx<'_, '_> {
+    fn value(&mut self, tau: usize, zi: usize, np: usize) -> f64 {
+        if tau == self.len {
+            return self.term[zi];
+        }
+        let at = (tau * self.zn + zi) * self.n_states + np;
+        if self.memo.stamp[at] == self.memo.epoch {
+            return self.memo.val[at];
+        }
+        let mut best = f64::NEG_INFINITY;
+        let mut best_n = 0u32;
+        for &n in self.totals {
+            let (_, _, cost) = self.p.split(tau, n);
+            if self.safe {
+                // Root incumbent: strict `<` so a bound-tied maximal
+                // child is never skipped (it may be the cold argmax).
+                if tau == 0 && self.t_top - cost < self.root_bound {
+                    continue;
+                }
+                // Running best: a child that provably cannot satisfy
+                // the strict `v > best` update is skipped unevaluated.
+                if self.t_top - cost <= best {
+                    continue;
+                }
+            }
+            let mut mu = self.p.models.reconfig.mu(np as u32, n);
+            if tau == 0 {
+                if let Some(m) = self.p.migration {
+                    mu *= m.mu;
+                }
+            }
+            let dz = mu * self.p.models.throughput.h(n);
+            let zi2 =
+                (zi + (dz / self.grid_step) as usize).min(self.zn - 1);
+            let v = self.value(tau + 1, zi2, n as usize) - cost;
+            if v > best {
+                best = v;
+                best_n = n;
+            }
+        }
+        self.memo.stamp[at] = self.memo.epoch;
+        self.memo.val[at] = best;
+        self.memo.pick[at] = best_n;
+        best
+    }
+}
+
+impl WarmDp {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Solve `p` exactly, optionally seeded with `incumbent` — the
+    /// previous committed plan's per-slot totals shifted onto this
+    /// window (entries must be 0 or within [n_min, n_max]).
+    pub fn solve(
+        &mut self,
+        p: &HorizonProblem,
+        grid_step: f64,
+        incumbent: Option<&[u32]>,
+    ) -> HorizonSolution {
+        timed(TimedSolver::Dp, || self.solve_impl(p, grid_step, incumbent))
+    }
+
+    fn solve_impl(
+        &mut self,
+        p: &HorizonProblem,
+        grid_step: f64,
+        incumbent: Option<&[u32]>,
+    ) -> HorizonSolution {
+        assert!(grid_step > 0.0);
+        let len = p.len();
+        let n_max = p.job.n_max as usize;
+        let n_states = n_max + 1;
+        let z_cap = p.job.workload;
+        let zn = (z_cap / grid_step).ceil() as usize + 1;
+        let totals = dp_totals(p.job);
+
+        // Terminal layer — the same expression as the cold DP's.
+        self.term.clear();
+        self.term.reserve(zn);
+        for zi in 0..zn {
+            let z = p.z0 + zi as f64 * grid_step;
+            self.term.push(p.terminal(z.min(p.z0 + z_cap)));
+        }
+        let t_top =
+            self.term.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b));
+        let safe = t_top.is_finite()
+            && p.models.on_demand_price.is_finite()
+            && p.models.on_demand_price >= 0.0
+            && p.prices.iter().all(|&pr| pr.is_finite() && pr >= 0.0);
+
+        let root_bound = match incumbent {
+            Some(plan) if safe && plan.len() == len => {
+                incumbent_bound(p, grid_step, zn, &self.term, plan)
+            }
+            _ => f64::NEG_INFINITY,
+        };
+
+        self.memo.begin(len * zn * n_states);
+        let mut ctx = DpCtx {
+            p,
+            grid_step,
+            len,
+            zn,
+            n_states,
+            totals: &totals,
+            term: &self.term,
+            t_top,
+            safe,
+            root_bound,
+            memo: &mut self.memo,
+        };
+
+        let np0 = p.n_prev.min(n_max as u32) as usize;
+        let mut utility = ctx.value(0, 0, np0);
+        if let Some(m) = p.migration {
+            utility -= m.cost;
+        }
+
+        // Forward extraction — identical to the cold DP's, including
+        // its float-accumulated re-gridding of z (which can step onto a
+        // state off the integer-propagated chain: `value` materializes
+        // any such state on demand, exactly).
+        let mut alloc = Vec::with_capacity(len);
+        let mut z = p.z0;
+        let mut np = np0 as u32;
+        for tau in 0..len {
+            let zi = (((z - p.z0) / grid_step) as usize).min(zn - 1);
+            ctx.value(tau, zi, np as usize);
+            let n =
+                ctx.memo.pick[(tau * zn + zi) * n_states + np as usize];
+            let (o, s, _) = p.split(tau, n);
+            alloc.push(Allocation::new(o, s));
+            let mut mu = p.models.reconfig.mu(np, n);
+            if tau == 0 {
+                if let Some(m) = p.migration {
+                    mu *= m.mu;
+                }
+            }
+            z += mu * p.models.throughput.h(n);
+            np = n;
+        }
+        HorizonSolution { alloc, utility }
+    }
+}
+
+/// The DP value of the forced `plan` path from the root state, under
+/// the exact grid transition semantics — a feasible-policy lower bound
+/// on the root optimum.
+fn incumbent_bound(
+    p: &HorizonProblem,
+    grid_step: f64,
+    zn: usize,
+    term: &[f64],
+    plan: &[u32],
+) -> f64 {
+    let mut zi = 0usize;
+    let mut np = p.n_prev.min(p.job.n_max);
+    let mut total_cost = 0.0;
+    for (tau, &n) in plan.iter().enumerate() {
+        let (_, _, cost) = p.split(tau, n);
+        let mut mu = p.models.reconfig.mu(np, n);
+        if tau == 0 {
+            if let Some(m) = p.migration {
+                mu *= m.mu;
+            }
+        }
+        let dz = mu * p.models.throughput.h(n);
+        zi = (zi + (dz / grid_step) as usize).min(zn - 1);
+        total_cost += cost;
+        np = n;
+    }
+    term[zi] - total_cost
+}
+
+/// A window problem that owns its slices — what crosses the portfolio's
+/// thread boundary.
+#[derive(Debug, Clone)]
+struct OwnedProblem {
+    job: Job,
+    models: Models,
+    start_slot: usize,
+    z0: f64,
+    prices: Vec<f64>,
+    avail: Vec<u32>,
+    n_prev: u32,
+    terminal_kind: TerminalKind,
+    migration: Option<MigrationTerms>,
+}
+
+impl OwnedProblem {
+    fn of(p: &HorizonProblem) -> Self {
+        OwnedProblem {
+            job: *p.job,
+            models: *p.models,
+            start_slot: p.start_slot,
+            z0: p.z0,
+            prices: p.prices.to_vec(),
+            avail: p.avail.to_vec(),
+            n_prev: p.n_prev,
+            terminal_kind: p.terminal_kind,
+            migration: p.migration,
+        }
+    }
+
+    fn as_problem(&self) -> HorizonProblem<'_> {
+        HorizonProblem {
+            job: &self.job,
+            models: &self.models,
+            start_slot: self.start_slot,
+            z0: self.z0,
+            prices: &self.prices,
+            avail: &self.avail,
+            n_prev: self.n_prev,
+            terminal_kind: self.terminal_kind,
+            migration: self.migration,
+        }
+    }
+}
+
+struct DpRequest {
+    id: u64,
+    prob: OwnedProblem,
+    grid_step: f64,
+    cancel: Arc<AtomicBool>,
+}
+
+struct DpWorker {
+    tx: Option<Sender<DpRequest>>,
+    rx: Receiver<(u64, Option<HorizonSolution>)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for DpWorker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DpWorker").finish_non_exhaustive()
+    }
+}
+
+impl DpWorker {
+    fn spawn() -> DpWorker {
+        let (tx, req_rx) = mpsc::channel::<DpRequest>();
+        let (res_tx, rx) = mpsc::channel();
+        let handle = std::thread::Builder::new()
+            .name("spotfine-dp-worker".into())
+            .spawn(move || {
+                // idle: blocked on recv. running: inside the solve.
+                // halting: the solve observed `cancel` (or finished
+                // after the deadline) — its result is sent anyway and
+                // discarded by id on the other side.
+                while let Ok(req) = req_rx.recv() {
+                    let sol = {
+                        let p = req.prob.as_problem();
+                        solve_dp_cancellable(&p, req.grid_step, &req.cancel)
+                    };
+                    if res_tx.send((req.id, sol)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn portfolio DP worker");
+        DpWorker { tx: Some(tx), rx, handle: Some(handle) }
+    }
+}
+
+impl Drop for DpWorker {
+    fn drop(&mut self) {
+        // Closing the request channel lets an idle worker exit; then
+        // reap the thread (a running solve exits at its next τ-layer
+        // cancel check — `SolverPortfolio::drop` sets the flag first).
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Races the always-ready incremental greedy against the exact DP on a
+/// persistent worker thread. See the module docs for the adoption and
+/// determinism rules; [`WarmState::race`] is the entry point.
+#[derive(Debug, Default)]
+pub struct SolverPortfolio {
+    worker: Option<DpWorker>,
+    next_id: u64,
+    inflight: Option<(u64, Arc<AtomicBool>)>,
+}
+
+impl SolverPortfolio {
+    /// Start the DP on the worker (spawning it on first use).
+    fn submit(&mut self, p: &HorizonProblem, grid_step: f64) {
+        let w = self.worker.get_or_insert_with(DpWorker::spawn);
+        // Drain any halted solve's late result (ids make this safe even
+        // if one arrives after the drain).
+        while w.rx.try_recv().is_ok() {}
+        self.next_id += 1;
+        let cancel = Arc::new(AtomicBool::new(false));
+        self.inflight = Some((self.next_id, Arc::clone(&cancel)));
+        let _ = w.tx.as_ref().expect("worker alive").send(DpRequest {
+            id: self.next_id,
+            prob: OwnedProblem::of(p),
+            grid_step,
+            cancel,
+        });
+    }
+
+    /// Wait for the submitted DP until `deadline`. `None` = budget
+    /// blown: the solve is cancelled (worker: running → halting) and
+    /// its eventual result discarded.
+    fn collect(&mut self, deadline: Instant) -> Option<HorizonSolution> {
+        let w = self.worker.as_ref()?;
+        let (id, cancel) = self.inflight.take()?;
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match w.rx.recv_timeout(left) {
+                Ok((rid, sol)) if rid == id => return sol,
+                Ok(_) => continue, // stale result from a halted solve
+                Err(RecvTimeoutError::Timeout) => {
+                    cancel.store(true, Ordering::Relaxed);
+                    return None;
+                }
+                Err(RecvTimeoutError::Disconnected) => return None,
+            }
+        }
+    }
+}
+
+impl Drop for SolverPortfolio {
+    fn drop(&mut self) {
+        if let Some((_, cancel)) = &self.inflight {
+            cancel.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// All warm solver state one `Ahap` owns: the home window's menu, a
+/// scratch menu for candidate regions, the shared terminal memo, the
+/// warm DP's buffers, the last committed plan (the DP incumbent), and
+/// the racing portfolio. Lives inside the policy so `PolicyWorkspace`
+/// carries it across pool rounds.
+#[derive(Debug, Default)]
+pub struct WarmState {
+    home: WindowSolver,
+    scratch: WindowSolver,
+    memo: TerminalMemo,
+    dp: WarmDp,
+    portfolio: SolverPortfolio,
+    /// (start_slot, per-slot totals) of the last committed home plan.
+    last_plan: Option<(usize, Vec<u32>)>,
+}
+
+impl WarmState {
+    /// Called at the top of each AHAP decision: the terminal memo is
+    /// conditioned on the decision's (z0, job, models) and must not
+    /// leak across slots.
+    pub fn begin_decision(&mut self) {
+        self.memo.clear();
+    }
+
+    /// Forget all warm state (reconfigure / reset / solver switch).
+    pub fn reset(&mut self) {
+        self.home.reset();
+        self.scratch.reset();
+        self.memo.clear();
+        self.last_plan = None;
+    }
+
+    /// Record the committed home plan — next slot's DP incumbent.
+    pub fn note_home_plan(&mut self, start_slot: usize, alloc: &[Allocation]) {
+        let totals = alloc.iter().map(|a| a.total()).collect();
+        self.last_plan = Some((start_slot, totals));
+    }
+
+    /// Warm greedy solve. `home` solves maintain the persistent menu;
+    /// candidate solves patch a scratch copy of it, leaving the home
+    /// menu untouched.
+    pub fn solve_greedy(
+        &mut self,
+        p: &HorizonProblem,
+        home: bool,
+    ) -> HorizonSolution {
+        if home {
+            self.home.solve(p, &mut self.memo)
+        } else {
+            self.scratch.clone_from(&self.home);
+            self.scratch.solve(p, &mut self.memo)
+        }
+    }
+
+    /// Warm DP solve; home solves are seeded with the shifted previous
+    /// plan as an incumbent bound.
+    pub fn solve_dp(
+        &mut self,
+        p: &HorizonProblem,
+        grid_step: f64,
+        home: bool,
+    ) -> HorizonSolution {
+        let incumbent =
+            if home { self.shifted_incumbent(p) } else { None };
+        self.dp.solve(p, grid_step, incumbent.as_deref())
+    }
+
+    /// One portfolio round. `budget_us = None` is the deterministic
+    /// mode: both solvers run inline (greedy first — it is the answer
+    /// that must always exist) and the DP is adopted iff strictly
+    /// better. A finite budget races the DP on the worker thread while
+    /// the greedy solves inline; on timeout the greedy stands.
+    pub fn race(
+        &mut self,
+        p: &HorizonProblem,
+        grid_step: f64,
+        budget_us: Option<u64>,
+        home: bool,
+    ) -> HorizonSolution {
+        let t0 = Instant::now();
+        match budget_us {
+            None => {
+                let greedy = self.solve_greedy(p, home);
+                let dp = self.solve_dp(p, grid_step, home);
+                let adopted = dp.utility > greedy.utility;
+                timing::note_race(
+                    adopted,
+                    false,
+                    t0.elapsed().as_micros() as u64,
+                );
+                if adopted {
+                    dp
+                } else {
+                    greedy
+                }
+            }
+            Some(b) => {
+                let deadline = t0 + Duration::from_micros(b);
+                self.portfolio.submit(p, grid_step);
+                let greedy = self.solve_greedy(p, home);
+                match self.portfolio.collect(deadline) {
+                    Some(dp) => {
+                        let adopted = dp.utility > greedy.utility;
+                        timing::note_race(
+                            adopted,
+                            false,
+                            t0.elapsed().as_micros() as u64,
+                        );
+                        if adopted {
+                            dp
+                        } else {
+                            greedy
+                        }
+                    }
+                    None => {
+                        timing::note_race(
+                            false,
+                            true,
+                            t0.elapsed().as_micros() as u64,
+                        );
+                        greedy
+                    }
+                }
+            }
+        }
+    }
+
+    fn shifted_incumbent(&self, p: &HorizonProblem) -> Option<Vec<u32>> {
+        let (at, plan) = self.last_plan.as_ref()?;
+        if at + 1 != p.start_slot {
+            return None;
+        }
+        let mut inc = Vec::with_capacity(p.len());
+        for tau in 0..p.len() {
+            // The window slid by one: prev slot τ+1 lands on τ; the
+            // fresh tail slot idles. Clamp into the DP's candidate set.
+            let n = plan.get(tau + 1).copied().unwrap_or(0);
+            inc.push(if n == 0 {
+                0
+            } else {
+                n.clamp(p.job.n_min, p.job.n_max)
+            });
+        }
+        Some(inc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::horizon::{solve_dp, solve_greedy};
+    use crate::sched::throughput::{ReconfigModel, ThroughputModel};
+
+    fn models(mu_up: f64, mu_down: f64) -> Models {
+        Models {
+            throughput: ThroughputModel::unit(),
+            reconfig: ReconfigModel::new(mu_up, mu_down),
+            on_demand_price: 1.0,
+        }
+    }
+
+    fn job() -> Job {
+        Job {
+            workload: 30.0,
+            deadline: 10,
+            n_min: 2,
+            n_max: 8,
+            value: 45.0,
+            gamma: 1.5,
+        }
+    }
+
+    fn bits(s: &HorizonSolution) -> (Vec<Allocation>, u64) {
+        (s.alloc.clone(), s.utility.to_bits())
+    }
+
+    #[test]
+    fn price_key_orders_like_total_cmp() {
+        let xs = [
+            f64::NEG_INFINITY,
+            -2.5,
+            -0.0,
+            0.0,
+            1e-300,
+            0.4,
+            f64::INFINITY,
+            f64::NAN,
+        ];
+        for &a in &xs {
+            for &b in &xs {
+                assert_eq!(
+                    price_key(a).cmp(&price_key(b)),
+                    a.total_cmp(&b),
+                    "{a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sliding_windows_match_cold_greedy_bit_for_bit() {
+        let j = job();
+        let m = models(0.9, 0.95);
+        let series: Vec<f64> =
+            (0..16).map(|i| 0.2 + 0.07 * ((i * 5) % 11) as f64).collect();
+        let avail: Vec<u32> = (0..16).map(|i| (i as u32 * 3) % 9).collect();
+        let mut ws = WindowSolver::new();
+        let mut memo = TerminalMemo::default();
+        let mut z0 = 0.0;
+        for t in 0..10 {
+            let p = HorizonProblem {
+                job: &j,
+                models: &m,
+                start_slot: t,
+                z0,
+                prices: &series[t..t + 5],
+                avail: &avail[t..t + 5],
+                n_prev: (t as u32) % 4,
+                terminal_kind: TerminalKind::LinearCost,
+                migration: None,
+            };
+            memo.clear();
+            let warm = ws.solve(&p, &mut memo);
+            let cold = solve_greedy(&p);
+            assert_eq!(bits(&warm), bits(&cold), "slot {t}");
+            z0 += 2.5;
+        }
+    }
+
+    #[test]
+    fn candidate_patch_leaves_home_menu_intact() {
+        let j = job();
+        let m = models(0.9, 0.95);
+        let prices = [0.3, 0.5, 0.2, 0.8, 0.4];
+        let avail = [6, 4, 8, 2, 5];
+        let home_p = HorizonProblem {
+            job: &j,
+            models: &m,
+            start_slot: 3,
+            z0: 4.0,
+            prices: &prices,
+            avail: &avail,
+            n_prev: 2,
+            terminal_kind: TerminalKind::Exact,
+            migration: None,
+        };
+        let mut warm = WarmState::default();
+        warm.begin_decision();
+        let home_before = warm.solve_greedy(&home_p, true);
+        // A candidate region: two slots differ, plus a migration term.
+        let cand_prices = [0.3, 0.1, 0.2, 0.8, 0.9];
+        let cand_avail = [6, 8, 8, 2, 5];
+        let cand_p = HorizonProblem {
+            prices: &cand_prices,
+            avail: &cand_avail,
+            migration: Some(MigrationTerms { cost: 1.0, mu: 0.6 }),
+            ..home_p.clone()
+        };
+        let warm_cand = warm.solve_greedy(&cand_p, false);
+        let cold_cand = solve_greedy(&cand_p);
+        assert_eq!(bits(&warm_cand), bits(&cold_cand));
+        // The home menu was not disturbed by the candidate solve.
+        let home_after = warm.solve_greedy(&home_p, true);
+        assert_eq!(bits(&home_before), bits(&home_after));
+        assert_eq!(bits(&home_after), bits(&solve_greedy(&home_p)));
+    }
+
+    #[test]
+    fn warm_dp_matches_cold_dp_with_and_without_incumbent() {
+        let j = job();
+        let m = models(0.5, 0.7); // harsh μ: the DP's home turf
+        let series: Vec<f64> =
+            (0..12).map(|i| 0.25 + 0.11 * ((i * 7) % 5) as f64).collect();
+        let avail: Vec<u32> = (0..12).map(|i| (i as u32 * 5) % 9).collect();
+        let mut warm = WarmState::default();
+        let mut z0 = 0.0;
+        for t in 0..7 {
+            let p = HorizonProblem {
+                job: &j,
+                models: &m,
+                start_slot: t,
+                z0,
+                prices: &series[t..t + 5],
+                avail: &avail[t..t + 5],
+                n_prev: (t as u32) % 3,
+                terminal_kind: TerminalKind::LinearCost,
+                migration: None,
+            };
+            let w = warm.solve_dp(&p, 0.25, true);
+            let c = solve_dp(&p, 0.25);
+            assert_eq!(bits(&w), bits(&c), "slot {t}");
+            // Feed the committed plan back: the next solve is seeded.
+            warm.note_home_plan(t, &w.alloc);
+            z0 += 1.5;
+        }
+    }
+
+    #[test]
+    fn warm_dp_handles_migration_candidates() {
+        let j = job();
+        let m = models(0.5, 0.7);
+        let prices = [0.3, 0.6, 0.2, 0.4];
+        let avail = [5, 3, 8, 6];
+        let p = HorizonProblem {
+            job: &j,
+            models: &m,
+            start_slot: 2,
+            z0: 6.0,
+            prices: &prices,
+            avail: &avail,
+            n_prev: 4,
+            terminal_kind: TerminalKind::Exact,
+            migration: Some(MigrationTerms { cost: 2.0, mu: 0.5 }),
+        };
+        let mut warm = WarmState::default();
+        let w = warm.solve_dp(&p, 0.25, false);
+        let c = solve_dp(&p, 0.25);
+        assert_eq!(bits(&w), bits(&c));
+    }
+
+    #[test]
+    fn deterministic_race_adopts_dp_only_when_strictly_better() {
+        let j = job();
+        let m = models(0.5, 0.7); // μ-sensitive: DP should win somewhere
+        let series: Vec<f64> =
+            (0..12).map(|i| 0.3 + 0.09 * ((i * 3) % 7) as f64).collect();
+        let avail = vec![6u32; 12];
+        let mut warm = WarmState::default();
+        let mut adopted_any = false;
+        for t in 0..6 {
+            let p = HorizonProblem {
+                job: &j,
+                models: &m,
+                start_slot: t,
+                z0: 1.5 * t as f64,
+                prices: &series[t..t + 5],
+                avail: &avail[t..t + 5],
+                n_prev: 3,
+                terminal_kind: TerminalKind::LinearCost,
+                migration: None,
+            };
+            warm.begin_decision();
+            let raced = warm.race(&p, 0.25, None, true);
+            let greedy = solve_greedy(&p);
+            let dp = solve_dp(&p, 0.25);
+            if dp.utility > greedy.utility {
+                assert_eq!(bits(&raced), bits(&dp), "slot {t}");
+                adopted_any = true;
+            } else {
+                assert_eq!(bits(&raced), bits(&greedy), "slot {t}");
+            }
+        }
+        assert!(
+            adopted_any,
+            "scenario too easy: DP never beat greedy, test is vacuous"
+        );
+    }
+
+    #[test]
+    fn threaded_race_returns_one_of_the_two_answers() {
+        let j = job();
+        let m = models(0.9, 0.95);
+        let prices = [0.4, 0.2, 0.7, 0.3, 0.5];
+        let avail = [6, 8, 3, 7, 4];
+        let p = HorizonProblem {
+            job: &j,
+            models: &m,
+            start_slot: 0,
+            z0: 0.0,
+            prices: &prices,
+            avail: &avail,
+            n_prev: 0,
+            terminal_kind: TerminalKind::Exact,
+            migration: None,
+        };
+        let greedy = solve_greedy(&p);
+        let dp = solve_dp(&p, 0.25);
+        let mut warm = WarmState::default();
+        // Generous budget: the DP almost surely finishes — but either
+        // outcome is legal; the invariant is "never worse than greedy".
+        warm.begin_decision();
+        let raced = warm.race(&p, 0.25, Some(5_000_000), true);
+        assert!(
+            bits(&raced) == bits(&greedy) || bits(&raced) == bits(&dp),
+            "race must return one of the two racers' answers"
+        );
+        assert!(raced.utility >= greedy.utility);
+        // Zero budget: the greedy must stand, and the halted worker
+        // must not poison the next round.
+        warm.begin_decision();
+        let rushed = warm.race(&p, 0.25, Some(0), true);
+        assert!(rushed.utility >= greedy.utility);
+        warm.begin_decision();
+        let again = warm.race(&p, 0.25, Some(5_000_000), true);
+        assert!(again.utility >= greedy.utility);
+    }
+
+    #[test]
+    fn nan_price_window_still_matches_cold() {
+        let j = job();
+        let m = models(0.9, 0.95);
+        let prices = [0.3, f64::NAN, 0.2, 0.6, 0.4];
+        let avail = [6, 8, 8, 2, 5];
+        let p = HorizonProblem {
+            job: &j,
+            models: &m,
+            start_slot: 0,
+            z0: 0.0,
+            prices: &prices,
+            avail: &avail,
+            n_prev: 0,
+            terminal_kind: TerminalKind::Exact,
+            migration: None,
+        };
+        let mut warm = WarmState::default();
+        warm.begin_decision();
+        let w = warm.solve_greedy(&p, true);
+        let c = solve_greedy(&p);
+        assert_eq!(bits(&w), bits(&c));
+    }
+}

@@ -338,6 +338,16 @@ fn jsonl_event_schema_is_golden() {
             r#"{"kind":"solver","windows":3,"greedy_calls":2,"greedy_total_us":10,"greedy_hist_us":[2,0,0,0,0,0,0,0,0,0,0],"dp_calls":1,"dp_total_us":4,"dp_hist_us":[0,1,0,0,0,0,0,0,0,0,0]}"#,
         ),
         (
+            Event::SolverRace {
+                races: 8,
+                dp_adopted: 3,
+                greedy_kept: 5,
+                timeouts: 1,
+                total_us: 940,
+            },
+            r#"{"kind":"solver_race","races":8,"dp_adopted":3,"greedy_kept":5,"timeouts":1,"total_us":940}"#,
+        ),
+        (
             Event::Summary {
                 events: 5,
                 dropped: 0,

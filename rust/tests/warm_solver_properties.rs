@@ -1,0 +1,393 @@
+//! Warm-solver equivalence properties: the incremental greedy
+//! (`sched::warm::WindowSolver`), the memoized warm DP (`WarmDp`), and
+//! the deterministic racing portfolio must reproduce the cold solvers
+//! — and whole recorded fleet runs — **bit-for-bit**. These are the
+//! gates that let AHAP swap in the warm solvers on hot paths without
+//! changing a single committed allocation.
+//!
+//! CI runs this suite in release mode (the warm solvers exist for
+//! speed; debug-only validation would miss codegen-order surprises).
+
+use spotfine::fleet::{FleetScenario, MigrationMode};
+use spotfine::forecast::noise::NoiseSpec;
+use spotfine::market::generator::{GeneratorConfig, TraceGenerator};
+use spotfine::prop_assert;
+use spotfine::sched::ahap::SolverKind;
+use spotfine::sched::horizon::{
+    solve_dp, solve_greedy, HorizonProblem, HorizonSolution, TerminalKind,
+};
+use spotfine::sched::job::Job;
+use spotfine::sched::policy::{Allocation, MigrationTerms, Models};
+use spotfine::sched::pool::{PolicyEnv, PolicySpec, PredictorKind};
+use spotfine::sched::simulate::run_episode;
+use spotfine::sched::throughput::{ReconfigModel, ThroughputModel};
+use spotfine::sched::warm::WarmState;
+use spotfine::util::prop::{check, PropConfig};
+use spotfine::util::rng::Rng;
+
+fn bits(s: &HorizonSolution) -> (Vec<Allocation>, u64) {
+    (s.alloc.clone(), s.utility.to_bits())
+}
+
+fn random_job(rng: &mut Rng) -> Job {
+    let n_min = rng.int_range(1, 4) as u32;
+    let n_max = n_min + rng.int_range(1, 8) as u32;
+    let workload = rng.uniform(10.0, 60.0);
+    Job {
+        workload,
+        deadline: rng.int_range(4, 12) as usize,
+        n_min,
+        n_max,
+        value: workload * rng.uniform(1.0, 2.0),
+        gamma: rng.uniform(1.1, 2.5),
+    }
+}
+
+fn random_models(rng: &mut Rng) -> Models {
+    let mu_up = rng.uniform(0.4, 1.0);
+    let mu_down = rng.uniform(mu_up, 1.0);
+    Models {
+        throughput: if rng.bool(0.5) {
+            ThroughputModel::unit()
+        } else {
+            ThroughputModel::new(rng.uniform(0.5, 1.5), rng.uniform(0.0, 0.1))
+        },
+        reconfig: ReconfigModel::new(mu_up, mu_down),
+        on_demand_price: rng.uniform(0.8, 1.3),
+    }
+}
+
+/// A random market strip long enough for any window starting before the
+/// deadline; occasional NaN prices model a degenerate forecast (the
+/// cold greedy quarantines them to on-demand — the warm menu must too).
+fn random_strip(
+    rng: &mut Rng,
+    len: usize,
+    n_max: u32,
+) -> (Vec<f64>, Vec<u32>) {
+    let prices = (0..len)
+        .map(|_| {
+            if rng.bool(0.03) {
+                f64::NAN
+            } else {
+                rng.uniform(0.05, 1.5)
+            }
+        })
+        .collect();
+    let avail =
+        (0..len).map(|_| rng.int_range(0, n_max as i64 + 3) as u32).collect();
+    (prices, avail)
+}
+
+/// Warm greedy ≡ cold greedy, bit-for-bit, across random sliding window
+/// sequences — including candidate-region solves with migration terms
+/// (patched scratch menus) and mid-sequence resets (reconfigures).
+#[test]
+fn prop_warm_greedy_matches_cold_greedy_bit_for_bit() {
+    check(
+        "warm greedy ≡ cold greedy",
+        PropConfig { cases: 96, seed: 0x3A9_11 },
+        |rng: &mut Rng| {
+            let job = random_job(rng);
+            let models = random_models(rng);
+            let omega = rng.int_range(2, 6) as usize;
+            let (prices, avail) =
+                random_strip(rng, job.deadline + omega, job.n_max);
+            let mut ws = WarmState::default();
+            let mut z0 = 0.0;
+            for t in 0..job.deadline {
+                let win = omega.min(job.deadline - t);
+                let p = HorizonProblem {
+                    job: &job,
+                    models: &models,
+                    start_slot: t,
+                    z0,
+                    prices: &prices[t..t + win],
+                    avail: &avail[t..t + win],
+                    n_prev: rng.int_range(0, job.n_max as i64) as u32,
+                    terminal_kind: if t + win >= job.deadline {
+                        TerminalKind::Exact
+                    } else {
+                        TerminalKind::LinearCost
+                    },
+                    migration: None,
+                };
+                ws.begin_decision();
+                let warm = ws.solve_greedy(&p, true);
+                let cold = solve_greedy(&p);
+                prop_assert!(
+                    bits(&warm) == bits(&cold),
+                    "home solve diverged at slot {t} (job {job:?})"
+                );
+                // A candidate region: a few slots repriced, plus a
+                // migration term — solved off the patched scratch menu.
+                if rng.bool(0.6) {
+                    let mut cp = prices[t..t + win].to_vec();
+                    let mut ca = avail[t..t + win].to_vec();
+                    for _ in 0..rng.int_range(1, win as i64) {
+                        let i = rng.index(win);
+                        cp[i] = rng.uniform(0.05, 1.5);
+                        ca[i] = rng.int_range(0, job.n_max as i64 + 3) as u32;
+                    }
+                    let cand = HorizonProblem {
+                        prices: &cp,
+                        avail: &ca,
+                        migration: Some(MigrationTerms {
+                            cost: rng.uniform(0.0, 3.0),
+                            mu: rng.uniform(0.3, 1.0),
+                        }),
+                        ..p.clone()
+                    };
+                    let warm_c = ws.solve_greedy(&cand, false);
+                    let cold_c = solve_greedy(&cand);
+                    prop_assert!(
+                        bits(&warm_c) == bits(&cold_c),
+                        "candidate solve diverged at slot {t}"
+                    );
+                    // ...and the patch must not disturb the home menu.
+                    let again = ws.solve_greedy(&p, true);
+                    prop_assert!(
+                        bits(&again) == bits(&cold),
+                        "candidate patch leaked into home menu at slot {t}"
+                    );
+                }
+                // Mid-sequence reconfigure: the menu restarts cold.
+                if rng.bool(0.1) {
+                    ws.reset();
+                }
+                z0 += rng.uniform(0.0, 3.0);
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Warm DP ≡ cold DP — same utilities, same allocations, bit-for-bit —
+/// with and without the shifted-plan incumbent seeding, across grids,
+/// migration candidates, and resets.
+#[test]
+fn prop_warm_dp_matches_cold_dp_bit_for_bit() {
+    check(
+        "warm DP ≡ cold DP",
+        PropConfig { cases: 48, seed: 0xD9_B00 },
+        |rng: &mut Rng| {
+            let job = random_job(rng);
+            let models = random_models(rng);
+            let omega = rng.int_range(2, 5) as usize;
+            let grid = [0.1, 0.25, 0.5][rng.index(3)];
+            let (prices, avail) =
+                random_strip(rng, job.deadline + omega, job.n_max);
+            let mut ws = WarmState::default();
+            let mut z0 = 0.0;
+            for t in 0..job.deadline {
+                let win = omega.min(job.deadline - t);
+                let p = HorizonProblem {
+                    job: &job,
+                    models: &models,
+                    start_slot: t,
+                    z0,
+                    prices: &prices[t..t + win],
+                    avail: &avail[t..t + win],
+                    n_prev: rng.int_range(0, job.n_max as i64) as u32,
+                    terminal_kind: if t + win >= job.deadline {
+                        TerminalKind::Exact
+                    } else {
+                        TerminalKind::LinearCost
+                    },
+                    migration: None,
+                };
+                let warm = ws.solve_dp(&p, grid, true);
+                let cold = solve_dp(&p, grid);
+                prop_assert!(
+                    bits(&warm) == bits(&cold),
+                    "warm DP diverged at slot {t} (grid {grid}, job {job:?})"
+                );
+                if rng.bool(0.4) {
+                    let cand = HorizonProblem {
+                        migration: Some(MigrationTerms {
+                            cost: rng.uniform(0.0, 3.0),
+                            mu: rng.uniform(0.3, 1.0),
+                        }),
+                        ..p.clone()
+                    };
+                    let warm_c = ws.solve_dp(&cand, grid, false);
+                    let cold_c = solve_dp(&cand, grid);
+                    prop_assert!(
+                        bits(&warm_c) == bits(&cold_c),
+                        "warm DP candidate diverged at slot {t}"
+                    );
+                }
+                // Feed the committed plan back: next slot's solve is
+                // incumbent-seeded — the pruning must stay exact.
+                ws.note_home_plan(t, &warm.alloc);
+                if rng.bool(0.1) {
+                    ws.reset();
+                }
+                z0 += rng.uniform(0.0, 3.0);
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The deterministic portfolio (no budget) is a pure function of the
+/// two racers: it returns the DP's answer iff strictly better, the
+/// greedy's otherwise — never anything else.
+#[test]
+fn prop_deterministic_portfolio_is_reproducible() {
+    check(
+        "portfolio(budget=None) ≡ max(greedy, dp)",
+        PropConfig { cases: 48, seed: 0x5E1EC7 },
+        |rng: &mut Rng| {
+            let job = random_job(rng);
+            let models = random_models(rng);
+            let omega = rng.int_range(2, 5) as usize;
+            let (prices, avail) = random_strip(rng, omega, job.n_max);
+            let p = HorizonProblem {
+                job: &job,
+                models: &models,
+                start_slot: rng.index(6),
+                z0: rng.uniform(0.0, job.workload),
+                prices: &prices,
+                avail: &avail,
+                n_prev: rng.int_range(0, job.n_max as i64) as u32,
+                terminal_kind: if rng.bool(0.5) {
+                    TerminalKind::Exact
+                } else {
+                    TerminalKind::LinearCost
+                },
+                migration: None,
+            };
+            let mut ws = WarmState::default();
+            ws.begin_decision();
+            let raced = ws.race(&p, 0.25, None, true);
+            let greedy = solve_greedy(&p);
+            let dp = solve_dp(&p, 0.25);
+            let expect =
+                if dp.utility > greedy.utility { &dp } else { &greedy };
+            prop_assert!(
+                bits(&raced) == bits(expect),
+                "portfolio returned neither racer's answer verbatim"
+            );
+            // Replaying the same round is bit-identical.
+            let mut ws2 = WarmState::default();
+            ws2.begin_decision();
+            let again = ws2.race(&p, 0.25, None, true);
+            prop_assert!(
+                bits(&again) == bits(&raced),
+                "deterministic portfolio round not reproducible"
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Whole AHAP episodes under `SolverKind::Warm` equal the default
+/// (cold-solver) episodes bit-for-bit — decisions, costs, utility —
+/// across both μ regimes of the automatic dispatch.
+#[test]
+fn prop_warm_ahap_episodes_match_cold_episodes() {
+    check(
+        "AHAP(warm) episode ≡ AHAP(greedy) episode",
+        PropConfig { cases: 32, seed: 0xA4A9 },
+        |rng: &mut Rng| {
+            let seed = rng.next_u64();
+            let job = random_job(rng);
+            // Half the cases land in the harsh-μ regime that dispatches
+            // the (warm) DP instead of the (warm) greedy.
+            let models = if rng.bool(0.5) {
+                Models {
+                    reconfig: ReconfigModel::new(0.5, 0.7),
+                    ..Models::paper_default()
+                }
+            } else {
+                Models::paper_default()
+            };
+            let trace = TraceGenerator::new(GeneratorConfig::default())
+                .generate(seed)
+                .slice_from(rng.index(200));
+            let spec = PolicySpec::Ahap {
+                omega: rng.int_range(2, 5) as usize,
+                v: rng.int_range(1, 3) as usize,
+                sigma: rng.uniform(0.4, 0.9),
+            };
+            let env = PolicyEnv::new(
+                PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+                trace.clone(),
+                seed,
+            );
+            let mut cold = spec.build(&env);
+            let r_cold = run_episode(&job, &trace, &models, cold.as_mut());
+            let warm_env = PolicyEnv::new(
+                PredictorKind::Noisy(NoiseSpec::fixed_mag_uniform(0.1)),
+                trace.clone(),
+                seed,
+            )
+            .with_solver(SolverKind::Warm);
+            let mut warm = spec.build(&warm_env);
+            let r_warm = run_episode(&job, &trace, &models, warm.as_mut());
+            prop_assert!(
+                r_warm == r_cold,
+                "warm episode diverged (μ₁ {}, job {job:?})",
+                models.reconfig.mu_up
+            );
+            Ok(())
+        },
+    );
+}
+
+/// Fleet-level gate: `FleetEngine` runs with `SolverKind::Warm`
+/// reproduce the default engine's recorded `CommittedRun`s bit-for-bit
+/// — results *and* committed traces — in both migration modes and in
+/// the harsh-μ regime that routes every window through the warm DP.
+#[test]
+fn fleet_runs_with_warm_solvers_reproduce_committed_runs() {
+    for (seed, mode) in [
+        (3u64, MigrationMode::Starvation),
+        (11, MigrationMode::Policy),
+        (42, MigrationMode::Policy),
+    ] {
+        let mut sc = FleetScenario::new(6, 2, seed);
+        sc.stagger = 2;
+        sc.migration_mode = mode;
+        let (engine, specs) = sc.build();
+        let base = engine.clone().run_recorded(&specs);
+        let warm =
+            engine.clone().with_solver(SolverKind::Warm).run_recorded(&specs);
+        assert!(
+            warm == base,
+            "warm fleet run diverged (seed {seed}, mode {mode:?})"
+        );
+    }
+    // Harsh μ: the automatic dispatch sends every window to the DP, so
+    // this exercises the incumbent-seeded warm DP inside the fleet.
+    let mut sc = FleetScenario::new(5, 2, 7);
+    sc.stagger = 1;
+    sc.migration_mode = MigrationMode::Policy;
+    sc.models.reconfig = ReconfigModel::new(0.5, 0.7);
+    let (engine, specs) = sc.build();
+    let base = engine.clone().run_recorded(&specs);
+    let warm =
+        engine.clone().with_solver(SolverKind::Warm).run_recorded(&specs);
+    assert!(warm == base, "harsh-μ warm fleet run diverged");
+}
+
+/// The deterministic portfolio (`budget_us: None`) keeps recorded fleet
+/// runs bit-reproducible: two identical runs produce identical
+/// `CommittedRun`s, and the portfolio's answer is never worse than the
+/// pure-greedy engine's on any job.
+#[test]
+fn fleet_runs_with_deterministic_portfolio_are_bit_reproducible() {
+    let portfolio =
+        SolverKind::Portfolio { grid_step: 0.25, budget_us: None };
+    for seed in [5u64, 19] {
+        let mut sc = FleetScenario::new(5, 2, seed);
+        sc.stagger = 2;
+        sc.migration_mode = MigrationMode::Policy;
+        sc.solver = portfolio;
+        let (engine, specs) = sc.build();
+        let a = engine.clone().run_recorded(&specs);
+        let b = engine.clone().run_recorded(&specs);
+        assert!(a == b, "deterministic portfolio run not reproducible (seed {seed})");
+    }
+}
